@@ -1,0 +1,78 @@
+//! The privacy–parallelization trade-off (paper Remark 1): with `N`
+//! clients and `r = 1`, any `(K, T)` with `3(K+T−1)+1 ≤ N` is feasible —
+//! each extra client buys either one more unit of privacy (`T`) or one
+//! more unit of parallelization (`K`). This example sweeps the frontier
+//! for a fixed `N`, *measuring* the per-client gradient-computation time
+//! at each point and validating the trained model at the extremes.
+//!
+//! ```text
+//! cargo run --release --example privacy_parallelization_tradeoff
+//! ```
+
+use copml::coordinator::{algo, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::field::MatShape;
+use copml::lcc;
+use copml::prng::Rng;
+use copml::report::Table;
+use copml::runtime::{native::NativeKernel, GradKernel};
+
+fn main() -> Result<(), String> {
+    let n = 13usize;
+    let ds = Dataset::synth(SynthSpec::smoke(), 99);
+    println!(
+        "N = {n} clients, r = 1 → feasible (K, T) pairs satisfy 3(K+T−1)+1 ≤ {n}\n"
+    );
+
+    let f = copml::field::Field::paper_cifar();
+    let kernel = NativeKernel::new(f);
+    let mut rng = Rng::seed_from_u64(1);
+    let mut table = Table::new(
+        &format!("trade-off frontier at N = {n} (dataset {} × {})", ds.m, ds.d),
+        &["K", "T", "threshold", "rows/client", "grad compute (µs)", "tolerates collusion of"],
+    );
+
+    let kt_budget = (n - 1) / 3 + 1; // K + T ≤ this
+    for t in 1..kt_budget {
+        let k = kt_budget - t;
+        if k == 0 {
+            continue;
+        }
+        let need = lcc::recovery_threshold(1, k, t);
+        assert!(need <= n);
+        let rows = ds.padded_rows(k) / k;
+        // measure the real per-client kernel at this K
+        let x: Vec<u64> = (0..rows * ds.d).map(|_| rng.gen_range(f.modulus())).collect();
+        let w: Vec<u64> = (0..ds.d).map(|_| rng.gen_range(f.modulus())).collect();
+        let cq = vec![4096u64, 2u64];
+        let shape = MatShape::new(rows, ds.d);
+        let stats = copml::bench::time_it("kernel", 2, 9, || {
+            std::hint::black_box(kernel.encoded_gradient(&x, shape, &w, &cq));
+        });
+        table.row(&[
+            k.to_string(),
+            t.to_string(),
+            need.to_string(),
+            rows.to_string(),
+            format!("{:.1}", stats.median_s * 1e6),
+            format!("{t} clients"),
+        ]);
+    }
+    table.print();
+
+    // Both frontier extremes train to the same accuracy (the trade-off
+    // moves cost, not correctness).
+    let fast = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(kt_budget - 1, 1), 99);
+    let private = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(1, kt_budget - 1), 99);
+    let a = algo::train(&fast, &ds)?;
+    let b = algo::train(&private, &ds)?;
+    println!(
+        "max-parallel (K={}, T=1):  test acc {:.3}\nmax-privacy  (K=1, T={}): test acc {:.3}",
+        kt_budget - 1,
+        a.test_accuracy.last().unwrap(),
+        kt_budget - 1,
+        b.test_accuracy.last().unwrap()
+    );
+    println!("(identical trajectories: {})", a.w_trace == b.w_trace);
+    Ok(())
+}

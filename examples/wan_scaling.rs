@@ -1,0 +1,47 @@
+//! WAN scaling preview (Fig. 3's shape, quickly): total training time vs
+//! number of clients for COPML (Case 1, Case 2) and the MPC baselines on
+//! the paper's 40 Mbps WAN model, with machine-calibrated compute. The
+//! full harness with per-phase breakdowns is `cargo bench --bench
+//! fig3_training_time`.
+//!
+//! ```text
+//! cargo run --release --example wan_scaling
+//! ```
+
+use copml::bench::{BaselineCost, Calibration, CopmlCost};
+use copml::coordinator::CaseParams;
+use copml::field::Field;
+use copml::net::wan::WanModel;
+use copml::report::Table;
+
+fn main() {
+    let (m, d, iters) = (9019usize, 3073usize, 50usize); // CIFAR-10 shape
+    println!("calibrating this machine's field-arithmetic throughput …");
+    let cal = Calibration::measure(Field::paper_cifar());
+    let wan = WanModel::paper();
+
+    let mut table = Table::new(
+        &format!("total training time (s), CIFAR-10-like ({m}×{d}), {iters} iterations, 40 Mbps WAN"),
+        &["N", "COPML Case 1", "COPML Case 2", "MPC [BH08]", "MPC [BGW88]", "speedup vs BH08"],
+    );
+    for n in [10usize, 20, 30, 40, 50] {
+        let c1 = CaseParams::case1(n);
+        let c2 = CaseParams::case2(n);
+        let copml1 = CopmlCost { n, k: c1.k, t: c1.t, r: 1, m, d, iters, subgroups: true }
+            .estimate(&cal, &wan);
+        let copml2 = CopmlCost { n, k: c2.k, t: c2.t, r: 1, m, d, iters, subgroups: true }
+            .estimate(&cal, &wan);
+        let bh08 = BaselineCost::paper(n, m, d, iters, false).estimate(&cal, &wan);
+        let bgw = BaselineCost::paper(n, m, d, iters, true).estimate(&cal, &wan);
+        table.row(&[
+            n.to_string(),
+            format!("{:.0}", copml1.total_s()),
+            format!("{:.0}", copml2.total_s()),
+            format!("{:.0}", bh08.total_s()),
+            format!("{:.0}", bgw.total_s()),
+            format!("{:.1}×", bh08.total_s() / copml1.total_s()),
+        ]);
+    }
+    table.print();
+    println!("paper (Fig. 3a): COPML up to 8.6× faster than [BH08] at N = 50.");
+}

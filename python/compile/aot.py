@@ -1,0 +1,110 @@
+"""AOT compiler: lower the L2/L1 stack to HLO text artifacts + manifest.
+
+Run once by ``make artifacts``; the rust runtime
+(``rust/src/runtime/pjrt.rs``) loads the results. Python never runs at
+request time.
+
+Interchange is HLO **text**, not serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+The artifact set covers the row buckets (`runtime::padding::ROW_BUCKETS`)
+each dataset/engine combination needs; extend `SHAPES` and re-run to add
+configurations. ``--quick`` lowers only the small-test shapes.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile import model  # noqa: E402
+
+P26 = 2**26 - 5  # paper's CIFAR-10 prime
+P25 = 2**25 - 39  # GISETTE-width prime
+P31 = 2**31 - 1  # headroom prime (accuracy ablation)
+
+# (p, degree, rows-bucket, cols, flavours)
+SMALL_SHAPES = [
+    # tiny dataset (d=9): full-protocol PJRT tests; K∈{1,2,3} at m≈48+pad
+    (P26, 1, 8, 9, ("pallas", "jnp")),
+    (P26, 1, 16, 9, ("pallas", "jnp")),
+    (P26, 1, 32, 9, ("pallas", "jnp")),
+    (P26, 1, 64, 9, ("pallas",)),
+    # smoke dataset (d=21): quickstart / examples; degree-3 ablation
+    (P26, 1, 64, 21, ("pallas", "jnp")),
+    (P26, 1, 128, 21, ("pallas",)),
+    (P26, 1, 256, 21, ("pallas",)),
+    (P26, 1, 512, 21, ("pallas",)),
+    (P26, 3, 256, 21, ("pallas",)),
+    (P31, 1, 256, 21, ("pallas",)),
+]
+
+FULL_SHAPES = [
+    # CIFAR-like (d=3073): Fig 3 / Table I kernel-time measurements
+    (P26, 1, 256, 3073, ("pallas",)),
+    (P26, 1, 512, 3073, ("pallas",)),
+    (P26, 1, 1024, 3073, ("pallas", "jnp")),
+    (P26, 1, 2048, 3073, ("pallas",)),
+    (P26, 1, 4096, 3073, ("pallas",)),
+    # GISETTE-like (d=5000)
+    (P25, 1, 256, 5000, ("pallas",)),
+    (P25, 1, 512, 5000, ("pallas",)),
+    (P25, 1, 1024, 5000, ("pallas",)),
+    (P25, 1, 2048, 5000, ("pallas",)),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(p, degree, rows, cols, flavour):
+    fn = model.encoded_gradient_fn(rows, cols, degree, p, flavour)
+    lowered = jax.jit(fn).lower(*model.example_args(rows, cols, degree))
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--quick", action="store_true", help="small-test shapes only")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    shapes = SMALL_SHAPES + ([] if args.quick else FULL_SHAPES)
+    manifest = {"version": 1, "artifacts": []}
+    for p, degree, rows, cols, flavours in shapes:
+        for flavour in flavours:
+            name = f"grad_{flavour}_p{p}_d{degree}_r{rows}_c{cols}.hlo.txt"
+            path = os.path.join(args.out, name)
+            text = lower_one(p, degree, rows, cols, flavour)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "file": name,
+                    "p": p,
+                    "degree": degree,
+                    "rows": rows,
+                    "cols": cols,
+                    "kernel": flavour,
+                }
+            )
+            print(f"lowered {name}  ({len(text)/1024:.0f} KiB)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

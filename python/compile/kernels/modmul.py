@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: the COPML encoded-gradient hot spot over F_p.
+
+Computes Eq. (7) of the paper, ``f(X̃, w̃) = X̃ᵀ ĝ(X̃·w̃)  (mod p)``, for a
+row-block grid:
+
+* ``X̃``: ``(R, C)`` uint64 field elements (< p),
+* ``w̃``: ``(C,)``,
+* ``ĝ`` coefficients: ``(degree+1,)`` quantized at build time by the rust
+  coordinator (runtime input, so one artifact serves every fixed-point
+  plan).
+
+Hardware adaptation (DESIGN.md §1): the paper's CPU implementation avoids
+per-element modular reduction by bounding ``d·(p−1)² ≤ 2^64−1`` and reducing
+once per inner product (Appendix A). Here the same discipline becomes the
+block schedule: the contraction dimension is tiled at ``kt_tile(p)`` columns
+so each tile's uint64 partial sums cannot overflow, with one ``% p`` per
+tile. The row dimension is gridded; each grid step accumulates its block's
+contribution into the output ref (sequential grid ⇒ safe accumulation),
+which is the HBM↔VMEM streaming pattern a TPU would use for a tall matrix.
+
+Pallas runs under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU performance is *estimated* from the VMEM
+footprint in DESIGN.md §8. Correctness is asserted against ``ref.py`` and
+an exact big-int reference in ``python/tests``.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def kt_tile(p: int) -> int:
+    """Columns per contraction tile so a tile's dot fits in uint64.
+
+    ``kt·(p−1)² + (p−1) ≤ 2^64−1`` — the kernel-side version of the paper's
+    Appendix-A overflow bound. Halved for slack against the running
+    accumulator term.
+    """
+    budget = (2**64 - 1) // ((p - 1) ** 2)
+    return max(1, budget // 2)
+
+
+def _grad_block_kernel(x_ref, w_ref, c_ref, o_ref, *, p, cols, degree):
+    """One row-block of Eq. (7). Shapes: x (BR, C), w (C,), c (deg+1,),
+    o (C,) accumulated across the (sequential) grid."""
+    x = x_ref[...]
+    w = w_ref[...]
+    kt = kt_tile(p)
+
+    # z = X̃·w̃ mod p — tiled contraction, one reduction per tile.
+    br = x.shape[0]
+    z = jnp.zeros((br,), dtype=jnp.uint64)
+    for c0 in range(0, cols, kt):
+        c1 = min(c0 + kt, cols)
+        prod = x[:, c0:c1] * w[None, c0:c1]  # each < (p−1)², sum < 2^64
+        z = (z + jnp.sum(prod, axis=1)) % p
+
+    # ĝ(z) mod p — Horner with the runtime coefficient vector.
+    g = jnp.full((br,), 0, dtype=jnp.uint64) + c_ref[degree]
+    for i in range(degree - 1, -1, -1):
+        g = (g * z % p + c_ref[i]) % p
+
+    # contribution = X̃ᵀ·ĝ mod p — row-tiled the same way.
+    rt = kt  # same budget bounds the row-sum
+    contrib = jnp.zeros((cols,), dtype=jnp.uint64)
+    for r0 in range(0, br, rt):
+        r1 = min(r0 + rt, br)
+        part = jnp.sum(x[r0:r1, :] * g[r0:r1, None], axis=0)
+        contrib = (contrib + part) % p
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros((cols,), dtype=jnp.uint64)
+
+    o_ref[...] = (o_ref[...] + contrib) % p
+
+
+def encoded_gradient(x, w, coeffs, *, p: int, block_rows: int = 128):
+    """Eq. (7) via the Pallas kernel (interpret mode).
+
+    ``x``: (R, C) uint64, ``w``: (C,), ``coeffs``: (degree+1,). R must be a
+    multiple of ``block_rows`` (the rust runtime pads to a row bucket).
+    """
+    rows, cols = x.shape
+    degree = coeffs.shape[0] - 1
+    br = min(block_rows, rows)
+    assert rows % br == 0, f"rows {rows} not a multiple of block {br}"
+    kernel = partial(_grad_block_kernel, p=p, cols=cols, degree=degree)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((degree + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((cols,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((cols,), jnp.uint64),
+        interpret=True,
+    )(x, w, coeffs)
+
+
+def vmem_estimate_bytes(block_rows: int, cols: int) -> int:
+    """Per-step VMEM footprint of the block schedule (DESIGN.md §8):
+    X block + w + coeffs + output accumulator, double-buffered X."""
+    x_block = block_rows * cols * 8
+    return 2 * x_block + cols * 8 * 2 + 64

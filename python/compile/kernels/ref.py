@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the encoded-gradient kernel.
+
+Independently coded from the Pallas kernel (different tiling structure) so
+the two can cross-validate. An exact arbitrary-precision reference for tiny
+shapes lives in ``python/tests/test_kernel.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _tiled_axis_sum_mod(prod, axis, p, tile):
+    """Sum ``prod`` (entries < (p−1)²) along ``axis`` with one ``% p`` per
+    ``tile`` slices — overflow-safe for uint64."""
+    n = prod.shape[axis]
+    acc = None
+    for s0 in range(0, n, tile):
+        s1 = min(s0 + tile, n)
+        sl = [slice(None)] * prod.ndim
+        sl[axis] = slice(s0, s1)
+        part = jnp.sum(prod[tuple(sl)], axis=axis) % p
+        acc = part if acc is None else (acc + part) % p
+    return acc
+
+
+def tile_for(p: int) -> int:
+    budget = (2**64 - 1) // ((p - 1) ** 2)
+    return max(1, budget // 2)
+
+
+def matvec_mod(x, w, p):
+    """(R,C)·(C,) mod p."""
+    tile = tile_for(p)
+    return _tiled_axis_sum_mod(x * w[None, :], 1, p, tile)
+
+
+def matvec_t_mod(x, v, p):
+    """Xᵀ·v mod p."""
+    tile = tile_for(p)
+    return _tiled_axis_sum_mod(x * v[:, None], 0, p, tile)
+
+
+def poly_mod(coeffs, z, p):
+    """Σ coeffs[i]·z^i mod p (Horner)."""
+    g = jnp.zeros_like(z) + coeffs[-1]
+    for i in range(coeffs.shape[0] - 2, -1, -1):
+        g = (g * z % p + coeffs[i]) % p
+    return g
+
+
+def encoded_gradient(x, w, coeffs, *, p: int):
+    """Eq. (7): X̃ᵀ ĝ(X̃·w̃) mod p — the oracle the kernel must match."""
+    z = matvec_mod(x, w, p)
+    g = poly_mod(coeffs, z, p)
+    return matvec_t_mod(x, g, p)

@@ -1,0 +1,55 @@
+"""L2 JAX model: the per-client COPML computation that gets AOT-lowered.
+
+The paper's per-client work at each iteration is exactly one evaluation of
+Eq. (7) on the client's encoded block — the model *is* the encoded-gradient
+function. It calls the L1 Pallas kernel so both lower into one HLO module;
+a pure-jnp flavour of the same function is lowered alongside for the
+rust-side parity tests (`flavour="jnp"`).
+
+The rust coordinator owns everything around this function (sharing,
+encoding, decoding, truncation, the training loop): this file must stay
+free of any protocol logic.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import modmul, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def encoded_gradient_fn(rows: int, cols: int, degree: int, p: int, flavour: str = "pallas"):
+    """Build the jittable per-client function for a fixed shape.
+
+    Returns ``fn(x, w, coeffs) -> (out,)`` with
+    ``x: u64[rows, cols]``, ``w: u64[cols]``, ``coeffs: u64[degree+1]``.
+    The 1-tuple return matches the rust loader's ``to_tuple1`` unwrap.
+    """
+    if flavour == "pallas":
+        # Interpret-mode grid steps are pure emulation overhead on CPU
+        # (measured 96 ms → 35 ms at 1024×3073 going from block 128 to a
+        # single block; EXPERIMENTS.md §Perf). A real TPU lowering would
+        # use the VMEM-fitting 128-row block of `modmul.vmem_estimate_bytes`.
+        block = rows
+
+        def fn(x, w, coeffs):
+            return (modmul.encoded_gradient(x, w, coeffs, p=p, block_rows=block),)
+
+    elif flavour == "jnp":
+
+        def fn(x, w, coeffs):
+            return (ref.encoded_gradient(x, w, coeffs, p=p),)
+
+    else:
+        raise ValueError(f"unknown flavour {flavour!r}")
+    return fn
+
+
+def example_args(rows: int, cols: int, degree: int):
+    """ShapeDtypeStructs for lowering."""
+    return (
+        jax.ShapeDtypeStruct((rows, cols), jnp.uint64),
+        jax.ShapeDtypeStruct((cols,), jnp.uint64),
+        jax.ShapeDtypeStruct((degree + 1,), jnp.uint64),
+    )

@@ -1,0 +1,104 @@
+//! Fig. 3 (a)(b): total training time vs number of clients N for COPML
+//! Case 1 / Case 2 and the [BH08] baseline, on CIFAR-10-like (9019×3073)
+//! and GISETTE-like (6000×5000) shapes — 50 iterations over the 40 Mbps
+//! WAN model with machine-calibrated compute.
+//!
+//! Compute is *measured* (the real encoded-gradient kernel runs at the
+//! exact per-client block shape for every N); communication bytes are
+//! exact and charged through `net::wan` (see `bench::cost_model` docs and
+//! EXPERIMENTS.md §Fig3 for the calibration note).
+//!
+//! Run: `cargo bench --bench fig3_training_time`
+
+use copml::bench::{time_it, BaselineCost, Calibration, CopmlCost};
+use copml::coordinator::CaseParams;
+use copml::field::{Field, MatShape};
+use copml::net::wan::WanModel;
+use copml::prng::Rng;
+use copml::report::Table;
+use copml::runtime::{native::NativeKernel, GradKernel};
+
+/// Measure the real per-client kernel for a (rows, d) block.
+fn measured_kernel_s(f: Field, rows: usize, d: usize) -> f64 {
+    let mut rng = Rng::seed_from_u64(42);
+    let p = f.modulus();
+    let x: Vec<u64> = (0..rows * d).map(|_| rng.gen_range(p)).collect();
+    let w: Vec<u64> = (0..d).map(|_| rng.gen_range(p)).collect();
+    let cq = vec![rng.gen_range(p), rng.gen_range(p)];
+    let kernel = NativeKernel::new(f);
+    let shape = MatShape::new(rows, d);
+    let iters = if rows * d > 4_000_000 { 3 } else { 7 };
+    time_it("kernel", 1, iters, || {
+        std::hint::black_box(kernel.encoded_gradient(&x, shape, &w, &cq));
+    })
+    .median_s
+}
+
+fn run_dataset(label: &str, m: usize, d: usize, f: Field, cal: &Calibration, wan: &WanModel) {
+    let iters = 50usize;
+    let mut table = Table::new(
+        &format!("Fig 3 — {label} ({m}×{d}), {iters} iterations, total time (s)"),
+        &["N", "COPML Case1", "COPML Case2", "[BH08]", "[BGW88]", "BH08/Case1"],
+    );
+    let mut max_speedup: f64 = 0.0;
+    for n in [10usize, 20, 30, 40, 50] {
+        let mut row = vec![n.to_string()];
+        let mut case1_total = 0.0;
+        for case in [CaseParams::case1(n), CaseParams::case2(n)] {
+            let rows_k = m.div_ceil(case.k);
+            // REAL kernel measurement at this exact block shape.
+            let comp_iter = measured_kernel_s(f, rows_k, d);
+            let mut est = CopmlCost {
+                n,
+                k: case.k,
+                t: case.t,
+                r: 1,
+                m,
+                d,
+                iters,
+                subgroups: true,
+            }
+            .estimate(cal, wan);
+            est.comp_s = comp_iter * iters as f64;
+            if case1_total == 0.0 {
+                case1_total = est.total_s();
+            }
+            row.push(format!("{:.0}", est.total_s()));
+        }
+        for bgw in [false, true] {
+            let est = BaselineCost::paper(n, m, d, iters, bgw).estimate(cal, wan);
+            row.push(format!("{:.0}", est.total_s()));
+        }
+        let bh08 = BaselineCost::paper(n, m, d, iters, false).estimate(cal, wan);
+        let speedup = bh08.total_s() / case1_total;
+        max_speedup = max_speedup.max(speedup);
+        row.push(format!("{speedup:.1}×"));
+        table.row(&row);
+    }
+    table.print();
+    println!("max speedup vs [BH08]: {max_speedup:.1}× (paper: 8.6× CIFAR-10, 16.4× GISETTE)\n");
+}
+
+fn main() {
+    println!("calibrating primitives on this machine …");
+    let cal = Calibration::measure(Field::paper_cifar());
+    let wan = WanModel::paper();
+    run_dataset("CIFAR-10-like", 9019, 3073, Field::paper_cifar(), &cal, &wan);
+    run_dataset("GISETTE-like", 6000, 5000, Field::paper_gisette(), &cal, &wan);
+
+    // Shape assertions (the reproduction claims):
+    let bh08_n10 = BaselineCost::paper(10, 9019, 3073, 50, false).estimate(&cal, &wan);
+    let bh08_n50 = BaselineCost::paper(50, 9019, 3073, 50, false).estimate(&cal, &wan);
+    assert!(
+        bh08_n50.total_s() > 2.0 * bh08_n10.total_s(),
+        "baseline must grow with N"
+    );
+    let c1 = CaseParams::case1(50);
+    let copml_n50 = CopmlCost { n: 50, k: c1.k, t: c1.t, r: 1, m: 9019, d: 3073, iters: 50, subgroups: true }
+        .estimate(&cal, &wan);
+    assert!(
+        bh08_n50.total_s() / copml_n50.total_s() > 8.0,
+        "COPML must beat [BH08] by at least the paper's factor at N=50"
+    );
+    println!("fig3 shape assertions passed");
+}

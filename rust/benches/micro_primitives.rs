@@ -1,0 +1,152 @@
+//! Microbenchmarks of every hot primitive — the §Perf foundation:
+//! field ops, Lagrange weighted sums (encode/decode), Shamir sharing, MPC
+//! degree reduction, TruncPr, and the encoded-gradient kernel (native rust
+//! vs AOT/PJRT at paper block shapes).
+//!
+//! Run: `cargo bench --bench micro_primitives`
+
+use copml::bench::{harness::humanize, time_it};
+use copml::field::{vecops, Field, MatShape, P26};
+use copml::lcc::Encoder;
+use copml::prng::Rng;
+use copml::runtime::{native::NativeKernel, pjrt::PjrtRuntime, GradKernel};
+use copml::shamir;
+
+fn main() {
+    let f = Field::paper_cifar();
+    let p = f.modulus();
+    let mut rng = Rng::seed_from_u64(0xBE7C);
+    println!("{:<44} {:>12} {:>12} {:>12}", "benchmark", "median", "min", "mad");
+
+    // --- field reduce/mul throughput -------------------------------------
+    let xs: Vec<u64> = (0..1 << 20).map(|_| rng.next_u64()).collect();
+    let stats = time_it("field/reduce 1M u64", 2, 9, || {
+        let mut acc = 0u64;
+        for &x in &xs {
+            acc = acc.wrapping_add(f.reduce(x));
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{}  [{:.0} M red/s]", stats.report(), 1e-6 * xs.len() as f64 / stats.median_s);
+
+    // --- dot (the paper's mod-after-inner-product trick) ------------------
+    let a: Vec<u64> = (0..3072).map(|_| rng.gen_range(p)).collect();
+    let b: Vec<u64> = (0..3072).map(|_| rng.gen_range(p)).collect();
+    let stats = time_it("field/dot d=3072 (CIFAR row)", 5, 15, || {
+        std::hint::black_box(vecops::dot(f, &a, &b));
+    });
+    println!("{}", stats.report());
+
+    // --- weighted_sum: Lagrange encode unit -------------------------------
+    for (terms, len) in [(17usize, 1 << 16), (33, 1 << 16)] {
+        let mats: Vec<Vec<u64>> = (0..terms)
+            .map(|_| (0..len).map(|_| rng.gen_range(p)).collect())
+            .collect();
+        let coeffs: Vec<u64> = (0..terms).map(|_| rng.gen_range(p)).collect();
+        let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0u64; len];
+        let stats = time_it(&format!("lcc/weighted_sum K+T={terms} 64k els"), 2, 9, || {
+            vecops::weighted_sum(f, &coeffs, &views, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "{}  [{:.0} M muladd/s]",
+            stats.report(),
+            1e-6 * (terms * len) as f64 / stats.median_s
+        );
+    }
+
+    // --- end-to-end LCC encode at CIFAR Case-1 block shape ---------------
+    {
+        let (k, t, n) = (16usize, 1usize, 50usize);
+        let rows_k = 9024 / k;
+        let len = rows_k * 3073;
+        let enc = Encoder::standard(f, k, t, n);
+        let parts: Vec<Vec<u64>> = (0..k + t)
+            .map(|_| (0..len).map(|_| rng.gen_range(p)).collect())
+            .collect();
+        let views: Vec<&[u64]> = parts.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0u64; len];
+        let stats = time_it("lcc/encode one client, CIFAR Case 1", 1, 5, || {
+            enc.encode_one(7, &views, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{}", stats.report());
+    }
+
+    // --- Shamir sharing ----------------------------------------------------
+    let secret: Vec<u64> = (0..1 << 16).map(|_| rng.gen_range(p)).collect();
+    for (n, t) in [(10usize, 1usize), (50, 7)] {
+        let stats = time_it(&format!("shamir/share 64k els N={n} T={t}"), 1, 5, || {
+            let mut r2 = Rng::seed_from_u64(1);
+            std::hint::black_box(shamir::share(f, &secret, n, t, &mut r2));
+        });
+        println!("{}", stats.report());
+    }
+
+    // --- encoded-gradient kernel: native vs PJRT at paper shapes ----------
+    let shapes = [(564usize, 3073usize), (1024, 3073), (2048, 3073), (1200, 5000)];
+    for (rows, cols) in shapes {
+        let ff = if cols > 4096 { Field::paper_gisette() } else { f };
+        let pp = ff.modulus();
+        let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(pp)).collect();
+        let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(pp)).collect();
+        let cq = vec![rng.gen_range(pp), rng.gen_range(pp)];
+        let shape = MatShape::new(rows, cols);
+        let kernel = NativeKernel::new(ff);
+        let stats = time_it(&format!("kernel/native {rows}x{cols}"), 1, 5, || {
+            std::hint::black_box(kernel.encoded_gradient(&x, shape, &w, &cq));
+        });
+        println!(
+            "{}  [{:.0} M cells/s]",
+            stats.report(),
+            1e-6 * (rows * cols) as f64 / stats.median_s
+        );
+    }
+
+    // PJRT side (needs `make artifacts`).
+    match PjrtRuntime::load(&PjrtRuntime::default_dir()) {
+        Err(e) => println!("kernel/pjrt: SKIPPED ({e})"),
+        Ok(rt) => {
+            for (rows, cols) in shapes {
+                let pp = if cols > 4096 { Field::paper_gisette().modulus() } else { p };
+                if !rt.supports(pp, 1, rows, cols) {
+                    println!("kernel/pjrt {rows}x{cols}: no artifact");
+                    continue;
+                }
+                let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(pp)).collect();
+                let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(pp)).collect();
+                let cq = vec![rng.gen_range(pp), rng.gen_range(pp)];
+                let shape = MatShape::new(rows, cols);
+                let stats = time_it(&format!("kernel/pjrt {rows}x{cols}"), 1, 5, || {
+                    std::hint::black_box(rt.run(pp, &x, shape, &w, &cq).unwrap());
+                });
+                println!("{}", stats.report());
+            }
+        }
+    }
+
+    // --- TruncPr + degree reduction over the threaded fabric -------------
+    {
+        use copml::coordinator::baseline::{train, BaselineConfig, MpcFlavor};
+        use copml::data::{Dataset, SynthSpec};
+        let ds = Dataset::synth(SynthSpec::tiny(), 1);
+        let cfg = BaselineConfig {
+            n: 7,
+            t: 2,
+            plan: copml::quant::FpPlan::paper_cifar(),
+            iters: 3,
+            eta: 2.0,
+            seed: 1,
+            fit_range: 4.0,
+            flavor: MpcFlavor::Bh08,
+        };
+        let stats = time_it("mpc/baseline-bh08 tiny 3 iters (7 threads)", 1, 5, || {
+            std::hint::black_box(train(&cfg, &ds).unwrap());
+        });
+        println!("{}", stats.report());
+    }
+
+    println!("\n(reduce throughput target ≥ 300 M/s, weighted_sum ≥ 150 M muladd/s — see EXPERIMENTS.md §Perf)");
+    let _ = humanize(0.0);
+}

@@ -1,0 +1,357 @@
+//! Calibrated cost model — the virtual EC2 testbed.
+//!
+//! The paper's Fig. 3 / Table I numbers are wall-clock times of N = 10…50
+//! m3.xlarge instances over a 40 Mbps WAN. This module reproduces those
+//! experiments' *structure* exactly on one machine:
+//!
+//! * **compute** is *measured*: the per-client kernels (encoded gradient,
+//!   share-weighted sums, Shamir evaluation) are really executed on
+//!   representative blocks and their throughput calibrated
+//!   ([`Calibration::measure`]);
+//! * **communication** is *modeled*: exact per-phase byte counts (validated
+//!   against the threaded protocol's ledger in
+//!   `tests/cost_model_validation.rs`) through [`WanModel`]'s
+//!   bandwidth/latency function;
+//! * phases compose bulk-synchronously: `phase time = max over parties of
+//!   (compute + NIC-serialized sends) + latency`, summed over phases —
+//!   the discrete-event reduction of the paper's synchronous rounds.
+//!
+//! Per-message MPI overhead is charged via `WanModel::latency_s` per
+//! protocol round. Absolute numbers differ from the paper's testbed
+//! (different CPUs, MPI stack, python marshalling); the *shape* — who
+//! wins, how it scales with N, where the crossover sits — is the claim
+//! being reproduced (see EXPERIMENTS.md).
+
+use crate::field::{vecops, Field, MatShape};
+use crate::net::wan::WanModel;
+use crate::net::ELEM_BYTES;
+use crate::prng::Rng;
+use crate::runtime::{native::NativeKernel, GradKernel};
+use crate::shamir;
+
+/// Measured single-core primitive throughputs (elements/second).
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Multiply-accumulate (mod p) throughput of `weighted_sum`, in
+    /// element·terms per second — encode/decode cost unit.
+    pub muladd_per_s: f64,
+    /// Encoded-gradient kernel throughput in matrix cells per second
+    /// (one cell = one row×col position, visited twice: matvec + matvecᵀ).
+    pub kernel_cells_per_s: f64,
+    /// Shamir share evaluation throughput in element·shares per second.
+    pub share_per_s: f64,
+}
+
+impl Calibration {
+    /// Measure on this machine (takes ~a second).
+    pub fn measure(f: Field) -> Calibration {
+        let mut rng = Rng::seed_from_u64(0xCA11B);
+        let p = f.modulus();
+
+        // weighted_sum: 8 mats × 64k elements
+        let n_el = 1 << 16;
+        let terms = 8;
+        let mats: Vec<Vec<u64>> = (0..terms)
+            .map(|_| (0..n_el).map(|_| rng.gen_range(p)).collect())
+            .collect();
+        let coeffs: Vec<u64> = (0..terms as u64).map(|_| rng.gen_range(p)).collect();
+        let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0u64; n_el];
+        let stats = super::harness::time_it("calib/weighted_sum", 1, 5, || {
+            vecops::weighted_sum(f, &coeffs, &views, &mut out);
+            std::hint::black_box(&out);
+        });
+        let muladd_per_s = (n_el * terms) as f64 / stats.median_s;
+
+        // kernel: 256×512 block
+        let (rows, cols) = (256usize, 512usize);
+        let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(p)).collect();
+        let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(p)).collect();
+        let cq = vec![rng.gen_range(p), rng.gen_range(p)];
+        let kernel = NativeKernel::new(f);
+        let stats = super::harness::time_it("calib/kernel", 1, 5, || {
+            std::hint::black_box(kernel.encoded_gradient(&x, MatShape::new(rows, cols), &w, &cq));
+        });
+        let kernel_cells_per_s = (rows * cols) as f64 / stats.median_s;
+
+        // shamir share: 16k elements × 8 shares, t=3
+        let secret: Vec<u64> = (0..1 << 14).map(|_| rng.gen_range(p)).collect();
+        let stats = super::harness::time_it("calib/share", 1, 5, || {
+            std::hint::black_box(shamir::share(f, &secret, 8, 3, &mut rng));
+        });
+        let share_per_s = (secret.len() * 8) as f64 / stats.median_s;
+
+        Calibration { muladd_per_s, kernel_cells_per_s, share_per_s }
+    }
+}
+
+/// Table-I-style per-protocol breakdown (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseBreakdown {
+    pub comp_s: f64,
+    pub comm_s: f64,
+    pub encdec_s: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.comp_s + self.comm_s + self.encdec_s
+    }
+}
+
+/// COPML cost model (per DESIGN.md §4; byte counts mirror
+/// `coordinator::protocol` exactly).
+#[derive(Clone, Copy, Debug)]
+pub struct CopmlCost {
+    pub n: usize,
+    pub k: usize,
+    pub t: usize,
+    pub r: usize,
+    pub m: usize,
+    pub d: usize,
+    pub iters: usize,
+    pub subgroups: bool,
+}
+
+impl CopmlCost {
+    fn rows_k(&self) -> f64 {
+        (self.m as f64 / self.k as f64).ceil()
+    }
+
+    /// Recovery threshold `(2r+1)(K+T−1)+1`.
+    fn need(&self) -> usize {
+        (2 * self.r + 1) * (self.k + self.t - 1) + 1
+    }
+
+    pub fn estimate(&self, cal: &Calibration, wan: &WanModel) -> PhaseBreakdown {
+        let (n, k, t, d, iters) = (
+            self.n as f64,
+            self.k as f64,
+            self.t as f64,
+            self.d as f64,
+            self.iters as f64,
+        );
+        let rows_k = self.rows_k();
+        let targets = if self.subgroups { t + 1.0 } else { n };
+
+        // --- computation: the per-iteration encoded gradient (Eq. 7).
+        let comp_s = iters * (rows_k * d) / cal.kernel_cells_per_s;
+
+        // --- encode/decode compute (all public-constant weighted sums):
+        // dataset encode (one-time): `targets` encodings × (K+T) terms ×
+        // (m/K)·d elements; model encode per iter: targets × (1+T) × d;
+        // decode per iter: need × d; plus the one-time Xᵀy (m·d mul-adds)
+        // and result sharing (N shares × d/`share_per_s`).
+        let enc_data = targets * (k + t) * rows_k * d / cal.muladd_per_s;
+        let enc_model = iters * targets * (1.0 + t) * d / cal.muladd_per_s;
+        let dec = iters * self.need() as f64 * d / cal.muladd_per_s;
+        let xty = (self.m as f64) * d / cal.muladd_per_s;
+        let reshare = iters * (n * d) / cal.share_per_s;
+        let encdec_s = enc_data + enc_model + dec + xty + reshare;
+
+        // --- communication (per-client NIC bytes; bulk-synchronous).
+        // One-time: dataset encode exchange within the subgroup.
+        let bytes_enc_data = targets * rows_k * d * ELEM_BYTES as f64;
+        // Per iteration: model-encode exchange + result sharing to all +
+        // two king-openings for TruncPr (king NIC dominates: (N−1)·d down).
+        let bytes_model = targets * d * ELEM_BYTES as f64;
+        let bytes_results = (n - 1.0) * d * ELEM_BYTES as f64;
+        let bytes_trunc_king = 2.0 * (n - 1.0) * d * ELEM_BYTES as f64;
+        let rounds_per_iter = 4.0; // encode, share, 2×trunc-open
+        // Per-message processing (MPI4Py): each client ingests ~(targets−1)
+        // encode messages + (N−1) result messages; the king ingests 2(T+1)
+        // truncation shares and emits 2(N−1).
+        let msgs_per_iter = (targets - 1.0) + (n - 1.0) + 2.0 * (t + 1.0) + 2.0 * (n - 1.0);
+        let comm_s = wan.phase_time(bytes_enc_data as u64)
+            + iters
+                * (wan.latency_s * rounds_per_iter
+                    + wan.msg_proc_s * msgs_per_iter
+                    + wan.serialize_time((bytes_model + bytes_results + bytes_trunc_king) as u64));
+
+        PhaseBreakdown { comp_s, comm_s, encdec_s }
+    }
+}
+
+/// Baseline cost model (Appendix C/D, grouped G = 3): committee size
+/// `N/3`, rows per client `m/3`, threshold `T = ⌊(N−3)/6⌋`.
+///
+/// **Why the baselines are slow (the paper's Table I):** generic MPC
+/// evaluates the circuit gate by gate — every secure multiplication's
+/// degree reduction opens *its own* masked value, paying a protocol-round
+/// latency per element (`round_batch = 1`), whereas COPML's contribution is
+/// precisely that its per-iteration exchanges are whole-vector one-shot
+/// rounds. `round_batch` makes that assumption explicit and sweepable
+/// (the `table1` bench ablates it); with the paper's 40 Mbps/20 ms WAN and
+/// `round_batch = 1` this model lands within ~15% of the paper's baseline
+/// totals. BGW additionally pays `BGW_ROUND_FACTOR` latencies per opening
+/// (reshare + all-to-all reconstruct, vs. BH08's king pipeline).
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineCost {
+    pub n: usize,
+    pub t: usize,
+    pub m: usize,
+    pub d: usize,
+    pub iters: usize,
+    pub bgw: bool,
+    /// Number of dataset subgroups (paper: 3).
+    pub groups: usize,
+    /// Elements batched per degree-reduction opening (1 = gate-by-gate).
+    pub round_batch: usize,
+}
+
+/// Latency rounds per BGW multiplication relative to BH08 (reshare +
+/// broadcast reconstruction vs. a pipelined king opening).
+pub const BGW_ROUND_FACTOR: f64 = 3.0;
+
+impl BaselineCost {
+    pub fn paper(n: usize, m: usize, d: usize, iters: usize, bgw: bool) -> BaselineCost {
+        BaselineCost {
+            n,
+            t: (n.saturating_sub(3) / 6).max(1),
+            m,
+            d,
+            iters,
+            bgw,
+            groups: 3,
+            round_batch: 1,
+        }
+    }
+
+    pub fn estimate(&self, cal: &Calibration, wan: &WanModel) -> PhaseBreakdown {
+        let committee = (self.n / self.groups).max(2 * self.t + 1) as f64;
+        let rows = self.m as f64 / self.groups as f64;
+        let d = self.d as f64;
+        let iters = self.iters as f64;
+
+        // --- computation: two share-matvec passes over (m/3 × d) per iter
+        // (z = X·w and grad = Xᵀ·res) — same cell count as the kernel.
+        let comp_s = iters * 2.0 * (rows * d) / cal.kernel_cells_per_s;
+
+        // Degree-reduction openings per iteration: one per element of
+        // z (m/3) and grad (d), in batches of `round_batch`; truncation is
+        // two whole-vector openings (the truncation protocol is vectorized
+        // in all implementations).
+        let batch = self.round_batch.max(1) as f64;
+        let opens_per_iter = ((rows + d) / batch).ceil() + 2.0;
+
+        let (encdec_s, comm_s);
+        if self.bgw {
+            // BGW: each party reshares its (m/3)-vector and d-vector with
+            // fresh degree-T polynomials (share generation) and interpolates
+            // committee-many sub-shares.
+            let reshare_elems = iters * (rows + d);
+            let gen = reshare_elems * committee / cal.share_per_s;
+            let interp = reshare_elems * (2.0 * self.t as f64 + 1.0) / cal.muladd_per_s;
+            let trunc_interp = iters * 2.0 * d * (self.t as f64 + 1.0) / cal.muladd_per_s;
+            encdec_s = gen + interp + trunc_interp;
+            // Comm: resharing to committee−1 peers + broadcast openings,
+            // with BGW_ROUND_FACTOR latencies per opening round.
+            let bytes_per_iter = ((committee - 1.0) * (rows + d)
+                + 2.0 * (committee - 1.0) * d)
+                * ELEM_BYTES as f64;
+            // Each opening: all-to-all resharing → every party ingests
+            // committee−1 sub-share messages, serialized by per-message
+            // processing; plus BGW_ROUND_FACTOR pipelined round latencies
+            // amortized across the batch.
+            comm_s = iters
+                * (wan.latency_s * BGW_ROUND_FACTOR * (opens_per_iter / 64.0).max(1.0)
+                    + wan.msg_proc_s * opens_per_iter * (committee - 1.0) * BGW_ROUND_FACTOR
+                    + wan.serialize_time(bytes_per_iter as u64));
+        } else {
+            // BH08: king-based openings of masked values; offline double
+            // sharings are generated collectively (DN07 batches), charged
+            // at one share-generation per element per party.
+            let open_elems = iters * (rows + d + 2.0 * d);
+            let king_interp = open_elems * (2.0 * self.t as f64 + 1.0) / cal.muladd_per_s;
+            let doubles_gen = iters * (rows + d) / cal.share_per_s; // per party
+            encdec_s = king_interp + doubles_gen;
+            // King NIC: receives (2T+1)·elems up, broadcasts (committee−1)·elems down.
+            let bytes_king_per_iter =
+                (committee - 1.0 + 2.0 * self.t as f64 + 1.0) * (rows + 3.0 * d) * ELEM_BYTES as f64;
+            // Openings pipeline through the king, whose per-message
+            // processing of the 2T+1 incoming shares serializes — the term
+            // that grows with N and dominates the paper's baseline.
+            comm_s = iters
+                * (wan.latency_s * (opens_per_iter / 64.0).max(1.0)
+                    + wan.msg_proc_s * opens_per_iter * (2.0 * self.t as f64 + 1.0)
+                    + wan.serialize_time(bytes_king_per_iter as u64));
+        }
+
+        PhaseBreakdown { comp_s, comm_s, encdec_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::P26;
+
+    fn fake_cal() -> Calibration {
+        Calibration { muladd_per_s: 1e9, kernel_cells_per_s: 5e8, share_per_s: 2e8 }
+    }
+
+    #[test]
+    fn calibration_runs_and_is_positive() {
+        let cal = Calibration::measure(Field::new(P26));
+        assert!(cal.muladd_per_s > 1e6);
+        assert!(cal.kernel_cells_per_s > 1e6);
+        assert!(cal.share_per_s > 1e5);
+    }
+
+    #[test]
+    fn copml_comp_scales_inversely_with_k() {
+        let wan = WanModel::paper();
+        let cal = fake_cal();
+        let base = CopmlCost { n: 50, k: 4, t: 1, r: 1, m: 9019, d: 3073, iters: 50, subgroups: true };
+        let c4 = base.estimate(&cal, &wan);
+        let c16 = CopmlCost { k: 16, ..base }.estimate(&cal, &wan);
+        let ratio = c4.comp_s / c16.comp_s;
+        assert!((ratio - 4.0).abs() < 0.2, "comp K-scaling ratio {ratio}");
+    }
+
+    #[test]
+    fn copml_beats_baselines_at_paper_scale() {
+        // The headline claim's shape at N=50, CIFAR dims.
+        let wan = WanModel::paper();
+        let cal = fake_cal();
+        let copml =
+            CopmlCost { n: 50, k: 16, t: 1, r: 1, m: 9019, d: 3073, iters: 50, subgroups: true }
+                .estimate(&cal, &wan);
+        let bh08 = BaselineCost::paper(50, 9019, 3073, 50, false).estimate(&cal, &wan);
+        let bgw = BaselineCost::paper(50, 9019, 3073, 50, true).estimate(&cal, &wan);
+        assert!(copml.total_s() < bh08.total_s(), "COPML {copml:?} vs BH08 {bh08:?}");
+        assert!(bh08.comm_s < bgw.comm_s, "BH08 must beat BGW on comm");
+        // Computation speedup ≈ K/3·2 per Table I discussion (two passes vs one).
+        let comp_ratio = bh08.comp_s / copml.comp_s;
+        assert!(comp_ratio > 4.0, "comp ratio {comp_ratio}");
+    }
+
+    #[test]
+    fn baseline_bgw_comm_quadratic_in_committee() {
+        // In the bytes-dominated regime (vector-batched openings), BGW's
+        // per-client traffic grows with the committee size (O(N²) total).
+        // isolate the bytes term: zero latency
+        let wan = WanModel { bandwidth_mbps: 40.0, latency_s: 0.0, msg_proc_s: 0.0 };
+        let cal = fake_cal();
+        let mut b25 = BaselineCost::paper(24, 9019, 3073, 50, true);
+        b25.round_batch = usize::MAX;
+        let mut b50 = BaselineCost::paper(48, 9019, 3073, 50, true);
+        b50.round_batch = usize::MAX;
+        let ratio = b50.estimate(&cal, &wan).comm_s / b25.estimate(&cal, &wan).comm_s;
+        assert!(ratio > 1.5, "BGW comm growth {ratio}");
+    }
+
+    #[test]
+    fn gate_by_gate_latency_dominates_baselines() {
+        // The Table-I story: with round_batch = 1 the baselines' time is
+        // latency-bound; batching whole vectors (what COPML's design makes
+        // possible) collapses it by orders of magnitude.
+        let wan = WanModel::paper();
+        let cal = fake_cal();
+        let gate = BaselineCost::paper(50, 9019, 3073, 50, false).estimate(&cal, &wan);
+        let mut batched = BaselineCost::paper(50, 9019, 3073, 50, false);
+        batched.round_batch = usize::MAX;
+        let batched = batched.estimate(&cal, &wan);
+        assert!(gate.comm_s > 20.0 * batched.comm_s);
+    }
+}

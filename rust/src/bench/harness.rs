@@ -1,0 +1,86 @@
+//! Minimal timing harness: warmup + N timed iterations, robust statistics.
+
+use std::time::Instant;
+
+/// Statistics over timed iterations (seconds).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    /// Median absolute deviation — robust spread.
+    pub mad_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  x{}",
+            self.name,
+            humanize(self.median_s),
+            humanize(self.min_s),
+            humanize(self.mad_s),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds human-readably.
+pub fn humanize(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples[0];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    BenchStats { name: name.to_string(), iters, median_s: median, mean_s: mean, min_s: min, mad_s: mad }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane_for_constant_work() {
+        let stats = time_it("noop-ish", 2, 9, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert!(stats.min_s <= stats.median_s);
+        assert!(stats.median_s < 0.1);
+        assert_eq!(stats.iters, 9);
+    }
+
+    #[test]
+    fn humanize_ranges() {
+        assert!(humanize(2.5).ends_with(" s"));
+        assert!(humanize(2.5e-3).ends_with(" ms"));
+        assert!(humanize(2.5e-6).ends_with(" µs"));
+        assert!(humanize(2.5e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmarking support: a tiny timing harness (no `criterion` in the
+//! offline image) and the calibrated cost model that regenerates the
+//! paper's EC2 WAN experiments (Fig. 3, Table I) on this machine.
+
+pub mod cost_model;
+pub mod harness;
+
+pub use cost_model::{BaselineCost, Calibration, CopmlCost, PhaseBreakdown};
+pub use harness::{time_it, BenchStats};

@@ -1,0 +1,104 @@
+//! Minimal CLI argument parsing (no `clap` in the offline image):
+//! `--key value` options, `--flag` booleans, positional subcommands.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("invalid value for --{name}: '{v}'")),
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("train --n 10 --dataset cifar --verbose");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("n"), Some("10"));
+        assert_eq!(a.get("dataset"), Some("cifar"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--k=16 --t=1");
+        assert_eq!(a.get_or("k", 0usize).unwrap(), 16);
+        assert_eq!(a.get_or("t", 0usize).unwrap(), 1);
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = parse("--n 10");
+        assert_eq!(a.get_or("n", 5usize).unwrap(), 10);
+        assert_eq!(a.get_or("missing", 7usize).unwrap(), 7);
+        let a = parse("--n ten");
+        assert!(a.get_or("n", 5usize).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+    }
+}

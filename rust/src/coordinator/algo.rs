@@ -1,0 +1,205 @@
+//! Algorithmic-fidelity COPML trainer: the *exact* field recursion the full
+//! protocol computes, evaluated centrally.
+//!
+//! Soundness (DESIGN.md §6): for `N ≥ (2r+1)(K+T−1)+1` the Lagrange
+//! decode is exact in `F_p`, secure additions/constant-multiplications are
+//! exact, and the only randomness that *reaches the model trajectory* is
+//! the TruncPr rounding randomness `(r', r'')` — which both trainers draw
+//! from the same dealer streams ([`crate::mpc::dealer::DealerValues`], keyed
+//! by `(seed, stream, index)`). The Lagrange masks `Z_k`/`v_k` and all
+//! Shamir share randomness cancel by construction. Therefore the iterates
+//! `w^{(t)}` here are **bit-identical** to the threaded protocol's
+//! (asserted in `tests/protocol_equivalence.rs`), at a fraction of the
+//! cost — which is what makes paper-scale accuracy runs (Fig. 4, N = 50,
+//! CIFAR-sized data) tractable on one machine.
+//!
+//! The trainer also *range-checks* every value entering truncation against
+//! `2^{k_2−1}` (the protocol cannot see these values; the simulator can),
+//! turning fixed-point-plan violations into hard errors instead of silent
+//! accuracy loss.
+
+use super::{CopmlConfig, QuantizedTask, TrainOutput};
+use crate::data::Dataset;
+use crate::field::{vecops, MatShape};
+use crate::mpc::dealer::{Dealer, DealerValues, Demand};
+
+/// Offline-randomness demand of one COPML run (shared with the threaded
+/// protocol so the streams line up).
+pub fn copml_demand(cfg: &CopmlConfig, d: usize, rows_padded: usize) -> Demand {
+    let iters = cfg.iters;
+    Demand {
+        // One BH08 degree reduction for the d-vector Xᵀy.
+        doubles: d,
+        // Two truncation stages per iteration, d elements each.
+        truncs: vec![
+            (cfg.plan.k1_stage1(), d * iters),
+            (cfg.plan.k1_stage2(), d * iters),
+        ],
+        // Lagrange masks: T data masks of (rows/K)·d (one-time, Eq. 3) +
+        // T model masks of d per iteration (Eq. 4).
+        randoms: cfg.t * (rows_padded / cfg.k) * d + cfg.t * d * iters,
+    }
+}
+
+/// Central truncation replaying the dealer's `(r', r'')` for width `m`:
+/// identical to what `mpc::Party::trunc_pr` computes on shares.
+fn trunc_central(
+    task: &QuantizedTask,
+    vals: &mut DealerValues,
+    a: &mut [u64],
+    k: u32,
+    m: u32,
+) -> Result<(), String> {
+    let f = task.f;
+    let pow_km1 = f.reduce(1u64 << (k - 1));
+    let pow_m = 1u64 << m;
+    let inv2m = f.inv(pow_m);
+    let offset = f.reduce(1u64 << (k - 1 - m));
+    let (rp, rpp) = {
+        let (rp, rpp) = vals.take_trunc_pair(a.len(), m);
+        (rp.to_vec(), rpp.to_vec())
+    };
+    for (i, v) in a.iter_mut().enumerate() {
+        // Range check: the value must lie in (−2^{k−1}, 2^{k−1}).
+        let signed = f.to_i64(*v);
+        if signed.unsigned_abs() >= 1u64 << (k - 1) {
+            return Err(format!(
+                "truncation range violation: |{signed}| ≥ 2^{} (element {i}, stage m={m}) — \
+                 fixed-point plan too aggressive for this dataset",
+                k - 1
+            ));
+        }
+        let b = f.add(*v, pow_km1);
+        // c = b + 2^m·r'' + r' — the value the protocol would open.
+        let c = f.add(b, f.add(f.mul(pow_m, rpp[i]), rp[i]));
+        let c_lo = c & (pow_m - 1);
+        let num = f.add(f.sub(b, c_lo), rp[i]);
+        *v = f.sub(f.mul(num, inv2m), offset);
+    }
+    Ok(())
+}
+
+/// Train COPML in algorithmic-fidelity mode. Returns the per-iteration
+/// field-domain model trace (identical to the protocol's).
+pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<TrainOutput, String> {
+    cfg.validate(ds)?;
+    let task = QuantizedTask::new(cfg, ds);
+    train_task(cfg, ds, &task)
+}
+
+/// Inner trainer reusing a prepared [`QuantizedTask`].
+pub fn train_task(
+    cfg: &CopmlConfig,
+    ds: &Dataset,
+    task: &QuantizedTask,
+) -> Result<TrainOutput, String> {
+    let f = task.f;
+    let (rows, d) = (task.rows_padded, task.d);
+    let shape = MatShape::new(rows, d);
+    let demand = copml_demand(cfg, d, rows);
+    let mut vals = Dealer::values(f, cfg.seed, &demand, cfg.plan.k2, cfg.plan.kappa);
+
+    // One-time: Xᵀy, aligned to the gradient scale 2^{l_c+l_x+l_w} above
+    // its own l_x (paper Phase 2 end; scaling is a public-constant mult).
+    let mut xty = vecops::matvec_t(f, &task.x_q, shape, &task.y_q);
+    let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
+    vecops::scale_assign(f, &mut xty, align);
+
+    let mut w = vec![0u64; d]; // w^(0) = 0 (see DESIGN.md: deterministic init)
+    let mut out = TrainOutput::default();
+
+    for _iter in 0..cfg.iters {
+        // z = X·w  (scale l_x + l_w)
+        let mut z = vecops::matvec(f, &task.x_q, shape, &w);
+        // ĝ(z)  (scale l_c + l_x + l_w)
+        vecops::poly_eval_assign(f, &task.coeffs_q, &mut z);
+        // Xᵀ ĝ  (scale 2l_x + l_w + l_c) — in the protocol this is the
+        // Lagrange-decoded aggregate of the clients' Eq. (7) results.
+        let mut grad = vecops::matvec_t(f, &task.x_q, shape, &z);
+        // − Xᵀy (aligned)
+        vecops::sub_assign(f, &mut grad, &xty);
+        // Stage-1 truncation → scale l_x + l_w.
+        trunc_central(task, &mut vals, &mut grad, cfg.plan.k2, cfg.plan.k1_stage1())?;
+        // × e_q (scale + l_e), stage-2 truncation → scale l_w.
+        vecops::scale_assign(f, &mut grad, task.eta_q);
+        trunc_central(task, &mut vals, &mut grad, cfg.plan.k2, cfg.plan.k1_stage2())?;
+        // w ← w − G₂
+        vecops::sub_assign(f, &mut w, &grad);
+        out.w_trace.push(w.clone());
+    }
+
+    out.eval_traces(&cfg.plan, ds);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CaseParams;
+    use crate::data::SynthSpec;
+    use crate::ml;
+
+    #[test]
+    fn converges_on_smoke_dataset() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 11);
+        let cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 11);
+        let out = train(&cfg, &ds).unwrap();
+        let acc = *out.test_accuracy.last().unwrap();
+        assert!(acc > 0.80, "secure training accuracy {acc}");
+        // loss should be decreasing overall
+        assert!(out.loss.last().unwrap() < &out.loss[0]);
+    }
+
+    #[test]
+    fn close_to_plaintext_reference() {
+        // Fig. 4's claim: COPML ≈ conventional logistic regression.
+        let ds = Dataset::synth(SynthSpec::smoke(), 12);
+        let cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case2(10), 12);
+        let secure = train(&cfg, &ds).unwrap();
+        let plain = ml::train_logreg(
+            &ds,
+            &ml::LogRegOptions { iters: cfg.iters, eta: cfg.eta, ..Default::default() },
+        );
+        let gap = (plain.test_accuracy.last().unwrap()
+            - secure.test_accuracy.last().unwrap())
+        .abs();
+        assert!(gap < 0.08, "secure-vs-plaintext accuracy gap {gap}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 13);
+        let cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 99);
+        let a = train(&cfg, &ds).unwrap();
+        let b = train(&cfg, &ds).unwrap();
+        assert_eq!(a.w_trace, b.w_trace);
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 100;
+        let c = train(&cfg2, &ds).unwrap();
+        assert_ne!(a.w_trace, c.w_trace, "different seed → different TruncPr rounding");
+    }
+
+    #[test]
+    fn k_does_not_change_trajectory() {
+        // K only partitions work; the decoded gradient — and hence the
+        // trajectory — must be identical across K (padding differs, but
+        // zero rows are inert).
+        let ds = Dataset::synth(SynthSpec::smoke(), 14);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 13, CaseParams::explicit(2, 1), 14);
+        cfg.iters = 8;
+        let a = train(&cfg, &ds).unwrap();
+        cfg.k = 4;
+        let b = train(&cfg, &ds).unwrap();
+        assert_eq!(a.w_trace, b.w_trace);
+    }
+
+    #[test]
+    fn range_violation_detected() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 15);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 15);
+        // Absurd learning rate → huge update → stage-2 range violation.
+        cfg.eta = 1e9;
+        let r = train(&cfg, &ds);
+        assert!(r.is_err() || r.unwrap().test_accuracy.last().unwrap() < &0.9);
+    }
+}

@@ -1,0 +1,323 @@
+//! The COPML coordinator — the paper's system contribution, orchestrated
+//! from rust.
+//!
+//! Three trainers share one configuration ([`CopmlConfig`]) and one
+//! quantization pipeline ([`QuantizedTask`]):
+//!
+//! * [`algo`] — *algorithmic-fidelity* mode: the exact field recursion of
+//!   the protocol (same quantization, same Lagrange decode values, same
+//!   TruncPr randomness from the same dealer seed) evaluated centrally.
+//!   Bit-identical to the full protocol (asserted in
+//!   `tests/protocol_equivalence.rs`); used for paper-scale accuracy runs
+//!   (Fig. 4).
+//! * [`protocol`] — the full threaded protocol: N client threads exchanging
+//!   real shares over `net::local`, computing encoded gradients via
+//!   [`crate::runtime`] (native or PJRT engine), decoding and updating the
+//!   model inside MPC. Every byte that the paper's clients would exchange
+//!   crosses a channel here.
+//! * [`baseline`] — the conventional-MPC baselines ([BGW88] and [BH08])
+//!   applied to the same task (Appendix C/D), for the Fig. 3 / Table I
+//!   comparisons.
+
+pub mod algo;
+pub mod baseline;
+pub mod protocol;
+
+use crate::data::Dataset;
+use crate::field::Field;
+use crate::lcc;
+use crate::ml::sigmoid::SigmoidPoly;
+use crate::ml::{fit_sigmoid};
+use crate::quant::{self, FpPlan};
+use crate::runtime::Engine;
+
+/// Choice of COPML's `(K, T)` operating point (paper §V.A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CaseParams {
+    pub k: usize,
+    pub t: usize,
+}
+
+impl CaseParams {
+    /// Case 1 — maximum parallelization: `K = ⌊(N−1)/3⌋`, `T = 1` (r = 1).
+    pub fn case1(n: usize) -> CaseParams {
+        CaseParams { k: (n - 1) / 3, t: 1 }
+    }
+
+    /// Case 2 — equal parallelization and privacy:
+    /// `T = ⌊(N−3)/6⌋`, `K = ⌊(N+2)/3⌋ − T`.
+    pub fn case2(n: usize) -> CaseParams {
+        let t = ((n.saturating_sub(3)) / 6).max(1);
+        CaseParams { k: ((n + 2) / 3).saturating_sub(t).max(1), t }
+    }
+
+    /// Explicit `(K, T)`.
+    pub fn explicit(k: usize, t: usize) -> CaseParams {
+        CaseParams { k, t }
+    }
+}
+
+/// Full configuration of a COPML training run.
+#[derive(Clone, Debug)]
+pub struct CopmlConfig {
+    /// Number of clients.
+    pub n: usize,
+    /// Privacy threshold.
+    pub t: usize,
+    /// Parallelization parameter (dataset split count).
+    pub k: usize,
+    /// Degree of the sigmoid approximation (paper uses 1).
+    pub r: usize,
+    /// Fixed-point plan (field, scales, truncation widths).
+    pub plan: FpPlan,
+    /// Gradient-descent iterations `J`.
+    pub iters: usize,
+    /// Learning rate `η`.
+    pub eta: f64,
+    /// Master seed (dealer randomness, share randomness, masks).
+    pub seed: u64,
+    /// Which engine evaluates Eq. (7).
+    pub engine: Engine,
+    /// Half-range of the sigmoid least-squares fit.
+    pub fit_range: f64,
+    /// Use the footnote-4 subgroup optimization for encoding exchanges.
+    pub subgroups: bool,
+}
+
+impl CopmlConfig {
+    /// Sensible defaults for a dataset: paper-parity plan scaled to the
+    /// dataset's width, `η = 2`, 50 iterations (the paper's count).
+    pub fn for_dataset(ds: &Dataset, n: usize, case: CaseParams, seed: u64) -> CopmlConfig {
+        let plan = if ds.d > 4096 { FpPlan::paper_gisette() } else { FpPlan::paper_cifar() };
+        CopmlConfig {
+            n,
+            t: case.t,
+            k: case.k,
+            r: 1,
+            plan,
+            iters: 50,
+            eta: 2.0,
+            seed,
+            engine: Engine::Native,
+            fit_range: 4.0,
+            subgroups: true,
+        }
+    }
+
+    /// The recovery threshold `(2r+1)(K+T−1)+1` this config needs.
+    pub fn recovery_threshold(&self) -> usize {
+        lcc::recovery_threshold(self.r, self.k, self.t)
+    }
+
+    /// Validate `N ≥ (2r+1)(K+T−1)+1` (Theorem 1) and the fixed-point plan.
+    pub fn validate(&self, ds: &Dataset) -> Result<(), String> {
+        if self.k == 0 || self.t == 0 {
+            return Err("K and T must be ≥ 1".into());
+        }
+        let need = self.recovery_threshold();
+        if self.n < need {
+            return Err(format!(
+                "N={} below recovery threshold (2r+1)(K+T−1)+1={need} (r={}, K={}, T={})",
+                self.n, self.r, self.k, self.t
+            ));
+        }
+        // Gradient-magnitude bound, *measured* on the data: the largest
+        // initial-gradient coordinate |Xᵀ(ĝ(0)−y)|_∞ (one pass), with a 4×
+        // margin for growth during training. The trainers additionally
+        // range-check every truncation input at runtime.
+        let mut g0 = vec![0.0f64; ds.d];
+        for i in 0..ds.m {
+            let r = 0.5 - ds.y[i];
+            for (gj, &xij) in g0.iter_mut().zip(&ds.x[i * ds.d..(i + 1) * ds.d]) {
+                *gj += r * xij;
+            }
+        }
+        // 1.3× margin: the initial gradient is empirically the largest
+        // (residuals shrink as training converges); the runtime checks in
+        // `algo::trunc_central` are the hard guard.
+        let grad_bound = 1.3 * g0.iter().fold(8.0f64, |a, &b| a.max(b.abs()));
+        let rep = self.plan.validate(ds.d, 1.0, 8.0 / ds.d as f64, grad_bound, self.r);
+        if !rep.ok {
+            return Err(format!("fixed-point plan invalid: {:?}", rep.errors));
+        }
+        if self.plan.eta_factor(self.eta, ds.m) == 0 {
+            return Err(format!(
+                "learning rate quantizes to zero: Round(2^{}·{}/{}) = 0 — raise η or l_e",
+                self.plan.le, self.eta, ds.m
+            ));
+        }
+        Ok(())
+    }
+
+    /// Fit and quantize the sigmoid polynomial for this config.
+    ///
+    /// Coefficient `i` is scaled at `2^{l_c+(1−i)(l_x+l_w)}` so every term
+    /// of `ĝ(z_q)` lands on the common scale `2^{l_c+l_x+l_w}` (see
+    /// `quant` module docs).
+    pub fn quantized_sigmoid(&self) -> (SigmoidPoly, Vec<u64>) {
+        let poly = fit_sigmoid(self.r, self.fit_range, 4000);
+        let f = self.plan.field;
+        let base = self.plan.lc as i64;
+        let zscale = (self.plan.lx + self.plan.lw) as i64;
+        let coeffs_q: Vec<u64> = poly
+            .coeffs
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let exp = base + (1 - i as i64) * zscale;
+                let scaled = c * 2f64.powi(exp as i32);
+                f.from_i64((scaled + 0.5).floor() as i64)
+            })
+            .collect();
+        (poly, coeffs_q)
+    }
+}
+
+/// The dataset quantized into the field, padded so `K | rows`, plus the
+/// quantized learning-rate factor — everything the secure trainers consume.
+pub struct QuantizedTask {
+    pub f: Field,
+    /// Quantized features, `(rows_padded × d)`, scale `2^{l_x}`.
+    pub x_q: Vec<u64>,
+    /// Quantized labels at scale `2^0`, length `rows_padded` (padding rows
+    /// carry label 0 — inert, as their feature rows are zero).
+    pub y_q: Vec<u64>,
+    pub rows_padded: usize,
+    pub d: usize,
+    /// True (unpadded) sample count `m` — the denominator of `η/m`.
+    pub m: usize,
+    /// `e_q = Round(2^{l_e}·η/m)`.
+    pub eta_q: u64,
+    /// Quantized sigmoid coefficients (see `CopmlConfig::quantized_sigmoid`).
+    pub coeffs_q: Vec<u64>,
+    /// The real-valued fit (for reference links).
+    pub poly: SigmoidPoly,
+}
+
+impl QuantizedTask {
+    pub fn new(cfg: &CopmlConfig, ds: &Dataset) -> QuantizedTask {
+        let f = cfg.plan.field;
+        let rows_padded = ds.padded_rows(cfg.k);
+        let mut x_q = vec![0u64; rows_padded * ds.d];
+        for i in 0..ds.m * ds.d {
+            x_q[i] = quant::quantize(f, ds.x[i], cfg.plan.lx);
+        }
+        let mut y_q = vec![0u64; rows_padded];
+        for i in 0..ds.m {
+            y_q[i] = quant::quantize(f, ds.y[i], 0);
+        }
+        let (poly, coeffs_q) = cfg.quantized_sigmoid();
+        QuantizedTask {
+            f,
+            x_q,
+            y_q,
+            rows_padded,
+            d: ds.d,
+            m: ds.m,
+            eta_q: cfg.plan.eta_factor(cfg.eta, ds.m),
+            coeffs_q,
+            poly,
+        }
+    }
+}
+
+/// Per-iteration outcome of a secure training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutput {
+    /// Final model, dequantized.
+    pub w: Vec<f64>,
+    /// Final model in the field (scale `2^{l_w}`).
+    pub w_field: Vec<u64>,
+    /// Model snapshot per iteration (field domain) — for equivalence tests
+    /// and accuracy traces.
+    pub w_trace: Vec<Vec<u64>>,
+    pub train_accuracy: Vec<f64>,
+    pub test_accuracy: Vec<f64>,
+    pub loss: Vec<f64>,
+}
+
+impl TrainOutput {
+    /// Fill accuracy/loss traces from the field-domain snapshots.
+    pub fn eval_traces(&mut self, plan: &FpPlan, ds: &Dataset) {
+        self.train_accuracy.clear();
+        self.test_accuracy.clear();
+        self.loss.clear();
+        for wq in &self.w_trace {
+            let w = quant::dequantize_slice(plan.field, wq, plan.lw);
+            self.train_accuracy.push(crate::ml::accuracy(&ds.x, &ds.y, ds.d, &w));
+            self.test_accuracy.push(crate::ml::accuracy(&ds.x_test, &ds.y_test, ds.d, &w));
+            self.loss.push(crate::ml::cross_entropy(&ds.x, &ds.y, ds.d, &w));
+        }
+        if let Some(wq) = self.w_trace.last() {
+            self.w_field = wq.clone();
+            self.w = quant::dequantize_slice(plan.field, wq, plan.lw);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+
+    #[test]
+    fn case_params_match_paper_n50() {
+        // §V.A at N=50: Case 1 → K=16, T=1; Case 2 → T=7, K=⌊52/3⌋−7=10.
+        assert_eq!(CaseParams::case1(50), CaseParams { k: 16, t: 1 });
+        assert_eq!(CaseParams::case2(50), CaseParams { k: 10, t: 7 });
+    }
+
+    #[test]
+    fn case_params_satisfy_threshold_for_all_n() {
+        for n in 10..=60 {
+            for case in [CaseParams::case1(n), CaseParams::case2(n)] {
+                if case.k >= 1 {
+                    assert!(
+                        lcc::recovery_threshold(1, case.k, case.t) <= n,
+                        "n={n} case={case:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 1);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 1);
+        assert!(cfg.validate(&ds).is_ok(), "{:?}", cfg.validate(&ds));
+        cfg.k = 10; // threshold 3·10+1 = 31 > 10
+        assert!(cfg.validate(&ds).is_err());
+    }
+
+    #[test]
+    fn quantized_sigmoid_degree1_values() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 2);
+        let cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 1);
+        let (poly, cq) = cfg.quantized_sigmoid();
+        let f = cfg.plan.field;
+        // c0 ≈ 0.5 at scale 2^{lc+lx+lw}
+        let scale = 2f64.powi((cfg.plan.lc + cfg.plan.lx + cfg.plan.lw) as i32);
+        assert_eq!(cq[0], f.from_i64((poly.coeffs[0] * scale + 0.5).floor() as i64));
+        assert!((f.to_i64(cq[0]) as f64 - 0.5 * scale).abs() <= 2.0, "c0_q = {}", f.to_i64(cq[0]));
+        // c1 at scale lc = 3: Round(c1·8)
+        assert_eq!(f.to_i64(cq[1]), (poly.coeffs[1] * 8.0 + 0.5).floor() as i64);
+        assert!(f.to_i64(cq[1]) >= 1);
+    }
+
+    #[test]
+    fn quantized_task_pads_and_scales() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 3);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::explicit(3, 1), 1);
+        cfg.k = 3;
+        let task = QuantizedTask::new(&cfg, &ds);
+        assert_eq!(task.rows_padded % 3, 0);
+        assert!(task.rows_padded >= ds.m);
+        // padding rows all zero
+        for i in ds.m..task.rows_padded {
+            assert!(task.x_q[i * ds.d..(i + 1) * ds.d].iter().all(|&v| v == 0));
+            assert_eq!(task.y_q[i], 0);
+        }
+        assert!(task.eta_q >= 1);
+    }
+}

@@ -1,0 +1,445 @@
+//! The full COPML protocol (Algorithm 1), executed by `N` real client
+//! threads over the local transport: Shamir sharing of the per-client
+//! datasets, MPC Lagrange encoding of data and model, per-client encoded
+//! gradients (Eq. 7) through the [`crate::runtime`] engine (native or
+//! AOT/PJRT), MPC decoding (Eq. 10), and the two-stage TruncPr model
+//! update — every byte the paper's clients would exchange crosses a
+//! channel, and every phase is timed and byte-accounted.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::field::{vecops, MatShape};
+use crate::lcc;
+use crate::mpc::dealer::Dealer;
+use crate::mpc::Party;
+use crate::net::local::Hub;
+use crate::poly;
+use crate::runtime::{native::NativeKernel, Engine, GradKernel, KernelServer};
+use crate::shamir;
+
+use super::algo::copml_demand;
+use super::{CopmlConfig, QuantizedTask, TrainOutput};
+
+/// Phase labels of the per-client ledger (order = execution order).
+pub const PHASES: [&str; 7] = [
+    "share_dataset",
+    "xty",
+    "encode_dataset",
+    "encode_model",
+    "compute_gradient",
+    "share_results",
+    "decode_update",
+];
+
+/// One client's timing/byte ledger.
+#[derive(Clone, Debug, Default)]
+pub struct ClientLedger {
+    /// Seconds per phase, aligned with [`PHASES`].
+    pub seconds: [f64; 7],
+    /// Payload bytes sent per phase.
+    pub bytes: [u64; 7],
+}
+
+impl ClientLedger {
+    pub fn total_seconds(&self) -> f64 {
+        self.seconds.iter().sum()
+    }
+}
+
+/// Result of a full-protocol run.
+pub struct ProtocolOutput {
+    pub train: TrainOutput,
+    /// Per-client ledgers.
+    pub ledgers: Vec<ClientLedger>,
+}
+
+/// Per-client subgroup of size `T+1` used for encode exchanges
+/// (paper footnote 4). Returns the member ids of client `i`'s group.
+fn subgroup(n: usize, t: usize, i: usize) -> Vec<usize> {
+    let gsize = t + 1;
+    let ngroups = (n / gsize).max(1);
+    let g = (i / gsize).min(ngroups - 1);
+    let lo = g * gsize;
+    let hi = if g == ngroups - 1 { n } else { lo + gsize };
+    (lo..hi).collect()
+}
+
+/// Who client `me` sends encodings to (`targets`) and receives its own
+/// encoding's shares from (`sources`) during the encode exchanges.
+///
+/// * footnote-4 subgroups ON: both are `me`'s subgroup — every client
+///   encodes for its `T+1` group-mates (balanced NICs);
+/// * OFF (the naive layout): the fixed reconstruction set `{0..T}`
+///   computes encodings for everyone, so clients `≤ T` send to all `N`.
+fn encode_roles(n: usize, t: usize, me: usize, subgroups: bool) -> (Vec<usize>, Vec<usize>) {
+    if subgroups {
+        let g = subgroup(n, t, me);
+        (g.clone(), g)
+    } else if me <= t {
+        ((0..n).collect(), (0..=t).collect())
+    } else {
+        (Vec::new(), (0..=t).collect())
+    }
+}
+
+struct ClientCtx {
+    cfg: CopmlConfig,
+    task: Arc<QuantizedTask>,
+    kernel: Box<dyn GradKernel>,
+}
+
+struct ClientResult {
+    id: usize,
+    w_final: Vec<u64>,
+    /// Per-iteration share snapshot of [w] (for god-mode trace recovery).
+    w_share_snapshots: Vec<Vec<u64>>,
+    ledger: ClientLedger,
+}
+
+/// Run the full protocol. Spawns `cfg.n` client threads; the PJRT engine
+/// (if selected) is hosted on a [`KernelServer`] thread.
+pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOutput, String> {
+    cfg.validate(ds)?;
+    let task = Arc::new(QuantizedTask::new(cfg, ds));
+    let f = task.f;
+    let (n, t) = (cfg.n, cfg.t);
+    let demand = copml_demand(cfg, task.d, task.rows_padded);
+    let pools = Dealer::deal(f, n, t, &demand, cfg.plan.k2, cfg.plan.kappa, cfg.seed);
+    let endpoints = Hub::new(n);
+
+    // PJRT lives on its own thread; clients get Send handles.
+    let _server;
+    let mk_kernel: Box<dyn Fn() -> Box<dyn GradKernel>> = match cfg.engine {
+        Engine::Native => Box::new(move || Box::new(NativeKernel::new(f))),
+        Engine::Pjrt => {
+            let server = KernelServer::spawn(move || {
+                crate::runtime::pjrt::PjrtRuntime::load(
+                    &crate::runtime::pjrt::PjrtRuntime::default_dir(),
+                )
+                .expect("loading AOT artifacts (run `make artifacts`)")
+            });
+            let handle = server.handle();
+            _server = server;
+            Box::new(move || Box::new(handle.clone()))
+        }
+    };
+
+    let mut handles = Vec::new();
+    for (ep, pool) in endpoints.into_iter().zip(pools) {
+        let ctx = ClientCtx { cfg: cfg.clone(), task: task.clone(), kernel: mk_kernel() };
+        let seed = cfg.seed;
+        handles.push(std::thread::spawn(move || {
+            let party = Party::new(&ep, ctx.cfg.t, ctx.task.f, pool, seed);
+            client_main(&party, ctx)
+        }));
+    }
+    let mut results: Vec<ClientResult> = handles
+        .into_iter()
+        .map(|h| h.join().map_err(|_| "client thread panicked".to_string()))
+        .collect::<Result<_, _>>()?;
+    results.sort_by_key(|r| r.id);
+
+    // All clients must agree on the final model.
+    for r in &results[1..] {
+        if r.w_final != results[0].w_final {
+            return Err("clients disagree on the final model".into());
+        }
+    }
+
+    // God-mode trace: reconstruct w^{(t)} from t+1 share snapshots.
+    let lambdas = shamir::lambda_points(n);
+    let rec = shamir::Reconstructor::new(f, &lambdas[..t + 1]);
+    let mut train = TrainOutput::default();
+    for it in 0..cfg.iters {
+        let views: Vec<&[u64]> = results[..t + 1]
+            .iter()
+            .map(|r| r.w_share_snapshots[it].as_slice())
+            .collect();
+        let mut w = vec![0u64; task.d];
+        rec.reconstruct(f, &views, &mut w);
+        train.w_trace.push(w);
+    }
+    // Consistency: reconstructed last iterate must equal the opened model.
+    if train.w_trace.last() != Some(&results[0].w_final) {
+        return Err("opened model disagrees with reconstructed trace".into());
+    }
+    train.eval_traces(&cfg.plan, ds);
+    Ok(ProtocolOutput { train, ledgers: results.into_iter().map(|r| r.ledger).collect() })
+}
+
+/// Padded per-client row ranges (padding rows belong to the last client,
+/// which shares zeros for them — inert in the gradient).
+pub(crate) fn padded_ranges(rows_padded: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = rows_padded / n;
+    let extra = rows_padded % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for j in 0..n {
+        let len = base + usize::from(j < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+fn client_main(party: &Party, ctx: ClientCtx) -> ClientResult {
+    let cfg = &ctx.cfg;
+    let task = &ctx.task;
+    let f = task.f;
+    let me = party.id;
+    let (n, t, k) = (cfg.n, cfg.t, cfg.k);
+    let (rows, d) = (task.rows_padded, task.d);
+    let rows_k = rows / k;
+    let mut ledger = ClientLedger::default();
+    struct PhaseTimer {
+        start: Instant,
+        bytes_mark: u64,
+    }
+    impl PhaseTimer {
+        fn reset(&mut self, party: &Party) {
+            self.start = Instant::now();
+            self.bytes_mark = party.net.bytes_sent();
+        }
+        fn tick(&mut self, ledger: &mut ClientLedger, phase: usize, party: &Party) {
+            ledger.seconds[phase] += self.start.elapsed().as_secs_f64();
+            ledger.bytes[phase] += party.net.bytes_sent() - self.bytes_mark;
+            self.reset(party);
+        }
+    }
+    let mut timer = PhaseTimer { start: Instant::now(), bytes_mark: party.net.bytes_sent() };
+
+    // ---- Phase: share the dataset (Algorithm 1, lines 1–3) -------------
+    let ranges = padded_ranges(rows, n);
+    let (lo, hi) = ranges[me];
+    let my_x = &task.x_q[lo * d..hi * d];
+    let my_y = &task.y_q[lo..hi];
+    let tag_x = party.fresh_tag();
+    let tag_y = party.fresh_tag();
+    let own_x = party.share_out(my_x, tag_x);
+    let own_y = party.share_out(my_y, tag_y);
+    // Assemble [X]_me, [y]_me in global row order.
+    let mut x_share = vec![0u64; rows * d];
+    let mut y_share = vec![0u64; rows];
+    for (j, &(jl, jh)) in ranges.iter().enumerate() {
+        let (xs, ys) = if j == me {
+            (own_x.clone(), own_y.clone())
+        } else {
+            (party.net.recv(j, tag_x), party.net.recv(j, tag_y))
+        };
+        x_share[jl * d..jh * d].copy_from_slice(&xs);
+        y_share[jl..jh].copy_from_slice(&ys);
+    }
+    timer.tick(&mut ledger, 0, party);
+
+    // ---- Phase: [Xᵀy], aligned (Algorithm 1, line 10) -------------------
+    let shape_full = MatShape::new(rows, d);
+    let local = vecops::matvec_t(f, &x_share, shape_full, &y_share); // deg 2T
+    let mut xty = party.degree_reduce_bh08(&local); // deg T
+    let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
+    party.scale(&mut xty, align);
+    timer.tick(&mut ledger, 1, party);
+
+    // ---- Phase: Lagrange-encode the dataset (Eq. 3; lines 5–9) ----------
+    let enc = lcc::Encoder::standard(f, k, t, n);
+    // Partition [X] into K parts + T mask shares from the offline pool.
+    let parts: Vec<&[u64]> = (0..k).map(|kk| &x_share[kk * rows_k * d..(kk + 1) * rows_k * d]).collect();
+    let masks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(rows_k * d)).collect();
+    let all_parts: Vec<&[u64]> = parts.into_iter().chain(masks.iter().map(|m| m.as_slice())).collect();
+    let (targets, sources) = encode_roles(n, t, me, cfg.subgroups);
+    let tag_xenc = party.fresh_tag();
+    // Compute and send [X̃_i]_me for every target i.
+    let mut own_enc_share: Option<Vec<u64>> = None;
+    for &i in &targets {
+        let mut buf = vec![0u64; rows_k * d];
+        enc.encode_one(i, &all_parts, &mut buf);
+        if i == me {
+            own_enc_share = Some(buf);
+        } else {
+            party.net.send(i, tag_xenc, buf);
+        }
+    }
+    // Reconstruct my encoded matrix X̃_me from the sources' shares.
+    let source_pts: Vec<u64> = sources.iter().map(|&i| party.lambdas[i]).collect();
+    let rec = shamir::Reconstructor::new(f, &source_pts);
+    let enc_shares: Vec<Vec<u64>> = sources
+        .iter()
+        .map(|&i| {
+            if i == me {
+                own_enc_share.take().unwrap()
+            } else {
+                party.net.recv(i, tag_xenc)
+            }
+        })
+        .collect();
+    let views: Vec<&[u64]> = enc_shares.iter().map(|v| v.as_slice()).collect();
+    let mut x_tilde = vec![0u64; rows_k * d];
+    rec.reconstruct(f, &views, &mut x_tilde);
+    drop(enc_shares);
+    drop(x_share);
+    timer.tick(&mut ledger, 2, party);
+
+    // Precompute: model-encoding coefficient rows (Eq. 4 — the K data
+    // slots all carry [w], so their coefficients collapse to a row sum).
+    let (betas, alphas) = poly::standard_points(k + t, n);
+    let enc_rows = poly::coeff_matrix(f, &betas, &alphas);
+    let w_data_coeff: Vec<u64> = enc_rows
+        .iter()
+        .map(|row| row[..k].iter().fold(0u64, |acc, &c| f.add(acc, c)))
+        .collect();
+    // Decoder for the aggregate gradient (uses the first `need` clients).
+    let need = cfg.recovery_threshold();
+    let deg_f = 2 * cfg.r + 1;
+    let decoder = lcc::Decoder::new(f, k, t, deg_f, &alphas[..need], &betas);
+    let shape_k = MatShape::new(rows_k, d);
+
+    let mut w_share = vec![0u64; d]; // shares of w^(0) = 0
+    let mut snapshots: Vec<Vec<u64>> = Vec::with_capacity(cfg.iters);
+
+    timer.reset(party);
+    for _iter in 0..cfg.iters {
+        // ---- encode the model (Eq. 4; lines 12–15) ----------------------
+        let vmasks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(d)).collect();
+        let tag_wenc = party.fresh_tag();
+        let mut own_wenc: Option<Vec<u64>> = None;
+        for &i in &targets {
+            let mut buf = w_share.clone();
+            party.scale(&mut buf, w_data_coeff[i]);
+            for (kk, vm) in vmasks.iter().enumerate() {
+                let c = enc_rows[i][k + kk];
+                for (b, &v) in buf.iter_mut().zip(vm) {
+                    *b = f.reduce(*b + c * v);
+                }
+            }
+            if i == me {
+                own_wenc = Some(buf);
+            } else {
+                party.net.send(i, tag_wenc, buf);
+            }
+        }
+        let wenc_shares: Vec<Vec<u64>> = sources
+            .iter()
+            .map(|&i| {
+                if i == me {
+                    own_wenc.take().unwrap()
+                } else {
+                    party.net.recv(i, tag_wenc)
+                }
+            })
+            .collect();
+        let views: Vec<&[u64]> = wenc_shares.iter().map(|v| v.as_slice()).collect();
+        let mut w_tilde = vec![0u64; d];
+        rec.reconstruct(f, &views, &mut w_tilde);
+        timer.tick(&mut ledger, 3, party);
+
+        // ---- local encoded gradient (Eq. 7; line 16) --------------------
+        let f_mine = ctx.kernel.encoded_gradient(&x_tilde, shape_k, &w_tilde, &task.coeffs_q);
+        timer.tick(&mut ledger, 4, party);
+
+        // ---- share the result (line 16b) --------------------------------
+        let tag_res = party.fresh_tag();
+        let own_res = party.share_out(&f_mine, tag_res);
+        let result_shares: Vec<Vec<u64>> = (0..need)
+            .map(|j| {
+                if j == me {
+                    own_res.clone()
+                } else {
+                    party.net.recv(j, tag_res)
+                }
+            })
+            .collect();
+        // Drain the rest (sent for cost parity; not needed to decode).
+        for j in need..n {
+            if j != me {
+                let _ = party.net.recv(j, tag_res);
+            }
+        }
+        timer.tick(&mut ledger, 5, party);
+
+        // ---- decode + model update (Eq. 10–11; lines 18–23) -------------
+        let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
+        let mut grad = vec![0u64; d];
+        decoder.decode_sum(&views, &mut grad);
+        party.sub(&mut grad, &xty);
+        let mut g1 = party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, true);
+        party.scale(&mut g1, task.eta_q);
+        let g2 = party.trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, true);
+        party.sub(&mut w_share, &g2);
+        snapshots.push(w_share.clone());
+        timer.tick(&mut ledger, 6, party);
+    }
+
+    // ---- final: open the model (lines 25–27) ----------------------------
+    let w_final = party.open_broadcast(&w_share, t);
+
+    ClientResult { id: me, w_final, w_share_snapshots: snapshots, ledger }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CaseParams;
+    use crate::data::SynthSpec;
+
+    #[test]
+    fn subgroups_cover_and_have_threshold_size() {
+        for (n, t) in [(10usize, 1usize), (12, 2), (13, 3), (50, 7)] {
+            for i in 0..n {
+                let g = subgroup(n, t, i);
+                assert!(g.len() >= t + 1, "n={n} t={t} i={i}: {g:?}");
+                assert!(g.contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn encode_roles_are_consistent() {
+        // Every (sender → receiver) edge implied by `targets` must appear
+        // in the receiver's `sources`, and vice versa — no deadlock.
+        for subgroups in [true, false] {
+            for (n, t) in [(7usize, 1usize), (11, 2), (13, 3)] {
+                let roles: Vec<_> =
+                    (0..n).map(|i| encode_roles(n, t, i, subgroups)).collect();
+                for me in 0..n {
+                    for &dst in &roles[me].0 {
+                        assert!(
+                            roles[dst].1.contains(&me),
+                            "edge {me}→{dst} missing in sources (subgroups={subgroups})"
+                        );
+                    }
+                    for &src in &roles[me].1 {
+                        assert!(
+                            roles[src].0.contains(&me),
+                            "source {src} of {me} does not target it (subgroups={subgroups})"
+                        );
+                    }
+                    assert!(roles[me].1.len() >= t + 1, "need t+1 shares");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padded_ranges_partition() {
+        let r = padded_ranges(100, 7);
+        assert_eq!(r[0].0, 0);
+        assert_eq!(r[6].1, 100);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn full_protocol_matches_algo_mode_tiny() {
+        // The headline invariant: threaded protocol ≡ central recursion,
+        // bit for bit. (The large-config version lives in
+        // tests/protocol_equivalence.rs.)
+        let ds = Dataset::synth(SynthSpec::tiny(), 21);
+        let mut cfg = super::super::CopmlConfig::for_dataset(&ds, 7, CaseParams::explicit(2, 1), 21);
+        cfg.iters = 4;
+        let algo = super::super::algo::train(&cfg, &ds).unwrap();
+        let full = train(&cfg, &ds).unwrap();
+        assert_eq!(algo.w_trace, full.train.w_trace);
+    }
+}

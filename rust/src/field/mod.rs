@@ -1,0 +1,270 @@
+//! Prime-field arithmetic `F_p` — the substrate every protocol layer runs on.
+//!
+//! COPML quantizes all data into a prime field (paper §III Phase 1 /
+//! Appendix A). The paper's reference prime for CIFAR-10-scale data is
+//! `p = 2^26 − 5`, chosen so a full inner product over `d = 3072` columns can
+//! be accumulated in u64 **with a single modular reduction at the end**
+//! (`d·(p−1)² ≤ 2^64 − 1`). This module generalizes that trick: every
+//! accumulating operation reduces once per [`Field::accum_budget`] terms, so
+//! the same code is correct for headroom primes like `2^31 − 1` (where only
+//! 4 products fit) and fast for the paper-parity prime (4096 products fit).
+//!
+//! Negative values use the two's-complement-style embedding of Appendix A:
+//! `φ(x) = x` for `x ≥ 0` and `p + x` for `x < 0` ([`Field::from_i64`] /
+//! [`Field::to_i64`]).
+//!
+//! Reduction is Barrett (`μ = ⌊2^64/p⌋`): a runtime-`p` `%` compiles to a
+//! hardware divide (~25 cycles); Barrett is two multiplies and a correction.
+
+mod primes;
+pub mod vecops;
+
+pub use primes::{is_prime_u64, prev_prime, P25, P26, P31};
+pub use vecops::MatShape;
+
+/// Context for arithmetic modulo a prime `p < 2^31`.
+///
+/// Cheap to copy; pass by value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Field {
+    /// The prime modulus.
+    p: u64,
+    /// Barrett constant `⌊2^64 / p⌋`.
+    mu: u64,
+    /// `⌊p / 2⌋` — threshold of the signed embedding.
+    half: u64,
+    /// How many products `(p−1)²` fit in a u64 accumulator on top of a
+    /// reduced value `< p`.
+    accum_budget: usize,
+}
+
+impl Field {
+    /// Create a field context. Panics if `p` is not an odd prime `< 2^31`
+    /// (products of two reduced elements must fit in u64).
+    pub fn new(p: u64) -> Field {
+        assert!(p > 2 && p < (1 << 31), "modulus must be in (2, 2^31)");
+        assert!(is_prime_u64(p), "modulus {p} is not prime");
+        let mu = ((1u128 << 64) / p as u128) as u64; // ⌊2^64 / p⌋
+        let sq = (p - 1) as u128 * (p - 1) as u128;
+        let budget = ((u64::MAX as u128 - (p - 1) as u128) / sq) as usize;
+        Field {
+            p,
+            mu,
+            half: p / 2,
+            accum_budget: budget.max(1),
+        }
+    }
+
+    /// Paper-parity field for CIFAR-10-like data: `p = 2^26 − 5`.
+    pub fn paper_cifar() -> Field {
+        Field::new(P26)
+    }
+
+    /// Field satisfying `d·(p−1)² ≤ 2^64` for GISETTE-like `d = 5000`:
+    /// `p = 2^25 − 39`.
+    pub fn paper_gisette() -> Field {
+        Field::new(P25)
+    }
+
+    #[inline(always)]
+    pub fn modulus(&self) -> u64 {
+        self.p
+    }
+
+    /// Number of `(p−1)²` products that can be accumulated in u64 between
+    /// reductions.
+    #[inline(always)]
+    pub fn accum_budget(&self) -> usize {
+        self.accum_budget
+    }
+
+    /// Barrett-reduce any u64 to `[0, p)`.
+    #[inline(always)]
+    pub fn reduce(&self, x: u64) -> u64 {
+        // q = floor(x * mu / 2^64) ≈ floor(x / p), off by at most 2.
+        let q = ((x as u128 * self.mu as u128) >> 64) as u64;
+        let mut r = x.wrapping_sub(q.wrapping_mul(self.p));
+        while r >= self.p {
+            r -= self.p;
+        }
+        r
+    }
+
+    /// Reduce a u128 (e.g. a product of two u64s) to `[0, p)`.
+    #[inline(always)]
+    pub fn reduce_u128(&self, x: u128) -> u64 {
+        (x % self.p as u128) as u64
+    }
+
+    #[inline(always)]
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        let s = a + b;
+        if s >= self.p {
+            s - self.p
+        } else {
+            s
+        }
+    }
+
+    #[inline(always)]
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        if a >= b {
+            a - b
+        } else {
+            a + self.p - b
+        }
+    }
+
+    #[inline(always)]
+    pub fn neg(&self, a: u64) -> u64 {
+        debug_assert!(a < self.p);
+        if a == 0 {
+            0
+        } else {
+            self.p - a
+        }
+    }
+
+    #[inline(always)]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        // p < 2^31 so the product fits in u64.
+        self.reduce(a * b)
+    }
+
+    /// Modular exponentiation (square-and-multiply).
+    pub fn pow(&self, mut base: u64, mut exp: u64) -> u64 {
+        base = self.reduce(base);
+        let mut acc = 1u64;
+        while exp > 0 {
+            if exp & 1 == 1 {
+                acc = self.mul(acc, base);
+            }
+            base = self.mul(base, base);
+            exp >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse by Fermat's little theorem (`p` prime).
+    /// Panics on zero.
+    #[inline]
+    pub fn inv(&self, a: u64) -> u64 {
+        assert!(a % self.p != 0, "inverse of zero");
+        self.pow(a, self.p - 2)
+    }
+
+    /// Signed embedding `φ` of Appendix A: map `x ∈ [−p/2, p/2]` into the
+    /// field.
+    #[inline(always)]
+    pub fn from_i64(&self, x: i64) -> u64 {
+        let m = x.rem_euclid(self.p as i64);
+        m as u64
+    }
+
+    /// Inverse of the signed embedding: field element → signed integer in
+    /// `(−p/2, p/2]`.
+    #[inline(always)]
+    pub fn to_i64(&self, v: u64) -> i64 {
+        debug_assert!(v < self.p);
+        if v > self.half {
+            v as i64 - self.p as i64
+        } else {
+            v as i64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn basic_ops_small_prime() {
+        let f = Field::new(97);
+        assert_eq!(f.add(90, 10), 3);
+        assert_eq!(f.sub(3, 10), 90);
+        assert_eq!(f.mul(96, 96), 1); // (-1)^2
+        assert_eq!(f.neg(0), 0);
+        assert_eq!(f.neg(1), 96);
+    }
+
+    #[test]
+    fn reduce_matches_modulo_exhaustive_random() {
+        let f = Field::paper_cifar();
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.next_u64();
+            assert_eq!(f.reduce(x), x % P26);
+        }
+        // boundary values
+        for x in [0, 1, P26 - 1, P26, P26 + 1, u64::MAX, u64::MAX - 1] {
+            assert_eq!(f.reduce(x), x % P26);
+        }
+    }
+
+    #[test]
+    fn inverse_round_trips() {
+        for p in [97, P25, P26, P31] {
+            let f = Field::new(p);
+            let mut r = Rng::seed_from_u64(2);
+            for _ in 0..200 {
+                let a = r.gen_range(p - 1) + 1;
+                let ai = f.inv(a);
+                assert_eq!(f.mul(a, ai), 1, "p={p} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn pow_matches_naive() {
+        let f = Field::new(101);
+        for base in 1..20u64 {
+            let mut acc = 1u64;
+            for e in 0..12u64 {
+                assert_eq!(f.pow(base, e), acc);
+                acc = f.mul(acc, base);
+            }
+        }
+    }
+
+    #[test]
+    fn signed_embedding_round_trips() {
+        let f = Field::paper_cifar();
+        for x in [-5i64, -1, 0, 1, 5, -(P26 as i64) / 2 + 1, (P26 as i64) / 2] {
+            assert_eq!(f.to_i64(f.from_i64(x)), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn signed_arithmetic_consistent() {
+        // φ(a)·φ(b) = φ(a·b) as long as |a·b| < p/2.
+        let f = Field::paper_cifar();
+        let mut r = Rng::seed_from_u64(3);
+        for _ in 0..1000 {
+            let a = r.gen_range(4096) as i64 - 2048;
+            let b = r.gen_range(4096) as i64 - 2048;
+            let v = f.mul(f.from_i64(a), f.from_i64(b));
+            assert_eq!(f.to_i64(v), a * b);
+        }
+    }
+
+    #[test]
+    fn accum_budget_paper_prime() {
+        let f = Field::paper_cifar();
+        // Paper: d(p−1)² ≤ 2^64 − 1 must hold for d = 3072 (it does; in
+        // fact ~4096 terms fit).
+        assert!(f.accum_budget() >= 3073, "budget={}", f.accum_budget());
+        let g = Field::paper_gisette();
+        assert!(g.accum_budget() >= 5000, "budget={}", g.accum_budget());
+    }
+
+    #[test]
+    #[should_panic(expected = "not prime")]
+    fn rejects_composite() {
+        Field::new(1 << 20);
+    }
+}

@@ -1,0 +1,117 @@
+//! Primality testing and the primes used by the paper's experiments.
+
+/// `2^26 − 5` — the paper's 64-bit-implementation prime for CIFAR-10
+/// (`d = 3072`; Appendix A: largest prime with `d(p−1)² ≤ 2^64 − 1`).
+pub const P26: u64 = (1 << 26) - 5;
+
+/// `2^25 − 39` — analogous prime for GISETTE-scale width (`d = 5000`).
+pub const P25: u64 = (1 << 25) - 39;
+
+/// `2^31 − 1` (Mersenne) — headroom prime for accuracy studies; inner
+/// products must be tiled every ~4 terms (see `Field::accum_budget`).
+pub const P31: u64 = (1 << 31) - 1;
+
+/// Deterministic Miller–Rabin for u64.
+///
+/// The witness set {2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37} is proven
+/// sufficient for all n < 3.3·10^24, which covers u64.
+pub fn is_prime_u64(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for &p in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == p {
+            return true;
+        }
+        if n % p == 0 {
+            return false;
+        }
+    }
+    // n − 1 = d · 2^s with d odd
+    let mut d = n - 1;
+    let mut s = 0u32;
+    while d & 1 == 0 {
+        d >>= 1;
+        s += 1;
+    }
+    'witness: for &a in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = mod_pow_u64(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mod_mul_u64(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+#[inline]
+fn mod_mul_u64(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+fn mod_pow_u64(mut base: u64, mut exp: u64, m: u64) -> u64 {
+    base %= m;
+    let mut acc = 1u64;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mod_mul_u64(acc, base, m);
+        }
+        base = mod_mul_u64(base, base, m);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Largest prime `≤ n` (linear scan with Miller–Rabin; used by the
+/// quantization planner to pick a dataset-specific modulus).
+pub fn prev_prime(mut n: u64) -> u64 {
+    assert!(n >= 2);
+    loop {
+        if is_prime_u64(n) {
+            return n;
+        }
+        n -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_primes() {
+        for p in [2u64, 3, 5, 97, 101, P25, P26, P31, 67108837] {
+            assert!(is_prime_u64(p), "{p} should be prime");
+        }
+    }
+
+    #[test]
+    fn known_composites() {
+        for c in [1u64, 4, 100, (1 << 26) - 1, (1 << 26) - 3, 67108859 * 3] {
+            assert!(!is_prime_u64(c), "{c} should be composite");
+        }
+    }
+
+    #[test]
+    fn paper_prime_is_exactly_prev_prime_under_2_26() {
+        // The paper picks the largest prime avoiding overflow; verify
+        // 2^26 − 5 is the largest prime ≤ 2^26.
+        assert_eq!(prev_prime(1 << 26), P26);
+        assert_eq!(prev_prime(1 << 25), P25);
+    }
+
+    #[test]
+    fn small_range_against_sieve() {
+        // Cross-check Miller–Rabin against trial division for n < 2000.
+        for n in 0u64..2000 {
+            let naive = n >= 2 && (2..n).take_while(|d| d * d <= n).all(|d| n % d != 0);
+            assert_eq!(is_prime_u64(n), naive, "n={n}");
+        }
+    }
+}

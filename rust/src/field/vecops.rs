@@ -1,0 +1,394 @@
+//! Batch (vector / matrix) operations over `F_p` — the L3 hot path.
+//!
+//! All matrices are dense row-major `&[u64]` with a [`MatShape`]. The
+//! overflow discipline follows Appendix A of the paper: u64 accumulators,
+//! one modular reduction per [`Field::accum_budget`] accumulated products
+//! ("modular operation after the inner product instead of per element").
+//!
+//! The two operations that dominate COPML's runtime are:
+//! * [`weighted_sum`] — Lagrange encoding/decoding (Eqs. 3, 4, 10) is a
+//!   weighted sum of `K+T` matrices with public coefficients;
+//! * [`matvec`] / [`matvec_t`] — the encoded gradient `X̃ᵀ ĝ(X̃·w̃)` (Eq. 7)
+//!   when executed on the native fallback instead of PJRT.
+
+use super::Field;
+
+/// Row-major dense matrix shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl MatShape {
+    pub fn new(rows: usize, cols: usize) -> MatShape {
+        MatShape { rows, cols }
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// `a[i] ← a[i] + b[i] (mod p)`.
+pub fn add_assign(f: Field, a: &mut [u64], b: &[u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = f.add(*x, y);
+    }
+}
+
+/// `a[i] ← a[i] − b[i] (mod p)`.
+pub fn sub_assign(f: Field, a: &mut [u64], b: &[u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = f.sub(*x, y);
+    }
+}
+
+/// `a[i] ← c · a[i] (mod p)`.
+pub fn scale_assign(f: Field, a: &mut [u64], c: u64) {
+    for x in a.iter_mut() {
+        *x = f.mul(*x, c);
+    }
+}
+
+/// `out[i] ← out[i] + c · x[i] (mod p)` — multiplication by a public
+/// constant, the only multiplication Lagrange encode/decode needs
+/// (paper Remark 3: no communication).
+pub fn axpy(f: Field, out: &mut [u64], c: u64, x: &[u64]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        // o < p, c·v < (p−1)² ≤ 2^62 → sum fits u64.
+        *o = f.reduce(*o + c * v);
+    }
+}
+
+/// `out ← Σ_k coeffs[k] · mats[k]` (mod p), blocked for cache friendliness.
+///
+/// This is one Lagrange evaluation point of Eq. (3)/(4)/(10). Processes
+/// elements in blocks: for each block, accumulates all `K+T` terms in u64
+/// (reducing only when the accumulation budget is hit), then reduces once.
+pub fn weighted_sum(f: Field, coeffs: &[u64], mats: &[&[u64]], out: &mut [u64]) {
+    assert_eq!(coeffs.len(), mats.len());
+    let n = out.len();
+    for m in mats {
+        assert_eq!(m.len(), n, "matrix size mismatch in weighted_sum");
+    }
+    out.fill(0);
+    let budget = f.accum_budget();
+    const BLOCK: usize = 4096;
+    let mut start = 0;
+    while start < n {
+        let end = (start + BLOCK).min(n);
+        let out_b = &mut out[start..end];
+        let mut pending = 0usize;
+        for (k, m) in mats.iter().enumerate() {
+            let c = coeffs[k];
+            if c == 0 {
+                continue;
+            }
+            let m_b = &m[start..end];
+            if pending + 1 > budget {
+                for o in out_b.iter_mut() {
+                    *o = f.reduce(*o);
+                }
+                pending = 0;
+            }
+            for (o, &v) in out_b.iter_mut().zip(m_b) {
+                *o += c * v;
+            }
+            pending += 1;
+        }
+        for o in out_b.iter_mut() {
+            *o = f.reduce(*o);
+        }
+        start = end;
+    }
+}
+
+/// Inner product `Σ a[i]·b[i] (mod p)`, reduced once per budget-sized tile —
+/// exactly the paper's "mod after the inner product" when the vector fits
+/// the budget (d = 3072 < 4096 for p = 2^26 − 5).
+pub fn dot(f: Field, a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let budget = f.accum_budget();
+    let mut acc = 0u64;
+    for (ca, cb) in a.chunks(budget).zip(b.chunks(budget)) {
+        let mut t = 0u64;
+        for (&x, &y) in ca.iter().zip(cb) {
+            t += x * y;
+        }
+        acc = f.reduce(f.reduce(t) + acc);
+    }
+    acc
+}
+
+/// `y = A·x` for row-major `A: (m × d)`, `x: (d)`.
+pub fn matvec(f: Field, a: &[u64], shape: MatShape, x: &[u64]) -> Vec<u64> {
+    assert_eq!(a.len(), shape.len());
+    assert_eq!(x.len(), shape.cols);
+    let mut y = Vec::with_capacity(shape.rows);
+    for r in 0..shape.rows {
+        let row = &a[r * shape.cols..(r + 1) * shape.cols];
+        y.push(dot(f, row, x));
+    }
+    y
+}
+
+/// `y = Aᵀ·v` for row-major `A: (m × d)`, `v: (m)`, without materializing
+/// the transpose: `y[j] += A[i][j]·v[i]`, reducing every budget rows.
+pub fn matvec_t(f: Field, a: &[u64], shape: MatShape, v: &[u64]) -> Vec<u64> {
+    assert_eq!(a.len(), shape.len());
+    assert_eq!(v.len(), shape.rows);
+    let budget = f.accum_budget();
+    let mut y = vec![0u64; shape.cols];
+    let mut pending = 0usize;
+    for r in 0..shape.rows {
+        let c = v[r];
+        let row = &a[r * shape.cols..(r + 1) * shape.cols];
+        if pending + 1 > budget {
+            for o in y.iter_mut() {
+                *o = f.reduce(*o);
+            }
+            pending = 0;
+        }
+        if c != 0 {
+            for (o, &x) in y.iter_mut().zip(row) {
+                *o += c * x;
+            }
+        }
+        pending += 1;
+    }
+    for o in y.iter_mut() {
+        *o = f.reduce(*o);
+    }
+    y
+}
+
+/// Dense `C = A·B` for `A: (m × k)`, `B: (k × n)` (used by tests and the
+/// secure-matmul baselines; the COPML hot path only needs matvec).
+pub fn matmul(f: Field, a: &[u64], sa: MatShape, b: &[u64], sb: MatShape) -> Vec<u64> {
+    assert_eq!(sa.cols, sb.rows);
+    assert_eq!(a.len(), sa.len());
+    assert_eq!(b.len(), sb.len());
+    let budget = f.accum_budget();
+    let (m, kk, n) = (sa.rows, sa.cols, sb.cols);
+    let mut c = vec![0u64; m * n];
+    // ikj loop with per-row-of-B accumulation; reduce every `budget` k-steps.
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut pending = 0usize;
+        for k in 0..kk {
+            let aik = a[i * kk + k];
+            if pending + 1 > budget {
+                for o in crow.iter_mut() {
+                    *o = f.reduce(*o);
+                }
+                pending = 0;
+            }
+            if aik != 0 {
+                let brow = &b[k * n..(k + 1) * n];
+                for (o, &x) in crow.iter_mut().zip(brow) {
+                    *o += aik * x;
+                }
+            }
+            pending += 1;
+        }
+        for o in crow.iter_mut() {
+            *o = f.reduce(*o);
+        }
+    }
+    c
+}
+
+/// Element-wise polynomial evaluation `z[i] ← Σ_j coeffs[j]·z[i]^j (mod p)`
+/// by Horner's rule — the polynomial sigmoid `ĝ` of Eq. (5).
+pub fn poly_eval_assign(f: Field, coeffs: &[u64], z: &mut [u64]) {
+    assert!(!coeffs.is_empty());
+    for v in z.iter_mut() {
+        let x = *v;
+        let mut acc = *coeffs.last().unwrap();
+        for &c in coeffs.iter().rev().skip(1) {
+            acc = f.reduce(f.mul(acc, x) + c);
+        }
+        *v = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::P26;
+    use crate::prng::Rng;
+
+    fn rand_vec(r: &mut Rng, p: u64, n: usize) -> Vec<u64> {
+        (0..n).map(|_| r.gen_range(p)).collect()
+    }
+
+    /// Naive i128 reference for all ops.
+    fn dot_naive(p: u64, a: &[u64], b: &[u64]) -> u64 {
+        let mut acc = 0u128;
+        for (&x, &y) in a.iter().zip(b) {
+            acc = (acc + x as u128 * y as u128) % p as u128;
+        }
+        acc as u64
+    }
+
+    #[test]
+    fn dot_matches_naive_all_primes() {
+        for p in [97u64, crate::field::P25, P26, crate::field::P31] {
+            let f = Field::new(p);
+            let mut r = Rng::seed_from_u64(1);
+            for n in [0usize, 1, 7, 100, 5000] {
+                let a = rand_vec(&mut r, p, n);
+                let b = rand_vec(&mut r, p, n);
+                assert_eq!(dot(f, &a, &b), dot_naive(p, &a, &b), "p={p} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_worst_case_no_overflow() {
+        // All entries p−1: maximal accumulation pressure.
+        for p in [P26, crate::field::P31] {
+            let f = Field::new(p);
+            let a = vec![p - 1; 10_000];
+            assert_eq!(dot(f, &a, &a), dot_naive(p, &a, &a));
+        }
+    }
+
+    #[test]
+    fn weighted_sum_matches_naive() {
+        let f = Field::new(P26);
+        let mut r = Rng::seed_from_u64(2);
+        let n = 10_000;
+        let k = 33; // K+T for N=50 Case 1-ish
+        let mats: Vec<Vec<u64>> = (0..k).map(|_| rand_vec(&mut r, P26, n)).collect();
+        let coeffs = rand_vec(&mut r, P26, k);
+        let refs: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0u64; n];
+        weighted_sum(f, &coeffs, &refs, &mut out);
+        for i in 0..n {
+            let mut acc = 0u128;
+            for j in 0..k {
+                acc = (acc + coeffs[j] as u128 * mats[j][i] as u128) % P26 as u128;
+            }
+            assert_eq!(out[i], acc as u64, "i={i}");
+        }
+    }
+
+    #[test]
+    fn weighted_sum_tight_budget_prime() {
+        // p = 2^31−1 has accum budget 4: forces mid-sum reductions.
+        let p = crate::field::P31;
+        let f = Field::new(p);
+        let mut r = Rng::seed_from_u64(3);
+        let n = 100;
+        let k = 20;
+        let mats: Vec<Vec<u64>> = (0..k).map(|_| rand_vec(&mut r, p, n)).collect();
+        let coeffs = rand_vec(&mut r, p, k);
+        let refs: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0u64; n];
+        weighted_sum(f, &coeffs, &refs, &mut out);
+        for i in 0..n {
+            let mut acc = 0u128;
+            for j in 0..k {
+                acc = (acc + coeffs[j] as u128 * mats[j][i] as u128) % p as u128;
+            }
+            assert_eq!(out[i], acc as u64);
+        }
+    }
+
+    #[test]
+    fn matvec_and_transpose_match_naive() {
+        let f = Field::new(P26);
+        let mut r = Rng::seed_from_u64(4);
+        let (m, d) = (57, 43);
+        let a = rand_vec(&mut r, P26, m * d);
+        let x = rand_vec(&mut r, P26, d);
+        let v = rand_vec(&mut r, P26, m);
+        let y = matvec(f, &a, MatShape::new(m, d), &x);
+        for i in 0..m {
+            assert_eq!(y[i], dot_naive(P26, &a[i * d..(i + 1) * d], &x));
+        }
+        let yt = matvec_t(f, &a, MatShape::new(m, d), &v);
+        for j in 0..d {
+            let col: Vec<u64> = (0..m).map(|i| a[i * d + j]).collect();
+            assert_eq!(yt[j], dot_naive(P26, &col, &v), "col {j}");
+        }
+    }
+
+    #[test]
+    fn matvec_t_large_exceeds_budget() {
+        // rows > accum budget for p=2^31−1 (budget 4) exercises mid-loop
+        // reduction.
+        let p = crate::field::P31;
+        let f = Field::new(p);
+        let mut r = Rng::seed_from_u64(5);
+        let (m, d) = (100, 8);
+        let a = rand_vec(&mut r, p, m * d);
+        let v = rand_vec(&mut r, p, m);
+        let yt = matvec_t(f, &a, MatShape::new(m, d), &v);
+        for j in 0..d {
+            let col: Vec<u64> = (0..m).map(|i| a[i * d + j]).collect();
+            assert_eq!(yt[j], dot_naive(p, &col, &v));
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let f = Field::new(P26);
+        let mut r = Rng::seed_from_u64(6);
+        let (m, k, n) = (13, 29, 7);
+        let a = rand_vec(&mut r, P26, m * k);
+        let b = rand_vec(&mut r, P26, k * n);
+        let c = matmul(f, &a, MatShape::new(m, k), &b, MatShape::new(k, n));
+        for i in 0..m {
+            for j in 0..n {
+                let arow = &a[i * k..(i + 1) * k];
+                let bcol: Vec<u64> = (0..k).map(|t| b[t * n + j]).collect();
+                assert_eq!(c[i * n + j], dot_naive(P26, arow, &bcol));
+            }
+        }
+    }
+
+    #[test]
+    fn poly_eval_horner_matches_naive() {
+        let f = Field::new(P26);
+        let mut r = Rng::seed_from_u64(7);
+        let coeffs = rand_vec(&mut r, P26, 4); // degree 3
+        let mut z = rand_vec(&mut r, P26, 50);
+        let z0 = z.clone();
+        poly_eval_assign(f, &coeffs, &mut z);
+        for (i, &x) in z0.iter().enumerate() {
+            let mut acc = 0u128;
+            let mut xp = 1u128;
+            for &c in &coeffs {
+                acc = (acc + c as u128 * xp) % P26 as u128;
+                xp = xp * x as u128 % P26 as u128;
+            }
+            assert_eq!(z[i], acc as u64, "i={i}");
+        }
+    }
+
+    #[test]
+    fn add_sub_scale_roundtrip() {
+        let f = Field::new(P26);
+        let mut r = Rng::seed_from_u64(8);
+        let a0 = rand_vec(&mut r, P26, 256);
+        let b = rand_vec(&mut r, P26, 256);
+        let mut a = a0.clone();
+        add_assign(f, &mut a, &b);
+        sub_assign(f, &mut a, &b);
+        assert_eq!(a, a0);
+        let c = r.gen_range(P26 - 1) + 1;
+        scale_assign(f, &mut a, c);
+        scale_assign(f, &mut a, f.inv(c));
+        assert_eq!(a, a0);
+    }
+}

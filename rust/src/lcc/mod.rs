@@ -1,0 +1,342 @@
+//! Lagrange coded computing (LCC) — the heart of COPML's parallelization
+//! (paper Phase 2, Eqs. 3–4; decoding Eq. 10; from Yu et al., AISTATS'19).
+//!
+//! The dataset is split into `K` partitions `X_1..X_K`; together with `T`
+//! uniformly random masks `Z_{K+1}..Z_{K+T}` they define the degree-
+//! `K+T−1` polynomial `u(z)` with `u(β_k) = X_k` (data) and `u(β_{K+k}) =
+//! Z_k` (masks). Client `i` receives the evaluation `X̃_i = u(α_i)` — a
+//! matrix of **1/K-th** the dataset size. Any `T` evaluations are jointly
+//! uniform (the masks), giving information-theoretic privacy; and for any
+//! polynomial `f` of total degree `D`, `h(z) = f(u(z), v(z))` has degree
+//! `≤ D(K+T−1)`, so `D(K+T−1)+1` client results interpolate `h` and reveal
+//! `f(X_k, w) = h(β_k)` for all `k` at once.
+//!
+//! Because the evaluation points are public, encoding and decoding are
+//! weighted sums with public coefficients — they commute with Shamir secret
+//! sharing, which is why COPML can encode *shares* and never expose the
+//! data (Phase 2) — see `tests/protocol_equivalence.rs` for the
+//! share/encode commutation test.
+
+use crate::field::{vecops, Field};
+use crate::poly;
+use crate::prng::Rng;
+
+/// Minimum number of client results needed to decode a degree-`2r+1`
+/// computation: `(2r+1)(K+T−1)+1` (paper Theorem 1).
+pub fn recovery_threshold(r: usize, k: usize, t: usize) -> usize {
+    (2 * r + 1) * (k + t - 1) + 1
+}
+
+/// Maximum parallelization for given `n`, `t`, `r`:
+/// largest `K` with `n ≥ (2r+1)(K+T−1)+1`.
+pub fn max_k(n: usize, t: usize, r: usize) -> usize {
+    let d = 2 * r + 1;
+    if n < d + 1 {
+        return 0;
+    }
+    ((n - 1) / d).saturating_sub(t - 1).max(0)
+}
+
+/// Precomputed Lagrange encoder: maps `K` data partitions + `T` masks to
+/// `N` encoded evaluations.
+pub struct Encoder {
+    /// `coeffs[j][k]`: weight of partition/mask `k` in client `j`'s
+    /// encoding — `Π_{l≠k} (α_j − β_l)/(β_k − β_l)`.
+    coeffs: Vec<Vec<u64>>,
+    field: Field,
+    pub k: usize,
+    pub t: usize,
+}
+
+impl Encoder {
+    /// Build an encoder for `K` partitions, `T` masks, clients at `alphas`,
+    /// encoding points `betas` (length `K+T`, disjoint from `alphas`).
+    pub fn new(field: Field, k: usize, t: usize, betas: &[u64], alphas: &[u64]) -> Encoder {
+        assert_eq!(betas.len(), k + t);
+        for a in alphas {
+            assert!(!betas.contains(a), "alphas and betas must be disjoint");
+        }
+        Encoder { coeffs: poly::coeff_matrix(field, betas, alphas), field, k, t }
+    }
+
+    /// Standard points: `β = 1..K+T`, `α = K+T+1..K+T+N`.
+    pub fn standard(field: Field, k: usize, t: usize, n: usize) -> Encoder {
+        let (betas, alphas) = poly::standard_points(k + t, n);
+        Encoder::new(field, k, t, &betas, &alphas)
+    }
+
+    pub fn n(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Encode for client `j`: `X̃_j = Σ_k coeffs[j][k]·parts[k]`.
+    /// `parts` = `K` data partitions followed by `T` masks, all equal-sized.
+    pub fn encode_one(&self, j: usize, parts: &[&[u64]], out: &mut [u64]) {
+        assert_eq!(parts.len(), self.k + self.t);
+        vecops::weighted_sum(self.field, &self.coeffs[j], parts, out);
+    }
+
+    /// Encode for every client. Returns `N` encoded matrices.
+    pub fn encode_all(&self, parts: &[&[u64]]) -> Vec<Vec<u64>> {
+        let len = parts[0].len();
+        (0..self.n())
+            .map(|j| {
+                let mut out = vec![0u64; len];
+                self.encode_one(j, parts, &mut out);
+                out
+            })
+            .collect()
+    }
+
+    /// Generate the `T` uniform masks (paper: `Z_k ~ U(F_p^{m/K × d})`).
+    pub fn gen_masks(&self, len: usize, rng: &mut Rng) -> Vec<Vec<u64>> {
+        (0..self.t)
+            .map(|_| {
+                let mut z = vec![0u64; len];
+                rng.fill_field(self.field.modulus(), &mut z);
+                z
+            })
+            .collect()
+    }
+}
+
+/// Precomputed Lagrange decoder: interpolates `h(z)` of degree
+/// `≤ deg_f·(K+T−1)` from client results at a subset of `alphas` and
+/// re-evaluates at `β_1..β_K` (Eq. 10).
+pub struct Decoder {
+    /// `coeffs[k][j]`: weight of client result `j` in `h(β_k)`.
+    coeffs: Vec<Vec<u64>>,
+    field: Field,
+}
+
+impl Decoder {
+    /// `alphas_used`: the evaluation points of the clients whose results we
+    /// have (e.g. the fastest ones); must number at least
+    /// `deg_f·(K+T−1)+1` where `deg_f = 2r+1`.
+    pub fn new(
+        field: Field,
+        k: usize,
+        t: usize,
+        deg_f: usize,
+        alphas_used: &[u64],
+        betas: &[u64],
+    ) -> Decoder {
+        let need = deg_f * (k + t - 1) + 1;
+        assert!(
+            alphas_used.len() >= need,
+            "recovery threshold not met: have {}, need {need}",
+            alphas_used.len()
+        );
+        assert!(betas.len() >= k);
+        Decoder {
+            coeffs: poly::coeff_matrix(field, alphas_used, &betas[..k]),
+            field,
+        }
+    }
+
+    /// Decode partition `k`'s result `f(X_k, w) = h(β_k)` from the client
+    /// results (same order as `alphas_used`).
+    pub fn decode_one(&self, k: usize, results: &[&[u64]], out: &mut [u64]) {
+        vecops::weighted_sum(self.field, &self.coeffs[k], results, out);
+    }
+
+    /// Decode and **aggregate** all `K` partitions:
+    /// `Σ_k f(X_k, w) = Xᵀ ĝ(X·w)` (Eq. 11). One pass: the aggregate
+    /// weights are `Σ_k coeffs[k][j]`, so this is a single weighted sum.
+    pub fn decode_sum(&self, results: &[&[u64]], out: &mut [u64]) {
+        let n = results.len();
+        let f = self.field;
+        let mut agg = vec![0u64; n];
+        for row in &self.coeffs {
+            assert_eq!(row.len(), n);
+            for (a, &c) in agg.iter_mut().zip(row) {
+                *a = f.add(*a, c);
+            }
+        }
+        vecops::weighted_sum(f, &agg, results, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{MatShape, P26};
+
+    fn setup(k: usize, t: usize, n: usize) -> (Field, Encoder) {
+        let f = Field::new(P26);
+        (f, Encoder::standard(f, k, t, n))
+    }
+
+    #[test]
+    fn recovery_threshold_matches_paper() {
+        // r=1, Case 1 at N=50: K=16, T=1 → threshold 3·16+1 = 49 ≤ 50 ✓
+        assert_eq!(recovery_threshold(1, 16, 1), 49);
+        // Case 2 at N=50: T=7, K=⌊52/3⌋−7=10 → 3·16+1 = 49 ≤ 50 ✓
+        assert_eq!(recovery_threshold(1, 10, 7), 49);
+        assert!(recovery_threshold(1, 17, 1) > 50);
+    }
+
+    #[test]
+    fn max_k_consistent_with_threshold() {
+        for n in [4usize, 10, 31, 50] {
+            for t in [1usize, 2, 7] {
+                for r in [1usize, 3] {
+                    let k = max_k(n, t, r);
+                    if k >= 1 {
+                        assert!(recovery_threshold(r, k, t) <= n, "n={n} t={t} r={r} k={k}");
+                        assert!(recovery_threshold(r, k + 1, t) > n);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_evaluates_data_at_betas() {
+        // u(β_k) = X_k: encoding then "decoding with deg_f=1 at the same
+        // betas" recovers the partitions.
+        let (f, enc) = setup(3, 2, 8);
+        let mut rng = Rng::seed_from_u64(1);
+        let len = 40;
+        let parts_data: Vec<Vec<u64>> = (0..3)
+            .map(|_| (0..len).map(|_| rng.gen_range(P26)).collect())
+            .collect();
+        let masks = enc.gen_masks(len, &mut rng);
+        let parts: Vec<&[u64]> = parts_data.iter().chain(masks.iter()).map(|v| v.as_slice()).collect();
+        let encoded = enc.encode_all(&parts);
+
+        // u has degree K+T−1 = 4, so deg_f=1 needs (K+T−1)+1 = 5 points.
+        let (betas, alphas) = poly::standard_points(5, 8);
+        let dec = Decoder::new(f, 3, 2, 1, &alphas, &betas);
+        let views: Vec<&[u64]> = encoded.iter().map(|v| v.as_slice()).collect();
+        for k in 0..3 {
+            let mut out = vec![0u64; len];
+            dec.decode_one(k, &views, &mut out);
+            assert_eq!(out, parts_data[k], "partition {k}");
+        }
+    }
+
+    #[test]
+    fn end_to_end_quadratic_function() {
+        // f(x) = x∘x (deg 2): encode, square each encoded value, decode with
+        // ≥ 2(K+T−1)+1 results, compare against squaring the partitions.
+        let f = Field::new(P26);
+        let (k, t, n) = (4usize, 2usize, 11usize);
+        let enc = Encoder::standard(f, k, t, n);
+        let mut rng = Rng::seed_from_u64(2);
+        let len = 16;
+        let parts_data: Vec<Vec<u64>> = (0..k)
+            .map(|_| (0..len).map(|_| rng.gen_range(P26)).collect())
+            .collect();
+        let masks = enc.gen_masks(len, &mut rng);
+        let parts: Vec<&[u64]> = parts_data.iter().chain(masks.iter()).map(|v| v.as_slice()).collect();
+        let encoded = enc.encode_all(&parts);
+
+        let squared: Vec<Vec<u64>> = encoded
+            .iter()
+            .map(|e| e.iter().map(|&v| f.mul(v, v)).collect())
+            .collect();
+
+        let (betas, alphas) = poly::standard_points(k + t, n);
+        let need = 2 * (k + t - 1) + 1; // 11
+        assert!(n >= need);
+        let dec = Decoder::new(f, k, t, 2, &alphas[..need], &betas);
+        let views: Vec<&[u64]> = squared[..need].iter().map(|v| v.as_slice()).collect();
+        for kk in 0..k {
+            let mut out = vec![0u64; len];
+            dec.decode_one(kk, &views, &mut out);
+            let expect: Vec<u64> = parts_data[kk].iter().map(|&v| f.mul(v, v)).collect();
+            assert_eq!(out, expect, "partition {kk}");
+        }
+    }
+
+    #[test]
+    fn end_to_end_gradient_shape_function() {
+        // The real COPML computation: f(X, w) = Xᵀ·(c0 + c1·(X·w)) — degree
+        // 3 in the encoded variables (deg 2r+1 with r=1).
+        let f = Field::new(P26);
+        let (k, t) = (2usize, 1usize);
+        let deg_f = 3;
+        let n = recovery_threshold(1, k, t) + 1; // 8
+        let enc = Encoder::standard(f, k, t, n);
+        let mut rng = Rng::seed_from_u64(3);
+        let (rows, d) = (6usize, 5usize); // rows per partition
+        let len = rows * d;
+        let shape = MatShape::new(rows, d);
+        let xparts: Vec<Vec<u64>> = (0..k)
+            .map(|_| (0..len).map(|_| rng.gen_range(P26)).collect())
+            .collect();
+        let xmasks = enc.gen_masks(len, &mut rng);
+        let xall: Vec<&[u64]> = xparts.iter().chain(xmasks.iter()).map(|v| v.as_slice()).collect();
+        let xenc = enc.encode_all(&xall);
+
+        // model: same w for every partition slot + T random masks (Eq. 4)
+        let w: Vec<u64> = (0..d).map(|_| rng.gen_range(P26)).collect();
+        let wparts: Vec<Vec<u64>> = (0..k).map(|_| w.clone()).collect();
+        let wmasks = enc.gen_masks(d, &mut rng);
+        let wall: Vec<&[u64]> = wparts.iter().chain(wmasks.iter()).map(|v| v.as_slice()).collect();
+        let wenc = enc.encode_all(&wall);
+
+        let (c0, c1) = (12345u64, 678u64);
+        let eval = |x: &[u64], wv: &[u64]| -> Vec<u64> {
+            let mut z = vecops::matvec(f, x, shape, wv);
+            for v in z.iter_mut() {
+                *v = f.reduce(f.mul(c1, *v) + c0);
+            }
+            vecops::matvec_t(f, x, shape, &z)
+        };
+
+        let results: Vec<Vec<u64>> = (0..n).map(|j| eval(&xenc[j], &wenc[j])).collect();
+        let (betas, alphas) = poly::standard_points(k + t, n);
+        let need = deg_f * (k + t - 1) + 1;
+        let dec = Decoder::new(f, k, t, deg_f, &alphas[..need], &betas);
+        let views: Vec<&[u64]> = results[..need].iter().map(|v| v.as_slice()).collect();
+
+        // per-partition check
+        for kk in 0..k {
+            let mut out = vec![0u64; d];
+            dec.decode_one(kk, &views, &mut out);
+            assert_eq!(out, eval(&xparts[kk], &w), "partition {kk}");
+        }
+        // aggregated check (Eq. 11)
+        let mut agg = vec![0u64; d];
+        dec.decode_sum(&views, &mut agg);
+        let mut expect = vec![0u64; d];
+        for kk in 0..k {
+            vecops::add_assign(f, &mut expect, &eval(&xparts[kk], &w));
+        }
+        assert_eq!(agg, expect);
+    }
+
+    #[test]
+    fn masked_encodings_look_uniform() {
+        // With T=1 mask, a single client's encoding of a constant dataset
+        // should be statistically uniform — mean ≈ p/2.
+        let f = Field::new(P26);
+        let enc = Encoder::standard(f, 2, 1, 4);
+        let mut rng = Rng::seed_from_u64(4);
+        let len = 1;
+        let parts_data = [vec![7u64], vec![7u64]];
+        let trials = 4000;
+        let mut sum = 0f64;
+        for _ in 0..trials {
+            let masks = enc.gen_masks(len, &mut rng);
+            let parts: Vec<&[u64]> =
+                parts_data.iter().map(|v| v.as_slice()).chain(masks.iter().map(|v| v.as_slice())).collect();
+            let mut out = vec![0u64; len];
+            enc.encode_one(0, &parts, &mut out);
+            sum += out[0] as f64;
+        }
+        let mean = sum / trials as f64;
+        let expect = (P26 / 2) as f64;
+        assert!((mean - expect).abs() / expect < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "recovery threshold")]
+    fn decoder_rejects_too_few_points() {
+        let f = Field::new(P26);
+        let (betas, alphas) = poly::standard_points(5, 8);
+        Decoder::new(f, 3, 2, 3, &alphas[..5], &betas); // need 3·4+1=13
+    }
+}

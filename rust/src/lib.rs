@@ -1,0 +1,54 @@
+//! # COPML — Collaborative Privacy-Preserving Machine Learning
+//!
+//! A full reproduction of *"A Scalable Approach for Privacy-Preserving
+//! Collaborative Machine Learning"* (So, Guler, Avestimehr — NeurIPS 2020).
+//!
+//! `N` data-owners jointly train a logistic regression model while keeping
+//! their individual datasets information-theoretically private against any
+//! `T` colluding clients. The framework combines:
+//!
+//! * fixed-point quantization into a prime field `F_p` ([`quant`]),
+//! * Shamir secret sharing of the per-client datasets ([`shamir`]),
+//! * **Lagrange coded computing** over the secret shares ([`lcc`]) so each
+//!   client computes a gradient over only `1/K` of the data,
+//! * a polynomial approximation of the sigmoid ([`ml::sigmoid`]),
+//! * secure MPC decoding, truncation and model update ([`mpc`]),
+//!
+//! orchestrated by the rust coordinator in [`coordinator`]. The per-client
+//! encoded-gradient hot path `f(X̃, w̃) = X̃ᵀ ĝ(X̃·w̃)` is authored in
+//! JAX + Pallas (see `python/compile/`), AOT-lowered to HLO text, and
+//! executed from rust via PJRT ([`runtime`]). Python never runs on the
+//! request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use copml::coordinator::{CopmlConfig, CaseParams};
+//! use copml::data::{Dataset, SynthSpec};
+//!
+//! let data = Dataset::synth(SynthSpec::smoke(), 42);
+//! let cfg = CopmlConfig::for_dataset(&data, /*n=*/ 10, CaseParams::case1(10), 42);
+//! let out = copml::coordinator::algo::train(&cfg, &data).unwrap();
+//! println!("final train acc = {:.3}", out.train_accuracy.last().unwrap());
+//! ```
+//!
+//! See `examples/` for full-protocol (threaded, message-passing) drivers and
+//! `rust/benches/` for the harnesses regenerating every table and figure in
+//! the paper's evaluation section.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod field;
+pub mod lcc;
+pub mod ml;
+pub mod mpc;
+pub mod net;
+pub mod poly;
+pub mod prng;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod shamir;
+pub mod testkit;

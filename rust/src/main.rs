@@ -1,0 +1,176 @@
+//! `copml` — CLI launcher for the COPML framework.
+//!
+//! ```text
+//! copml train   --dataset smoke|cifar|gisette --n 10 --case 1|2 [--k K --t T]
+//!               [--iters 50] [--eta 2.0] [--mode algo|full] [--engine native|pjrt]
+//! copml bench   --dataset cifar --n 50            # cost-model Table-I row
+//! copml calibrate                                  # machine calibration
+//! copml info                                       # config/threshold explorer
+//! ```
+
+use copml::bench::{BaselineCost, Calibration, CopmlCost};
+use copml::cli::Args;
+use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::field::Field;
+use copml::net::wan::WanModel;
+use copml::report::Table;
+use copml::runtime::Engine;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("calibrate") => cmd_calibrate(),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: copml <train|bench|calibrate|info> [options]   (see --help in README)");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dataset_for(name: &str, seed: u64) -> Result<Dataset, String> {
+    let spec = match name {
+        "smoke" => SynthSpec::smoke(),
+        "tiny" => SynthSpec::tiny(),
+        "cifar" => SynthSpec::cifar_like(),
+        "gisette" => SynthSpec::gisette_like(),
+        other => return Err(format!("unknown dataset '{other}'")),
+    };
+    Ok(Dataset::synth(spec, seed))
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let seed = args.get_or("seed", 42u64)?;
+    let ds = dataset_for(args.get("dataset").unwrap_or("smoke"), seed)?;
+    let n = args.get_or("n", 10usize)?;
+    let case = match args.get_or("case", 1usize)? {
+        1 => CaseParams::case1(n),
+        2 => CaseParams::case2(n),
+        c => return Err(format!("--case must be 1 or 2 (got {c})")),
+    };
+    let mut cfg = CopmlConfig::for_dataset(&ds, n, case, seed);
+    cfg.k = args.get_or("k", cfg.k)?;
+    cfg.t = args.get_or("t", cfg.t)?;
+    cfg.iters = args.get_or("iters", cfg.iters)?;
+    cfg.eta = args.get_or("eta", cfg.eta)?;
+    cfg.engine = match args.get("engine").unwrap_or("native") {
+        "native" => Engine::Native,
+        "pjrt" => Engine::Pjrt,
+        e => return Err(format!("unknown engine '{e}'")),
+    };
+    println!(
+        "COPML train: dataset={} (m={}, d={})  N={} K={} T={} r={}  iters={} η={}  p={}",
+        ds.name, ds.m, ds.d, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters, cfg.eta,
+        cfg.plan.field.modulus()
+    );
+    let mode = args.get("mode").unwrap_or("algo");
+    let out = match mode {
+        "algo" => algo::train(&cfg, &ds)?,
+        "full" => {
+            let po = protocol::train(&cfg, &ds)?;
+            let mut table = Table::new(
+                "per-client ledger (mean across clients)",
+                &["phase", "seconds", "MB sent"],
+            );
+            for (i, phase) in protocol::PHASES.iter().enumerate() {
+                let secs: f64 =
+                    po.ledgers.iter().map(|l| l.seconds[i]).sum::<f64>() / po.ledgers.len() as f64;
+                let mb: f64 = po.ledgers.iter().map(|l| l.bytes[i]).sum::<u64>() as f64
+                    / po.ledgers.len() as f64
+                    / 1e6;
+                table.row(&[phase.to_string(), format!("{secs:.4}"), format!("{mb:.3}")]);
+            }
+            table.print();
+            po.train
+        }
+        m => return Err(format!("unknown mode '{m}'")),
+    };
+    for (i, ((tr, te), loss)) in out
+        .train_accuracy
+        .iter()
+        .zip(&out.test_accuracy)
+        .zip(&out.loss)
+        .enumerate()
+    {
+        if i % 5 == 4 || i + 1 == out.loss.len() {
+            println!("iter {:>3}  loss {:.4}  train-acc {:.4}  test-acc {:.4}", i + 1, loss, tr, te);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let seed = args.get_or("seed", 42u64)?;
+    let name = args.get("dataset").unwrap_or("cifar");
+    let ds = dataset_for(name, seed)?;
+    let n = args.get_or("n", 50usize)?;
+    let iters = args.get_or("iters", 50usize)?;
+    let plan = if ds.d > 4096 {
+        copml::quant::FpPlan::paper_gisette()
+    } else {
+        copml::quant::FpPlan::paper_cifar()
+    };
+    println!("calibrating primitives …");
+    let cal = Calibration::measure(plan.field);
+    let wan = WanModel::paper();
+    let mut table = Table::new(
+        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations (modeled on measured primitives)"),
+        &["Protocol", "Comp (s)", "Comm (s)", "Enc/Dec (s)", "Total (s)"],
+    );
+    let case1 = CaseParams::case1(n);
+    let case2 = CaseParams::case2(n);
+    for (label, k, t) in [
+        ("COPML (Case 1)", case1.k, case1.t),
+        ("COPML (Case 2)", case2.k, case2.t),
+    ] {
+        let c = CopmlCost { n, k, t, r: 1, m: ds.m, d: ds.d, iters, subgroups: true }
+            .estimate(&cal, &wan);
+        table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.total_s()], 1);
+    }
+    for (label, bgw) in [("MPC using [BGW88]", true), ("MPC using [BH08]", false)] {
+        let c = BaselineCost::paper(n, ds.m, ds.d, iters, bgw).estimate(&cal, &wan);
+        table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.total_s()], 1);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<(), String> {
+    let cal = Calibration::measure(Field::paper_cifar());
+    println!("machine calibration (p = 2^26 − 5):");
+    println!("  weighted-sum muladd : {:.1} M element·terms/s", cal.muladd_per_s / 1e6);
+    println!("  gradient kernel     : {:.1} M cells/s", cal.kernel_cells_per_s / 1e6);
+    println!("  shamir share eval   : {:.1} M element·shares/s", cal.share_per_s / 1e6);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let n = args.get_or("n", 50usize)?;
+    let mut table = Table::new(
+        &format!("COPML operating points for N = {n} (r = 1)"),
+        &["case", "K", "T", "recovery threshold"],
+    );
+    for (label, c) in [("Case 1", CaseParams::case1(n)), ("Case 2", CaseParams::case2(n))] {
+        table.row(&[
+            label.to_string(),
+            c.k.to_string(),
+            c.t.to_string(),
+            copml::lcc::recovery_threshold(1, c.k, c.t).to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Plaintext full-batch gradient-descent logistic regression — the
+//! "conventional logistic regression" baseline of Fig. 4, and the reference
+//! trajectory every secure trainer is compared against.
+//!
+//! Update rule (paper Eq. 2):
+//! `w ← w − (η/m)·Xᵀ(g(X·w) − y)`, with `g` either the exact sigmoid or a
+//! fitted polynomial (to isolate the polynomial-approximation error from
+//! the quantization error in the accuracy ablations).
+
+use super::sigmoid::{sigmoid, SigmoidPoly};
+use crate::data::Dataset;
+
+/// Options for the plaintext trainer.
+#[derive(Clone, Debug)]
+pub struct LogRegOptions {
+    pub iters: usize,
+    pub eta: f64,
+    /// `None` → exact sigmoid; `Some(poly)` → polynomial link.
+    pub link: Option<SigmoidPoly>,
+    /// Record train/test accuracy every iteration (costs two passes).
+    pub trace_accuracy: bool,
+}
+
+impl Default for LogRegOptions {
+    fn default() -> Self {
+        LogRegOptions { iters: 50, eta: 1.0, link: None, trace_accuracy: true }
+    }
+}
+
+/// Per-iteration trace of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainTrace {
+    pub w: Vec<f64>,
+    pub loss: Vec<f64>,
+    pub train_accuracy: Vec<f64>,
+    pub test_accuracy: Vec<f64>,
+}
+
+/// Train on `ds.x/ds.y`; returns the final model and per-iteration trace.
+pub fn train_logreg(ds: &Dataset, opt: &LogRegOptions) -> TrainTrace {
+    let (m, d) = (ds.m, ds.d);
+    let mut w = vec![0.0f64; d];
+    let mut trace = TrainTrace::default();
+    let mut z = vec![0.0f64; m];
+    let mut grad = vec![0.0f64; d];
+
+    for _ in 0..opt.iters {
+        // z = X·w
+        for i in 0..m {
+            z[i] = ds.x[i * d..(i + 1) * d].iter().zip(&w).map(|(&a, &b)| a * b).sum();
+        }
+        // residual r = g(z) − y
+        for i in 0..m {
+            let g = match &opt.link {
+                None => sigmoid(z[i]),
+                Some(p) => p.eval(z[i]),
+            };
+            z[i] = g - ds.y[i];
+        }
+        // grad = Xᵀ r / m
+        grad.fill(0.0);
+        for i in 0..m {
+            let r = z[i];
+            if r != 0.0 {
+                for (gj, &xij) in grad.iter_mut().zip(&ds.x[i * d..(i + 1) * d]) {
+                    *gj += r * xij;
+                }
+            }
+        }
+        for (wj, gj) in w.iter_mut().zip(&grad) {
+            *wj -= opt.eta / m as f64 * gj;
+        }
+
+        trace.loss.push(crate::ml::cross_entropy(&ds.x, &ds.y, d, &w));
+        if opt.trace_accuracy {
+            trace.train_accuracy.push(crate::ml::accuracy(&ds.x, &ds.y, d, &w));
+            trace.test_accuracy.push(crate::ml::accuracy(&ds.x_test, &ds.y_test, d, &w));
+        }
+    }
+    trace.w = w;
+    trace
+}
+
+/// Lipschitz constant of the cross-entropy gradient: `L = ‖X‖₂²/4`
+/// (paper Theorem 1). Estimated by power iteration on `XᵀX`.
+pub fn lipschitz_constant(ds: &Dataset, iters: usize) -> f64 {
+    let (m, d) = (ds.m, ds.d);
+    let mut v = vec![1.0f64 / (d as f64).sqrt(); d];
+    let mut xv = vec![0.0f64; m];
+    for _ in 0..iters {
+        for i in 0..m {
+            xv[i] = ds.x[i * d..(i + 1) * d].iter().zip(&v).map(|(&a, &b)| a * b).sum();
+        }
+        let mut xtxv = vec![0.0f64; d];
+        for i in 0..m {
+            let s = xv[i];
+            for (out, &xij) in xtxv.iter_mut().zip(&ds.x[i * d..(i + 1) * d]) {
+                *out += s * xij;
+            }
+        }
+        let norm = xtxv.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-30);
+        for (vi, &ni) in v.iter_mut().zip(&xtxv) {
+            *vi = ni / norm;
+        }
+    }
+    // Rayleigh quotient after the last multiply ≈ λ_max(XᵀX) = ‖X‖₂².
+    for i in 0..m {
+        xv[i] = ds.x[i * d..(i + 1) * d].iter().zip(&v).map(|(&a, &b)| a * b).sum();
+    }
+    let lambda: f64 = xv.iter().map(|x| x * x).sum();
+    lambda / 4.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::ml::fit_sigmoid;
+
+    #[test]
+    fn loss_monotone_decreasing_on_smoke() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 7);
+        let trace = train_logreg(&ds, &LogRegOptions { iters: 30, eta: 1.0, ..Default::default() });
+        for w in trace.loss.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "loss must not increase: {w:?}");
+        }
+        assert!(trace.loss.last().unwrap() < &trace.loss[0]);
+    }
+
+    #[test]
+    fn smoke_dataset_learnable() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 8);
+        let trace = train_logreg(&ds, &LogRegOptions { iters: 50, eta: 2.0, ..Default::default() });
+        let acc = *trace.test_accuracy.last().unwrap();
+        assert!(acc > 0.85, "smoke test accuracy {acc}");
+    }
+
+    #[test]
+    fn poly_link_close_to_sigmoid_link() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 9);
+        let exact = train_logreg(&ds, &LogRegOptions { iters: 40, eta: 1.0, ..Default::default() });
+        let poly = fit_sigmoid(1, 4.0, 2000);
+        let approx = train_logreg(
+            &ds,
+            &LogRegOptions { iters: 40, eta: 1.0, link: Some(poly), ..Default::default() },
+        );
+        let da = (exact.test_accuracy.last().unwrap() - approx.test_accuracy.last().unwrap()).abs();
+        assert!(da < 0.06, "poly-link accuracy gap {da}");
+    }
+
+    #[test]
+    fn lipschitz_positive_and_step_converges() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 10);
+        let l = lipschitz_constant(&ds, 30);
+        assert!(l > 0.0);
+        // η = 1/L must give monotone decrease (Theorem 1 premise)
+        let trace = train_logreg(
+            &ds,
+            &LogRegOptions { iters: 20, eta: 1.0 / l, trace_accuracy: false, ..Default::default() },
+        );
+        for w in trace.loss.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+}

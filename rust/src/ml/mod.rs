@@ -1,0 +1,64 @@
+//! Plaintext machine learning: the f64 logistic-regression reference
+//! ("conventional logistic regression" of Fig. 4), the least-squares
+//! polynomial fit of the sigmoid (Eq. 5), and accuracy/loss metrics.
+
+pub mod logreg;
+pub mod sigmoid;
+
+pub use logreg::{train_logreg, LogRegOptions, TrainTrace};
+pub use sigmoid::{fit_sigmoid, sigmoid, SigmoidPoly};
+
+/// Classification accuracy of model `w` on `(x, y)` using a polynomial or
+/// exact link: prediction is `score > 0.5` where score = link(x·w). Any
+/// monotone link gives the same result as thresholding `x·w > 0` only when
+/// link(0)=0.5 — true for both the sigmoid and our fits.
+pub fn accuracy(x: &[f64], y: &[f64], d: usize, w: &[f64]) -> f64 {
+    let m = y.len();
+    assert_eq!(x.len(), m * d);
+    assert_eq!(w.len(), d);
+    let mut correct = 0usize;
+    for i in 0..m {
+        let z: f64 = x[i * d..(i + 1) * d].iter().zip(w).map(|(&a, &b)| a * b).sum();
+        let pred = if z > 0.0 { 1.0 } else { 0.0 };
+        if (pred - y[i]).abs() < 0.5 {
+            correct += 1;
+        }
+    }
+    correct as f64 / m as f64
+}
+
+/// Cross-entropy loss (Eq. 1) with the exact sigmoid, clamped for
+/// numerical safety.
+pub fn cross_entropy(x: &[f64], y: &[f64], d: usize, w: &[f64]) -> f64 {
+    let m = y.len();
+    let mut loss = 0.0;
+    for i in 0..m {
+        let z: f64 = x[i * d..(i + 1) * d].iter().zip(w).map(|(&a, &b)| a * b).sum();
+        let p = sigmoid(z).clamp(1e-12, 1.0 - 1e-12);
+        loss -= y[i] * p.ln() + (1.0 - y[i]) * (1.0 - p).ln();
+    }
+    loss / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_of_perfect_separator() {
+        // x = [z, 1] with label z>0; w = [1, 0] separates perfectly.
+        let x = vec![1.0, 1.0, -1.0, 1.0, 2.0, 1.0, -2.0, 1.0];
+        let y = vec![1.0, 0.0, 1.0, 0.0];
+        assert_eq!(accuracy(&x, &y, 2, &[1.0, 0.0]), 1.0);
+        assert_eq!(accuracy(&x, &y, 2, &[-1.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn cross_entropy_decreases_with_confidence() {
+        let x = vec![1.0, -1.0];
+        let y = vec![1.0, 0.0];
+        let l1 = cross_entropy(&x, &y, 1, &[0.5]);
+        let l2 = cross_entropy(&x, &y, 1, &[2.0]);
+        assert!(l2 < l1);
+    }
+}

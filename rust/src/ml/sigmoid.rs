@@ -1,0 +1,182 @@
+//! Polynomial approximation of the sigmoid (paper Eq. 5): coefficients fit
+//! by least squares on a grid, exactly as the paper describes ("evaluated
+//! by fitting the sigmoid to the polynomial function via least squares
+//! estimation"). Degree 1 is the paper's operating point (§V.A); degree 3
+//! is supported for the ablation.
+
+/// The exact sigmoid `g(z) = 1/(1+e^{−z})`.
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// A fitted polynomial `ĝ(z) = Σ c_i z^i`.
+#[derive(Clone, Debug)]
+pub struct SigmoidPoly {
+    /// `coeffs[i]` multiplies `z^i`.
+    pub coeffs: Vec<f64>,
+    /// Half-range of the fit interval `[−r, r]`.
+    pub half_range: f64,
+}
+
+impl SigmoidPoly {
+    pub fn degree(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+
+    /// Evaluate `ĝ(z)`.
+    pub fn eval(&self, z: f64) -> f64 {
+        let mut acc = 0.0;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * z + c;
+        }
+        acc
+    }
+
+    /// Max absolute error against the true sigmoid over the fit interval.
+    pub fn max_error(&self, samples: usize) -> f64 {
+        (0..=samples)
+            .map(|i| {
+                let z = -self.half_range + 2.0 * self.half_range * i as f64 / samples as f64;
+                (self.eval(z) - sigmoid(z)).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Least-squares fit of degree `degree` over `[−half_range, half_range]`
+/// on a uniform grid. Solves the (small) normal equations by Gaussian
+/// elimination with partial pivoting.
+pub fn fit_sigmoid(degree: usize, half_range: f64, samples: usize) -> SigmoidPoly {
+    assert!(degree >= 1 && degree <= 7);
+    assert!(samples > degree * 4);
+    let n = degree + 1;
+    // Normal equations: (VᵀV) c = Vᵀ g, V_{ij} = z_i^j
+    let mut ata = vec![0.0f64; n * n];
+    let mut atb = vec![0.0f64; n];
+    for i in 0..=samples {
+        let z = -half_range + 2.0 * half_range * i as f64 / samples as f64;
+        let g = sigmoid(z);
+        let mut zp = vec![0.0f64; n];
+        let mut acc = 1.0;
+        for zj in zp.iter_mut() {
+            *zj = acc;
+            acc *= z;
+        }
+        for r in 0..n {
+            atb[r] += zp[r] * g;
+            for c in 0..n {
+                ata[r * n + c] += zp[r] * zp[c];
+            }
+        }
+    }
+    let coeffs = solve_dense(&mut ata, &mut atb, n);
+    SigmoidPoly { coeffs, half_range }
+}
+
+/// Gaussian elimination with partial pivoting for a dense n×n system
+/// (n ≤ 8 here). Consumes its inputs.
+fn solve_dense(a: &mut [f64], b: &mut [f64], n: usize) -> Vec<f64> {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let diag = a[col * n + col];
+        assert!(diag.abs() > 1e-300, "singular normal equations");
+        for r in col + 1..n {
+            let factor = a[r * n + col] / diag;
+            if factor != 0.0 {
+                for c in col..n {
+                    a[r * n + c] -= factor * a[col * n + c];
+                }
+                b[r] -= factor * b[col];
+            }
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in col + 1..n {
+            acc -= a[col * n + c] * x[c];
+        }
+        x[col] = acc / a[col * n + col];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(10.0) > 0.9999);
+        assert!(sigmoid(-10.0) < 0.0001);
+        // symmetry g(-z) = 1 - g(z)
+        for z in [0.3, 1.7, 5.0] {
+            assert!((sigmoid(-z) - (1.0 - sigmoid(z))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn degree1_fit_matches_expected_shape() {
+        // Known result: LSE degree-1 fit of sigmoid on a symmetric interval
+        // is c0 = 0.5 (by symmetry) and c1 > 0.
+        let p = fit_sigmoid(1, 4.0, 2000);
+        assert!((p.coeffs[0] - 0.5).abs() < 1e-6, "c0 = {}", p.coeffs[0]);
+        assert!(p.coeffs[1] > 0.15 && p.coeffs[1] < 0.25, "c1 = {}", p.coeffs[1]);
+    }
+
+    #[test]
+    fn degree3_fit_better_than_degree1() {
+        let p1 = fit_sigmoid(1, 4.0, 2000);
+        let p3 = fit_sigmoid(3, 4.0, 2000);
+        assert!(p3.max_error(500) < p1.max_error(500));
+        // odd symmetry: even coefficients ≈ 0 except c0 = 0.5
+        assert!((p3.coeffs[0] - 0.5).abs() < 1e-6);
+        assert!(p3.coeffs[2].abs() < 1e-8);
+        assert!(p3.coeffs[3] < 0.0, "cubic term must bend toward saturation");
+    }
+
+    #[test]
+    fn fit_error_reasonable() {
+        // Degree-1 on [-4,4]: max error known to be ≈ 0.08–0.12.
+        let p = fit_sigmoid(1, 4.0, 2000);
+        let e = p.max_error(1000);
+        assert!(e < 0.15, "max error {e}");
+    }
+
+    #[test]
+    fn eval_horner_matches_direct() {
+        let p = SigmoidPoly { coeffs: vec![0.5, 0.2, 0.0, -0.004], half_range: 4.0 };
+        for z in [-3.0f64, -1.0, 0.0, 0.5, 2.9] {
+            let direct: f64 = p.coeffs.iter().enumerate().map(|(i, c)| c * z.powi(i as i32)).sum();
+            assert!((p.eval(z) - direct).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn solver_solves_known_system() {
+        // [2 1; 1 3] x = [5; 10] → x = [1, 3]
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = solve_dense(&mut a, &mut b, 2);
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+}

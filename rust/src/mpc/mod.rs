@@ -1,0 +1,331 @@
+//! Secure multi-party computation over Shamir shares (paper Appendix C).
+//!
+//! Semi-honest, information-theoretic MPC between `N` parties with
+//! threshold `T`:
+//!
+//! * **addition / subtraction / multiplication-by-public-constant** — local,
+//!   no communication (Remark 3: this is *all* that COPML's encode, decode
+//!   and model-update linear algebra needs);
+//! * **multiplication** of two shared values — the expensive step the
+//!   *baselines* pay per iteration, in two flavours:
+//!   [`Party::degree_reduce_bgw`] (BGW'88: online resharing, `O(N²)`
+//!   communication) and [`Party::degree_reduce_bh08`] (BH08/DN07: offline
+//!   double-sharings + a king party, `O(N)` communication);
+//! * **secure truncation** [`Party::trunc_pr`] — the TruncPr protocol of
+//!   Catrina–Saxena [37], used for the fixed-point model update (Phase 4);
+//! * **open** — reconstruct a shared value, via full broadcast or via the
+//!   king.
+//!
+//! All collectives operate element-wise on vectors of shares and consume
+//! one transport tag each; parties execute the same SPMD sequence, so tags
+//! stay aligned. Offline randomness (double sharings, truncation pairs,
+//! random vectors) comes from [`dealer`], mirroring the paper's
+//! crypto-service-provider assumption (footnote 3).
+
+pub mod dealer;
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use crate::field::{vecops, Field};
+use crate::net::{broadcast, PartyId, Transport};
+use crate::poly;
+use crate::prng::Rng;
+use crate::shamir;
+
+pub use dealer::{Dealer, Offline};
+
+/// One party's view of an `N`-party MPC session.
+pub struct Party<'a> {
+    pub id: PartyId,
+    pub n: usize,
+    pub t: usize,
+    pub f: Field,
+    pub net: &'a dyn Transport,
+    /// Shamir evaluation points `λ_1..λ_N` (public).
+    pub lambdas: Vec<u64>,
+    /// Offline randomness pools from the dealer.
+    offline: RefCell<Offline>,
+    /// Party-local randomness (for online resharing in BGW).
+    rng: RefCell<Rng>,
+    next_tag: Cell<u64>,
+    /// Cached reconstruction coefficient rows keyed by share degree.
+    recon_cache: RefCell<HashMap<usize, Vec<u64>>>,
+}
+
+impl<'a> Party<'a> {
+    pub fn new(
+        net: &'a dyn Transport,
+        t: usize,
+        f: Field,
+        offline: Offline,
+        seed: u64,
+    ) -> Party<'a> {
+        let n = net.n();
+        assert!(n > 2 * t, "need n > 2t to open degree-2t products (n={n}, t={t})");
+        Party {
+            id: net.id(),
+            n,
+            t,
+            f,
+            net,
+            lambdas: shamir::lambda_points(n),
+            offline: RefCell::new(offline),
+            rng: RefCell::new(Rng::seed_from_u64(seed ^ (net.id() as u64) << 32)),
+            next_tag: Cell::new(0),
+            recon_cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Allocate the next protocol-step tag (identical across parties).
+    pub fn fresh_tag(&self) -> u64 {
+        let t = self.next_tag.get();
+        self.next_tag.set(t + 1);
+        t
+    }
+
+    /// Reconstruction coefficients (at 0) for shares held by parties
+    /// `0..=deg` — interpolating a degree-`deg` share polynomial.
+    fn recon_coeffs(&self, deg: usize) -> Vec<u64> {
+        if let Some(c) = self.recon_cache.borrow().get(&deg) {
+            return c.clone();
+        }
+        assert!(deg < self.n, "cannot open degree-{deg} shares with {} parties", self.n);
+        let c = poly::coeffs_at(self.f, &self.lambdas[..deg + 1], 0);
+        self.recon_cache.borrow_mut().insert(deg, c.clone());
+        c
+    }
+
+    // ---------------------------------------------------------------
+    // Local (communication-free) share arithmetic — Remark 3.
+    // ---------------------------------------------------------------
+
+    /// `[a] + [b]` element-wise.
+    pub fn add(&self, a: &mut [u64], b: &[u64]) {
+        vecops::add_assign(self.f, a, b);
+    }
+
+    /// `[a] − [b]` element-wise.
+    pub fn sub(&self, a: &mut [u64], b: &[u64]) {
+        vecops::sub_assign(self.f, a, b);
+    }
+
+    /// `c·[a]` for public `c`.
+    pub fn scale(&self, a: &mut [u64], c: u64) {
+        vecops::scale_assign(self.f, a, c);
+    }
+
+    /// `[a] + c` for public `c`: shares of a constant are the constant.
+    pub fn add_const(&self, a: &mut [u64], c: u64) {
+        for v in a.iter_mut() {
+            *v = self.f.add(*v, c);
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Collectives.
+    // ---------------------------------------------------------------
+
+    /// Open degree-`deg` shares by full broadcast (every party learns the
+    /// value; `O(N²)` total communication — the BGW-style opening).
+    pub fn open_broadcast(&self, share: &[u64], deg: usize) -> Vec<u64> {
+        let tag = self.fresh_tag();
+        broadcast(self.net, tag, share);
+        let coeffs = self.recon_coeffs(deg);
+        let mut contributions: Vec<Vec<u64>> = Vec::with_capacity(deg + 1);
+        for peer in 0..=deg {
+            contributions.push(if peer == self.id {
+                share.to_vec()
+            } else {
+                self.net.recv(peer, tag)
+            });
+        }
+        // Drain remaining broadcasts so mailboxes stay tag-aligned.
+        for peer in deg + 1..self.n {
+            if peer != self.id {
+                let _ = self.net.recv(peer, tag);
+            }
+        }
+        let views: Vec<&[u64]> = contributions.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0u64; share.len()];
+        vecops::weighted_sum(self.f, &coeffs, &views, &mut out);
+        out
+    }
+
+    /// Open degree-`deg` shares via the king (party 0): parties send their
+    /// shares to the king, the king reconstructs and broadcasts the value
+    /// (`O(N)` total communication — the BH08-style opening).
+    pub fn open_king(&self, share: &[u64], deg: usize) -> Vec<u64> {
+        let tag_up = self.fresh_tag();
+        let tag_down = self.fresh_tag();
+        const KING: PartyId = 0;
+        if self.id == KING {
+            let coeffs = self.recon_coeffs(deg);
+            let mut contributions: Vec<Vec<u64>> = Vec::with_capacity(deg + 1);
+            for peer in 0..=deg {
+                contributions.push(if peer == KING {
+                    share.to_vec()
+                } else {
+                    self.net.recv(peer, tag_up)
+                });
+            }
+            let views: Vec<&[u64]> = contributions.iter().map(|v| v.as_slice()).collect();
+            let mut value = vec![0u64; share.len()];
+            vecops::weighted_sum(self.f, &coeffs, &views, &mut value);
+            broadcast(self.net, tag_down, &value);
+            value
+        } else {
+            if self.id <= deg {
+                self.net.send(KING, tag_up, share.to_vec());
+            }
+            self.net.recv(KING, tag_down)
+        }
+    }
+
+    /// Secret-share a vector this party knows in the clear: sends `[v]_j`
+    /// to each party `j`, returns own share. Counterpart of
+    /// [`Party::receive_share_from`].
+    pub fn share_out(&self, value: &[u64], tag: u64) -> Vec<u64> {
+        let shares = shamir::share_at(
+            self.f,
+            value,
+            &self.lambdas,
+            self.t,
+            &mut self.rng.borrow_mut(),
+        );
+        let mut own = Vec::new();
+        for (j, s) in shares.into_iter().enumerate() {
+            if j == self.id {
+                own = s;
+            } else {
+                self.net.send(j, tag, s);
+            }
+        }
+        own
+    }
+
+    /// Receive the share of a value dealt by `from` via
+    /// [`Party::share_out`].
+    pub fn receive_share_from(&self, from: PartyId, tag: u64) -> Vec<u64> {
+        self.net.recv(from, tag)
+    }
+
+    // ---------------------------------------------------------------
+    // Degree reduction (secure multiplication) — Appendix C.
+    // ---------------------------------------------------------------
+
+    /// BGW'88 degree reduction: convert degree-`2T` shares (e.g. the local
+    /// products `[a]·[b]`) back to degree-`T` shares of the same values.
+    ///
+    /// Each party reshares its degree-2T share with a fresh degree-T
+    /// polynomial; the new share is the reconstruction-weighted sum of the
+    /// received sub-shares. `O(N²)` total communication.
+    pub fn degree_reduce_bgw(&self, z: &[u64]) -> Vec<u64> {
+        let tag = self.fresh_tag();
+        let own_sub = self.share_out(z, tag);
+        // Gather sub-shares from the first 2T+1 parties (sufficient to
+        // interpolate the degree-2T polynomial); later parties still
+        // reshared (cost charged), but their sub-shares are not needed.
+        let deg = 2 * self.t;
+        let coeffs = self.recon_coeffs(deg);
+        let mut subs: Vec<Vec<u64>> = Vec::with_capacity(deg + 1);
+        for peer in 0..=deg {
+            subs.push(if peer == self.id {
+                own_sub.clone()
+            } else {
+                self.net.recv(peer, tag)
+            });
+        }
+        for peer in deg + 1..self.n {
+            if peer != self.id {
+                let _ = self.net.recv(peer, tag);
+            }
+        }
+        let views: Vec<&[u64]> = subs.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0u64; z.len()];
+        vecops::weighted_sum(self.f, &coeffs, &views, &mut out);
+        out
+    }
+
+    /// BH08/DN07 degree reduction using an offline double sharing
+    /// `([ρ]_T, [ρ]_2T)`: publish `d = z − ρ` (degree 2T) via the king,
+    /// then output `d + [ρ]_T`. `O(N)` total communication.
+    pub fn degree_reduce_bh08(&self, z: &[u64]) -> Vec<u64> {
+        let len = z.len();
+        let (rho_t, rho_2t) = self.offline.borrow_mut().take_double(len);
+        let mut d = z.to_vec();
+        vecops::sub_assign(self.f, &mut d, &rho_2t);
+        let d_pub = self.open_king(&d, 2 * self.t);
+        let mut out = rho_t;
+        vecops::add_assign(self.f, &mut out, &d_pub);
+        out
+    }
+
+    /// Secure multiplication of two degree-T shared vectors (element-wise),
+    /// choosing the reduction flavour.
+    pub fn mul(&self, a: &[u64], b: &[u64], bgw: bool) -> Vec<u64> {
+        assert_eq!(a.len(), b.len());
+        let prod: Vec<u64> = a.iter().zip(b).map(|(&x, &y)| self.f.mul(x, y)).collect();
+        if bgw {
+            self.degree_reduce_bgw(&prod)
+        } else {
+            self.degree_reduce_bh08(&prod)
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Secure truncation — TruncPr of Catrina–Saxena [37].
+    // ---------------------------------------------------------------
+
+    /// Probabilistic truncation of degree-T shares: for each element with
+    /// signed value `a ∈ (−2^{k−1}, 2^{k−1})`, returns shares of
+    /// `⌊a/2^m⌋ + s` with `P(s=1) = (a mod 2^m)/2^m` — the paper's Phase-4
+    /// rounding. Consumes one offline pair per element.
+    ///
+    /// Requires `2^k + 2^{k+κ} < p` (checked), `0 < m < k`.
+    pub fn trunc_pr(&self, a: &[u64], k: u32, m: u32, kappa: u32, king: bool) -> Vec<u64> {
+        assert!(m < k, "truncation amount must be < value bits");
+        let p = self.f.modulus();
+        assert!(
+            (1u128 << k) + (1u128 << (k + kappa)) < p as u128,
+            "field too small for TruncPr: 2^{k} + 2^{} ≥ p",
+            k + kappa
+        );
+        let len = a.len();
+        let (rp, rpp) = self.offline.borrow_mut().take_trunc_pair(len, m);
+        // v = a + 2^{k−1} + 2^m·r'' + r'
+        let pow_km1 = self.f.reduce(1u64 << (k - 1));
+        let pow_m = 1u64 << m;
+        let mut v = a.to_vec();
+        for i in 0..len {
+            let masked = self.f.add(self.f.mul(pow_m, rpp[i]), rp[i]);
+            v[i] = self.f.add(self.f.add(v[i], pow_km1), masked);
+        }
+        let c = if king {
+            self.open_king(&v, self.t)
+        } else {
+            self.open_broadcast(&v, self.t)
+        };
+        // z = (a + 2^{k−1} − (c mod 2^m) + r')·2^{−m} − 2^{k−1−m}
+        let inv2m = self.f.inv(pow_m);
+        let offset = self.f.reduce(1u64 << (k - 1 - m));
+        let mut out = vec![0u64; len];
+        for i in 0..len {
+            // c is the true integer b + r (< p, no wraparound by the field
+            // size check above), so "mod 2^m" is integer arithmetic.
+            let c_lo = c[i] & (pow_m - 1);
+            let num = self.f.add(self.f.sub(self.f.add(a[i], pow_km1), c_lo), rp[i]);
+            out[i] = self.f.sub(self.f.mul(num, inv2m), offset);
+        }
+        out
+    }
+
+    /// Fetch degree-T shares of a fresh uniformly random vector from the
+    /// offline pool (model masks `v_k` of Eq. 4, initial model, …).
+    pub fn random_share(&self, len: usize) -> Vec<u64> {
+        self.offline.borrow_mut().take_random(len)
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,322 @@
+//! Multi-threaded tests of the MPC collectives: every protocol is run by
+//! `n` real threads over the local transport and checked against plaintext.
+
+use super::dealer::{Dealer, Demand};
+use super::*;
+use crate::field::P26;
+use crate::net::local::Hub;
+use crate::shamir;
+
+/// Run `n` parties, each executing `body`, and return their results in id
+/// order. Shares of `secrets` are dealt beforehand: party i receives
+/// `inputs[i]`.
+fn run_parties<R, F>(
+    n: usize,
+    t: usize,
+    f: Field,
+    demand: Demand,
+    k2_kappa: (u32, u32),
+    inputs: Vec<Vec<Vec<u64>>>,
+    body: F,
+) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(&Party, Vec<Vec<u64>>) -> R + Send + Sync + Clone + 'static,
+{
+    assert_eq!(inputs.len(), n);
+    let pools = Dealer::deal(f, n, t, &demand, k2_kappa.0, k2_kappa.1, 0xD1CE);
+    let endpoints = Hub::new(n);
+    let mut handles = Vec::new();
+    for ((ep, pool), input) in endpoints.into_iter().zip(pools).zip(inputs) {
+        let body = body.clone();
+        handles.push(std::thread::spawn(move || {
+            let party = Party::new(&ep, t, f, pool, 42);
+            body(&party, input)
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Deal shares of `values` to n parties (index 0 of each party's input).
+fn deal(f: Field, values: &[u64], n: usize, t: usize, seed: u64) -> Vec<Vec<Vec<u64>>> {
+    let mut rng = crate::prng::Rng::seed_from_u64(seed);
+    let shares = shamir::share(f, values, n, t, &mut rng);
+    shares.into_iter().map(|s| vec![s]).collect()
+}
+
+#[test]
+fn open_broadcast_and_king_agree() {
+    let f = Field::new(P26);
+    let (n, t) = (5usize, 2usize);
+    let secret: Vec<u64> = vec![3, 1 << 20, P26 - 1, 0];
+    let inputs = deal(f, &secret, n, t, 7);
+    let secret2 = secret.clone();
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand::default(),
+        (20, 1),
+        inputs,
+        move |party, input| {
+            let a = party.open_broadcast(&input[0], party.t);
+            let b = party.open_king(&input[0], party.t);
+            assert_eq!(a, b);
+            a
+        },
+    );
+    for r in results {
+        assert_eq!(r, secret2);
+    }
+}
+
+#[test]
+fn secure_addition_is_free_and_correct() {
+    let f = Field::new(P26);
+    let (n, t) = (4usize, 1usize);
+    let a: Vec<u64> = vec![10, 20, 30];
+    let b: Vec<u64> = vec![5, P26 - 1, 7];
+    let mut rng = crate::prng::Rng::seed_from_u64(9);
+    let sa = shamir::share(f, &a, n, t, &mut rng);
+    let sb = shamir::share(f, &b, n, t, &mut rng);
+    let inputs: Vec<Vec<Vec<u64>>> = sa.into_iter().zip(sb).map(|(x, y)| vec![x, y]).collect();
+    let expect: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| f.add(x, y)).collect();
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand::default(),
+        (20, 1),
+        inputs,
+        |party, input| {
+            let bytes_before = party.net.bytes_sent();
+            let mut s = input[0].clone();
+            party.add(&mut s, &input[1]);
+            assert_eq!(party.net.bytes_sent(), bytes_before, "addition must be local");
+            party.open_broadcast(&s, party.t)
+        },
+    );
+    for r in results {
+        assert_eq!(r, expect);
+    }
+}
+
+#[test]
+fn bgw_multiplication_correct() {
+    let f = Field::new(P26);
+    let (n, t) = (5usize, 2usize); // n ≥ 2t+1
+    let a: Vec<u64> = vec![1234, 99999, P26 - 5];
+    let b: Vec<u64> = vec![777, 1, 2];
+    let mut rng = crate::prng::Rng::seed_from_u64(11);
+    let sa = shamir::share(f, &a, n, t, &mut rng);
+    let sb = shamir::share(f, &b, n, t, &mut rng);
+    let inputs: Vec<Vec<Vec<u64>>> = sa.into_iter().zip(sb).map(|(x, y)| vec![x, y]).collect();
+    let expect: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| f.mul(x, y)).collect();
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand::default(),
+        (20, 1),
+        inputs,
+        |party, input| {
+            let prod = party.mul(&input[0], &input[1], true);
+            party.open_broadcast(&prod, party.t)
+        },
+    );
+    for r in results {
+        assert_eq!(r, expect);
+    }
+}
+
+#[test]
+fn bh08_multiplication_correct() {
+    let f = Field::new(P26);
+    let (n, t) = (7usize, 3usize);
+    let a: Vec<u64> = (0..20).map(|i| i * 31 % P26).collect();
+    let b: Vec<u64> = (0..20).map(|i| (i * i + 5) % P26).collect();
+    let mut rng = crate::prng::Rng::seed_from_u64(13);
+    let sa = shamir::share(f, &a, n, t, &mut rng);
+    let sb = shamir::share(f, &b, n, t, &mut rng);
+    let inputs: Vec<Vec<Vec<u64>>> = sa.into_iter().zip(sb).map(|(x, y)| vec![x, y]).collect();
+    let expect: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| f.mul(x, y)).collect();
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand { doubles: 20, ..Default::default() },
+        (20, 1),
+        inputs,
+        |party, input| {
+            let prod = party.mul(&input[0], &input[1], false);
+            party.open_broadcast(&prod, party.t)
+        },
+    );
+    for r in results {
+        assert_eq!(r, expect);
+    }
+}
+
+#[test]
+fn bh08_cheaper_than_bgw_in_bytes() {
+    let f = Field::new(P26);
+    let (n, t) = (7usize, 3usize);
+    let len = 64usize;
+    let a: Vec<u64> = (0..len as u64).collect();
+    let mut rng = crate::prng::Rng::seed_from_u64(17);
+    let sa = shamir::share(f, &a, n, t, &mut rng);
+    let inputs: Vec<Vec<Vec<u64>>> = sa.into_iter().map(|x| vec![x]).collect();
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand { doubles: len, ..Default::default() },
+        (20, 1),
+        inputs,
+        |party, input| {
+            let before = party.net.bytes_sent();
+            let _ = party.degree_reduce_bgw(&input[0]);
+            let bgw = party.net.bytes_sent() - before;
+            let before = party.net.bytes_sent();
+            let _ = party.degree_reduce_bh08(&input[0]);
+            let bh08 = party.net.bytes_sent() - before;
+            (bgw, bh08)
+        },
+    );
+    let bgw_total: u64 = results.iter().map(|r| r.0).sum();
+    let bh08_total: u64 = results.iter().map(|r| r.1).sum();
+    assert!(
+        bh08_total * 2 < bgw_total,
+        "BH08 ({bh08_total} B) should be ≪ BGW ({bgw_total} B)"
+    );
+}
+
+#[test]
+fn trunc_pr_floor_plus_bernoulli() {
+    // For each element: result ∈ {⌊a/2^m⌋, ⌊a/2^m⌋+1}; exact when a is a
+    // multiple of 2^m.
+    let f = Field::new(P26);
+    let (n, t) = (5usize, 2usize);
+    let (k, m, kappa) = (20u32, 8u32, 1u32);
+    let vals_signed: Vec<i64> = vec![0, 256, 300, -256, -300, 511, -1, (1 << 19) - 1, -(1 << 19) + 1];
+    let vals: Vec<u64> = vals_signed.iter().map(|&v| f.from_i64(v)).collect();
+    let inputs = deal(f, &vals, n, t, 19);
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand { doubles: 0, truncs: vec![(m, vals.len())], randoms: 0 },
+        (k, kappa),
+        inputs,
+        move |party, input| {
+            let z = party.trunc_pr(&input[0], k, m, kappa, true);
+            party.open_broadcast(&z, party.t)
+        },
+    );
+    for r in &results {
+        for (i, &v) in vals_signed.iter().enumerate() {
+            let got = f.to_i64(r[i]);
+            let floor = v.div_euclid(1 << m);
+            assert!(
+                got == floor || got == floor + 1,
+                "val {v}: got {got}, floor {floor}"
+            );
+            if v.rem_euclid(1 << m) == 0 {
+                assert_eq!(got, floor, "exact multiple must truncate exactly");
+            }
+        }
+    }
+}
+
+#[test]
+fn trunc_pr_statistical_mean() {
+    // Across many elements with the same value, the mean result ≈ a/2^m
+    // (unbiasedness of the stochastic rounding: E[z] = a/2^m).
+    let f = Field::new(P26);
+    let (n, t) = (4usize, 1usize);
+    let (k, m, kappa) = (20u32, 8u32, 1u32);
+    let count = 3000usize;
+    let a_val: i64 = 300; // 300/256 = 1.171875
+    let vals: Vec<u64> = vec![f.from_i64(a_val); count];
+    let inputs = deal(f, &vals, n, t, 23);
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand { doubles: 0, truncs: vec![(m, count)], randoms: 0 },
+        (k, kappa),
+        inputs,
+        move |party, input| {
+            let z = party.trunc_pr(&input[0], k, m, kappa, true);
+            party.open_broadcast(&z, party.t)
+        },
+    );
+    let mean: f64 =
+        results[0].iter().map(|&v| f.to_i64(v) as f64).sum::<f64>() / count as f64;
+    let expect = a_val as f64 / 256.0;
+    assert!(
+        (mean - expect).abs() < 0.03,
+        "mean {mean} vs {expect} — stochastic rounding should be unbiased"
+    );
+}
+
+#[test]
+fn random_share_reconstructs_consistently() {
+    let f = Field::new(P26);
+    let (n, t) = (5usize, 2usize);
+    let inputs: Vec<Vec<Vec<u64>>> = vec![vec![]; n];
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand { doubles: 0, truncs: vec![], randoms: 8 },
+        (20, 1),
+        inputs,
+        |party, _input| {
+            let r = party.random_share(8);
+            party.open_broadcast(&r, party.t)
+        },
+    );
+    for r in &results[1..] {
+        assert_eq!(*r, results[0]);
+    }
+}
+
+#[test]
+fn secure_inner_product_via_local_sums() {
+    // Local share products summed give a degree-2T share of the inner
+    // product; one reduction + open recovers ⟨a,b⟩ — the pattern the
+    // baseline secure matmul uses.
+    let f = Field::new(P26);
+    let (n, t) = (5usize, 2usize);
+    let d = 30usize;
+    let a: Vec<u64> = (1..=d as u64).collect();
+    let b: Vec<u64> = (1..=d as u64).map(|v| v * 7 % P26).collect();
+    let mut rng = crate::prng::Rng::seed_from_u64(29);
+    let sa = shamir::share(f, &a, n, t, &mut rng);
+    let sb = shamir::share(f, &b, n, t, &mut rng);
+    let inputs: Vec<Vec<Vec<u64>>> = sa.into_iter().zip(sb).map(|(x, y)| vec![x, y]).collect();
+    let expect = {
+        let mut acc = 0u64;
+        for i in 0..d {
+            acc = f.add(acc, f.mul(a[i], b[i]));
+        }
+        acc
+    };
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand { doubles: 1, ..Default::default() },
+        (20, 1),
+        inputs,
+        |party, input| {
+            let local = crate::field::vecops::dot(party.f, &input[0], &input[1]);
+            let reduced = party.degree_reduce_bh08(&[local]);
+            party.open_broadcast(&reduced, party.t)[0]
+        },
+    );
+    for r in results {
+        assert_eq!(r, expect);
+    }
+}

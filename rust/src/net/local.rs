@@ -1,0 +1,176 @@
+//! Thread-local transport: `n` parties exchanging real share data through
+//! in-process mailboxes. The full-fidelity protocol backend.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::{PartyId, Transport, ELEM_BYTES};
+
+/// How long a `recv` waits before declaring the protocol deadlocked.
+const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+#[derive(Default)]
+struct Mailbox {
+    // (from, tag) -> queued payloads
+    queues: Mutex<HashMap<(PartyId, u64), VecDeque<Vec<u64>>>>,
+    signal: Condvar,
+}
+
+/// Shared state for an `n`-party in-process network.
+pub struct Hub {
+    boxes: Vec<Arc<Mailbox>>,
+    sent: Vec<Arc<AtomicU64>>,
+    received: Vec<Arc<AtomicU64>>,
+}
+
+impl Hub {
+    /// Create a hub and hand out one endpoint per party.
+    pub fn new(n: usize) -> Vec<Endpoint> {
+        let hub = Arc::new(Hub {
+            boxes: (0..n).map(|_| Arc::new(Mailbox::default())).collect(),
+            sent: (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect(),
+            received: (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect(),
+        });
+        (0..n)
+            .map(|id| Endpoint { id, n, hub: hub.clone() })
+            .collect()
+    }
+}
+
+/// One party's handle onto the [`Hub`].
+pub struct Endpoint {
+    id: PartyId,
+    n: usize,
+    hub: Arc<Hub>,
+}
+
+impl Transport for Endpoint {
+    fn id(&self) -> PartyId {
+        self.id
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, to: PartyId, tag: u64, data: Vec<u64>) {
+        assert!(to < self.n, "send to unknown party {to}");
+        assert!(to != self.id, "self-send is a protocol bug");
+        self.hub.sent[self.id].fetch_add(data.len() as u64 * ELEM_BYTES, Ordering::Relaxed);
+        self.hub.received[to].fetch_add(data.len() as u64 * ELEM_BYTES, Ordering::Relaxed);
+        let mbox = &self.hub.boxes[to];
+        let mut q = mbox.queues.lock().unwrap();
+        q.entry((self.id, tag)).or_default().push_back(data);
+        mbox.signal.notify_all();
+    }
+
+    fn recv(&self, from: PartyId, tag: u64) -> Vec<u64> {
+        let mbox = &self.hub.boxes[self.id];
+        let mut q = mbox.queues.lock().unwrap();
+        loop {
+            if let Some(queue) = q.get_mut(&(from, tag)) {
+                if let Some(data) = queue.pop_front() {
+                    return data;
+                }
+            }
+            let (guard, timeout) = mbox
+                .signal
+                .wait_timeout(q, RECV_TIMEOUT)
+                .expect("mailbox lock poisoned");
+            q = guard;
+            if timeout.timed_out() {
+                panic!(
+                    "party {} recv(from={from}, tag={tag}) timed out — protocol deadlock",
+                    self.id
+                );
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.hub.sent[self.id].load(Ordering::Relaxed)
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.hub.received[self.id].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{broadcast, gather_all};
+    use std::thread;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let eps = Hub::new(2);
+        let (a, b) = {
+            let mut it = eps.into_iter();
+            (it.next().unwrap(), it.next().unwrap())
+        };
+        let h = thread::spawn(move || {
+            a.send(1, 7, vec![1, 2, 3]);
+            a.recv(1, 8)
+        });
+        assert_eq!(b.recv(0, 7), vec![1, 2, 3]);
+        b.send(0, 8, vec![9]);
+        assert_eq!(h.join().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn out_of_order_tags() {
+        let eps = Hub::new(2);
+        let (a, b) = {
+            let mut it = eps.into_iter();
+            (it.next().unwrap(), it.next().unwrap())
+        };
+        a.send(1, 2, vec![22]);
+        a.send(1, 1, vec![11]);
+        // receive in tag order regardless of arrival order
+        assert_eq!(b.recv(0, 1), vec![11]);
+        assert_eq!(b.recv(0, 2), vec![22]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let eps = Hub::new(3);
+        eps[0].send(1, 0, vec![0; 10]);
+        eps[0].send(2, 0, vec![0; 5]);
+        assert_eq!(eps[0].bytes_sent(), 15 * ELEM_BYTES);
+        assert_eq!(eps[1].bytes_received(), 10 * ELEM_BYTES);
+        assert_eq!(eps[2].bytes_received(), 5 * ELEM_BYTES);
+    }
+
+    #[test]
+    fn broadcast_gather_round_trip() {
+        let n = 4;
+        let eps = Hub::new(n);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                thread::spawn(move || {
+                    let own = vec![ep.id() as u64 * 100];
+                    broadcast(&ep, 0, &own);
+                    let all = gather_all(&ep, 0, own);
+                    all.iter().map(|v| v[0]).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![0, 100, 200, 300]);
+        }
+    }
+
+    #[test]
+    fn queued_duplicate_tags_fifo() {
+        let eps = Hub::new(2);
+        eps[0].send(1, 5, vec![1]);
+        eps[0].send(1, 5, vec![2]);
+        assert_eq!(eps[1].recv(0, 5), vec![1]);
+        assert_eq!(eps[1].recv(0, 5), vec![2]);
+    }
+}

@@ -1,0 +1,67 @@
+//! Networking: the transport abstraction the MPC protocols run on, plus the
+//! WAN cost model used to reproduce the paper's EC2 timing experiments.
+//!
+//! Two backends implement [`Transport`]:
+//!
+//! * [`local::Hub`] — threads + channels, *really* moving share data.
+//!   Used by the full-fidelity protocol (tests, examples) and to validate
+//!   the byte ledger of the simulator.
+//! * the virtual-clock simulation in [`wan`] + `bench::cost_model` — exact
+//!   byte counts charged against a bandwidth/latency model
+//!   (paper setup: 40 Mbps WAN between EC2 m3.xlarge instances).
+//!
+//! Messages carry `Vec<u64>` field elements. On the wire the paper's MPI
+//! implementation moves 64-bit words; [`ELEM_BYTES`] makes that explicit
+//! (an ablation in `bench/` explores 32-bit packing, since `p < 2^32`).
+
+pub mod local;
+pub mod wan;
+
+/// Party identifier (0-based).
+pub type PartyId = usize;
+
+/// Bytes per transmitted field element (64-bit words, as in the paper's
+/// 64-bit MPI implementation).
+pub const ELEM_BYTES: u64 = 8;
+
+/// A point-to-point, tagged, blocking transport between `n` parties.
+///
+/// Tags order protocol steps: all parties execute the same SPMD sequence of
+/// collectives, each consuming one tag, so a `(from, tag)` pair uniquely
+/// identifies a message.
+pub trait Transport: Send + Sync {
+    fn id(&self) -> PartyId;
+    fn n(&self) -> usize;
+    /// Asynchronous send of `data` to party `to` under `tag`.
+    fn send(&self, to: PartyId, tag: u64, data: Vec<u64>);
+    /// Blocking receive of the message from `from` under `tag`.
+    fn recv(&self, from: PartyId, tag: u64) -> Vec<u64>;
+    /// Total payload bytes this party has sent.
+    fn bytes_sent(&self) -> u64;
+    /// Total payload bytes this party has received.
+    fn bytes_received(&self) -> u64;
+}
+
+/// Send to every other party (not self).
+pub fn broadcast(t: &dyn Transport, tag: u64, data: &[u64]) {
+    for peer in 0..t.n() {
+        if peer != t.id() {
+            t.send(peer, tag, data.to_vec());
+        }
+    }
+}
+
+/// Gather one message from every party (own contribution passed in).
+/// Returns `n` vectors indexed by party.
+pub fn gather_all(t: &dyn Transport, tag: u64, own: Vec<u64>) -> Vec<Vec<u64>> {
+    let me = t.id();
+    (0..t.n())
+        .map(|peer| {
+            if peer == me {
+                own.clone()
+            } else {
+                t.recv(peer, tag)
+            }
+        })
+        .collect()
+}

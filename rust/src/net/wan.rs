@@ -1,0 +1,87 @@
+//! WAN cost model — the paper's experimental network, as a function.
+//!
+//! The paper's testbed: Amazon EC2 m3.xlarge instances in a WAN with an
+//! average bandwidth of 40 Mbps (§V.A). Each party has one NIC, so its
+//! outgoing messages serialize; a bulk-synchronous phase completes when the
+//! slowest party finishes sending and the payload has propagated.
+//!
+//! Used by the virtual-clock simulation (`bench::cost_model`) that
+//! regenerates Fig. 3 and Table I: compute is *measured* on this machine,
+//! communication time comes from exact byte counts through this model.
+
+/// Bandwidth/latency model of one party's link.
+#[derive(Clone, Copy, Debug)]
+pub struct WanModel {
+    /// Link bandwidth in megabits per second.
+    pub bandwidth_mbps: f64,
+    /// One-way message latency in seconds.
+    pub latency_s: f64,
+    /// Per-received-message processing time at the receiving process
+    /// (MPI4Py recv + pickle, §V.A's stack): the term that makes
+    /// gather-heavy protocols scale with the number of senders. Calibrated
+    /// at 1 ms against the paper's Table I (see EXPERIMENTS.md §Table I).
+    pub msg_proc_s: f64,
+}
+
+impl WanModel {
+    /// The paper's setting: 40 Mbps average WAN bandwidth. Latency is not
+    /// reported; 20 ms is a typical same-continent EC2 WAN RTT/2.
+    pub fn paper() -> WanModel {
+        WanModel { bandwidth_mbps: 40.0, latency_s: 0.020, msg_proc_s: 0.001 }
+    }
+
+    /// An ideal LAN (sanity/ablation).
+    pub fn lan() -> WanModel {
+        WanModel { bandwidth_mbps: 10_000.0, latency_s: 0.0001, msg_proc_s: 0.0 }
+    }
+
+    /// Time for a gather of one message from each of `senders` peers at a
+    /// single receiver: latency + serialized per-message processing.
+    pub fn gather_time(&self, senders: usize, bytes_each: u64) -> f64 {
+        self.latency_s
+            + senders as f64 * (self.msg_proc_s + self.serialize_time(bytes_each))
+    }
+
+    /// Time for one party to push `bytes` through its NIC.
+    pub fn serialize_time(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / (self.bandwidth_mbps * 1e6)
+    }
+
+    /// Completion time of a message of `bytes`: serialization + propagation.
+    pub fn message_time(&self, bytes: u64) -> f64 {
+        self.latency_s + self.serialize_time(bytes)
+    }
+
+    /// Completion time of a bulk-synchronous exchange where each party
+    /// sends `per_party_bytes` (possibly to many peers — already summed):
+    /// every NIC drains in parallel, then the last message lands.
+    pub fn phase_time(&self, per_party_bytes: u64) -> f64 {
+        self.latency_s + self.serialize_time(per_party_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forty_mbps_numbers() {
+        let w = WanModel::paper();
+        // 1 MB at 40 Mbps = 8e6 bits / 40e6 bps = 0.2 s
+        assert!((w.serialize_time(1_000_000) - 0.2).abs() < 1e-9);
+        assert!((w.message_time(0) - 0.020).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_scales_linearly_in_bytes() {
+        let w = WanModel::paper();
+        let t1 = w.phase_time(1_000_000);
+        let t2 = w.phase_time(2_000_000);
+        assert!((t2 - t1 - w.serialize_time(1_000_000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lan_much_faster_than_wan() {
+        assert!(WanModel::lan().message_time(1 << 20) < WanModel::paper().message_time(1 << 20) / 50.0);
+    }
+}

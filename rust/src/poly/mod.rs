@@ -1,0 +1,188 @@
+//! Polynomial interpolation over `F_p` — the engine behind Shamir secret
+//! sharing and Lagrange coded computing.
+//!
+//! Everything COPML encodes or decodes is a univariate polynomial evaluated
+//! at public points: secret shares are evaluations of random degree-`T`
+//! polynomials (paper Phase 2), encoded datasets/models are evaluations of
+//! the degree-`K+T−1` Lagrange polynomials `u(z)`, `v(z)` (Eqs. 3–4), and
+//! gradient decoding interpolates the degree-`(2r+1)(K+T−1)` polynomial
+//! `h(z) = f(u(z), v(z))` from the clients' results (Eq. 10).
+//!
+//! Because the evaluation points are *public constants* (Remark 3), every
+//! interpolation reduces to a **matrix of public Lagrange coefficients**
+//! applied as a weighted sum — [`coeff_matrix`] precomputes it once and
+//! `field::weighted_sum` applies it, which is why COPML's encode/decode
+//! needs no MPC multiplications.
+
+use crate::field::Field;
+
+/// Lagrange coefficient matrix `C[t][j] = Π_{l≠j} (targets[t] − xs[l]) /
+/// (xs[j] − xs[l])`, so that for any polynomial `h` of degree `< xs.len()`:
+/// `h(targets[t]) = Σ_j C[t][j] · h(xs[j])`.
+///
+/// Panics if `xs` contains duplicates.
+///
+/// Complexity `O(|xs|² + |targets|·|xs|)` using prefix/suffix products —
+/// this runs once per configuration, not per iteration.
+pub fn coeff_matrix(f: Field, xs: &[u64], targets: &[u64]) -> Vec<Vec<u64>> {
+    let n = xs.len();
+    assert!(n > 0);
+    // Denominators d_j = Π_{l≠j} (x_j − x_l).
+    let mut denom = vec![1u64; n];
+    for j in 0..n {
+        for l in 0..n {
+            if l != j {
+                let diff = f.sub(xs[j], xs[l]);
+                assert!(diff != 0, "duplicate interpolation points");
+                denom[j] = f.mul(denom[j], diff);
+            }
+        }
+    }
+    let denom_inv: Vec<u64> = denom.iter().map(|&d| f.inv(d)).collect();
+
+    let mut rows = Vec::with_capacity(targets.len());
+    for &z in targets {
+        // prefix[j] = Π_{l<j} (z − x_l), suffix[j] = Π_{l>j} (z − x_l)
+        let mut prefix = vec![1u64; n];
+        for j in 1..n {
+            prefix[j] = f.mul(prefix[j - 1], f.sub(z, xs[j - 1]));
+        }
+        let mut suffix = vec![1u64; n];
+        for j in (0..n - 1).rev() {
+            suffix[j] = f.mul(suffix[j + 1], f.sub(z, xs[j + 1]));
+        }
+        let row: Vec<u64> = (0..n)
+            .map(|j| f.mul(f.mul(prefix[j], suffix[j]), denom_inv[j]))
+            .collect();
+        rows.push(row);
+    }
+    rows
+}
+
+/// Single-target convenience: coefficients to evaluate at `z`.
+pub fn coeffs_at(f: Field, xs: &[u64], z: u64) -> Vec<u64> {
+    coeff_matrix(f, xs, &[z]).pop().unwrap()
+}
+
+/// Interpolate scalar samples `(xs[j], ys[j])` and evaluate at `z`.
+pub fn interp_eval(f: Field, xs: &[u64], ys: &[u64], z: u64) -> u64 {
+    assert_eq!(xs.len(), ys.len());
+    let c = coeffs_at(f, xs, z);
+    let mut acc = 0u64;
+    for (&ci, &yi) in c.iter().zip(ys) {
+        acc = f.add(acc, f.mul(ci, yi));
+    }
+    acc
+}
+
+/// Evaluate the polynomial with coefficient vector `coeffs`
+/// (`coeffs[i]` multiplies `z^i`) at `z` — Horner. Test helper and
+/// share-polynomial evaluation.
+pub fn horner(f: Field, coeffs: &[u64], z: u64) -> u64 {
+    let mut acc = 0u64;
+    for &c in coeffs.iter().rev() {
+        acc = f.reduce(f.mul(acc, z) + c);
+    }
+    acc
+}
+
+/// The canonical COPML evaluation-point layout: `K+T` encoding points
+/// `β_1..β_{K+T}` and `N` client points `α_1..α_N`, all distinct
+/// (paper Phase 2 requires `{α_i} ∩ {β_k} = ∅`). We use
+/// `β_k = k`, `α_i = K+T+i` (1-based), which are distinct for any
+/// `N + K + T < p`.
+pub fn standard_points(kt: usize, n: usize) -> (Vec<u64>, Vec<u64>) {
+    let betas: Vec<u64> = (1..=kt as u64).collect();
+    let alphas: Vec<u64> = (kt as u64 + 1..=(kt + n) as u64).collect();
+    (betas, alphas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::P26;
+    use crate::prng::Rng;
+
+    #[test]
+    fn interpolation_recovers_polynomial() {
+        let f = Field::new(P26);
+        let mut r = Rng::seed_from_u64(1);
+        for deg in [0usize, 1, 3, 7, 20] {
+            let coeffs: Vec<u64> = (0..=deg).map(|_| r.gen_range(P26)).collect();
+            let xs: Vec<u64> = (1..=(deg as u64 + 1)).collect();
+            let ys: Vec<u64> = xs.iter().map(|&x| horner(f, &coeffs, x)).collect();
+            for _ in 0..5 {
+                let z = r.gen_range(P26);
+                assert_eq!(interp_eval(f, &xs, &ys, z), horner(f, &coeffs, z), "deg={deg}");
+            }
+        }
+    }
+
+    #[test]
+    fn coeff_rows_sum_to_one() {
+        // Interpolating the constant polynomial 1 must give 1: rows of the
+        // coefficient matrix sum to 1 (partition-of-unity property).
+        let f = Field::new(P26);
+        let xs: Vec<u64> = (1..=12u64).collect();
+        let targets: Vec<u64> = (100..120u64).collect();
+        let m = coeff_matrix(f, &xs, &targets);
+        for row in &m {
+            let s = row.iter().fold(0u64, |acc, &c| f.add(acc, c));
+            assert_eq!(s, 1);
+        }
+    }
+
+    #[test]
+    fn coeff_matrix_identity_on_nodes() {
+        // Evaluating at the nodes themselves gives the identity matrix.
+        let f = Field::new(P26);
+        let xs: Vec<u64> = vec![3, 17, 99, 1000, 54321];
+        let m = coeff_matrix(f, &xs, &xs);
+        for (t, row) in m.iter().enumerate() {
+            for (j, &c) in row.iter().enumerate() {
+                assert_eq!(c, u64::from(t == j), "t={t} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_prefix_suffix_vs_naive() {
+        let f = Field::new(97);
+        let xs = vec![1u64, 2, 5, 11];
+        let targets = vec![20u64, 33];
+        let fast = coeff_matrix(f, &xs, &targets);
+        for (t, &z) in targets.iter().enumerate() {
+            for j in 0..xs.len() {
+                let mut num = 1u64;
+                let mut den = 1u64;
+                for l in 0..xs.len() {
+                    if l != j {
+                        num = f.mul(num, f.sub(z, xs[l]));
+                        den = f.mul(den, f.sub(xs[j], xs[l]));
+                    }
+                }
+                assert_eq!(fast[t][j], f.mul(num, f.inv(den)));
+            }
+        }
+    }
+
+    #[test]
+    fn standard_points_disjoint_distinct() {
+        let (betas, alphas) = standard_points(33, 50);
+        assert_eq!(betas.len(), 33);
+        assert_eq!(alphas.len(), 50);
+        let mut all = betas.clone();
+        all.extend(&alphas);
+        let mut dedup = all.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(all.len(), dedup.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_points_rejected() {
+        let f = Field::new(97);
+        coeff_matrix(f, &[1, 2, 2], &[5]);
+    }
+}

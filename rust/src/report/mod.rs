@@ -1,0 +1,8 @@
+//! Experiment reporting: a tiny JSON value/serializer (no `serde` in the
+//! offline image) and aligned-column table printing for the bench harness.
+
+mod json;
+mod table;
+
+pub use json::Json;
+pub use table::Table;

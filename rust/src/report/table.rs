@@ -1,0 +1,103 @@
+//! Aligned-column table printing for bench/experiment output, mirroring the
+//! row layout of the paper's tables.
+
+/// A simple right-aligned table with a header row.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: first cell is a label, the rest are f64s with `prec`
+    /// decimal places.
+    pub fn row_f64(&mut self, label: &str, values: &[f64], prec: usize) -> &mut Self {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.prec$}")));
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    line.push_str(&format!("{:<width$}", c, width = widths[i]));
+                } else {
+                    line.push_str(&format!("  {:>width$}", c, width = widths[i]));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Table I", &["Protocol", "Comp (s)", "Total (s)"]);
+        t.row(&["MPC [BGW88]".into(), "918".into(), "22384".into()]);
+        t.row(&["COPML (Case 1)".into(), "141".into(), "440".into()]);
+        let r = t.render();
+        assert!(r.contains("Table I"));
+        let lines: Vec<&str> = r.lines().collect();
+        // all data lines same width
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert!(r.contains("22384"));
+    }
+
+    #[test]
+    fn row_f64_formats() {
+        let mut t = Table::new("", &["who", "v"]);
+        t.row_f64("a", &[1.23456], 2);
+        assert!(t.render().contains("1.23"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

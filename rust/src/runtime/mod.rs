@@ -1,0 +1,181 @@
+//! Execution runtime for the per-client encoded-gradient hot path
+//! `f(X̃, w̃) = X̃ᵀ ĝ(X̃·w̃)` over `F_p` (paper Eq. 7).
+//!
+//! Two interchangeable engines implement [`GradKernel`]:
+//!
+//! * [`pjrt::PjrtRuntime`] — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//!   produced once by `python/compile/aot.py` from the JAX/Pallas L1+L2
+//!   stack), compiles them on the PJRT CPU client and executes them from
+//!   rust. **Python never runs here.** `PjRtClient` is `Rc`-based (not
+//!   `Send`), so [`KernelServer`] hosts it on a dedicated thread and hands
+//!   out cloneable, `Send` [`KernelHandle`]s to the client threads.
+//! * [`native::NativeKernel`] — a pure-rust implementation of the same
+//!   computation, used as the default engine for the massively-threaded
+//!   full-fidelity tests and as the baseline the PJRT path is
+//!   cross-validated against (`tests/runtime_parity.rs`).
+//!
+//! Artifacts are compiled for **row buckets** (`padding::bucket_rows`);
+//! zero-padding rows is exact because a zero row contributes
+//! `0·ĝ(0·w̃) = 0` to every output coordinate (see `padding` tests).
+
+pub mod native;
+pub mod padding;
+pub mod pjrt;
+
+use crate::field::MatShape;
+
+/// The per-client computation of Eq. (7): given the encoded data block and
+/// the encoded model, return `X̃ᵀ ĝ(X̃·w̃) (mod p)`, where `ĝ` has the
+/// provided quantized coefficients (`coeffs_q[i]` multiplies `z^i`).
+pub trait GradKernel: Send {
+    fn encoded_gradient(
+        &self,
+        x_enc: &[u64],
+        shape: MatShape,
+        w_enc: &[u64],
+        coeffs_q: &[u64],
+    ) -> Vec<u64>;
+}
+
+/// Which engine executes Eq. (7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-rust field kernels.
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts via PJRT.
+    Pjrt,
+}
+
+use std::sync::mpsc;
+
+enum Request {
+    Run {
+        x_enc: Vec<u64>,
+        shape: MatShape,
+        w_enc: Vec<u64>,
+        coeffs_q: Vec<u64>,
+        reply: mpsc::Sender<Vec<u64>>,
+    },
+    Shutdown,
+}
+
+/// Dedicated thread owning the (non-`Send`) PJRT runtime; serves
+/// [`KernelHandle`] requests. Requests are processed in FIFO order — in the
+/// protocol's bulk-synchronous compute phase this serializes client
+/// compute, which the timing ledger accounts for separately (the simulator
+/// charges *measured single-client* time, not wall-clock of the
+/// simulation).
+pub struct KernelServer {
+    tx: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl KernelServer {
+    /// Spawn the server with a factory for the underlying kernel (the
+    /// factory runs on the server thread, where `Rc`s are fine).
+    pub fn spawn<F, K>(factory: F) -> KernelServer
+    where
+        F: FnOnce() -> K + Send + 'static,
+        K: GradKernelLocal,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let join = std::thread::spawn(move || {
+            let kernel = factory();
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Run { x_enc, shape, w_enc, coeffs_q, reply } => {
+                        let out = kernel.encoded_gradient_local(&x_enc, shape, &w_enc, &coeffs_q);
+                        let _ = reply.send(out);
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        });
+        KernelServer { tx, join: Some(join) }
+    }
+
+    /// A cloneable, `Send` handle for client threads.
+    pub fn handle(&self) -> KernelHandle {
+        KernelHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for KernelServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Like [`GradKernel`] but without the `Send` bound — implemented by the
+/// PJRT runtime, hosted behind a [`KernelServer`].
+pub trait GradKernelLocal: 'static {
+    fn encoded_gradient_local(
+        &self,
+        x_enc: &[u64],
+        shape: MatShape,
+        w_enc: &[u64],
+        coeffs_q: &[u64],
+    ) -> Vec<u64>;
+}
+
+/// `Send` handle to a [`KernelServer`].
+#[derive(Clone)]
+pub struct KernelHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl GradKernel for KernelHandle {
+    fn encoded_gradient(
+        &self,
+        x_enc: &[u64],
+        shape: MatShape,
+        w_enc: &[u64],
+        coeffs_q: &[u64],
+    ) -> Vec<u64> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Run {
+                x_enc: x_enc.to_vec(),
+                shape,
+                w_enc: w_enc.to_vec(),
+                coeffs_q: coeffs_q.to_vec(),
+                reply,
+            })
+            .expect("kernel server gone");
+        rx.recv().expect("kernel server dropped reply")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{Field, P26};
+
+    #[test]
+    fn kernel_server_serves_native_kernel_across_threads() {
+        let f = Field::new(P26);
+        let server = KernelServer::spawn(move || native::NativeKernel::new(f));
+        let handle = server.handle();
+        let shape = MatShape::new(4, 3);
+        let x: Vec<u64> = (1..=12).collect();
+        let w: Vec<u64> = vec![1, 2, 3];
+        let coeffs = vec![5u64, 7u64];
+        let direct = native::NativeKernel::new(f).encoded_gradient(&x, shape, &w, &coeffs);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let h = handle.clone();
+                let (x, w, c, direct) = (x.clone(), w.clone(), coeffs.clone(), direct.clone());
+                std::thread::spawn(move || {
+                    let out = h.encoded_gradient(&x, shape, &w, &c);
+                    assert_eq!(out, direct);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Pure-rust engine for the encoded gradient — the reference the PJRT path
+//! is validated against, and the default engine for heavily-threaded tests.
+
+use super::{GradKernel, GradKernelLocal};
+use crate::field::{vecops, Field, MatShape};
+
+/// Computes `X̃ᵀ ĝ(X̃·w̃) mod p` with `field::vecops` (tiled accumulation,
+/// Barrett reduction).
+#[derive(Clone, Copy)]
+pub struct NativeKernel {
+    f: Field,
+}
+
+impl NativeKernel {
+    pub fn new(f: Field) -> NativeKernel {
+        NativeKernel { f }
+    }
+}
+
+impl GradKernel for NativeKernel {
+    /// Fused single pass over `X̃` (§Perf optimization #2): each row
+    /// computes `z_i = x_i·w̃`, `g_i = ĝ(z_i)`, and immediately
+    /// accumulates `g_i·x_i` into the output — halving the memory traffic
+    /// of the naive matvec → poly → matvecᵀ pipeline (the kernel is
+    /// DRAM-bandwidth-bound at paper shapes; 1.7× measured at 2048×3073).
+    fn encoded_gradient(
+        &self,
+        x_enc: &[u64],
+        shape: MatShape,
+        w_enc: &[u64],
+        coeffs_q: &[u64],
+    ) -> Vec<u64> {
+        let f = self.f;
+        let (rows, cols) = (shape.rows, shape.cols);
+        assert_eq!(x_enc.len(), rows * cols);
+        assert_eq!(w_enc.len(), cols);
+        let budget = f.accum_budget();
+        let mut out = vec![0u64; cols];
+        let mut pending = 0usize;
+        for r in 0..rows {
+            let row = &x_enc[r * cols..(r + 1) * cols];
+            // z = x_i · w̃ (tiled reduction)
+            let z = vecops::dot(f, row, w_enc);
+            // g = ĝ(z) by Horner
+            let mut g = *coeffs_q.last().unwrap();
+            for &c in coeffs_q.iter().rev().skip(1) {
+                g = f.reduce(f.reduce(g * z) + c);
+            }
+            // out += g · x_i with budget-bounded accumulation
+            if pending + 1 > budget {
+                for o in out.iter_mut() {
+                    *o = f.reduce(*o);
+                }
+                pending = 0;
+            }
+            if g != 0 {
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o += g * v;
+                }
+            }
+            pending += 1;
+        }
+        for o in out.iter_mut() {
+            *o = f.reduce(*o);
+        }
+        out
+    }
+}
+
+impl GradKernelLocal for NativeKernel {
+    fn encoded_gradient_local(
+        &self,
+        x_enc: &[u64],
+        shape: MatShape,
+        w_enc: &[u64],
+        coeffs_q: &[u64],
+    ) -> Vec<u64> {
+        self.encoded_gradient(x_enc, shape, w_enc, coeffs_q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::P26;
+    use crate::prng::Rng;
+
+    /// i128 reference implementation.
+    fn reference(p: u64, x: &[u64], rows: usize, cols: usize, w: &[u64], c: &[u64]) -> Vec<u64> {
+        let pm = p as u128;
+        let mut z = vec![0u128; rows];
+        for i in 0..rows {
+            let mut acc = 0u128;
+            for j in 0..cols {
+                acc = (acc + x[i * cols + j] as u128 * w[j] as u128) % pm;
+            }
+            // poly
+            let mut g = 0u128;
+            let mut zp = 1u128;
+            for &ci in c {
+                g = (g + ci as u128 * zp) % pm;
+                zp = zp * acc % pm;
+            }
+            z[i] = g;
+        }
+        let mut out = vec![0u64; cols];
+        for j in 0..cols {
+            let mut acc = 0u128;
+            for i in 0..rows {
+                acc = (acc + x[i * cols + j] as u128 * z[i]) % pm;
+            }
+            out[j] = acc as u64;
+        }
+        out
+    }
+
+    #[test]
+    fn matches_i128_reference() {
+        let f = Field::new(P26);
+        let k = NativeKernel::new(f);
+        let mut r = Rng::seed_from_u64(1);
+        for (rows, cols, deg) in [(7usize, 5usize, 1usize), (16, 9, 3), (33, 21, 1)] {
+            let x: Vec<u64> = (0..rows * cols).map(|_| r.gen_range(P26)).collect();
+            let w: Vec<u64> = (0..cols).map(|_| r.gen_range(P26)).collect();
+            let c: Vec<u64> = (0..=deg).map(|_| r.gen_range(P26)).collect();
+            let got = k.encoded_gradient(&x, MatShape::new(rows, cols), &w, &c);
+            let want = reference(P26, &x, rows, cols, &w, &c);
+            assert_eq!(got, want, "rows={rows} cols={cols} deg={deg}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_do_not_contribute() {
+        // The padding invariant: appending zero rows never changes f.
+        let f = Field::new(P26);
+        let k = NativeKernel::new(f);
+        let mut r = Rng::seed_from_u64(2);
+        let (rows, cols) = (9usize, 6usize);
+        let x: Vec<u64> = (0..rows * cols).map(|_| r.gen_range(P26)).collect();
+        let w: Vec<u64> = (0..cols).map(|_| r.gen_range(P26)).collect();
+        let c = vec![123456u64, 777u64]; // ĝ(0) = c0 ≠ 0 — stresses the claim
+        let base = k.encoded_gradient(&x, MatShape::new(rows, cols), &w, &c);
+        let mut padded = x.clone();
+        padded.extend(std::iter::repeat(0).take(5 * cols));
+        let got = k.encoded_gradient(&padded, MatShape::new(rows + 5, cols), &w, &c);
+        assert_eq!(got, base);
+    }
+}

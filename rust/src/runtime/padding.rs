@@ -1,0 +1,73 @@
+//! Row-bucket padding for AOT artifacts.
+//!
+//! PJRT executables are compiled for fixed shapes. Rather than one artifact
+//! per exact `(m/K) × d` block, artifacts are compiled for a geometric
+//! ladder of row counts and inputs are zero-padded up to the bucket.
+//! Padding is exact for Eq. (7): a zero row `x_r = 0` contributes
+//! `x_{r,j}·ĝ(x_r·w̃) = 0·ĝ(0) = 0` to every output coordinate (verified in
+//! `runtime::native::tests::zero_rows_do_not_contribute` and in the
+//! python kernel tests).
+
+/// The row buckets artifacts are compiled for (geometric, ×2).
+pub const ROW_BUCKETS: [usize; 10] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+
+/// Smallest bucket `≥ rows`, or `None` if larger than every bucket.
+pub fn bucket_rows(rows: usize) -> Option<usize> {
+    ROW_BUCKETS.iter().copied().find(|&b| b >= rows)
+}
+
+/// Zero-pad a row-major `(rows × cols)` matrix to `target_rows`.
+pub fn pad_rows(x: &[u64], rows: usize, cols: usize, target_rows: usize) -> Vec<u64> {
+    assert_eq!(x.len(), rows * cols);
+    assert!(target_rows >= rows);
+    let mut out = Vec::with_capacity(target_rows * cols);
+    out.extend_from_slice(x);
+    out.resize(target_rows * cols, 0);
+    out
+}
+
+/// Maximum wasted-compute ratio of the ladder (worst case one row past the
+/// previous bucket): used by the §Perf analysis.
+pub fn worst_waste_ratio() -> f64 {
+    let mut worst: f64 = 0.0;
+    for w in ROW_BUCKETS.windows(2) {
+        let rows = w[0] + 1;
+        worst = worst.max(w[1] as f64 / rows as f64);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_monotone() {
+        for w in ROW_BUCKETS.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_rows(1), Some(8));
+        assert_eq!(bucket_rows(8), Some(8));
+        assert_eq!(bucket_rows(9), Some(16));
+        assert_eq!(bucket_rows(4096), Some(4096));
+        assert_eq!(bucket_rows(4097), None);
+    }
+
+    #[test]
+    fn pad_preserves_prefix_and_zeroes_rest() {
+        let x = vec![1, 2, 3, 4, 5, 6];
+        let padded = pad_rows(&x, 2, 3, 4);
+        assert_eq!(&padded[..6], &x[..]);
+        assert!(padded[6..].iter().all(|&v| v == 0));
+        assert_eq!(padded.len(), 12);
+    }
+
+    #[test]
+    fn waste_bounded_by_two() {
+        assert!(worst_waste_ratio() <= 2.0);
+    }
+}

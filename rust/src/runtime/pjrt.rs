@@ -1,0 +1,189 @@
+//! PJRT engine: load the AOT-compiled JAX/Pallas artifacts and execute the
+//! encoded gradient from rust. This is the production hot path — python is
+//! involved only at build time (`make artifacts`).
+//!
+//! Interchange is **HLO text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) lists one
+//! entry per compiled shape:
+//! `{file, p, degree, rows, cols, kernel}` — `rows` are bucket sizes from
+//! [`super::padding::ROW_BUCKETS`], `kernel` is `"pallas"` (L1 kernel) or
+//! `"jnp"` (pure-jnp L2 reference lowering, used for parity testing).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{padding, GradKernelLocal};
+use crate::field::MatShape;
+use crate::report::Json;
+
+/// One artifact's metadata from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub p: u64,
+    pub degree: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub kernel: String,
+}
+
+/// Runtime over a directory of AOT artifacts. Not `Send` (PJRT client is
+/// `Rc`-based) — host it behind a [`super::KernelServer`] for threaded use.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    entries: Vec<ArtifactMeta>,
+    /// Executable cache keyed by manifest index.
+    cache: RefCell<HashMap<usize, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Which kernel flavour to select ("pallas" or "jnp").
+    pub flavour: String,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest from `dir` and create a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let mut entries = Vec::new();
+        for a in doc
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            entries.push(ArtifactMeta {
+                file: a.get("file").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                p: a.get("p").and_then(|v| v.as_u64()).unwrap_or(0),
+                degree: a.get("degree").and_then(|v| v.as_usize()).unwrap_or(0),
+                rows: a.get("rows").and_then(|v| v.as_usize()).unwrap_or(0),
+                cols: a.get("cols").and_then(|v| v.as_usize()).unwrap_or(0),
+                kernel: a.get("kernel").and_then(|v| v.as_str()).unwrap_or("pallas").to_string(),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(PjrtRuntime { client, dir: dir.to_path_buf(), entries, cache: RefCell::new(HashMap::new()), flavour: "pallas".into() })
+    }
+
+    /// Default artifact directory: `$COPML_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("COPML_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    /// Find the manifest entry for `(p, degree, cols)` whose row bucket fits
+    /// `rows`.
+    fn find(&self, p: u64, degree: usize, rows: usize, cols: usize) -> Result<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.p == p && e.degree == degree && e.cols == cols && e.kernel == self.flavour && e.rows >= rows {
+                if best.map_or(true, |b| e.rows < self.entries[b].rows) {
+                    best = Some(i);
+                }
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow!(
+                "no artifact for p={p} degree={degree} cols={cols} rows≥{rows} flavour={} — \
+                 add the shape to python/compile/aot.py and re-run `make artifacts`",
+                self.flavour
+            )
+        })
+    }
+
+    /// True if an artifact covering this shape exists.
+    pub fn supports(&self, p: u64, degree: usize, rows: usize, cols: usize) -> bool {
+        self.find(p, degree, rows, cols).is_ok()
+    }
+
+    fn executable(&self, idx: usize) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&idx) {
+            return Ok(e.clone());
+        }
+        let meta = &self.entries[idx];
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.file))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(idx, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute Eq. (7) via the artifact, padding rows to the bucket.
+    pub fn run(
+        &self,
+        p: u64,
+        x_enc: &[u64],
+        shape: MatShape,
+        w_enc: &[u64],
+        coeffs_q: &[u64],
+    ) -> Result<Vec<u64>> {
+        let degree = coeffs_q.len() - 1;
+        let idx = self.find(p, degree, shape.rows, shape.cols)?;
+        let bucket = self.entries[idx].rows;
+        let exe = self.executable(idx)?;
+        let padded;
+        let x_view: &[u64] = if bucket == shape.rows {
+            x_enc
+        } else {
+            padded = padding::pad_rows(x_enc, shape.rows, shape.cols, bucket);
+            &padded
+        };
+        let x_lit = xla::Literal::vec1(x_view)
+            .reshape(&[bucket as i64, shape.cols as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let w_lit = xla::Literal::vec1(w_enc);
+        let c_lit = xla::Literal::vec1(coeffs_q);
+        let result = exe
+            .execute::<xla::Literal>(&[x_lit, w_lit, c_lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let tuple = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let out = tuple.to_vec::<u64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(out)
+    }
+}
+
+impl GradKernelLocal for PjrtRuntime {
+    fn encoded_gradient_local(
+        &self,
+        x_enc: &[u64],
+        shape: MatShape,
+        w_enc: &[u64],
+        coeffs_q: &[u64],
+    ) -> Vec<u64> {
+        // Modulus is implied by the artifact set: entries are filtered by p
+        // at `find` time via the coordinator passing the right p.
+        let p = self
+            .entries
+            .iter()
+            .find(|e| e.cols == shape.cols)
+            .map(|e| e.p)
+            .expect("no artifact matches cols");
+        self.run(p, x_enc, shape, w_enc, coeffs_q)
+            .expect("PJRT execution failed")
+    }
+}

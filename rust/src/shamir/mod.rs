@@ -1,0 +1,200 @@
+//! Shamir `T`-out-of-`N` secret sharing over `F_p`, element-wise on
+//! matrices (paper Phase 2).
+//!
+//! Client `j` embeds its dataset in a random degree-`T` polynomial
+//! `h_j(z) = X_j + z·R_{j1} + … + z^T·R_{jT}` and hands client `i` the
+//! evaluation `[X_j]_i = h_j(λ_i)`. Any `T` shares are jointly uniform
+//! (information-theoretic privacy); any `T+1` reconstruct by Lagrange
+//! interpolation at `z = 0`.
+//!
+//! Sharing large matrices is done in **chunks** so the `T` random
+//! coefficient matrices never have to be materialized in full — memory
+//! stays `O(chunk)` instead of `O(T·|X|)`.
+
+use crate::field::{vecops, Field};
+use crate::poly;
+use crate::prng::Rng;
+
+/// Evaluation points `λ_1..λ_N` for the share polynomials. Must be nonzero
+/// and distinct; we use `1..=N`.
+pub fn lambda_points(n: usize) -> Vec<u64> {
+    (1..=n as u64).collect()
+}
+
+/// Share a secret vector/matrix (flattened) into `n` shares with threshold
+/// `t`: any `t` shares reveal nothing, any `t+1` reconstruct.
+///
+/// Returns `n` vectors of the same length as `secret`.
+pub fn share(f: Field, secret: &[u64], n: usize, t: usize, rng: &mut Rng) -> Vec<Vec<u64>> {
+    share_at(f, secret, &lambda_points(n), t, rng)
+}
+
+/// Share with explicit evaluation points (all nonzero, distinct).
+pub fn share_at(
+    f: Field,
+    secret: &[u64],
+    points: &[u64],
+    t: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<u64>> {
+    let n = points.len();
+    assert!(n > t, "need more parties than the threshold (n={n}, t={t})");
+    for &l in points {
+        assert!(l != 0 && l < f.modulus(), "points must be nonzero field elements");
+    }
+    let len = secret.len();
+    let mut shares = vec![vec![0u64; len]; n];
+
+    const CHUNK: usize = 1 << 14;
+    let mut coeff_chunk = vec![0u64; CHUNK.min(len.max(1)) * t.max(1)];
+    let mut start = 0;
+    while start < len {
+        let end = (start + CHUNK).min(len);
+        let w = end - start;
+        // Fresh random degree-1..T coefficients for this chunk.
+        let coeffs = &mut coeff_chunk[..w * t];
+        rng.fill_field(f.modulus(), coeffs);
+        for (i, &lambda) in points.iter().enumerate() {
+            let out = &mut shares[i][start..end];
+            // Horner in z: h(λ) = ((R_T·λ + R_{T-1})·λ + …)·λ + secret
+            for (e, o) in out.iter_mut().enumerate() {
+                let mut acc = 0u64;
+                for k in (0..t).rev() {
+                    acc = f.reduce(f.mul(acc, lambda) + coeffs[k * w + e]);
+                }
+                *o = f.reduce(f.mul(acc, lambda) + secret[start + e]);
+            }
+        }
+        start = end;
+    }
+    shares
+}
+
+/// Precomputed reconstruction coefficients for a set of share indices
+/// (0-based indices into the λ points).
+pub struct Reconstructor {
+    coeffs: Vec<u64>,
+}
+
+impl Reconstructor {
+    /// Build a reconstructor from the λ points of the participating shares.
+    /// Needs at least `t+1` points for a degree-`t` sharing (the caller
+    /// picks which shares participate, e.g. the fastest `t+1`).
+    pub fn new(f: Field, points: &[u64]) -> Reconstructor {
+        Reconstructor {
+            coeffs: poly::coeffs_at(f, points, 0),
+        }
+    }
+
+    /// Reconstruct the secret from shares (same order as the points given
+    /// to [`Reconstructor::new`]).
+    pub fn reconstruct(&self, f: Field, shares: &[&[u64]], out: &mut [u64]) {
+        assert_eq!(shares.len(), self.coeffs.len());
+        vecops::weighted_sum(f, &self.coeffs, shares, out);
+    }
+}
+
+/// Convenience: reconstruct from the first `t+1` of the standard λ points.
+pub fn reconstruct(f: Field, shares: &[Vec<u64>], t: usize) -> Vec<u64> {
+    assert!(shares.len() > t);
+    let pts = lambda_points(shares.len());
+    let sel: Vec<u64> = pts[..t + 1].to_vec();
+    let rec = Reconstructor::new(f, &sel);
+    let views: Vec<&[u64]> = shares[..t + 1].iter().map(|s| s.as_slice()).collect();
+    let mut out = vec![0u64; shares[0].len()];
+    rec.reconstruct(f, &views, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::P26;
+
+    #[test]
+    fn share_reconstruct_roundtrip() {
+        let f = Field::new(P26);
+        let mut rng = Rng::seed_from_u64(1);
+        let secret: Vec<u64> = (0..1000).map(|_| rng.gen_range(P26)).collect();
+        for (n, t) in [(3usize, 1usize), (5, 2), (10, 4), (50, 24)] {
+            let shares = share(f, &secret, n, t, &mut rng);
+            assert_eq!(shares.len(), n);
+            let rec = reconstruct(f, &shares, t);
+            assert_eq!(rec, secret, "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn any_t_plus_1_subset_reconstructs() {
+        let f = Field::new(P26);
+        let mut rng = Rng::seed_from_u64(2);
+        let secret: Vec<u64> = (0..64).map(|_| rng.gen_range(P26)).collect();
+        let (n, t) = (9usize, 3usize);
+        let shares = share(f, &secret, n, t, &mut rng);
+        let pts = lambda_points(n);
+        // A handful of different subsets of size t+1.
+        for subset in [[0usize, 1, 2, 3], [5, 6, 7, 8], [0, 3, 5, 8], [1, 4, 6, 7]] {
+            let spts: Vec<u64> = subset.iter().map(|&i| pts[i]).collect();
+            let views: Vec<&[u64]> = subset.iter().map(|&i| shares[i].as_slice()).collect();
+            let rec = Reconstructor::new(f, &spts);
+            let mut out = vec![0u64; secret.len()];
+            rec.reconstruct(f, &views, &mut out);
+            assert_eq!(out, secret, "subset {subset:?}");
+        }
+    }
+
+    #[test]
+    fn t_shares_leak_nothing_statistically() {
+        // Share a constant secret many times; any single share (t=1 case:
+        // T shares = 1 share) should look uniform. Crude test: mean of the
+        // share value over trials ≈ p/2 within 5%.
+        let f = Field::new(P26);
+        let mut rng = Rng::seed_from_u64(3);
+        let secret = vec![42u64];
+        let trials = 4000;
+        let mut sum = 0f64;
+        for _ in 0..trials {
+            let shares = share(f, &secret, 3, 1, &mut rng);
+            sum += shares[0][0] as f64;
+        }
+        let mean = sum / trials as f64;
+        let expect = (P26 / 2) as f64;
+        assert!((mean - expect).abs() / expect < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn shares_are_linear() {
+        // [a]_i + [b]_i is a valid share of a+b — the basis of secure
+        // addition.
+        let f = Field::new(P26);
+        let mut rng = Rng::seed_from_u64(4);
+        let a: Vec<u64> = (0..32).map(|_| rng.gen_range(P26)).collect();
+        let b: Vec<u64> = (0..32).map(|_| rng.gen_range(P26)).collect();
+        let (n, t) = (7, 2);
+        let sa = share(f, &a, n, t, &mut rng);
+        let sb = share(f, &b, n, t, &mut rng);
+        let mut sum_shares: Vec<Vec<u64>> = sa.clone();
+        for i in 0..n {
+            vecops::add_assign(f, &mut sum_shares[i], &sb[i]);
+        }
+        let rec = reconstruct(f, &sum_shares, t);
+        let expect: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| f.add(x, y)).collect();
+        assert_eq!(rec, expect);
+    }
+
+    #[test]
+    fn reconstruct_with_wrong_subset_size_fails_value() {
+        // t shares interpolated as if degree t-1 give the wrong secret
+        // (sanity that the threshold is real).
+        let f = Field::new(P26);
+        let mut rng = Rng::seed_from_u64(5);
+        let secret = vec![12345u64; 8];
+        let shares = share(f, &secret, 5, 2, &mut rng);
+        let pts = lambda_points(5);
+        let rec = Reconstructor::new(f, &pts[..2]); // only 2 shares for t=2
+        let views: Vec<&[u64]> = shares[..2].iter().map(|s| s.as_slice()).collect();
+        let mut out = vec![0u64; 8];
+        rec.reconstruct(f, &views, &mut out);
+        assert_ne!(out, secret);
+    }
+}

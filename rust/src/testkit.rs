@@ -1,0 +1,158 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline image ships no `proptest`/`quickcheck`, so this module
+//! provides the small subset the test suite needs: seeded generators and a
+//! `forall` runner that reports the failing case index and seed so any
+//! failure is reproducible with [`run_case`].
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the libxla rpath in this image
+//! use copml::testkit::{forall, Gen};
+//! forall("add commutes", 200, |g: &mut Gen| {
+//!     let (a, b) = (g.u64_below(1000), g.u64_below(1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::prng::Rng;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0..cases); properties can use it to scale sizes.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.gen_range(bound)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.gen_range((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.gen_f64()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.gen_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_u64(&mut self, len: usize, bound: u64) -> Vec<u64> {
+        (0..len).map(|_| self.rng.gen_range(bound)).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_range(xs.len() as u64) as usize]
+    }
+
+    /// Access the underlying PRNG (for domain-specific generators).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` on `cases` seeded random inputs. Panics (re-raising the
+/// property's panic) with the case index and seed on first failure.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let base_seed = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::seed_from_u64(seed), case };
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging aid).
+pub fn run_case<F: FnOnce(&mut Gen)>(seed: u64, case: usize, prop: F) {
+    let mut g = Gen { rng: Rng::seed_from_u64(seed), case };
+    prop(&mut g);
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f64 slices are element-wise close.
+pub fn assert_allclose(a: &[f64], b: &[f64], atol: f64, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= atol,
+            "{ctx}: index {i}: {x} vs {y} (atol {atol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        forall("counter", 17, |_| {
+            N.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(N.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        static VALS: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        forall("det", 5, |g| VALS.lock().unwrap().push(g.u64_below(1 << 40)));
+        let first: Vec<u64> = std::mem::take(&mut *VALS.lock().unwrap());
+        forall("det", 5, |g| VALS.lock().unwrap().push(g.u64_below(1 << 40)));
+        let second: Vec<u64> = std::mem::take(&mut *VALS.lock().unwrap());
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall("fails", 64, |g| {
+            let v = g.u64_below(16);
+            assert!(v < 15, "hit the 1/16 case eventually");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall("ranges", 100, |g| {
+            let n = g.usize_in(3, 9);
+            assert!((3..=9).contains(&n));
+            let x = g.f64_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn allclose_passes_within_tolerance() {
+        assert_allclose(&[1.0, 2.0], &[1.0005, 1.9995], 1e-2, "ok");
+    }
+}

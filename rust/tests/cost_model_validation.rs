@@ -1,0 +1,85 @@
+//! The cost model's byte counts must match the threaded protocol's real
+//! ledger — this is what makes the Fig. 3 / Table I simulations honest:
+//! compute is measured, bytes are exact, only the NIC is modeled.
+
+use copml::bench::cost_model::CopmlCost;
+use copml::coordinator::{protocol, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::net::ELEM_BYTES;
+
+/// Analytic per-client bytes of the protocol phases (mirrors
+/// `coordinator::protocol`), for a config with even client split.
+fn analytic_bytes_per_iter(n: usize, t: usize, d: usize, subgroups: bool) -> u64 {
+    let targets = if subgroups { t + 1 } else { t + 1 }; // reconstruction set size
+    // model encode: send to (targets−1) group mates (own share stays local)
+    let enc = (targets - 1) * d;
+    // results: share_out to all n−1 peers
+    let results = (n - 1) * d;
+    (enc + results) as u64 * ELEM_BYTES
+}
+
+#[test]
+fn ledger_matches_analytic_iteration_bytes() {
+    let ds = Dataset::synth(SynthSpec::tiny(), 71);
+    let (n, k, t, iters) = (10usize, 2usize, 2usize, 3usize);
+    let mut cfg = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(k, t), 71);
+    cfg.iters = iters;
+    let out = protocol::train(&cfg, &ds).unwrap();
+
+    // Phase 3 (encode_model) + phase 5 (share_results) bytes per client:
+    // subgroup sizes can exceed t+1 for the tail group, so allow the
+    // analytic value as a lower bound and a 2× envelope as upper.
+    let lower = analytic_bytes_per_iter(n, t, ds.d, true) * iters as u64;
+    for (i, l) in out.ledgers.iter().enumerate() {
+        let measured = l.bytes[3] + l.bytes[5];
+        assert!(
+            measured >= lower && measured <= lower * 2 + 64,
+            "client {i}: measured {measured}, analytic lower {lower}"
+        );
+    }
+}
+
+#[test]
+fn trunc_open_bytes_king_shaped() {
+    // King (client 0) sends ~2·(n−1)·d elements per iteration for the two
+    // truncation openings; non-king clients with id ≤ t send their shares
+    // up (2·d each).
+    let ds = Dataset::synth(SynthSpec::tiny(), 72);
+    let (n, t, iters) = (7usize, 1usize, 2usize);
+    let mut cfg = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(2, t), 72);
+    cfg.iters = iters;
+    let out = protocol::train(&cfg, &ds).unwrap();
+    let d = ds.d as u64;
+    let king_decode = out.ledgers[0].bytes[6];
+    let expected_king = 2 * (n as u64 - 1) * d * ELEM_BYTES * iters as u64;
+    assert_eq!(king_decode, expected_king);
+    // a far client (> t) sends nothing during decode/trunc
+    assert_eq!(out.ledgers[n - 1].bytes[6], 0);
+}
+
+#[test]
+fn copml_cost_model_monotonic_in_n_for_fixed_kt() {
+    // More clients, same (K,T): comm grows (more result shares), compute
+    // constant.
+    let cal = copml::bench::Calibration {
+        muladd_per_s: 1e9,
+        kernel_cells_per_s: 5e8,
+        share_per_s: 2e8,
+    };
+    let wan = copml::net::wan::WanModel::paper();
+    let mk = |n: usize| CopmlCost {
+        n,
+        k: 3,
+        t: 1,
+        r: 1,
+        m: 2000,
+        d: 100,
+        iters: 10,
+        subgroups: true,
+    }
+    .estimate(&cal, &wan);
+    let a = mk(10);
+    let b = mk(30);
+    assert!(b.comm_s > a.comm_s);
+    assert!((b.comp_s - a.comp_s).abs() < 1e-9);
+}

@@ -1,0 +1,74 @@
+//! End-to-end training behaviour of the full protocol: learning actually
+//! happens, matches the plaintext reference closely (the Fig. 4 claim at
+//! test scale), and failure modes surface as errors.
+
+use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::ml;
+
+#[test]
+fn full_protocol_learns_smoke_dataset() {
+    let ds = Dataset::synth(SynthSpec::smoke(), 201);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case2(10), 201);
+    cfg.iters = 25;
+    let out = protocol::train(&cfg, &ds).unwrap();
+    let acc = *out.train.test_accuracy.last().unwrap();
+    assert!(acc > 0.82, "full-protocol test accuracy {acc}");
+    assert!(out.train.loss.last().unwrap() < &out.train.loss[0]);
+}
+
+#[test]
+fn secure_vs_plaintext_gap_small() {
+    // Fig. 4's claim at test scale: COPML ≈ conventional LR.
+    let ds = Dataset::synth(SynthSpec::smoke(), 202);
+    let cfg = CopmlConfig::for_dataset(&ds, 13, CaseParams::case1(13), 202);
+    let secure = algo::train(&cfg, &ds).unwrap();
+    let plain = ml::train_logreg(
+        &ds,
+        &ml::LogRegOptions { iters: cfg.iters, eta: cfg.eta, ..Default::default() },
+    );
+    let gap =
+        (plain.test_accuracy.last().unwrap() - secure.test_accuracy.last().unwrap()).abs();
+    assert!(gap < 0.06, "gap {gap}");
+}
+
+#[test]
+fn insufficient_n_rejected() {
+    let ds = Dataset::synth(SynthSpec::tiny(), 203);
+    // K=3, T=2, r=1 → threshold 3·4+1 = 13 > 10
+    let cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::explicit(3, 2), 203);
+    assert!(protocol::train(&cfg, &ds).is_err());
+    assert!(algo::train(&cfg, &ds).is_err());
+}
+
+#[test]
+fn ledger_accounts_every_phase() {
+    let ds = Dataset::synth(SynthSpec::tiny(), 204);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 7, CaseParams::explicit(2, 1), 204);
+    cfg.iters = 3;
+    let out = protocol::train(&cfg, &ds).unwrap();
+    assert_eq!(out.ledgers.len(), 7);
+    for (i, l) in out.ledgers.iter().enumerate() {
+        assert!(l.total_seconds() > 0.0, "client {i} recorded no time");
+        // every client shares its dataset and its results
+        assert!(l.bytes[0] > 0, "client {i}: no dataset sharing bytes");
+        assert!(l.bytes[5] > 0, "client {i}: no result bytes");
+    }
+}
+
+#[test]
+fn eta_within_lipschitz_bound_converges_monotonically() {
+    // Theorem 1 premise: η ≤ 1/L → loss decreases (up to truncation noise).
+    let ds = Dataset::synth(SynthSpec::smoke(), 205);
+    let l = ml::logreg::lipschitz_constant(&ds, 30);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 205);
+    cfg.eta = (1.0 / l).min(2.0);
+    // 1/L is small at this scale: widen l_e so e_q = Round(2^{l_e}·η/m) ≥ 1
+    // (stage-2 width l_x + l_e must stay < k_2).
+    cfg.plan.le = cfg.plan.k2 - cfg.plan.lx - 3;
+    cfg.iters = 15;
+    let out = algo::train(&cfg, &ds).unwrap();
+    let first = out.loss[0];
+    let last = *out.loss.last().unwrap();
+    assert!(last < first, "loss {first} → {last}");
+}

@@ -1,0 +1,112 @@
+//! Statistical privacy checks: what an adversary observing up to `T`
+//! clients' views actually sees. These are sanity tests of the
+//! information-theoretic arguments (Shamir hiding, Lagrange mask hiding),
+//! not proofs — the proofs are the constructions themselves ([13], [32]).
+
+use copml::field::{Field, P26};
+use copml::lcc::Encoder;
+use copml::prng::Rng;
+use copml::shamir;
+
+/// Crude uniformity check: split the field into 16 buckets; every bucket's
+/// frequency within 20% of uniform.
+fn assert_roughly_uniform(samples: &[u64], p: u64, ctx: &str) {
+    let buckets = 16usize;
+    let mut counts = vec![0usize; buckets];
+    for &s in samples {
+        counts[(s as u128 * buckets as u128 / p as u128) as usize] += 1;
+    }
+    let expect = samples.len() as f64 / buckets as f64;
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(
+            (c as f64 - expect).abs() < expect * 0.2,
+            "{ctx}: bucket {i} count {c} vs {expect}"
+        );
+    }
+}
+
+#[test]
+fn t_shamir_shares_of_distinct_secrets_indistinguishable() {
+    // The T shares an adversary coalition sees have the same (uniform)
+    // marginal regardless of the secret value.
+    let f = Field::new(P26);
+    let mut rng = Rng::seed_from_u64(1);
+    let (n, t) = (5usize, 2usize);
+    let trials = 3000;
+    for secret in [0u64, 1, P26 / 2, P26 - 1] {
+        let mut adversary_view = Vec::with_capacity(trials * t);
+        for _ in 0..trials {
+            let shares = shamir::share(f, &[secret], n, t, &mut rng);
+            for s in shares.iter().take(t) {
+                adversary_view.push(s[0]);
+            }
+        }
+        assert_roughly_uniform(&adversary_view, P26, &format!("secret={secret}"));
+    }
+}
+
+#[test]
+fn t_encoded_matrices_hide_the_dataset() {
+    // T colluding clients see T Lagrange-encoded matrices X̃; with T masks
+    // these are uniform, independent of the data (paper §IV).
+    let f = Field::new(P26);
+    let (k, t, n) = (2usize, 2usize, 9usize);
+    let enc = Encoder::standard(f, k, t, n);
+    let mut rng = Rng::seed_from_u64(2);
+    let trials = 1500;
+    for dataset_fill in [0u64, 42, P26 - 7] {
+        let parts_data = vec![vec![dataset_fill; 4]; k];
+        let mut view = Vec::new();
+        for _ in 0..trials {
+            let masks = enc.gen_masks(4, &mut rng);
+            let parts: Vec<&[u64]> = parts_data
+                .iter()
+                .map(|v| v.as_slice())
+                .chain(masks.iter().map(|v| v.as_slice()))
+                .collect();
+            // adversary = clients 0 and 1
+            for j in 0..t {
+                let mut out = vec![0u64; 4];
+                enc.encode_one(j, &parts, &mut out);
+                view.extend_from_slice(&out);
+            }
+        }
+        assert_roughly_uniform(&view, P26, &format!("fill={dataset_fill}"));
+    }
+}
+
+#[test]
+fn masked_opening_hides_product() {
+    // The BH08 opening reveals only z − ρ, which is uniform.
+    let f = Field::new(P26);
+    let mut rng = Rng::seed_from_u64(3);
+    let z = 123456u64; // "secret" product
+    let samples: Vec<u64> = (0..20000).map(|_| f.sub(z, rng.gen_range(P26))).collect();
+    assert_roughly_uniform(&samples, P26, "z − ρ");
+}
+
+#[test]
+fn trunc_opening_is_statistically_masked() {
+    // TruncPr opens b + 2^m·r'' + r'. For κ security bits the value b is
+    // hidden up to statistical distance ~2^−κ; here we sanity-check that
+    // the opened distribution's support is dominated by the mask range.
+    let f = Field::new(P26);
+    let (k, m, kappa) = (20u32, 8u32, 1u32);
+    let mut rng = Rng::seed_from_u64(4);
+    let b = 1u64 << 18;
+    let mut opened = Vec::with_capacity(20000);
+    for _ in 0..20000 {
+        let rp = rng.gen_range(1 << m);
+        let rpp = rng.gen_range(1 << (k + kappa - m));
+        opened.push(f.add(b, f.add(f.mul(1 << m, rpp), rp)));
+    }
+    // mask range is 2^{k+κ} ≈ 2M: the observable support must span nearly
+    // the whole mask range (b only offsets it), i.e. the opened value's
+    // entropy is dominated by the mask, not by b.
+    let max = *opened.iter().max().unwrap();
+    let min = *opened.iter().min().unwrap();
+    let span = max - min;
+    let mask_range = (1u64 << (k + kappa)) + (1 << m);
+    assert!((span as f64) > 0.99 * (mask_range as f64), "span {span} vs mask {mask_range}");
+    assert!(min >= b && ((min - b) as f64) < 0.01 * (mask_range as f64));
+}

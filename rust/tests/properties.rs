@@ -1,0 +1,159 @@
+//! Property-based tests (via `copml::testkit`) of the core algebraic
+//! invariants every protocol layer relies on.
+
+use copml::field::{vecops, Field, MatShape, P25, P26, P31};
+use copml::lcc;
+use copml::poly;
+use copml::quant;
+use copml::shamir;
+use copml::testkit::{forall, Gen};
+
+fn any_field(g: &mut Gen) -> Field {
+    Field::new(*g.choose(&[97u64, 257, P25, P26, P31]))
+}
+
+#[test]
+fn prop_field_ring_axioms() {
+    forall("field ring axioms", 300, |g| {
+        let f = any_field(g);
+        let p = f.modulus();
+        let (a, b, c) = (g.u64_below(p), g.u64_below(p), g.u64_below(p));
+        assert_eq!(f.add(a, b), f.add(b, a));
+        assert_eq!(f.mul(a, b), f.mul(b, a));
+        assert_eq!(f.mul(a, f.add(b, c)), f.add(f.mul(a, b), f.mul(a, c)));
+        assert_eq!(f.add(a, f.neg(a)), 0);
+        if a != 0 {
+            assert_eq!(f.mul(a, f.inv(a)), 1);
+        }
+        assert_eq!(f.sub(f.add(a, b), b), a);
+    });
+}
+
+#[test]
+fn prop_signed_embedding_homomorphic() {
+    forall("signed embedding", 300, |g| {
+        let f = any_field(g);
+        let half = (f.modulus() / 4) as i64;
+        let a = g.u64_below(half as u64) as i64 - half / 2;
+        let b = g.u64_below(half as u64) as i64 - half / 2;
+        assert_eq!(f.to_i64(f.add(f.from_i64(a), f.from_i64(b))), a + b);
+    });
+}
+
+#[test]
+fn prop_shamir_roundtrip_any_subset() {
+    forall("shamir roundtrip", 60, |g| {
+        let f = any_field(g);
+        let n = g.usize_in(3, 12);
+        let t = g.usize_in(1, n - 1);
+        let len = g.usize_in(1, 40);
+        let secret = g.vec_u64(len, f.modulus());
+        let shares = shamir::share(f, &secret, n, t, g.rng());
+        // random subset of size t+1
+        let perm = g.rng().permutation(n);
+        let subset: Vec<usize> = perm[..t + 1].to_vec();
+        let pts: Vec<u64> = subset.iter().map(|&i| (i + 1) as u64).collect();
+        let rec = shamir::Reconstructor::new(f, &pts);
+        let views: Vec<&[u64]> = subset.iter().map(|&i| shares[i].as_slice()).collect();
+        let mut out = vec![0u64; len];
+        rec.reconstruct(f, &views, &mut out);
+        assert_eq!(out, secret);
+    });
+}
+
+#[test]
+fn prop_share_encode_commutes() {
+    // The protocol's core trick (Phase 2): Lagrange-encoding the *shares*
+    // yields shares of the *encoding*.
+    forall("share/encode commute", 40, |g| {
+        let f = Field::new(P26);
+        let n = g.usize_in(4, 9);
+        let t_sh = g.usize_in(1, n - 2);
+        let (k, t_enc) = (g.usize_in(1, 3), g.usize_in(1, 2));
+        let len = g.usize_in(1, 12);
+        let enc = lcc::Encoder::standard(f, k, t_enc, n);
+        // plaintext parts + masks
+        let parts: Vec<Vec<u64>> =
+            (0..k + t_enc).map(|_| g.vec_u64(len, P26)).collect();
+        // share every part
+        let shares_per_part: Vec<Vec<Vec<u64>>> = parts
+            .iter()
+            .map(|part| shamir::share(f, part, n, t_sh, g.rng()))
+            .collect();
+        let target = g.usize_in(0, n - 1);
+        // encode the plaintext
+        let views: Vec<&[u64]> = parts.iter().map(|v| v.as_slice()).collect();
+        let mut direct = vec![0u64; len];
+        enc.encode_one(target, &views, &mut direct);
+        // encode each party's shares, then reconstruct
+        let enc_shares: Vec<Vec<u64>> = (0..n)
+            .map(|i| {
+                let sviews: Vec<&[u64]> =
+                    shares_per_part.iter().map(|sp| sp[i].as_slice()).collect();
+                let mut out = vec![0u64; len];
+                enc.encode_one(target, &sviews, &mut out);
+                out
+            })
+            .collect();
+        let rec = shamir::reconstruct(f, &enc_shares, t_sh);
+        assert_eq!(rec, direct);
+    });
+}
+
+#[test]
+fn prop_lagrange_interpolation_exact() {
+    forall("lagrange interpolation", 80, |g| {
+        let f = any_field(g);
+        let deg = g.usize_in(0, 8);
+        let coeffs = g.vec_u64(deg + 1, f.modulus());
+        let xs: Vec<u64> = (1..=deg as u64 + 1).collect();
+        let ys: Vec<u64> = xs.iter().map(|&x| poly::horner(f, &coeffs, x)).collect();
+        let z = g.u64_below(f.modulus());
+        assert_eq!(poly::interp_eval(f, &xs, &ys, z), poly::horner(f, &coeffs, z));
+    });
+}
+
+#[test]
+fn prop_quantize_dequantize_error_bounded() {
+    forall("quantize error", 200, |g| {
+        let f = Field::new(P26);
+        let scale = g.usize_in(0, 12) as u32;
+        let x = g.f64_in(-4.0, 4.0);
+        let err = (quant::dequantize(f, quant::quantize(f, x, scale), scale) - x).abs();
+        assert!(err <= 0.5 / (1u64 << scale) as f64 + 1e-12, "err {err} scale {scale}");
+    });
+}
+
+#[test]
+fn prop_matvec_linear() {
+    forall("matvec linearity", 60, |g| {
+        let f = any_field(g);
+        let p = f.modulus();
+        let (rows, cols) = (g.usize_in(1, 12), g.usize_in(1, 12));
+        let a = g.vec_u64(rows * cols, p);
+        let u = g.vec_u64(cols, p);
+        let v = g.vec_u64(cols, p);
+        let shape = MatShape::new(rows, cols);
+        let sum: Vec<u64> = u.iter().zip(&v).map(|(&x, &y)| f.add(x, y)).collect();
+        let lhs = vecops::matvec(f, &a, shape, &sum);
+        let au = vecops::matvec(f, &a, shape, &u);
+        let av = vecops::matvec(f, &a, shape, &v);
+        let rhs: Vec<u64> = au.iter().zip(&av).map(|(&x, &y)| f.add(x, y)).collect();
+        assert_eq!(lhs, rhs);
+    });
+}
+
+#[test]
+fn r3_ablation_trains_with_headroom_plan() {
+    // Degree-3 sigmoid end to end (algo mode): needs the headroom prime so
+    // the cubic coefficient survives quantization (quant docs).
+    use copml::coordinator::{algo, CaseParams, CopmlConfig};
+    use copml::data::{Dataset, SynthSpec};
+    let ds = Dataset::synth(SynthSpec::smoke(), 77);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 22, CaseParams::explicit(2, 1), 77);
+    cfg.r = 3; // recovery threshold 7(K+T−1)+1 = 15 ≤ 22
+    cfg.plan = copml::quant::FpPlan::headroom();
+    cfg.iters = 20;
+    let out = algo::train(&cfg, &ds).unwrap();
+    assert!(out.test_accuracy.last().unwrap() > &0.8, "r=3 accuracy");
+}

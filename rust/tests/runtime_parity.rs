@@ -1,0 +1,105 @@
+//! PJRT ↔ native parity: the AOT-compiled JAX/Pallas artifacts must compute
+//! exactly what the pure-rust kernel computes — this is the rust half of
+//! the L1/L2 correctness story (the python half is pytest vs. ref.py).
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message) if
+//! the manifest is missing so `cargo test` stays green pre-AOT.
+
+use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::field::{Field, MatShape};
+use copml::prng::Rng;
+use copml::runtime::native::NativeKernel;
+use copml::runtime::pjrt::PjrtRuntime;
+use copml::runtime::{Engine, GradKernel};
+use std::path::Path;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = PjrtRuntime::default_dir();
+    if !Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(PjrtRuntime::load(&dir).expect("manifest exists but failed to load"))
+}
+
+#[test]
+fn pjrt_matches_native_on_random_inputs() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seed_from_u64(1);
+    for &(p, degree, rows, cols) in
+        &[(copml::field::P26, 1usize, 8usize, 9usize), (copml::field::P26, 1, 64, 21), (copml::field::P26, 3, 200, 21)]
+    {
+        if !rt.supports(p, degree, rows, cols) {
+            eprintln!("SKIP shape p={p} d={degree} r={rows} c={cols}");
+            continue;
+        }
+        let f = Field::new(p);
+        let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(p)).collect();
+        let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(p)).collect();
+        let cq: Vec<u64> = (0..=degree as u64).map(|_| rng.gen_range(p)).collect();
+        let shape = MatShape::new(rows, cols);
+        let native = NativeKernel::new(f).encoded_gradient(&x, shape, &w, &cq);
+        let pjrt = rt.run(p, &x, shape, &w, &cq).expect("pjrt run");
+        assert_eq!(native, pjrt, "p={p} degree={degree} rows={rows} cols={cols}");
+    }
+}
+
+#[test]
+fn pallas_and_jnp_flavours_agree_via_pjrt() {
+    let Some(mut rt) = runtime() else { return };
+    let p = copml::field::P26;
+    let (rows, cols) = (16usize, 9usize);
+    if !rt.supports(p, 1, rows, cols) {
+        return;
+    }
+    let mut rng = Rng::seed_from_u64(2);
+    let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(p)).collect();
+    let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(p)).collect();
+    let cq: Vec<u64> = vec![rng.gen_range(p), rng.gen_range(p)];
+    let shape = MatShape::new(rows, cols);
+    let a = rt.run(p, &x, shape, &w, &cq).unwrap();
+    rt.flavour = "jnp".into();
+    if !rt.supports(p, 1, rows, cols) {
+        return;
+    }
+    let b = rt.run(p, &x, shape, &w, &cq).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn row_bucket_padding_is_exact_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let p = copml::field::P26;
+    // 13 rows → bucket 16: the runtime pads with zero rows internally.
+    let (rows, cols) = (13usize, 9usize);
+    if !rt.supports(p, 1, rows, cols) {
+        return;
+    }
+    let mut rng = Rng::seed_from_u64(3);
+    let f = Field::new(p);
+    let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(p)).collect();
+    let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(p)).collect();
+    let cq: Vec<u64> = vec![rng.gen_range(p), rng.gen_range(p)];
+    let shape = MatShape::new(rows, cols);
+    let native = NativeKernel::new(f).encoded_gradient(&x, shape, &w, &cq);
+    let pjrt = rt.run(p, &x, shape, &w, &cq).unwrap();
+    assert_eq!(native, pjrt);
+}
+
+#[test]
+fn full_protocol_with_pjrt_engine_matches_native() {
+    // The end-to-end story: the threaded protocol with clients computing
+    // through the AOT artifacts produces the same trajectory as with the
+    // native engine (and hence as algo mode).
+    if runtime().is_none() {
+        return;
+    }
+    let ds = Dataset::synth(SynthSpec::tiny(), 55);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 7, CaseParams::explicit(2, 1), 55);
+    cfg.iters = 3;
+    let reference = algo::train(&cfg, &ds).unwrap();
+    cfg.engine = Engine::Pjrt;
+    let out = protocol::train(&cfg, &ds).unwrap();
+    assert_eq!(out.train.w_trace, reference.w_trace);
+}
