@@ -18,7 +18,25 @@ use copml::coordinator::{protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};
 use copml::ml;
 use copml::report::Table;
-use copml::runtime::{pjrt::PjrtRuntime, Engine};
+use copml::runtime::Engine;
+
+/// Use the AOT/PJRT engine when the crate was built with `--features pjrt`
+/// and `make artifacts` has produced a manifest; the pure-rust engine
+/// otherwise.
+#[cfg(feature = "pjrt")]
+fn pick_engine() -> Engine {
+    use copml::runtime::pjrt::PjrtRuntime;
+    if PjrtRuntime::default_dir().join("manifest.json").exists() {
+        Engine::Pjrt
+    } else {
+        Engine::Native
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pick_engine() -> Engine {
+    Engine::Native
+}
 
 fn main() -> Result<(), String> {
     // Twelve hospitals; ~500 patient records with 21 biomarker features.
@@ -57,9 +75,7 @@ fn main() -> Result<(), String> {
     // --- Joint training under COPML --------------------------------------
     let mut cfg = CopmlConfig::for_dataset(&ds, n, CaseParams::case2(n), 2026);
     cfg.iters = 40;
-    // Use the AOT/PJRT engine if `make artifacts` has run.
-    let have_artifacts = PjrtRuntime::default_dir().join("manifest.json").exists();
-    cfg.engine = if have_artifacts { Engine::Pjrt } else { Engine::Native };
+    cfg.engine = pick_engine();
     println!(
         "COPML: K={}, T={} (privacy against any {} colluding hospitals), engine={:?}",
         cfg.k, cfg.t, cfg.t, cfg.engine

@@ -1,31 +1,34 @@
 //! Fig. 3 (a)(b): total training time vs number of clients N for COPML
 //! Case 1 / Case 2 and the [BH08] baseline, on CIFAR-10-like (9019×3073)
 //! and GISETTE-like (6000×5000) shapes — 50 iterations over the 40 Mbps
-//! WAN model with machine-calibrated compute.
+//! WAN model with machine-calibrated compute, in **sequential and
+//! 4-thread-parallel** kernel variants (`field::par`).
 //!
 //! Compute is *measured* (the real encoded-gradient kernel runs at the
 //! exact per-client block shape for every N); communication bytes are
 //! exact and charged through `net::wan` (see `bench::cost_model` docs and
-//! EXPERIMENTS.md §Fig3 for the calibration note).
+//! EXPERIMENTS.md §Fig3 for the calibration note). Results are dumped to
+//! `BENCH_fig3_training_time.json` for the perf trajectory.
 //!
 //! Run: `cargo bench --bench fig3_training_time`
 
 use copml::bench::{time_it, BaselineCost, Calibration, CopmlCost};
 use copml::coordinator::CaseParams;
-use copml::field::{Field, MatShape};
+use copml::field::{Field, MatShape, Parallelism};
 use copml::net::wan::WanModel;
 use copml::prng::Rng;
-use copml::report::Table;
+use copml::report::{Json, Table};
 use copml::runtime::{native::NativeKernel, GradKernel};
 
-/// Measure the real per-client kernel for a (rows, d) block.
-fn measured_kernel_s(f: Field, rows: usize, d: usize) -> f64 {
+/// Measure the real per-client kernel for a (rows, d) block at the given
+/// parallelism.
+fn measured_kernel_s(f: Field, rows: usize, d: usize, par: Parallelism) -> f64 {
     let mut rng = Rng::seed_from_u64(42);
     let p = f.modulus();
     let x: Vec<u64> = (0..rows * d).map(|_| rng.gen_range(p)).collect();
     let w: Vec<u64> = (0..d).map(|_| rng.gen_range(p)).collect();
     let cq = vec![rng.gen_range(p), rng.gen_range(p)];
-    let kernel = NativeKernel::new(f);
+    let kernel = NativeKernel::with_parallelism(f, par);
     let shape = MatShape::new(rows, d);
     let iters = if rows * d > 4_000_000 { 3 } else { 7 };
     time_it("kernel", 1, iters, || {
@@ -34,20 +37,42 @@ fn measured_kernel_s(f: Field, rows: usize, d: usize) -> f64 {
     .median_s
 }
 
-fn run_dataset(label: &str, m: usize, d: usize, f: Field, cal: &Calibration, wan: &WanModel) {
+const PAR_THREADS: usize = 4;
+
+fn run_dataset(
+    label: &str,
+    m: usize,
+    d: usize,
+    f: Field,
+    cal: &Calibration,
+    wan: &WanModel,
+    json_rows: &mut Vec<Json>,
+) {
     let iters = 50usize;
     let mut table = Table::new(
         &format!("Fig 3 — {label} ({m}×{d}), {iters} iterations, total time (s)"),
-        &["N", "COPML Case1", "COPML Case2", "[BH08]", "[BGW88]", "BH08/Case1"],
+        &[
+            "N",
+            "COPML Case1",
+            &format!("Case1 ({PAR_THREADS}t)"),
+            "COPML Case2",
+            "[BH08]",
+            "[BGW88]",
+            "BH08/Case1",
+        ],
     );
     let mut max_speedup: f64 = 0.0;
     for n in [10usize, 20, 30, 40, 50] {
         let mut row = vec![n.to_string()];
         let mut case1_total = 0.0;
-        for case in [CaseParams::case1(n), CaseParams::case2(n)] {
+        let mut obj = vec![
+            ("dataset", Json::str(label)),
+            ("n", Json::num(n as f64)),
+        ];
+        for (ci, case) in [CaseParams::case1(n), CaseParams::case2(n)].into_iter().enumerate() {
             let rows_k = m.div_ceil(case.k);
             // REAL kernel measurement at this exact block shape.
-            let comp_iter = measured_kernel_s(f, rows_k, d);
+            let comp_iter = measured_kernel_s(f, rows_k, d, Parallelism::sequential());
             let mut est = CopmlCost {
                 n,
                 k: case.k,
@@ -60,13 +85,28 @@ fn run_dataset(label: &str, m: usize, d: usize, f: Field, cal: &Calibration, wan
             }
             .estimate(cal, wan);
             est.comp_s = comp_iter * iters as f64;
-            if case1_total == 0.0 {
+            if ci == 0 {
                 case1_total = est.total_s();
+                obj.push(("copml_case1_s", Json::num(est.total_s())));
+                row.push(format!("{:.0}", est.total_s()));
+                // Sequential vs parallel variant of the same operating
+                // point: only the measured compute changes; bytes are
+                // identical (parallelism is intra-client).
+                let comp_par = measured_kernel_s(f, rows_k, d, Parallelism::threads(PAR_THREADS));
+                let mut est_par = est;
+                est_par.comp_s = comp_par * iters as f64;
+                obj.push(("copml_case1_par_s", Json::num(est_par.total_s())));
+                obj.push(("kernel_speedup", Json::num(comp_iter / comp_par.max(1e-12))));
+                row.push(format!("{:.0}", est_par.total_s()));
+            } else {
+                obj.push(("copml_case2_s", Json::num(est.total_s())));
+                row.push(format!("{:.0}", est.total_s()));
             }
-            row.push(format!("{:.0}", est.total_s()));
         }
         for bgw in [false, true] {
             let est = BaselineCost::paper(n, m, d, iters, bgw).estimate(cal, wan);
+            let key = if bgw { "bgw_s" } else { "bh08_s" };
+            obj.push((key, Json::num(est.total_s())));
             row.push(format!("{:.0}", est.total_s()));
         }
         let bh08 = BaselineCost::paper(n, m, d, iters, false).estimate(cal, wan);
@@ -74,6 +114,7 @@ fn run_dataset(label: &str, m: usize, d: usize, f: Field, cal: &Calibration, wan
         max_speedup = max_speedup.max(speedup);
         row.push(format!("{speedup:.1}×"));
         table.row(&row);
+        json_rows.push(Json::obj(obj));
     }
     table.print();
     println!("max speedup vs [BH08]: {max_speedup:.1}× (paper: 8.6× CIFAR-10, 16.4× GISETTE)\n");
@@ -83,8 +124,9 @@ fn main() {
     println!("calibrating primitives on this machine …");
     let cal = Calibration::measure(Field::paper_cifar());
     let wan = WanModel::paper();
-    run_dataset("CIFAR-10-like", 9019, 3073, Field::paper_cifar(), &cal, &wan);
-    run_dataset("GISETTE-like", 6000, 5000, Field::paper_gisette(), &cal, &wan);
+    let mut json_rows: Vec<Json> = Vec::new();
+    run_dataset("CIFAR-10-like", 9019, 3073, Field::paper_cifar(), &cal, &wan, &mut json_rows);
+    run_dataset("GISETTE-like", 6000, 5000, Field::paper_gisette(), &cal, &wan, &mut json_rows);
 
     // Shape assertions (the reproduction claims):
     let bh08_n10 = BaselineCost::paper(10, 9019, 3073, 50, false).estimate(&cal, &wan);
@@ -100,5 +142,14 @@ fn main() {
         bh08_n50.total_s() / copml_n50.total_s() > 8.0,
         "COPML must beat [BH08] by at least the paper's factor at N=50"
     );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fig3_training_time")),
+        ("par_threads", Json::num(PAR_THREADS as f64)),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_fig3_training_time.json", doc.to_string())
+        .expect("writing BENCH_fig3_training_time.json");
+    println!("wrote BENCH_fig3_training_time.json");
     println!("fig3 shape assertions passed");
 }

@@ -1,21 +1,39 @@
 //! Microbenchmarks of every hot primitive — the §Perf foundation:
 //! field ops, Lagrange weighted sums (encode/decode), Shamir sharing, MPC
-//! degree reduction, TruncPr, and the encoded-gradient kernel (native rust
-//! vs AOT/PJRT at paper block shapes).
+//! degree reduction, TruncPr, and the encoded-gradient kernel — including
+//! the **sequential-vs-parallel** comparison of the `field::par` execution
+//! layer (weighted_sum / matvec / matvec_t / fused kernel at 1–8 threads).
+//!
+//! Results are also dumped to `BENCH_micro_primitives.json` so successive
+//! commits accumulate a perf trajectory (see EXPERIMENTS.md §Perf).
 //!
 //! Run: `cargo bench --bench micro_primitives`
 
-use copml::bench::{harness::humanize, time_it};
-use copml::field::{vecops, Field, MatShape, P26};
+use copml::bench::{harness::humanize, time_it, BenchStats};
+use copml::field::{par, vecops, Field, MatShape, Parallelism};
 use copml::lcc::Encoder;
 use copml::prng::Rng;
-use copml::runtime::{native::NativeKernel, pjrt::PjrtRuntime, GradKernel};
+use copml::report::Json;
+use copml::runtime::{native::NativeKernel, GradKernel};
 use copml::shamir;
+
+/// Accumulate one stats row for the JSON dump.
+fn record(rows: &mut Vec<Json>, stats: &BenchStats, threads: usize) {
+    rows.push(Json::obj(vec![
+        ("name", Json::str(&stats.name)),
+        ("threads", Json::num(threads as f64)),
+        ("median_s", Json::num(stats.median_s)),
+        ("min_s", Json::num(stats.min_s)),
+        ("mad_s", Json::num(stats.mad_s)),
+        ("iters", Json::num(stats.iters as f64)),
+    ]));
+}
 
 fn main() {
     let f = Field::paper_cifar();
     let p = f.modulus();
     let mut rng = Rng::seed_from_u64(0xBE7C);
+    let mut json_rows: Vec<Json> = Vec::new();
     println!("{:<44} {:>12} {:>12} {:>12}", "benchmark", "median", "min", "mad");
 
     // --- field reduce/mul throughput -------------------------------------
@@ -28,6 +46,7 @@ fn main() {
         std::hint::black_box(acc);
     });
     println!("{}  [{:.0} M red/s]", stats.report(), 1e-6 * xs.len() as f64 / stats.median_s);
+    record(&mut json_rows, &stats, 1);
 
     // --- dot (the paper's mod-after-inner-product trick) ------------------
     let a: Vec<u64> = (0..3072).map(|_| rng.gen_range(p)).collect();
@@ -36,6 +55,7 @@ fn main() {
         std::hint::black_box(vecops::dot(f, &a, &b));
     });
     println!("{}", stats.report());
+    record(&mut json_rows, &stats, 1);
 
     // --- weighted_sum: Lagrange encode unit -------------------------------
     for (terms, len) in [(17usize, 1 << 16), (33, 1 << 16)] {
@@ -54,6 +74,36 @@ fn main() {
             stats.report(),
             1e-6 * (terms * len) as f64 / stats.median_s
         );
+        record(&mut json_rows, &stats, 1);
+    }
+
+    // --- sequential vs parallel weighted_sum (field::par) -----------------
+    // Large shape (K+T = 17 Lagrange terms × 1M elements) — the regime the
+    // per-client encode of a CIFAR-sized block lives in.
+    {
+        let (terms, len) = (17usize, 1 << 20);
+        let mats: Vec<Vec<u64>> = (0..terms)
+            .map(|_| (0..len).map(|_| rng.gen_range(p)).collect())
+            .collect();
+        let coeffs: Vec<u64> = (0..terms).map(|_| rng.gen_range(p)).collect();
+        let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0u64; len];
+        let mut seq_median = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let pp = Parallelism::threads(threads);
+            let stats =
+                time_it(&format!("par/weighted_sum 17x1M t={threads}"), 1, 7, || {
+                    par::weighted_sum(f, pp, &coeffs, &views, &mut out);
+                    std::hint::black_box(&out);
+                });
+            if threads == 1 {
+                seq_median = stats.median_s;
+                println!("{}", stats.report());
+            } else {
+                println!("{}  [{:.2}x vs seq]", stats.report(), seq_median / stats.median_s);
+            }
+            record(&mut json_rows, &stats, threads);
+        }
     }
 
     // --- end-to-end LCC encode at CIFAR Case-1 block shape ---------------
@@ -67,11 +117,20 @@ fn main() {
             .collect();
         let views: Vec<&[u64]> = parts.iter().map(|m| m.as_slice()).collect();
         let mut out = vec![0u64; len];
-        let stats = time_it("lcc/encode one client, CIFAR Case 1", 1, 5, || {
-            enc.encode_one(7, &views, &mut out);
-            std::hint::black_box(&out);
-        });
-        println!("{}", stats.report());
+        for threads in [1usize, 4] {
+            let pp = Parallelism::threads(threads);
+            let stats = time_it(
+                &format!("lcc/encode one client, CIFAR Case 1, t={threads}"),
+                1,
+                5,
+                || {
+                    enc.encode_one_par(pp, 7, &views, &mut out);
+                    std::hint::black_box(&out);
+                },
+            );
+            println!("{}", stats.report());
+            record(&mut json_rows, &stats, threads);
+        }
     }
 
     // --- Shamir sharing ----------------------------------------------------
@@ -82,33 +141,124 @@ fn main() {
             std::hint::black_box(shamir::share(f, &secret, n, t, &mut r2));
         });
         println!("{}", stats.report());
+        record(&mut json_rows, &stats, 1);
     }
 
-    // --- encoded-gradient kernel: native vs PJRT at paper shapes ----------
+    // --- encoded-gradient kernel: sequential vs parallel at paper shapes --
     let shapes = [(564usize, 3073usize), (1024, 3073), (2048, 3073), (1200, 5000)];
     for (rows, cols) in shapes {
         let ff = if cols > 4096 { Field::paper_gisette() } else { f };
-        let pp = ff.modulus();
-        let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(pp)).collect();
-        let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(pp)).collect();
-        let cq = vec![rng.gen_range(pp), rng.gen_range(pp)];
+        let pp_mod = ff.modulus();
+        let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(pp_mod)).collect();
+        let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(pp_mod)).collect();
+        let cq = vec![rng.gen_range(pp_mod), rng.gen_range(pp_mod)];
         let shape = MatShape::new(rows, cols);
-        let kernel = NativeKernel::new(ff);
-        let stats = time_it(&format!("kernel/native {rows}x{cols}"), 1, 5, || {
-            std::hint::black_box(kernel.encoded_gradient(&x, shape, &w, &cq));
-        });
-        println!(
-            "{}  [{:.0} M cells/s]",
-            stats.report(),
-            1e-6 * (rows * cols) as f64 / stats.median_s
-        );
+        let mut seq_median = 0.0f64;
+        for threads in [1usize, 2, 4] {
+            let kernel = NativeKernel::with_parallelism(ff, Parallelism::threads(threads));
+            let stats = time_it(&format!("kernel/native {rows}x{cols} t={threads}"), 1, 5, || {
+                std::hint::black_box(kernel.encoded_gradient(&x, shape, &w, &cq));
+            });
+            if threads == 1 {
+                seq_median = stats.median_s;
+                println!(
+                    "{}  [{:.0} M cells/s]",
+                    stats.report(),
+                    1e-6 * (rows * cols) as f64 / stats.median_s
+                );
+            } else {
+                println!(
+                    "{}  [{:.0} M cells/s, {:.2}x vs seq]",
+                    stats.report(),
+                    1e-6 * (rows * cols) as f64 / stats.median_s,
+                    seq_median / stats.median_s
+                );
+            }
+            record(&mut json_rows, &stats, threads);
+        }
     }
 
-    // PJRT side (needs `make artifacts`).
+    // --- sequential vs parallel matvec / matvec_t at the full CIFAR shape --
+    {
+        let (rows, cols) = (2048usize, 3073usize);
+        let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(p)).collect();
+        let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(p)).collect();
+        let v: Vec<u64> = (0..rows).map(|_| rng.gen_range(p)).collect();
+        let shape = MatShape::new(rows, cols);
+        let mut seq_mv = 0.0f64;
+        let mut seq_mvt = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let pp = Parallelism::threads(threads);
+            let stats = time_it(&format!("par/matvec {rows}x{cols} t={threads}"), 1, 7, || {
+                std::hint::black_box(par::matvec(f, pp, &x, shape, &w));
+            });
+            if threads == 1 {
+                seq_mv = stats.median_s;
+                println!("{}", stats.report());
+            } else {
+                println!("{}  [{:.2}x vs seq]", stats.report(), seq_mv / stats.median_s);
+            }
+            record(&mut json_rows, &stats, threads);
+
+            let stats = time_it(&format!("par/matvec_t {rows}x{cols} t={threads}"), 1, 7, || {
+                std::hint::black_box(par::matvec_t(f, pp, &x, shape, &v));
+            });
+            if threads == 1 {
+                seq_mvt = stats.median_s;
+                println!("{}", stats.report());
+            } else {
+                println!("{}  [{:.2}x vs seq]", stats.report(), seq_mvt / stats.median_s);
+            }
+            record(&mut json_rows, &stats, threads);
+        }
+    }
+
+    // PJRT side (needs `make artifacts` and `--features pjrt`).
+    bench_pjrt(&shapes, p, &mut rng);
+
+    // --- TruncPr + degree reduction over the threaded fabric -------------
+    {
+        use copml::coordinator::baseline::{train, BaselineConfig, MpcFlavor};
+        use copml::data::{Dataset, SynthSpec};
+        let ds = Dataset::synth(SynthSpec::tiny(), 1);
+        let cfg = BaselineConfig {
+            n: 7,
+            t: 2,
+            plan: copml::quant::FpPlan::paper_cifar(),
+            iters: 3,
+            eta: 2.0,
+            seed: 1,
+            fit_range: 4.0,
+            flavor: MpcFlavor::Bh08,
+            parallelism: Parallelism::sequential(),
+        };
+        let stats = time_it("mpc/baseline-bh08 tiny 3 iters (7 threads)", 1, 5, || {
+            std::hint::black_box(train(&cfg, &ds).unwrap());
+        });
+        println!("{}", stats.report());
+        record(&mut json_rows, &stats, 1);
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("micro_primitives")),
+        ("p", Json::num(p as f64)),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_micro_primitives.json", doc.to_string())
+        .expect("writing BENCH_micro_primitives.json");
+    println!("\nwrote BENCH_micro_primitives.json");
+    println!("(reduce throughput target ≥ 300 M/s, weighted_sum ≥ 150 M muladd/s, parallel \
+              weighted_sum/matvec ≥ 2x at 4 threads on large shapes — see EXPERIMENTS.md §Perf)");
+    let _ = humanize(0.0);
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(shapes: &[(usize, usize)], p: u64, rng: &mut Rng) {
+    use copml::runtime::pjrt::PjrtRuntime;
     match PjrtRuntime::load(&PjrtRuntime::default_dir()) {
         Err(e) => println!("kernel/pjrt: SKIPPED ({e})"),
         Ok(rt) => {
-            for (rows, cols) in shapes {
+            for &(rows, cols) in shapes {
                 let pp = if cols > 4096 { Field::paper_gisette().modulus() } else { p };
                 if !rt.supports(pp, 1, rows, cols) {
                     println!("kernel/pjrt {rows}x{cols}: no artifact");
@@ -125,28 +275,9 @@ fn main() {
             }
         }
     }
+}
 
-    // --- TruncPr + degree reduction over the threaded fabric -------------
-    {
-        use copml::coordinator::baseline::{train, BaselineConfig, MpcFlavor};
-        use copml::data::{Dataset, SynthSpec};
-        let ds = Dataset::synth(SynthSpec::tiny(), 1);
-        let cfg = BaselineConfig {
-            n: 7,
-            t: 2,
-            plan: copml::quant::FpPlan::paper_cifar(),
-            iters: 3,
-            eta: 2.0,
-            seed: 1,
-            fit_range: 4.0,
-            flavor: MpcFlavor::Bh08,
-        };
-        let stats = time_it("mpc/baseline-bh08 tiny 3 iters (7 threads)", 1, 5, || {
-            std::hint::black_box(train(&cfg, &ds).unwrap());
-        });
-        println!("{}", stats.report());
-    }
-
-    println!("\n(reduce throughput target ≥ 300 M/s, weighted_sum ≥ 150 M muladd/s — see EXPERIMENTS.md §Perf)");
-    let _ = humanize(0.0);
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt(_shapes: &[(usize, usize)], _p: u64, _rng: &mut Rng) {
+    println!("kernel/pjrt: SKIPPED (built without the `pjrt` feature)");
 }

@@ -20,7 +20,7 @@
 
 use super::{CopmlConfig, QuantizedTask, TrainOutput};
 use crate::data::Dataset;
-use crate::field::{vecops, MatShape};
+use crate::field::{par, vecops, MatShape};
 use crate::mpc::dealer::{Dealer, DealerValues, Demand};
 
 /// Offline-randomness demand of one COPML run (shared with the threaded
@@ -101,7 +101,8 @@ pub fn train_task(
 
     // One-time: Xᵀy, aligned to the gradient scale 2^{l_c+l_x+l_w} above
     // its own l_x (paper Phase 2 end; scaling is a public-constant mult).
-    let mut xty = vecops::matvec_t(f, &task.x_q, shape, &task.y_q);
+    let pp = cfg.parallelism;
+    let mut xty = par::matvec_t(f, pp, &task.x_q, shape, &task.y_q);
     let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
     vecops::scale_assign(f, &mut xty, align);
 
@@ -110,12 +111,12 @@ pub fn train_task(
 
     for _iter in 0..cfg.iters {
         // z = X·w  (scale l_x + l_w)
-        let mut z = vecops::matvec(f, &task.x_q, shape, &w);
+        let mut z = par::matvec(f, pp, &task.x_q, shape, &w);
         // ĝ(z)  (scale l_c + l_x + l_w)
-        vecops::poly_eval_assign(f, &task.coeffs_q, &mut z);
+        par::poly_eval_assign(f, pp, &task.coeffs_q, &mut z);
         // Xᵀ ĝ  (scale 2l_x + l_w + l_c) — in the protocol this is the
         // Lagrange-decoded aggregate of the clients' Eq. (7) results.
-        let mut grad = vecops::matvec_t(f, &task.x_q, shape, &z);
+        let mut grad = par::matvec_t(f, pp, &task.x_q, shape, &z);
         // − Xᵀy (aligned)
         vecops::sub_assign(f, &mut grad, &xty);
         // Stage-1 truncation → scale l_x + l_w.
@@ -191,6 +192,27 @@ mod tests {
         cfg.k = 4;
         let b = train(&cfg, &ds).unwrap();
         assert_eq!(a.w_trace, b.w_trace);
+    }
+
+    #[test]
+    fn parallelism_does_not_change_trajectory() {
+        // The parallel field layer must be bit-identical to the sequential
+        // one (mod-p partial combination is exact) — the whole point of
+        // threading Parallelism through the trainers without touching the
+        // protocol-equivalence story.
+        use crate::field::Parallelism;
+        // Large enough that the matvec/matvec_t work exceeds the fan-out
+        // threshold (m·d ≈ 42k cells > 2·MIN_PAR_WORK) — actually threads.
+        let spec = SynthSpec { m_train: 2000, m_test: 100, ..SynthSpec::smoke() };
+        let ds = Dataset::synth(spec, 16);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 16);
+        cfg.iters = 10;
+        let seq = train(&cfg, &ds).unwrap();
+        for threads in [2usize, 4] {
+            cfg.parallelism = Parallelism::threads(threads);
+            let par = train(&cfg, &ds).unwrap();
+            assert_eq!(seq.w_trace, par.w_trace, "threads={threads}");
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Conventional-MPC baselines (paper §V.A.2, Appendix C/D): secure
 //! logistic regression where **every multiplication pays a degree
 //! reduction**, in the two flavours the paper benchmarks —
-//! [BGW88] (online resharing, quadratic communication) and [BH08]
+//! \[BGW88\] (online resharing, quadratic communication) and \[BH08\]
 //! (offline double sharings + king, linear communication).
 //!
 //! This is the *naive* single-committee baseline of Appendix D: the whole
@@ -24,7 +24,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::Dataset;
-use crate::field::{vecops, MatShape};
+use crate::field::{par, MatShape, Parallelism};
 use crate::mpc::dealer::{Dealer, Demand};
 use crate::mpc::Party;
 use crate::net::local::Hub;
@@ -74,6 +74,9 @@ pub struct BaselineConfig {
     pub seed: u64,
     pub fit_range: f64,
     pub flavor: MpcFlavor,
+    /// Intra-client thread pool for the share-matvec hot path (same
+    /// semantics as [`CopmlConfig::parallelism`]).
+    pub parallelism: Parallelism,
 }
 
 impl BaselineConfig {
@@ -88,6 +91,7 @@ impl BaselineConfig {
             seed: cfg.seed,
             fit_range: cfg.fit_range,
             flavor,
+            parallelism: cfg.parallelism,
         }
     }
 
@@ -104,6 +108,7 @@ impl BaselineConfig {
             engine: crate::runtime::Engine::Native,
             fit_range: self.fit_range,
             subgroups: false,
+            parallelism: self.parallelism,
         }
     }
 }
@@ -227,7 +232,7 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
 
     for _it in 0..cfg.iters {
         // z = X·w — local share products, degree 2T.
-        let z2t = vecops::matvec(f, &x_share, shape, &w_share);
+        let z2t = par::matvec(f, cfg.parallelism, &x_share, shape, &w_share);
         tick!(1);
         // degree reduction of the m-vector (the step COPML avoids).
         let mut z = if bgw {
@@ -241,7 +246,7 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
         party.add_const(&mut z, c0q);
         party.sub(&mut z, &y_aligned);
         // grad = Xᵀ·res — local products, degree 2T.
-        let g2t = vecops::matvec_t(f, &x_share, shape, &z);
+        let g2t = par::matvec_t(f, cfg.parallelism, &x_share, shape, &z);
         tick!(1);
         let grad = if bgw {
             party.degree_reduce_bgw(&g2t)
@@ -314,6 +319,7 @@ mod tests {
             seed: 32,
             fit_range: 4.0,
             flavor: MpcFlavor::Bgw,
+            parallelism: Parallelism::sequential(),
         };
         let bgw = train(&base, &ds).unwrap();
         let bh = train(&BaselineConfig { flavor: MpcFlavor::Bh08, ..base }, &ds).unwrap();

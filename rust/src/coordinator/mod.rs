@@ -15,7 +15,7 @@
 //!   [`crate::runtime`] (native or PJRT engine), decoding and updating the
 //!   model inside MPC. Every byte that the paper's clients would exchange
 //!   crosses a channel here.
-//! * [`baseline`] — the conventional-MPC baselines ([BGW88] and [BH08])
+//! * [`baseline`] — the conventional-MPC baselines (\[BGW88\] and \[BH08\])
 //!   applied to the same task (Appendix C/D), for the Fig. 3 / Table I
 //!   comparisons.
 
@@ -24,10 +24,10 @@ pub mod baseline;
 pub mod protocol;
 
 use crate::data::Dataset;
-use crate::field::Field;
+use crate::field::{Field, Parallelism};
 use crate::lcc;
+use crate::ml::fit_sigmoid;
 use crate::ml::sigmoid::SigmoidPoly;
-use crate::ml::{fit_sigmoid};
 use crate::quant::{self, FpPlan};
 use crate::runtime::Engine;
 
@@ -82,6 +82,10 @@ pub struct CopmlConfig {
     pub fit_range: f64,
     /// Use the footnote-4 subgroup optimization for encoding exchanges.
     pub subgroups: bool,
+    /// Intra-client thread pool for the field hot paths (Lagrange
+    /// encode/decode, the encoded-gradient kernel, the central recursion).
+    /// Bit-identical results for every setting (`field::par` docs).
+    pub parallelism: Parallelism,
 }
 
 impl CopmlConfig {
@@ -101,6 +105,7 @@ impl CopmlConfig {
             engine: Engine::Native,
             fit_range: 4.0,
             subgroups: true,
+            parallelism: Parallelism::sequential(),
         }
     }
 

@@ -10,7 +10,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::Dataset;
-use crate::field::{vecops, MatShape};
+use crate::field::{par, MatShape};
 use crate::lcc;
 use crate::mpc::dealer::Dealer;
 use crate::mpc::Party;
@@ -93,7 +93,7 @@ struct ClientCtx {
 struct ClientResult {
     id: usize,
     w_final: Vec<u64>,
-    /// Per-iteration share snapshot of [w] (for god-mode trace recovery).
+    /// Per-iteration share snapshot of `[w]` (for god-mode trace recovery).
     w_share_snapshots: Vec<Vec<u64>>,
     ledger: ClientLedger,
 }
@@ -109,20 +109,46 @@ pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOutput, String> 
     let pools = Dealer::deal(f, n, t, &demand, cfg.plan.k2, cfg.plan.kappa, cfg.seed);
     let endpoints = Hub::new(n);
 
-    // PJRT lives on its own thread; clients get Send handles.
-    let _server;
+    // PJRT lives on its own thread; clients get Send handles. The server
+    // (when used) must outlive the client threads, hence the Option slot.
+    #[allow(unused_mut)]
+    let mut _server: Option<KernelServer> = None;
+    let kernel_par = cfg.parallelism;
     let mk_kernel: Box<dyn Fn() -> Box<dyn GradKernel>> = match cfg.engine {
-        Engine::Native => Box::new(move || Box::new(NativeKernel::new(f))),
+        Engine::Native => {
+            Box::new(move || Box::new(NativeKernel::with_parallelism(f, kernel_par)))
+        }
+        #[cfg(feature = "pjrt")]
         Engine::Pjrt => {
+            use crate::runtime::pjrt::PjrtRuntime;
+            // Preflight the artifact load on a scratch thread (PjrtRuntime
+            // is not Send, so it cannot be loaded here and moved into the
+            // server). A load failure — missing artifacts, or the vendor
+            // xla stub — surfaces as a clean Err instead of a panic
+            // cascading across all N client threads.
+            let dir = PjrtRuntime::default_dir();
+            let probe_dir = dir.clone();
+            std::thread::spawn(move || {
+                PjrtRuntime::load(&probe_dir).map(|_| ()).map_err(|e| e.to_string())
+            })
+            .join()
+            .map_err(|_| "PJRT preflight thread panicked".to_string())?
+            .map_err(|e| format!("loading AOT artifacts (run `make artifacts`): {e}"))?;
             let server = KernelServer::spawn(move || {
-                crate::runtime::pjrt::PjrtRuntime::load(
-                    &crate::runtime::pjrt::PjrtRuntime::default_dir(),
-                )
-                .expect("loading AOT artifacts (run `make artifacts`)")
+                PjrtRuntime::load(&dir)
+                    .expect("AOT artifacts loaded in preflight but failed in the kernel server")
             });
             let handle = server.handle();
-            _server = server;
+            _server = Some(server);
             Box::new(move || Box::new(handle.clone()))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        Engine::Pjrt => {
+            return Err(
+                "engine 'pjrt' requires building with `--features pjrt` \
+                 (this binary was built with the native engine only)"
+                    .into(),
+            )
         }
     };
 
@@ -234,8 +260,9 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientResult {
     timer.tick(&mut ledger, 0, party);
 
     // ---- Phase: [Xᵀy], aligned (Algorithm 1, line 10) -------------------
+    let pp = cfg.parallelism;
     let shape_full = MatShape::new(rows, d);
-    let local = vecops::matvec_t(f, &x_share, shape_full, &y_share); // deg 2T
+    let local = par::matvec_t(f, pp, &x_share, shape_full, &y_share); // deg 2T
     let mut xty = party.degree_reduce_bh08(&local); // deg T
     let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
     party.scale(&mut xty, align);
@@ -253,7 +280,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientResult {
     let mut own_enc_share: Option<Vec<u64>> = None;
     for &i in &targets {
         let mut buf = vec![0u64; rows_k * d];
-        enc.encode_one(i, &all_parts, &mut buf);
+        enc.encode_one_par(pp, i, &all_parts, &mut buf);
         if i == me {
             own_enc_share = Some(buf);
         } else {
@@ -360,7 +387,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientResult {
         // ---- decode + model update (Eq. 10–11; lines 18–23) -------------
         let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
         let mut grad = vec![0u64; d];
-        decoder.decode_sum(&views, &mut grad);
+        decoder.decode_sum_par(pp, &views, &mut grad);
         party.sub(&mut grad, &xty);
         let mut g1 = party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, true);
         party.scale(&mut g1, task.eta_q);

@@ -16,9 +16,11 @@
 //! Reduction is Barrett (`μ = ⌊2^64/p⌋`): a runtime-`p` `%` compiles to a
 //! hardware divide (~25 cycles); Barrett is two multiplies and a correction.
 
+pub mod par;
 mod primes;
 pub mod vecops;
 
+pub use par::Parallelism;
 pub use primes::{is_prime_u64, prev_prime, P25, P26, P31};
 pub use vecops::MatShape;
 

@@ -1,0 +1,341 @@
+//! Scoped-thread execution layer for the `F_p` hot paths — COPML's
+//! *parallel* half of the scalability claim.
+//!
+//! The paper's pitch over conventional MPC is that the per-client load
+//! shrinks with `K` **and** that each client's remaining work is dense
+//! linear algebra that parallelizes trivially. This module row/column-blocks
+//! the three dominant kernels — [`weighted_sum`] (Lagrange encode/decode),
+//! [`matvec`] and [`matvec_t`] (the native encoded-gradient path) — across
+//! a [`Parallelism`]-sized scoped thread pool (`std::thread::scope`; the
+//! offline image has no `rayon`).
+//!
+//! **Exactness.** Every worker runs the *same* sequential kernel from
+//! [`super::vecops`] on its block, so the Appendix-A accumulation-budget
+//! discipline (one Barrett reduction per [`super::Field::accum_budget`]
+//! accumulated products) holds per block; partial outputs are combined with
+//! exact mod-`p` addition, which is associative and commutative. Results
+//! are therefore **bit-identical** to the sequential kernels for every
+//! thread count — asserted by the tests below and by
+//! `coordinator::algo::tests::parallelism_does_not_change_trajectory`.
+
+use super::{vecops, Field, MatShape};
+
+/// Minimum number of output elements (or matrix cells) a worker must have
+/// before spawning a thread is worth the ~10 µs overhead.
+pub const MIN_PAR_WORK: usize = 1 << 13;
+
+/// Degree of intra-client parallelism for the field hot paths.
+///
+/// Threaded from [`crate::coordinator::CopmlConfig`] through the trainers
+/// so per-client Lagrange encode/decode and the encoded-gradient kernel
+/// fan out across cores. The default is sequential: the full-fidelity
+/// protocol already runs `N` client threads, and tests stay deterministic
+/// in thread count (results are identical either way — see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// Single-threaded execution (the default).
+    pub fn sequential() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// Use up to `n` worker threads (clamped to ≥ 1).
+    pub fn threads(n: usize) -> Parallelism {
+        Parallelism { threads: n.max(1) }
+    }
+
+    /// Use every available core (`std::thread::available_parallelism`).
+    pub fn auto() -> Parallelism {
+        Parallelism::threads(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
+
+    /// Configured thread cap.
+    pub fn thread_count(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_sequential(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Worker count for a workload of `work` units with a caller-chosen
+    /// minimum chunk: never more threads than keeps each worker above
+    /// `min_chunk` units. Shared by this module and the fused kernel in
+    /// `runtime::native` so the fan-out policy has one implementation.
+    pub(crate) fn workers_for(&self, work: usize, min_chunk: usize) -> usize {
+        if self.threads <= 1 || work < 2 * min_chunk {
+            1
+        } else {
+            self.threads.min(work / min_chunk).max(1)
+        }
+    }
+
+    /// Worker count for a workload of `work` elements: never more threads
+    /// than keeps each worker above [`MIN_PAR_WORK`] elements.
+    fn workers(&self, work: usize) -> usize {
+        self.workers_for(work, MIN_PAR_WORK)
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Parallelism {
+        Parallelism::sequential()
+    }
+}
+
+/// Parallel `out ← Σ_k coeffs[k] · mats[k] (mod p)`: the output (and every
+/// input matrix) is split into contiguous element blocks, one sequential
+/// [`vecops::weighted_sum`] per worker. Bit-identical to the sequential
+/// call.
+pub fn weighted_sum(f: Field, par: Parallelism, coeffs: &[u64], mats: &[&[u64]], out: &mut [u64]) {
+    let workers = par.workers(out.len());
+    if workers <= 1 {
+        vecops::weighted_sum(f, coeffs, mats, out);
+        return;
+    }
+    assert_eq!(coeffs.len(), mats.len());
+    for m in mats {
+        assert_eq!(m.len(), out.len(), "matrix size mismatch in weighted_sum");
+    }
+    let chunk = out.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ci, out_b) in out.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            let hi = lo + out_b.len();
+            s.spawn(move || {
+                let sub: Vec<&[u64]> = mats.iter().map(|m| &m[lo..hi]).collect();
+                vecops::weighted_sum(f, coeffs, &sub, out_b);
+            });
+        }
+    });
+}
+
+/// Parallel `y = A·x`: rows are split into contiguous blocks, one
+/// sequential [`vecops::matvec`] per worker writing its own slice of `y`.
+pub fn matvec(f: Field, par: Parallelism, a: &[u64], shape: MatShape, x: &[u64]) -> Vec<u64> {
+    assert_eq!(a.len(), shape.len());
+    assert_eq!(x.len(), shape.cols);
+    let workers = par.workers(shape.len());
+    if workers <= 1 || shape.rows == 0 || shape.cols == 0 {
+        return vecops::matvec(f, a, shape, x);
+    }
+    let rows_chunk = shape.rows.div_ceil(workers);
+    let mut y = vec![0u64; shape.rows];
+    std::thread::scope(|s| {
+        for (y_b, a_b) in y.chunks_mut(rows_chunk).zip(a.chunks(rows_chunk * shape.cols)) {
+            s.spawn(move || {
+                let block = vecops::matvec(f, a_b, MatShape::new(y_b.len(), shape.cols), x);
+                y_b.copy_from_slice(&block);
+            });
+        }
+    });
+    y
+}
+
+/// Row-blocked map-reduce over a row-major `(rows × cols)` matrix: split
+/// into contiguous row blocks (one per worker), run `block` on each —
+/// `block(row_block, first_row)` must return a fully reduced
+/// `cols`-vector — and combine the partials with exact mod-`p` addition.
+/// The single implementation of the scatter/gather scaffolding shared by
+/// [`matvec_t`] and the fused kernel in `runtime::native`.
+///
+/// Caller guarantees `workers ≥ 2`, `cols > 0`, `a.len() == rows·cols`.
+pub(crate) fn row_block_reduce<F>(
+    f: Field,
+    a: &[u64],
+    rows: usize,
+    cols: usize,
+    workers: usize,
+    block: F,
+) -> Vec<u64>
+where
+    F: Fn(&[u64], usize) -> Vec<u64> + Sync,
+{
+    debug_assert!(workers >= 2 && cols > 0 && a.len() == rows * cols);
+    let rows_chunk = rows.div_ceil(workers);
+    let partials: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = a
+            .chunks(rows_chunk * cols)
+            .enumerate()
+            .map(|(ci, a_b)| {
+                let block = &block;
+                s.spawn(move || block(a_b, ci * rows_chunk))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("row-block worker panicked")).collect()
+    });
+    let mut y = vec![0u64; cols];
+    for p_b in &partials {
+        vecops::add_assign(f, &mut y, p_b);
+    }
+    y
+}
+
+/// Parallel `y = Aᵀ·v`: rows are split into blocks; each worker runs the
+/// sequential [`vecops::matvec_t`] over its block (budget discipline
+/// intact), producing a reduced partial `d`-vector; partials are combined
+/// with exact mod-`p` addition.
+pub fn matvec_t(f: Field, par: Parallelism, a: &[u64], shape: MatShape, v: &[u64]) -> Vec<u64> {
+    assert_eq!(a.len(), shape.len());
+    assert_eq!(v.len(), shape.rows);
+    let workers = par.workers(shape.len());
+    if workers <= 1 || shape.rows == 0 || shape.cols == 0 {
+        return vecops::matvec_t(f, a, shape, v);
+    }
+    row_block_reduce(f, a, shape.rows, shape.cols, workers, |a_b, r0| {
+        let rows_b = a_b.len() / shape.cols;
+        vecops::matvec_t(f, a_b, MatShape::new(rows_b, shape.cols), &v[r0..r0 + rows_b])
+    })
+}
+
+/// Parallel element-wise polynomial evaluation (the sigmoid `ĝ` applied to
+/// `z = X·w`): embarrassingly parallel over elements.
+pub fn poly_eval_assign(f: Field, par: Parallelism, coeffs: &[u64], z: &mut [u64]) {
+    let workers = par.workers(z.len());
+    if workers <= 1 {
+        vecops::poly_eval_assign(f, coeffs, z);
+        return;
+    }
+    let chunk = z.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        for z_b in z.chunks_mut(chunk) {
+            s.spawn(move || vecops::poly_eval_assign(f, coeffs, z_b));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{P26, P31};
+    use crate::prng::Rng;
+
+    fn rand_vec(r: &mut Rng, p: u64, n: usize) -> Vec<u64> {
+        (0..n).map(|_| r.gen_range(p)).collect()
+    }
+
+    #[test]
+    fn parallelism_constructors() {
+        assert_eq!(Parallelism::sequential().thread_count(), 1);
+        assert!(Parallelism::sequential().is_sequential());
+        assert_eq!(Parallelism::threads(0).thread_count(), 1);
+        assert_eq!(Parallelism::threads(6).thread_count(), 6);
+        assert!(Parallelism::auto().thread_count() >= 1);
+        assert_eq!(Parallelism::default(), Parallelism::sequential());
+    }
+
+    #[test]
+    fn small_workloads_stay_sequential() {
+        let par = Parallelism::threads(8);
+        assert_eq!(par.workers(100), 1);
+        assert_eq!(par.workers(2 * MIN_PAR_WORK - 1), 1);
+        assert!(par.workers(16 * MIN_PAR_WORK) > 1);
+    }
+
+    #[test]
+    fn weighted_sum_bit_identical_across_thread_counts() {
+        // Sizes straddle the chunking boundaries; P31 forces mid-sum
+        // reductions (accum budget 4).
+        for p in [P26, P31] {
+            let f = Field::new(p);
+            let mut r = Rng::seed_from_u64(1);
+            for n in [1usize, 1000, 2 * MIN_PAR_WORK, 2 * MIN_PAR_WORK + 17, 100_000] {
+                let k = 9;
+                let mats: Vec<Vec<u64>> = (0..k).map(|_| rand_vec(&mut r, p, n)).collect();
+                let coeffs = rand_vec(&mut r, p, k);
+                let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+                let mut seq = vec![0u64; n];
+                vecops::weighted_sum(f, &coeffs, &views, &mut seq);
+                for threads in [1usize, 2, 3, 4, 7] {
+                    let mut out = vec![0u64; n];
+                    weighted_sum(f, Parallelism::threads(threads), &coeffs, &views, &mut out);
+                    assert_eq!(out, seq, "p={p} n={n} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_bit_identical_across_thread_counts() {
+        for p in [P26, P31] {
+            let f = Field::new(p);
+            let mut r = Rng::seed_from_u64(2);
+            for (rows, cols) in [(1usize, 64usize), (300, 77), (1024, 64), (57, 1)] {
+                let a = rand_vec(&mut r, p, rows * cols);
+                let x = rand_vec(&mut r, p, cols);
+                let shape = MatShape::new(rows, cols);
+                let seq = vecops::matvec(f, &a, shape, &x);
+                for threads in [2usize, 4, 5] {
+                    let got = matvec(f, Parallelism::threads(threads), &a, shape, &x);
+                    assert_eq!(got, seq, "p={p} {rows}x{cols} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_t_bit_identical_across_thread_counts() {
+        for p in [P26, P31] {
+            let f = Field::new(p);
+            let mut r = Rng::seed_from_u64(3);
+            for (rows, cols) in [(1usize, 64usize), (300, 77), (1024, 64), (2048, 9)] {
+                let a = rand_vec(&mut r, p, rows * cols);
+                let v = rand_vec(&mut r, p, rows);
+                let shape = MatShape::new(rows, cols);
+                let seq = vecops::matvec_t(f, &a, shape, &v);
+                for threads in [2usize, 4, 5] {
+                    let got = matvec_t(f, Parallelism::threads(threads), &a, shape, &v);
+                    assert_eq!(got, seq, "p={p} {rows}x{cols} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_t_worst_case_elements_parallel() {
+        // All entries p−1 at a budget-4 prime: maximal accumulation
+        // pressure per block, with partial recombination on top.
+        let f = Field::new(P31);
+        let (rows, cols) = (4096usize, 8usize);
+        let a = vec![P31 - 1; rows * cols];
+        let v = vec![P31 - 1; rows];
+        let shape = MatShape::new(rows, cols);
+        assert_eq!(
+            matvec_t(f, Parallelism::threads(4), &a, shape, &v),
+            vecops::matvec_t(f, &a, shape, &v)
+        );
+    }
+
+    #[test]
+    fn poly_eval_bit_identical() {
+        let f = Field::new(P26);
+        let mut r = Rng::seed_from_u64(4);
+        let coeffs = rand_vec(&mut r, P26, 4);
+        let z0 = rand_vec(&mut r, P26, 3 * MIN_PAR_WORK + 5);
+        let mut seq = z0.clone();
+        vecops::poly_eval_assign(f, &coeffs, &mut seq);
+        for threads in [2usize, 4] {
+            let mut z = z0.clone();
+            poly_eval_assign(f, Parallelism::threads(threads), &coeffs, &mut z);
+            assert_eq!(z, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let f = Field::new(P26);
+        let par = Parallelism::threads(4);
+        let mut out: Vec<u64> = Vec::new();
+        weighted_sum(f, par, &[], &[], &mut out);
+        assert!(out.is_empty());
+        let y = matvec(f, par, &[], MatShape::new(0, 5), &[1, 2, 3, 4, 5]);
+        assert!(y.is_empty());
+        let yt = matvec_t(f, par, &[], MatShape::new(0, 3), &[]);
+        assert_eq!(yt, vec![0, 0, 0]);
+    }
+}

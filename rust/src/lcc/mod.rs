@@ -17,7 +17,7 @@
 //! data (Phase 2) — see `tests/protocol_equivalence.rs` for the
 //! share/encode commutation test.
 
-use crate::field::{vecops, Field};
+use crate::field::{par, vecops, Field, Parallelism};
 use crate::poly;
 use crate::prng::Rng;
 
@@ -74,6 +74,13 @@ impl Encoder {
     pub fn encode_one(&self, j: usize, parts: &[&[u64]], out: &mut [u64]) {
         assert_eq!(parts.len(), self.k + self.t);
         vecops::weighted_sum(self.field, &self.coeffs[j], parts, out);
+    }
+
+    /// [`Encoder::encode_one`] with the weighted sum element-blocked across
+    /// `par` worker threads (bit-identical output).
+    pub fn encode_one_par(&self, pp: Parallelism, j: usize, parts: &[&[u64]], out: &mut [u64]) {
+        assert_eq!(parts.len(), self.k + self.t);
+        par::weighted_sum(self.field, pp, &self.coeffs[j], parts, out);
     }
 
     /// Encode for every client. Returns `N` encoded matrices.
@@ -140,11 +147,9 @@ impl Decoder {
         vecops::weighted_sum(self.field, &self.coeffs[k], results, out);
     }
 
-    /// Decode and **aggregate** all `K` partitions:
-    /// `Σ_k f(X_k, w) = Xᵀ ĝ(X·w)` (Eq. 11). One pass: the aggregate
-    /// weights are `Σ_k coeffs[k][j]`, so this is a single weighted sum.
-    pub fn decode_sum(&self, results: &[&[u64]], out: &mut [u64]) {
-        let n = results.len();
+    /// Aggregate decode weights `Σ_k coeffs[k][j]` (Eq. 11 collapsed into
+    /// one weighted sum).
+    fn sum_coeffs(&self, n: usize) -> Vec<u64> {
         let f = self.field;
         let mut agg = vec![0u64; n];
         for row in &self.coeffs {
@@ -153,7 +158,22 @@ impl Decoder {
                 *a = f.add(*a, c);
             }
         }
-        vecops::weighted_sum(f, &agg, results, out);
+        agg
+    }
+
+    /// Decode and **aggregate** all `K` partitions:
+    /// `Σ_k f(X_k, w) = Xᵀ ĝ(X·w)` (Eq. 11). One pass: the aggregate
+    /// weights are `Σ_k coeffs[k][j]`, so this is a single weighted sum.
+    pub fn decode_sum(&self, results: &[&[u64]], out: &mut [u64]) {
+        let agg = self.sum_coeffs(results.len());
+        vecops::weighted_sum(self.field, &agg, results, out);
+    }
+
+    /// [`Decoder::decode_sum`] with the weighted sum element-blocked across
+    /// `par` worker threads (bit-identical output).
+    pub fn decode_sum_par(&self, pp: Parallelism, results: &[&[u64]], out: &mut [u64]) {
+        let agg = self.sum_coeffs(results.len());
+        par::weighted_sum(self.field, pp, &agg, results, out);
     }
 }
 
@@ -306,6 +326,39 @@ mod tests {
             vecops::add_assign(f, &mut expect, &eval(&xparts[kk], &w));
         }
         assert_eq!(agg, expect);
+    }
+
+    #[test]
+    fn par_encode_decode_bit_identical() {
+        let f = Field::new(P26);
+        let (k, t, n) = (4usize, 2usize, 11usize);
+        let enc = Encoder::standard(f, k, t, n);
+        let mut rng = Rng::seed_from_u64(9);
+        let len = 40_000; // above the fan-out threshold
+        let parts_data: Vec<Vec<u64>> = (0..k)
+            .map(|_| (0..len).map(|_| rng.gen_range(P26)).collect())
+            .collect();
+        let masks = enc.gen_masks(len, &mut rng);
+        let parts: Vec<&[u64]> =
+            parts_data.iter().chain(masks.iter()).map(|v| v.as_slice()).collect();
+        let mut seq = vec![0u64; len];
+        enc.encode_one(3, &parts, &mut seq);
+        let mut par_out = vec![0u64; len];
+        enc.encode_one_par(Parallelism::threads(4), 3, &parts, &mut par_out);
+        assert_eq!(par_out, seq);
+
+        let (betas, alphas) = poly::standard_points(k + t, n);
+        let need = 2 * (k + t - 1) + 1;
+        let dec = Decoder::new(f, k, t, 2, &alphas[..need], &betas);
+        let results: Vec<Vec<u64>> = (0..need)
+            .map(|_| (0..len).map(|_| rng.gen_range(P26)).collect())
+            .collect();
+        let views: Vec<&[u64]> = results.iter().map(|v| v.as_slice()).collect();
+        let mut a = vec![0u64; len];
+        dec.decode_sum(&views, &mut a);
+        let mut b = vec![0u64; len];
+        dec.decode_sum_par(Parallelism::threads(4), &views, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

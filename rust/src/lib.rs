@@ -15,10 +15,12 @@
 //! * secure MPC decoding, truncation and model update ([`mpc`]),
 //!
 //! orchestrated by the rust coordinator in [`coordinator`]. The per-client
-//! encoded-gradient hot path `f(X̃, w̃) = X̃ᵀ ĝ(X̃·w̃)` is authored in
-//! JAX + Pallas (see `python/compile/`), AOT-lowered to HLO text, and
-//! executed from rust via PJRT ([`runtime`]). Python never runs on the
-//! request path.
+//! encoded-gradient hot path `f(X̃, w̃) = X̃ᵀ ĝ(X̃·w̃)` runs on the pure-rust
+//! engine ([`runtime`]) by default, with optional row/column-blocked
+//! multi-threading via [`field::par::Parallelism`]. The same computation is
+//! also authored in JAX + Pallas (see `python/compile/`), AOT-lowered to
+//! HLO text, and executable from rust via PJRT when the crate is built with
+//! `--features pjrt` — python never runs on the request path.
 //!
 //! ## Quickstart
 //!
@@ -34,7 +36,9 @@
 //!
 //! See `examples/` for full-protocol (threaded, message-passing) drivers and
 //! `rust/benches/` for the harnesses regenerating every table and figure in
-//! the paper's evaluation section.
+//! the paper's evaluation section (the mapping lives in `EXPERIMENTS.md`).
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bench;
 pub mod cli;

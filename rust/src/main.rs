@@ -3,16 +3,19 @@
 //! ```text
 //! copml train   --dataset smoke|cifar|gisette --n 10 --case 1|2 [--k K --t T]
 //!               [--iters 50] [--eta 2.0] [--mode algo|full] [--engine native|pjrt]
+//!               [--threads 1]            # 0 = all cores (field::par)
 //! copml bench   --dataset cifar --n 50            # cost-model Table-I row
 //! copml calibrate                                  # machine calibration
 //! copml info                                       # config/threshold explorer
 //! ```
+//!
+//! Full usage and examples live in the top-level README.
 
 use copml::bench::{BaselineCost, Calibration, CopmlCost};
 use copml::cli::Args;
 use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};
-use copml::field::Field;
+use copml::field::{Field, Parallelism};
 use copml::net::wan::WanModel;
 use copml::report::Table;
 use copml::runtime::Engine;
@@ -71,12 +74,24 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         "pjrt" => Engine::Pjrt,
         e => return Err(format!("unknown engine '{e}'")),
     };
-    println!(
-        "COPML train: dataset={} (m={}, d={})  N={} K={} T={} r={}  iters={} η={}  p={}",
-        ds.name, ds.m, ds.d, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters, cfg.eta,
-        cfg.plan.field.modulus()
-    );
     let mode = args.get("mode").unwrap_or("algo");
+    cfg.parallelism = match args.get_or("threads", 1usize)? {
+        0 if mode == "full" => {
+            // Full-protocol mode already runs N concurrent client threads on
+            // this machine; give each client its share of the cores instead
+            // of oversubscribing N-fold.
+            let cores =
+                std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+            Parallelism::threads((cores / cfg.n.max(1)).max(1))
+        }
+        0 => Parallelism::auto(),
+        n => Parallelism::threads(n),
+    };
+    println!(
+        "COPML train: dataset={} (m={}, d={})  N={} K={} T={} r={}  iters={} η={}  p={}  threads={}",
+        ds.name, ds.m, ds.d, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters, cfg.eta,
+        cfg.plan.field.modulus(), cfg.parallelism.thread_count()
+    );
     let out = match mode {
         "algo" => algo::train(&cfg, &ds)?,
         "full" => {

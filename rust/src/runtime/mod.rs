@@ -3,16 +3,18 @@
 //!
 //! Two interchangeable engines implement [`GradKernel`]:
 //!
-//! * [`pjrt::PjrtRuntime`] — loads the AOT artifacts (`artifacts/*.hlo.txt`,
-//!   produced once by `python/compile/aot.py` from the JAX/Pallas L1+L2
-//!   stack), compiles them on the PJRT CPU client and executes them from
-//!   rust. **Python never runs here.** `PjRtClient` is `Rc`-based (not
-//!   `Send`), so [`KernelServer`] hosts it on a dedicated thread and hands
-//!   out cloneable, `Send` [`KernelHandle`]s to the client threads.
-//! * [`native::NativeKernel`] — a pure-rust implementation of the same
-//!   computation, used as the default engine for the massively-threaded
-//!   full-fidelity tests and as the baseline the PJRT path is
-//!   cross-validated against (`tests/runtime_parity.rs`).
+//! * [`native::NativeKernel`] — the **default engine**: a pure-rust
+//!   implementation on `field::vecops` (optionally row-blocked across
+//!   threads via [`crate::field::par::Parallelism`]), used by the
+//!   massively-threaded full-fidelity tests and as the baseline the PJRT
+//!   path is cross-validated against (`tests/runtime_parity.rs`).
+//! * `pjrt::PjrtRuntime` (behind the `pjrt` cargo feature) — loads the AOT
+//!   artifacts (`artifacts/*.hlo.txt`, produced once by
+//!   `python/compile/aot.py` from the JAX/Pallas L1+L2 stack), compiles
+//!   them on the PJRT CPU client and executes them from rust. **Python
+//!   never runs here.** `PjRtClient` is `Rc`-based (not `Send`), so
+//!   [`KernelServer`] hosts it on a dedicated thread and hands out
+//!   cloneable, `Send` [`KernelHandle`]s to the client threads.
 //!
 //! Artifacts are compiled for **row buckets** (`padding::bucket_rows`);
 //! zero-padding rows is exact because a zero row contributes
@@ -20,6 +22,7 @@
 
 pub mod native;
 pub mod padding;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::field::MatShape;
@@ -40,9 +43,11 @@ pub trait GradKernel: Send {
 /// Which engine executes Eq. (7).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
-    /// Pure-rust field kernels.
+    /// Pure-rust field kernels (optionally multi-threaded — the default).
     Native,
-    /// AOT-compiled JAX/Pallas artifacts via PJRT.
+    /// AOT-compiled JAX/Pallas artifacts via PJRT. Requires building with
+    /// `--features pjrt`; selecting it otherwise is a runtime
+    /// configuration error.
     Pjrt,
 }
 

@@ -2,8 +2,12 @@
 //! exactly what the pure-rust kernel computes — this is the rust half of
 //! the L1/L2 correctness story (the python half is pytest vs. ref.py).
 //!
-//! Requires `make artifacts`; tests are skipped (with a loud message) if
-//! the manifest is missing so `cargo test` stays green pre-AOT.
+//! Requires `make artifacts` **and** building with `--features pjrt`
+//! (without the feature this whole test file compiles to nothing); tests
+//! are skipped (with a loud message) if the manifest is missing so
+//! `cargo test --features pjrt` stays green pre-AOT.
+
+#![cfg(feature = "pjrt")]
 
 use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};

@@ -1,0 +1,200 @@
+//! Property tests for `field::vecops` (and the `field::par` parallel
+//! variants) against a naive per-element `u128` modular reference, with
+//! deliberate stress at the **accumulation-budget boundaries** of
+//! Appendix A: vector lengths and term counts of `budget − 1`, `budget`,
+//! `budget + 1`, zero coefficients (the skip path), and saturated
+//! `p − 1` inputs (maximal accumulator pressure).
+
+use copml::field::{par, vecops, Field, MatShape, Parallelism, P25, P26, P31};
+use copml::testkit::{forall, Gen};
+
+/// The primes under test: paper-parity (budget ≈ 4096/8192) and the
+/// headroom prime (budget = 4, forcing mid-sum reductions constantly).
+const PRIMES: [u64; 4] = [97, P25, P26, P31];
+
+fn dot_naive(p: u64, a: &[u64], b: &[u64]) -> u64 {
+    let mut acc = 0u128;
+    for (&x, &y) in a.iter().zip(b) {
+        acc = (acc + x as u128 * y as u128) % p as u128;
+    }
+    acc as u64
+}
+
+fn weighted_sum_naive(p: u64, coeffs: &[u64], mats: &[&[u64]], n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|i| {
+            let mut acc = 0u128;
+            for (&c, m) in coeffs.iter().zip(mats) {
+                acc = (acc + c as u128 * m[i] as u128) % p as u128;
+            }
+            acc as u64
+        })
+        .collect()
+}
+
+fn axpy_naive(p: u64, out: &[u64], c: u64, x: &[u64]) -> Vec<u64> {
+    out.iter()
+        .zip(x)
+        .map(|(&o, &v)| ((o as u128 + c as u128 * v as u128) % p as u128) as u64)
+        .collect()
+}
+
+/// Lengths straddling the accumulation budget, clamped to something that
+/// stays fast for the big-budget primes.
+fn boundary_lengths(f: Field) -> Vec<usize> {
+    let b = f.accum_budget().min(8192);
+    vec![1, b.saturating_sub(1).max(1), b, b + 1, 2 * b + 3]
+}
+
+/// Value generator mixing uniform elements with saturated `p − 1` runs and
+/// zeros — the extremes the budget discipline must survive.
+fn stress_vec(g: &mut Gen, p: u64, n: usize) -> Vec<u64> {
+    match g.usize_in(0, 2) {
+        0 => g.vec_u64(n, p),
+        1 => vec![p - 1; n],
+        _ => (0..n)
+            .map(|i| if i % 3 == 0 { 0 } else { p - 1 })
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_dot_budget_boundaries() {
+    forall("dot at budget boundaries", 60, |g| {
+        let f = Field::new(*g.choose(&PRIMES));
+        let p = f.modulus();
+        let n = *g.choose(&boundary_lengths(f));
+        let a = stress_vec(g, p, n);
+        let b = stress_vec(g, p, n);
+        assert_eq!(
+            vecops::dot(f, &a, &b),
+            dot_naive(p, &a, &b),
+            "p={p} n={n} budget={}",
+            f.accum_budget()
+        );
+    });
+}
+
+#[test]
+fn prop_weighted_sum_budget_boundaries() {
+    // Term counts straddle the budget (the reduction trigger in
+    // weighted_sum counts accumulated *terms*, not elements).
+    forall("weighted_sum at budget boundaries", 30, |g| {
+        let f = Field::new(*g.choose(&[P26, P31]));
+        let p = f.modulus();
+        let b = f.accum_budget().min(24);
+        let k = *g.choose(&[1usize, b.saturating_sub(1).max(1), b, b + 1]);
+        let n = g.usize_in(1, 300);
+        let mats: Vec<Vec<u64>> = (0..k).map(|_| stress_vec(g, p, n)).collect();
+        // Sprinkle zero coefficients: they must be skipped without
+        // consuming accumulation budget or perturbing the result.
+        let coeffs: Vec<u64> =
+            (0..k).map(|_| if g.bool() { 0 } else { g.u64_below(p) }).collect();
+        let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0u64; n];
+        vecops::weighted_sum(f, &coeffs, &views, &mut out);
+        assert_eq!(out, weighted_sum_naive(p, &coeffs, &views, n), "p={p} k={k} n={n}");
+    });
+}
+
+#[test]
+fn prop_weighted_sum_all_max_terms_and_elements() {
+    // Worst case everywhere: K+T terms of all-(p−1) matrices with (p−1)
+    // coefficients, crossing the budget, for the tight-budget prime.
+    let f = Field::new(P31);
+    let p = f.modulus();
+    let b = f.accum_budget(); // 4
+    for k in [b - 1, b, b + 1, 3 * b + 1] {
+        let n = 100;
+        let mats: Vec<Vec<u64>> = (0..k).map(|_| vec![p - 1; n]).collect();
+        let coeffs = vec![p - 1; k];
+        let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut out = vec![0u64; n];
+        vecops::weighted_sum(f, &coeffs, &views, &mut out);
+        assert_eq!(out, weighted_sum_naive(p, &coeffs, &views, n), "k={k}");
+    }
+}
+
+#[test]
+fn prop_axpy_matches_naive() {
+    forall("axpy vs naive", 80, |g| {
+        let f = Field::new(*g.choose(&PRIMES));
+        let p = f.modulus();
+        let n = g.usize_in(1, 500);
+        let out0 = stress_vec(g, p, n);
+        let x = stress_vec(g, p, n);
+        let c = if g.bool() { p - 1 } else { g.u64_below(p) };
+        let mut out = out0.clone();
+        vecops::axpy(f, &mut out, c, &x);
+        assert_eq!(out, axpy_naive(p, &out0, c, &x), "p={p} c={c}");
+    });
+}
+
+#[test]
+fn prop_matvec_and_transpose_budget_rows() {
+    // Row counts straddling the budget exercise matvec_t's mid-loop
+    // reduction; saturated inputs maximize accumulator pressure.
+    forall("matvec/matvec_t at budget rows", 30, |g| {
+        let f = Field::new(*g.choose(&[P26, P31]));
+        let p = f.modulus();
+        let b = f.accum_budget().min(64);
+        let rows = *g.choose(&[1usize, b.saturating_sub(1).max(1), b, b + 1]);
+        let cols = g.usize_in(1, 24);
+        let a = stress_vec(g, p, rows * cols);
+        let x = stress_vec(g, p, cols);
+        let v = stress_vec(g, p, rows);
+        let shape = MatShape::new(rows, cols);
+        let y = vecops::matvec(f, &a, shape, &x);
+        for r in 0..rows {
+            assert_eq!(y[r], dot_naive(p, &a[r * cols..(r + 1) * cols], &x), "row {r}");
+        }
+        let yt = vecops::matvec_t(f, &a, shape, &v);
+        for j in 0..cols {
+            let col: Vec<u64> = (0..rows).map(|r| a[r * cols + j]).collect();
+            assert_eq!(yt[j], dot_naive(p, &col, &v), "col {j}");
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_variants_bit_identical() {
+    // The parallel layer must agree with the sequential kernels bit for
+    // bit on arbitrary shapes and thread counts (including shapes around
+    // the fan-out threshold, where some calls parallelize and some fall
+    // back).
+    forall("par variants == sequential", 12, |g| {
+        let f = Field::new(*g.choose(&[P26, P31]));
+        let p = f.modulus();
+        let threads = g.usize_in(2, 8);
+        let pp = Parallelism::threads(threads);
+
+        let n = *g.choose(&[1000usize, 16_384, 40_000]);
+        let k = g.usize_in(1, 9);
+        let mats: Vec<Vec<u64>> = (0..k).map(|_| stress_vec(g, p, n)).collect();
+        let coeffs: Vec<u64> =
+            (0..k).map(|_| if g.bool() { 0 } else { g.u64_below(p) }).collect();
+        let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut seq = vec![0u64; n];
+        vecops::weighted_sum(f, &coeffs, &views, &mut seq);
+        let mut parout = vec![0u64; n];
+        par::weighted_sum(f, pp, &coeffs, &views, &mut parout);
+        assert_eq!(parout, seq, "weighted_sum p={p} n={n} threads={threads}");
+
+        let rows = g.usize_in(1, 600);
+        let cols = g.usize_in(1, 70);
+        let a = stress_vec(g, p, rows * cols);
+        let x = stress_vec(g, p, cols);
+        let v = stress_vec(g, p, rows);
+        let shape = MatShape::new(rows, cols);
+        assert_eq!(
+            par::matvec(f, pp, &a, shape, &x),
+            vecops::matvec(f, &a, shape, &x),
+            "matvec {rows}x{cols} threads={threads}"
+        );
+        assert_eq!(
+            par::matvec_t(f, pp, &a, shape, &v),
+            vecops::matvec_t(f, &a, shape, &v),
+            "matvec_t {rows}x{cols} threads={threads}"
+        );
+    });
+}

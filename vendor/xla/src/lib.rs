@@ -1,0 +1,117 @@
+//! API-surface stub of the `xla` PJRT binding, carried in-repo because the
+//! offline build image ships neither crates.io access nor libxla. It lets
+//! `cargo build --features pjrt` (and clippy/doc over all features)
+//! compile; every runtime entry point returns a clear "stub" error, so
+//! `runtime::pjrt::PjrtRuntime::load` fails loudly instead of segfaulting.
+//! Swap this path dependency for a real binding (e.g. a local
+//! xla_extension build) to execute AOT artifacts.
+
+use std::fmt;
+
+/// Error type mirroring the binding's debug-printable errors.
+pub struct XlaError(pub String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn stub_err<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError(format!(
+        "{what}: this build links the in-repo xla stub (vendor/xla); \
+         point the `xla` path dependency at a real PJRT binding to run AOT artifacts"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        stub_err("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        stub_err("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub: execution always fails).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal (stub; the vec1/reshape constructors work so argument
+/// marshalling code paths stay exercised up to the execute call).
+pub struct Literal {
+    #[allow(dead_code)]
+    data: Vec<u64>,
+}
+
+impl Literal {
+    pub fn vec1(v: &[u64]) -> Literal {
+        Literal { data: v.to_vec() }
+    }
+
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(self)
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        stub_err("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        stub_err("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e:?}").contains("stub"));
+        assert!(Literal::vec1(&[1, 2, 3]).reshape(&[3, 1]).is_ok());
+    }
+}
