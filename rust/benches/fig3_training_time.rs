@@ -16,6 +16,7 @@ use copml::bench::{time_it, BaselineCost, Calibration, CopmlCost};
 use copml::coordinator::CaseParams;
 use copml::field::{Field, MatShape, Parallelism};
 use copml::net::wan::WanModel;
+use copml::net::Wire;
 use copml::prng::Rng;
 use copml::report::{Json, Table};
 use copml::runtime::{native::NativeKernel, GradKernel};
@@ -82,6 +83,7 @@ fn run_dataset(
                 d,
                 iters,
                 subgroups: true,
+                wire: Wire::U64,
             }
             .estimate(cal, wan);
             est.comp_s = comp_iter * iters as f64;
@@ -136,11 +138,32 @@ fn main() {
         "baseline must grow with N"
     );
     let c1 = CaseParams::case1(50);
-    let copml_n50 = CopmlCost { n: 50, k: c1.k, t: c1.t, r: 1, m: 9019, d: 3073, iters: 50, subgroups: true }
-        .estimate(&cal, &wan);
+    let copml_50 = CopmlCost {
+        n: 50,
+        k: c1.k,
+        t: c1.t,
+        r: 1,
+        m: 9019,
+        d: 3073,
+        iters: 50,
+        subgroups: true,
+        wire: Wire::U64,
+    };
+    let copml_n50 = copml_50.estimate(&cal, &wan);
     assert!(
         bh08_n50.total_s() / copml_n50.total_s() > 8.0,
         "COPML must beat [BH08] by at least the paper's factor at N=50"
+    );
+    // Wire-packing ablation (p < 2^32): u32 frames halve COPML's comm
+    // bytes — the comm term must shrink, never the compute terms.
+    let packed = CopmlCost { wire: Wire::U32, ..copml_50 }.estimate(&cal, &wan);
+    assert!(packed.comm_s < copml_n50.comm_s, "u32 packing must cut comm time");
+    println!(
+        "wire packing at N=50 Case 1: comm {:.0}s (u64) → {:.0}s (u32), total {:.0}s → {:.0}s",
+        copml_n50.comm_s,
+        packed.comm_s,
+        copml_n50.total_s(),
+        packed.total_s()
     );
 
     let doc = Json::obj(vec![

@@ -5,7 +5,9 @@
 //! BGW ≫ BH08 in comm).
 //!
 //! Includes the `round_batch` ablation: how much of the baselines' cost is
-//! the gate-by-gate opening pattern (DESIGN.md §4 / cost-model docs).
+//! the gate-by-gate opening pattern (DESIGN.md §4 / cost-model docs); and
+//! the wire-packing ablation (u64 MPI words vs packed u32 frames — the
+//! same `Wire` knob the live socket transport exposes).
 //!
 //! Run: `cargo bench --bench table1_breakdown`
 
@@ -13,6 +15,7 @@ use copml::bench::{BaselineCost, Calibration, CopmlCost, PhaseBreakdown};
 use copml::coordinator::CaseParams;
 use copml::field::Field;
 use copml::net::wan::WanModel;
+use copml::net::Wire;
 use copml::report::Table;
 
 fn main() {
@@ -24,7 +27,8 @@ fn main() {
     let case1 = CaseParams::case1(n);
     let case2 = CaseParams::case2(n);
     let copml = |k: usize, t: usize| -> PhaseBreakdown {
-        CopmlCost { n, k, t, r: 1, m, d, iters, subgroups: true }.estimate(&cal, &wan)
+        CopmlCost { n, k, t, r: 1, m, d, iters, subgroups: true, wire: Wire::U64 }
+            .estimate(&cal, &wan)
     };
     let c1 = copml(case1.k, case1.t);
     let c2 = copml(case2.k, case2.t);
@@ -80,6 +84,34 @@ fn main() {
         let est = b.estimate(&cal, &wan);
         let label = if batch == usize::MAX { "whole-vector".into() } else { batch.to_string() };
         table.row(&[label, format!("{:.0}", est.comm_s), format!("{:.0}", est.total_s())]);
+    }
+    table.print();
+
+    // --- ablation: wire packing (u64 MPI words vs packed u32 frames) -----
+    // Every field element fits 32 bits (p < 2^32), so the socket transport
+    // can halve payload bytes; this is the modeled counterpart of a
+    // `--wire u32` protocol run (ledger validated in
+    // rust/tests/cost_model_validation.rs).
+    let mut table = Table::new(
+        "ablation — COPML wire format (u64 words vs packed u32)",
+        &["Protocol", "wire", "Comm (s)", "Total (s)"],
+    );
+    for (label, case) in [("COPML (Case 1)", case1), ("COPML (Case 2)", case2)] {
+        let mk = |wire: Wire| {
+            CopmlCost { n, k: case.k, t: case.t, r: 1, m, d, iters, subgroups: true, wire }
+                .estimate(&cal, &wan)
+        };
+        let e64 = mk(Wire::U64);
+        let e32 = mk(Wire::U32);
+        for (wire, est) in [(Wire::U64, e64), (Wire::U32, e32)] {
+            table.row(&[
+                label.to_string(),
+                wire.to_string(),
+                format!("{:.0}", est.comm_s),
+                format!("{:.0}", est.total_s()),
+            ]);
+        }
+        assert!(e32.comm_s < e64.comm_s, "u32 packing must cut comm for {label}");
     }
     table.print();
     println!("table1 shape assertions passed");

@@ -24,7 +24,7 @@
 
 use crate::field::{vecops, Field, MatShape};
 use crate::net::wan::WanModel;
-use crate::net::ELEM_BYTES;
+use crate::net::{Wire, ELEM_BYTES};
 use crate::prng::Rng;
 use crate::runtime::{native::NativeKernel, GradKernel};
 use crate::shamir;
@@ -111,6 +111,11 @@ pub struct CopmlCost {
     pub d: usize,
     pub iters: usize,
     pub subgroups: bool,
+    /// On-the-wire element encoding ([`Wire::U64`] = the paper's 64-bit
+    /// MPI words; [`Wire::U32`] = packed, half the payload bytes — the
+    /// packing ablation). Mirrors `CopmlConfig::wire`, and matches the
+    /// live ledger of a protocol run with the same setting exactly.
+    pub wire: Wire,
 }
 
 impl CopmlCost {
@@ -150,13 +155,17 @@ impl CopmlCost {
         let encdec_s = enc_data + enc_model + dec + xty + reshare;
 
         // --- communication (per-client NIC bytes; bulk-synchronous).
+        // Element width follows the configured wire format (u32 packing
+        // halves every byte term below — exactly what the live ledger of
+        // a `Wire::U32` protocol run reports).
+        let eb = self.wire.elem_bytes() as f64;
         // One-time: dataset encode exchange within the subgroup.
-        let bytes_enc_data = targets * rows_k * d * ELEM_BYTES as f64;
+        let bytes_enc_data = targets * rows_k * d * eb;
         // Per iteration: model-encode exchange + result sharing to all +
         // two king-openings for TruncPr (king NIC dominates: (N−1)·d down).
-        let bytes_model = targets * d * ELEM_BYTES as f64;
-        let bytes_results = (n - 1.0) * d * ELEM_BYTES as f64;
-        let bytes_trunc_king = 2.0 * (n - 1.0) * d * ELEM_BYTES as f64;
+        let bytes_model = targets * d * eb;
+        let bytes_results = (n - 1.0) * d * eb;
+        let bytes_trunc_king = 2.0 * (n - 1.0) * d * eb;
         let rounds_per_iter = 4.0; // encode, share, 2×trunc-open
         // Per-message processing (MPI4Py): each client ingests ~(targets−1)
         // encode messages + (N−1) result messages; the king ingests 2(T+1)
@@ -173,7 +182,10 @@ impl CopmlCost {
 }
 
 /// Baseline cost model (Appendix C/D, grouped G = 3): committee size
-/// `N/3`, rows per client `m/3`, threshold `T = ⌊(N−3)/6⌋`.
+/// `N/3`, rows per client `m/3`, threshold `T = ⌊(N−3)/6⌋`. Baselines
+/// always move 64-bit words ([`ELEM_BYTES`]) — the packing ablation is a
+/// COPML-transport feature, so the comparison stays apples-to-apples with
+/// the paper's 64-bit MPI baselines.
 ///
 /// **Why the baselines are slow (the paper's Table I):** generic MPC
 /// evaluates the circuit gate by gate — every secure multiplication's
@@ -302,7 +314,17 @@ mod tests {
     fn copml_comp_scales_inversely_with_k() {
         let wan = WanModel::paper();
         let cal = fake_cal();
-        let base = CopmlCost { n: 50, k: 4, t: 1, r: 1, m: 9019, d: 3073, iters: 50, subgroups: true };
+        let base = CopmlCost {
+            n: 50,
+            k: 4,
+            t: 1,
+            r: 1,
+            m: 9019,
+            d: 3073,
+            iters: 50,
+            subgroups: true,
+            wire: Wire::U64,
+        };
         let c4 = base.estimate(&cal, &wan);
         let c16 = CopmlCost { k: 16, ..base }.estimate(&cal, &wan);
         let ratio = c4.comp_s / c16.comp_s;
@@ -314,9 +336,18 @@ mod tests {
         // The headline claim's shape at N=50, CIFAR dims.
         let wan = WanModel::paper();
         let cal = fake_cal();
-        let copml =
-            CopmlCost { n: 50, k: 16, t: 1, r: 1, m: 9019, d: 3073, iters: 50, subgroups: true }
-                .estimate(&cal, &wan);
+        let copml = CopmlCost {
+            n: 50,
+            k: 16,
+            t: 1,
+            r: 1,
+            m: 9019,
+            d: 3073,
+            iters: 50,
+            subgroups: true,
+            wire: Wire::U64,
+        }
+        .estimate(&cal, &wan);
         let bh08 = BaselineCost::paper(50, 9019, 3073, 50, false).estimate(&cal, &wan);
         let bgw = BaselineCost::paper(50, 9019, 3073, 50, true).estimate(&cal, &wan);
         assert!(copml.total_s() < bh08.total_s(), "COPML {copml:?} vs BH08 {bh08:?}");
@@ -325,6 +356,10 @@ mod tests {
         let comp_ratio = bh08.comp_s / copml.comp_s;
         assert!(comp_ratio > 4.0, "comp ratio {comp_ratio}");
     }
+
+    // The u32-halves-comm-exactly property is asserted (against the live
+    // protocol ledger AND this model, same configuration) in
+    // tests/cost_model_validation.rs::u32_wire_halves_live_ledger_and_cost_model.
 
     #[test]
     fn baseline_bgw_comm_quadratic_in_committee() {

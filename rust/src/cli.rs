@@ -1,7 +1,19 @@
 //! Minimal CLI argument parsing (no `clap` in the offline image):
 //! `--key value` options, `--flag` booleans, positional subcommands.
+//!
+//! Value-vs-flag disambiguation: `--name token` is ambiguous — is `token`
+//! the value of `--name`, or a positional argument following a boolean
+//! flag? Registered boolean flags ([`Args::parse_with_flags`] /
+//! [`BOOL_FLAGS`]) never consume a value, so `copml --verbose train`
+//! parses `train` as the subcommand instead of as the value of
+//! `--verbose`; unregistered names keep the greedy `--key value`
+//! behaviour.
 
 use std::collections::HashMap;
+
+/// Boolean flags of the `copml` binary. Names listed here never consume
+/// the following token as a value (see module docs).
+pub const BOOL_FLAGS: &[&str] = &["verbose"];
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -12,8 +24,21 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of arguments (without argv[0]).
+    /// Parse from an iterator of arguments (without argv[0]), with no
+    /// registered boolean flags — every `--name token` pair is treated as
+    /// an option with a value.
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        Args::parse_with_flags(args, &[])
+    }
+
+    /// Parse with a registry of known boolean flags: a `--name` whose name
+    /// is in `bool_flags` is always a flag, even when followed by a
+    /// non-`--` token (the regression this fixes: a flag placed before the
+    /// subcommand used to swallow it as its value).
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        args: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
         let mut out = Args::default();
         let mut it = args.into_iter().peekable();
         while let Some(a) = it.next() {
@@ -23,6 +48,8 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
                 } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
                     out.options.insert(name.to_string(), it.next().unwrap());
                 } else {
@@ -36,7 +63,7 @@ impl Args {
     }
 
     pub fn from_env() -> Result<Args, String> {
-        Args::parse(std::env::args().skip(1))
+        Args::parse_with_flags(std::env::args().skip(1), BOOL_FLAGS)
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -100,5 +127,45 @@ mod tests {
     fn trailing_flag() {
         let a = parse("run --fast");
         assert!(a.flag("fast"));
+    }
+
+    fn parse_flags(s: &str, bool_flags: &[&str]) -> Args {
+        Args::parse_with_flags(s.split_whitespace().map(|x| x.to_string()), bool_flags).unwrap()
+    }
+
+    #[test]
+    fn registered_flag_before_subcommand_does_not_swallow_it() {
+        // Regression: `copml --verbose train` used to parse `train` as the
+        // value of `--verbose`, leaving no subcommand.
+        let a = parse_flags("--verbose train --n 10", &["verbose"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("n"), Some("10"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn unregistered_option_still_consumes_its_value() {
+        let a = parse_flags("--mode full train", &["verbose"]);
+        assert_eq!(a.get("mode"), Some("full"));
+        assert_eq!(a.subcommand(), Some("train"));
+    }
+
+    #[test]
+    fn registered_flag_in_trailing_position_still_a_flag() {
+        let a = parse_flags("train --verbose", &["verbose"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn binary_flag_registry_covers_verbose() {
+        let a = Args::parse_with_flags(
+            "--verbose bench --n 50".split_whitespace().map(|x| x.to_string()),
+            super::BOOL_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand(), Some("bench"));
+        assert!(a.flag("verbose"));
     }
 }

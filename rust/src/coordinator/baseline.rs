@@ -109,6 +109,7 @@ impl BaselineConfig {
             fit_range: self.fit_range,
             subgroups: false,
             parallelism: self.parallelism,
+            wire: crate::net::Wire::U64,
         }
     }
 }

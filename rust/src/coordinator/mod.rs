@@ -28,6 +28,7 @@ use crate::field::{Field, Parallelism};
 use crate::lcc;
 use crate::ml::fit_sigmoid;
 use crate::ml::sigmoid::SigmoidPoly;
+use crate::net::Wire;
 use crate::quant::{self, FpPlan};
 use crate::runtime::Engine;
 
@@ -86,6 +87,13 @@ pub struct CopmlConfig {
     /// encode/decode, the encoded-gradient kernel, the central recursion).
     /// Bit-identical results for every setting (`field::par` docs).
     pub parallelism: Parallelism,
+    /// On-the-wire element encoding for the transports and their byte
+    /// ledgers: 64-bit words as in the paper's MPI implementation
+    /// ([`Wire::U64`], the default), or packed 32-bit words
+    /// ([`Wire::U32`]) — lossless since `p < 2^31`, and half the payload
+    /// bytes. Value-transparent: the model trajectory is bit-identical
+    /// under either format.
+    pub wire: Wire,
 }
 
 impl CopmlConfig {
@@ -106,6 +114,7 @@ impl CopmlConfig {
             fit_range: 4.0,
             subgroups: true,
             parallelism: Parallelism::sequential(),
+            wire: Wire::U64,
         }
     }
 
@@ -118,6 +127,21 @@ impl CopmlConfig {
     pub fn validate(&self, ds: &Dataset) -> Result<(), String> {
         if self.k == 0 || self.t == 0 {
             return Err("K and T must be ≥ 1".into());
+        }
+        // Footnote-4 subgroups partition the clients into groups of T+1;
+        // with N < 2(T+1) there is at most one (possibly undersized) group
+        // (degenerate at N < T+1, e.g. N=3, T=3, where reconstruction is
+        // under-determined). With the default r = 1 the recovery-threshold
+        // check below already implies N ≥ 3T+1, so this guard exists to
+        // name the failure mode precisely and to stay safe should `r` (a
+        // public field) ever be set below 1.
+        if self.n < 2 * (self.t + 1) {
+            return Err(format!(
+                "N={} too small for the subgroup geometry: need N ≥ 2(T+1) = {} (T={})",
+                self.n,
+                2 * (self.t + 1),
+                self.t
+            ));
         }
         let need = self.recovery_threshold();
         if self.n < need {
@@ -293,6 +317,21 @@ mod tests {
         assert!(cfg.validate(&ds).is_ok(), "{:?}", cfg.validate(&ds));
         cfg.k = 10; // threshold 3·10+1 = 31 > 10
         assert!(cfg.validate(&ds).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_undersized_subgroup_geometry() {
+        // n=3, t=3: fewer clients than one subgroup needs (group of
+        // 3 < T+1 members — under-determined reconstruction). The explicit
+        // guard names the geometry problem instead of a generic threshold
+        // error, and holds even for non-default `r`.
+        let ds = Dataset::synth(SynthSpec::tiny(), 1);
+        let cfg = CopmlConfig::for_dataset(&ds, 3, CaseParams::explicit(1, 3), 1);
+        let err = cfg.validate(&ds).unwrap_err();
+        assert!(err.contains("subgroup"), "unexpected error: {err}");
+        // The boundary itself is fine: n = 2(t+1).
+        let ok = CopmlConfig::for_dataset(&ds, 4, CaseParams::explicit(1, 1), 1);
+        assert!(ok.validate(&ds).is_ok(), "{:?}", ok.validate(&ds));
     }
 
     #[test]

@@ -1,10 +1,21 @@
-//! The full COPML protocol (Algorithm 1), executed by `N` real client
-//! threads over the local transport: Shamir sharing of the per-client
-//! datasets, MPC Lagrange encoding of data and model, per-client encoded
-//! gradients (Eq. 7) through the [`crate::runtime`] engine (native or
-//! AOT/PJRT), MPC decoding (Eq. 10), and the two-stage TruncPr model
-//! update — every byte the paper's clients would exchange crosses a
-//! channel, and every phase is timed and byte-accounted.
+//! The full COPML protocol (Algorithm 1), executed by `N` real clients
+//! over any [`Transport`]: Shamir sharing of the per-client datasets, MPC
+//! Lagrange encoding of data and model, per-client encoded gradients
+//! (Eq. 7) through the [`crate::runtime`] engine (native or AOT/PJRT),
+//! MPC decoding (Eq. 10), and the two-stage TruncPr model update — every
+//! byte the paper's clients would exchange crosses a channel, and every
+//! phase is timed and byte-accounted.
+//!
+//! Three entry points share the same client body ([`run_client`] /
+//! `client_main`), so the trajectories are bit-identical by construction:
+//!
+//! * [`train`] — `N` client threads over the in-process [`Hub`];
+//! * [`train_tcp_loopback`] — `N` client threads, each on its own
+//!   [`crate::net::tcp::TcpTransport`] socket endpoint (real framed
+//!   bytes over 127.0.0.1);
+//! * [`run_client`] — ONE client over an already-established transport:
+//!   the entry point of the `copml party` CLI for genuinely distributed
+//!   runs (one OS process per party).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -15,6 +26,7 @@ use crate::lcc;
 use crate::mpc::dealer::Dealer;
 use crate::mpc::Party;
 use crate::net::local::Hub;
+use crate::net::Transport;
 use crate::poly;
 use crate::runtime::{native::NativeKernel, Engine, GradKernel, KernelServer};
 use crate::shamir;
@@ -90,24 +102,22 @@ struct ClientCtx {
     kernel: Box<dyn GradKernel>,
 }
 
-struct ClientResult {
-    id: usize,
-    w_final: Vec<u64>,
+/// One client's result of a full-protocol run.
+pub struct ClientOutput {
+    pub id: usize,
+    /// Opened final model (field domain).
+    pub w_final: Vec<u64>,
     /// Per-iteration share snapshot of `[w]` (for god-mode trace recovery).
-    w_share_snapshots: Vec<Vec<u64>>,
-    ledger: ClientLedger,
+    pub w_share_snapshots: Vec<Vec<u64>>,
+    pub ledger: ClientLedger,
 }
 
-/// Run the full protocol. Spawns `cfg.n` client threads; the PJRT engine
-/// (if selected) is hosted on a [`KernelServer`] thread.
+/// Run the full protocol. Spawns `cfg.n` client threads over the
+/// in-process [`Hub`]; the PJRT engine (if selected) is hosted on a
+/// [`KernelServer`] thread.
 pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOutput, String> {
     cfg.validate(ds)?;
-    let task = Arc::new(QuantizedTask::new(cfg, ds));
-    let f = task.f;
-    let (n, t) = (cfg.n, cfg.t);
-    let demand = copml_demand(cfg, task.d, task.rows_padded);
-    let pools = Dealer::deal(f, n, t, &demand, cfg.plan.k2, cfg.plan.kappa, cfg.seed);
-    let endpoints = Hub::new(n);
+    let f = cfg.plan.field;
 
     // PJRT lives on its own thread; clients get Send handles. The server
     // (when used) must outlive the client threads, hence the Option slot.
@@ -152,8 +162,81 @@ pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOutput, String> 
         }
     };
 
+    let endpoints = Hub::with_wire(cfg.n, cfg.wire);
+    run_clients(cfg, ds, endpoints, &mk_kernel)
+}
+
+/// Run the full protocol with every client on its own TCP socket endpoint
+/// over `127.0.0.1` ([`crate::net::tcp::loopback_mesh`]): separate
+/// endpoints exchanging real framed bytes, same aggregation and god-mode
+/// trace as [`train`]. Native engine only (the PJRT kernel server is a
+/// single-process construct). Used by the equivalence tests and CI smoke.
+pub fn train_tcp_loopback(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOutput, String> {
+    cfg.validate(ds)?;
+    if !matches!(cfg.engine, Engine::Native) {
+        return Err("tcp loopback training supports the native engine only".into());
+    }
+    let transports = crate::net::tcp::loopback_mesh(cfg.n, cfg.wire)
+        .map_err(|e| format!("establishing the loopback TCP mesh: {e}"))?;
+    let f = cfg.plan.field;
+    let kernel_par = cfg.parallelism;
+    let mk_kernel: Box<dyn Fn() -> Box<dyn GradKernel>> =
+        Box::new(move || Box::new(NativeKernel::with_parallelism(f, kernel_par)));
+    run_clients(cfg, ds, transports, &mk_kernel)
+}
+
+/// Run ONE client of the full protocol over an already-established
+/// transport — the distributed entry point (`copml party`). Every process
+/// derives the same offline dealer pools from `cfg.seed` (the paper's
+/// crypto-service-provider runs offline; here it is replayed from the
+/// shared seed) and executes the same SPMD sequence as the threaded
+/// [`train`], so a mesh of `run_client` processes is bit-identical to the
+/// Hub run for the same configuration.
+pub fn run_client(
+    cfg: &CopmlConfig,
+    ds: &Dataset,
+    net: &dyn Transport,
+) -> Result<ClientOutput, String> {
+    cfg.validate(ds)?;
+    if net.n() != cfg.n {
+        return Err(format!("transport has {} parties but cfg.n = {}", net.n(), cfg.n));
+    }
+    if !matches!(cfg.engine, Engine::Native) {
+        return Err("distributed clients support the native engine only".into());
+    }
+    let task = Arc::new(QuantizedTask::new(cfg, ds));
+    let f = task.f;
+    let demand = copml_demand(cfg, task.d, task.rows_padded);
+    // deal_one: this process only ever holds its own offline pool (not all
+    // n of them) — bit-identical to `Dealer::deal(..)[id]`.
+    let pool =
+        Dealer::deal_one(f, cfg.n, cfg.t, &demand, cfg.plan.k2, cfg.plan.kappa, cfg.seed, net.id());
+    let kernel: Box<dyn GradKernel> =
+        Box::new(NativeKernel::with_parallelism(f, cfg.parallelism));
+    let ctx = ClientCtx { cfg: cfg.clone(), task, kernel };
+    let party = Party::new(net, cfg.t, f, pool, cfg.seed);
+    Ok(client_main(&party, ctx))
+}
+
+/// Spawn one client thread per transport endpoint, join, and aggregate:
+/// final-model consensus, god-mode trace reconstruction from `T+1` share
+/// snapshots, accuracy/loss traces. Transport-generic — [`train`] passes
+/// Hub endpoints, [`train_tcp_loopback`] passes socket endpoints.
+fn run_clients<T: Transport + Send + 'static>(
+    cfg: &CopmlConfig,
+    ds: &Dataset,
+    transports: Vec<T>,
+    mk_kernel: &dyn Fn() -> Box<dyn GradKernel>,
+) -> Result<ProtocolOutput, String> {
+    let task = Arc::new(QuantizedTask::new(cfg, ds));
+    let f = task.f;
+    let (n, t) = (cfg.n, cfg.t);
+    assert_eq!(transports.len(), n, "one endpoint per client");
+    let demand = copml_demand(cfg, task.d, task.rows_padded);
+    let pools = Dealer::deal(f, n, t, &demand, cfg.plan.k2, cfg.plan.kappa, cfg.seed);
+
     let mut handles = Vec::new();
-    for (ep, pool) in endpoints.into_iter().zip(pools) {
+    for (ep, pool) in transports.into_iter().zip(pools) {
         let ctx = ClientCtx { cfg: cfg.clone(), task: task.clone(), kernel: mk_kernel() };
         let seed = cfg.seed;
         handles.push(std::thread::spawn(move || {
@@ -161,7 +244,7 @@ pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOutput, String> 
             client_main(&party, ctx)
         }));
     }
-    let mut results: Vec<ClientResult> = handles
+    let mut results: Vec<ClientOutput> = handles
         .into_iter()
         .map(|h| h.join().map_err(|_| "client thread panicked".to_string()))
         .collect::<Result<_, _>>()?;
@@ -210,7 +293,7 @@ pub(crate) fn padded_ranges(rows_padded: usize, n: usize) -> Vec<(usize, usize)>
     out
 }
 
-fn client_main(party: &Party, ctx: ClientCtx) -> ClientResult {
+fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     let cfg = &ctx.cfg;
     let task = &ctx.task;
     let f = task.f;
@@ -400,7 +483,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientResult {
     // ---- final: open the model (lines 25–27) ----------------------------
     let w_final = party.open_broadcast(&w_share, t);
 
-    ClientResult { id: me, w_final, w_share_snapshots: snapshots, ledger }
+    ClientOutput { id: me, w_final, w_share_snapshots: snapshots, ledger }
 }
 
 #[cfg(test)]
@@ -454,6 +537,31 @@ mod tests {
         assert_eq!(r[6].1, 100);
         for w in r.windows(2) {
             assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn run_client_mesh_matches_train() {
+        // The distributed entry point: every party independently derives
+        // its dealer pool from the shared seed and runs over its own TCP
+        // endpoint — all must open the model `train` computes.
+        let ds = Dataset::synth(SynthSpec::tiny(), 22);
+        let mut cfg =
+            super::super::CopmlConfig::for_dataset(&ds, 4, CaseParams::explicit(1, 1), 22);
+        cfg.iters = 2;
+        let reference = train(&cfg, &ds).unwrap();
+        let transports = crate::net::tcp::loopback_mesh(cfg.n, cfg.wire).unwrap();
+        let handles: Vec<_> = transports
+            .into_iter()
+            .map(|net| {
+                let cfg = cfg.clone();
+                let ds = ds.clone();
+                std::thread::spawn(move || run_client(&cfg, &ds, &net).unwrap())
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out.w_final, *reference.train.w_trace.last().unwrap());
         }
     }
 

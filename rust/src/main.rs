@@ -4,19 +4,25 @@
 //! copml train   --dataset smoke|cifar|gisette --n 10 --case 1|2 [--k K --t T]
 //!               [--iters 50] [--eta 2.0] [--mode algo|full] [--engine native|pjrt]
 //!               [--threads 1]            # 0 = all cores (field::par)
-//! copml bench   --dataset cifar --n 50            # cost-model Table-I row
+//!               [--wire u64|u32]         # full mode: wire format / byte ledger
+//! copml party   --id I --listen ADDR --peers A0,A1,...   # one distributed client
+//!               [--wire u64|u32] [+ train's dataset/config options]
+//! copml bench   --dataset cifar --n 50 [--wire u64|u32]  # cost-model Table-I row
 //! copml calibrate                                  # machine calibration
 //! copml info                                       # config/threshold explorer
 //! ```
 //!
-//! Full usage and examples live in the top-level README.
+//! Full usage and examples live in the top-level README (the distributed
+//! mode — launching N `copml party` processes — has its own section).
 
 use copml::bench::{BaselineCost, Calibration, CopmlCost};
 use copml::cli::Args;
 use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};
 use copml::field::{Field, Parallelism};
+use copml::net::tcp::TcpTransport;
 use copml::net::wan::WanModel;
+use copml::net::{Transport, Wire};
 use copml::report::Table;
 use copml::runtime::Engine;
 
@@ -30,11 +36,14 @@ fn main() {
     };
     let result = match args.subcommand() {
         Some("train") => cmd_train(&args),
+        Some("party") => cmd_party(&args),
         Some("bench") => cmd_bench(&args),
         Some("calibrate") => cmd_calibrate(),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: copml <train|bench|calibrate|info> [options]   (see --help in README)");
+            eprintln!(
+                "usage: copml <train|party|bench|calibrate|info> [options]   (see README)"
+            );
             std::process::exit(2);
         }
     };
@@ -55,20 +64,27 @@ fn dataset_for(name: &str, seed: u64) -> Result<Dataset, String> {
     Ok(Dataset::synth(spec, seed))
 }
 
-fn cmd_train(args: &Args) -> Result<(), String> {
-    let seed = args.get_or("seed", 42u64)?;
-    let ds = dataset_for(args.get("dataset").unwrap_or("smoke"), seed)?;
-    let n = args.get_or("n", 10usize)?;
+/// The `train`/`party`-shared configuration options on top of a dataset.
+fn config_from_args(args: &Args, ds: &Dataset, n: usize, seed: u64) -> Result<CopmlConfig, String> {
     let case = match args.get_or("case", 1usize)? {
         1 => CaseParams::case1(n),
         2 => CaseParams::case2(n),
         c => return Err(format!("--case must be 1 or 2 (got {c})")),
     };
-    let mut cfg = CopmlConfig::for_dataset(&ds, n, case, seed);
+    let mut cfg = CopmlConfig::for_dataset(ds, n, case, seed);
     cfg.k = args.get_or("k", cfg.k)?;
     cfg.t = args.get_or("t", cfg.t)?;
     cfg.iters = args.get_or("iters", cfg.iters)?;
     cfg.eta = args.get_or("eta", cfg.eta)?;
+    cfg.wire = args.get_or("wire", Wire::U64)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let seed = args.get_or("seed", 42u64)?;
+    let ds = dataset_for(args.get("dataset").unwrap_or("smoke"), seed)?;
+    let n = args.get_or("n", 10usize)?;
+    let mut cfg = config_from_args(args, &ds, n, seed)?;
     cfg.engine = match args.get("engine").unwrap_or("native") {
         "native" => Engine::Native,
         "pjrt" => Engine::Pjrt,
@@ -113,6 +129,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         }
         m => return Err(format!("unknown mode '{m}'")),
     };
+    // --verbose (a registered boolean flag — usable before the
+    // subcommand too): print every iteration instead of every fifth.
+    let every = if args.flag("verbose") { 1 } else { 5 };
     for (i, ((tr, te), loss)) in out
         .train_accuracy
         .iter()
@@ -120,10 +139,73 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         .zip(&out.loss)
         .enumerate()
     {
-        if i % 5 == 4 || i + 1 == out.loss.len() {
+        if (i + 1) % every == 0 || i + 1 == out.loss.len() {
             println!("iter {:>3}  loss {:.4}  train-acc {:.4}  test-acc {:.4}", i + 1, loss, tr, te);
         }
     }
+    Ok(())
+}
+
+/// One distributed client: establish the TCP mesh, run the full protocol,
+/// print this party's ledger and final-model quality.
+fn cmd_party(args: &Args) -> Result<(), String> {
+    let id: usize = args
+        .get("id")
+        .ok_or("party needs --id I (0-based)")?
+        .parse()
+        .map_err(|_| "invalid --id (expected a 0-based integer)".to_string())?;
+    let listen = args.get("listen").ok_or("party needs --listen ADDR (e.g. 127.0.0.1:9100)")?;
+    let peers: Vec<String> = args
+        .get("peers")
+        .ok_or("party needs --peers A0,A1,… (every party's address, in id order)")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let n = peers.len();
+    if id >= n {
+        return Err(format!("--id {id} out of range for {n} peers"));
+    }
+    // Distributed clients run the native engine; reject --engine instead
+    // of silently ignoring it (run_client would also refuse pjrt).
+    if let Some(e) = args.get("engine") {
+        if e != "native" {
+            return Err(format!("party runs the native engine only (got --engine {e})"));
+        }
+    }
+    let seed = args.get_or("seed", 42u64)?;
+    let ds = dataset_for(args.get("dataset").unwrap_or("smoke"), seed)?;
+    let mut cfg = config_from_args(args, &ds, n, seed)?;
+    cfg.parallelism = match args.get_or("threads", 1usize)? {
+        0 => Parallelism::auto(),
+        nt => Parallelism::threads(nt),
+    };
+    println!(
+        "COPML party {id}/{n}: listen={listen} wire={}  dataset={} (m={}, d={})  K={} T={} iters={}",
+        cfg.wire, ds.name, ds.m, ds.d, cfg.k, cfg.t, cfg.iters
+    );
+    let net = TcpTransport::establish(id, listen, &peers, cfg.wire)
+        .map_err(|e| format!("establishing the TCP mesh: {e}"))?;
+    println!("party {id}: mesh up ({} peers), running the protocol …", n - 1);
+    let t0 = std::time::Instant::now();
+    let out = protocol::run_client(&cfg, &ds, &net)?;
+    let mut table = Table::new(&format!("party {id} ledger"), &["phase", "seconds", "MB sent"]);
+    for (i, phase) in protocol::PHASES.iter().enumerate() {
+        table.row(&[
+            phase.to_string(),
+            format!("{:.4}", out.ledger.seconds[i]),
+            format!("{:.3}", out.ledger.bytes[i] as f64 / 1e6),
+        ]);
+    }
+    table.print();
+    let w = copml::quant::dequantize_slice(cfg.plan.field, &out.w_final, cfg.plan.lw);
+    println!(
+        "party {id} done in {:.2}s: test-acc {:.4}, {} B sent / {} B received ({} wire)",
+        t0.elapsed().as_secs_f64(),
+        copml::ml::accuracy(&ds.x_test, &ds.y_test, ds.d, &w),
+        net.bytes_sent(),
+        net.bytes_received(),
+        cfg.wire
+    );
     Ok(())
 }
 
@@ -133,6 +215,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let ds = dataset_for(name, seed)?;
     let n = args.get_or("n", 50usize)?;
     let iters = args.get_or("iters", 50usize)?;
+    let wire: Wire = args.get_or("wire", Wire::U64)?;
     let plan = if ds.d > 4096 {
         copml::quant::FpPlan::paper_gisette()
     } else {
@@ -142,7 +225,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let cal = Calibration::measure(plan.field);
     let wan = WanModel::paper();
     let mut table = Table::new(
-        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations (modeled on measured primitives)"),
+        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {wire} wire (modeled on measured primitives)"),
         &["Protocol", "Comp (s)", "Comm (s)", "Enc/Dec (s)", "Total (s)"],
     );
     let case1 = CaseParams::case1(n);
@@ -151,7 +234,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         ("COPML (Case 1)", case1.k, case1.t),
         ("COPML (Case 2)", case2.k, case2.t),
     ] {
-        let c = CopmlCost { n, k, t, r: 1, m: ds.m, d: ds.d, iters, subgroups: true }
+        let c = CopmlCost { n, k, t, r: 1, m: ds.m, d: ds.d, iters, subgroups: true, wire }
             .estimate(&cal, &wan);
         table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.total_s()], 1);
     }

@@ -35,6 +35,24 @@ use crate::shamir;
 
 pub use dealer::{Dealer, Offline};
 
+/// Stream label for party-local online randomness ("PRTY" in the high
+/// bits, party id in the low bits). Distinct from every `mpc::dealer`
+/// stream label, so no party's online stream can coincide with a dealer
+/// offline stream.
+const STREAM_PARTY: u64 = 0x5052_5459_0000_0000;
+
+/// Domain-separated per-party RNG for online resharing randomness.
+///
+/// Forked from the master seed under a per-party label via the same
+/// SplitMix64-based [`Rng::fork`] the dealer uses. The previous derivation
+/// (`seed ^ (id << 32)`) left party 0's stream identical to the raw
+/// `cfg.seed` stream — the same seed the dealer's offline pools derive
+/// from — so online resharing randomness could correlate with dealer
+/// randomness.
+fn party_rng(seed: u64, id: PartyId) -> Rng {
+    Rng::seed_from_u64(seed).fork(STREAM_PARTY | id as u64)
+}
+
 /// One party's view of an `N`-party MPC session.
 pub struct Party<'a> {
     pub id: PartyId,
@@ -71,7 +89,7 @@ impl<'a> Party<'a> {
             net,
             lambdas: shamir::lambda_points(n),
             offline: RefCell::new(offline),
-            rng: RefCell::new(Rng::seed_from_u64(seed ^ (net.id() as u64) << 32)),
+            rng: RefCell::new(party_rng(seed, net.id())),
             next_tag: Cell::new(0),
             recon_cache: RefCell::new(HashMap::new()),
         }

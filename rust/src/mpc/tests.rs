@@ -45,6 +45,30 @@ fn deal(f: Field, values: &[u64], n: usize, t: usize, seed: u64) -> Vec<Vec<Vec<
 }
 
 #[test]
+fn party_rng_domain_separated() {
+    // Regression: party 0's online stream used to equal the raw
+    // `Rng::seed_from_u64(seed)` stream the dealer's forks derive from.
+    let seed = 0xABCD_1234u64;
+    let mut master = crate::prng::Rng::seed_from_u64(seed);
+    let mut p0 = party_rng(seed, 0);
+    let same = (0..64).filter(|_| master.next_u64() == p0.next_u64()).count();
+    assert!(same < 2, "party 0 must not track the master seed stream");
+    // Parties are pairwise independent streams.
+    for (a, b) in [(0usize, 1usize), (1, 2), (0, 7)] {
+        let mut ra = party_rng(seed, a);
+        let mut rb = party_rng(seed, b);
+        let same = (0..64).filter(|_| ra.next_u64() == rb.next_u64()).count();
+        assert!(same < 2, "parties {a} and {b} share a stream");
+    }
+    // Deterministic per (seed, id).
+    let mut x = party_rng(seed, 3);
+    let mut y = party_rng(seed, 3);
+    for _ in 0..16 {
+        assert_eq!(x.next_u64(), y.next_u64());
+    }
+}
+
+#[test]
 fn open_broadcast_and_king_agree() {
     let f = Field::new(P26);
     let (n, t) = (5usize, 2usize);

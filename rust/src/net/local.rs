@@ -1,38 +1,41 @@
 //! Thread-local transport: `n` parties exchanging real share data through
 //! in-process mailboxes. The full-fidelity protocol backend.
+//!
+//! Delivery runs through the same `TagMailbox` as the TCP transport
+//! (drained `(from, tag)` entries are removed, so long runs stay bounded);
+//! the byte ledger charges [`Wire::elem_bytes`] per element — no bytes are
+//! actually serialized in-process, but the accounting matches what the
+//! socket transport puts on the wire for the same configuration.
 
-use std::collections::HashMap;
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::Arc;
 
-use super::{PartyId, Transport, ELEM_BYTES};
-
-/// How long a `recv` waits before declaring the protocol deadlocked.
-const RECV_TIMEOUT: Duration = Duration::from_secs(120);
-
-#[derive(Default)]
-struct Mailbox {
-    // (from, tag) -> queued payloads
-    queues: Mutex<HashMap<(PartyId, u64), VecDeque<Vec<u64>>>>,
-    signal: Condvar,
-}
+use super::mailbox::TagMailbox;
+use super::{PartyId, Transport, Wire};
 
 /// Shared state for an `n`-party in-process network.
 pub struct Hub {
-    boxes: Vec<Arc<Mailbox>>,
-    sent: Vec<Arc<AtomicU64>>,
-    received: Vec<Arc<AtomicU64>>,
+    boxes: Vec<TagMailbox>,
+    sent: Vec<AtomicU64>,
+    received: Vec<AtomicU64>,
+    elem_bytes: u64,
 }
 
 impl Hub {
-    /// Create a hub and hand out one endpoint per party.
+    /// Create a hub and hand out one endpoint per party (64-bit wire
+    /// accounting, as in the paper's MPI implementation).
     pub fn new(n: usize) -> Vec<Endpoint> {
+        Self::with_wire(n, Wire::U64)
+    }
+
+    /// Create a hub whose byte ledger accounts elements at the given wire
+    /// format's width.
+    pub fn with_wire(n: usize, wire: Wire) -> Vec<Endpoint> {
         let hub = Arc::new(Hub {
-            boxes: (0..n).map(|_| Arc::new(Mailbox::default())).collect(),
-            sent: (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect(),
-            received: (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect(),
+            boxes: (0..n).map(|_| TagMailbox::default()).collect(),
+            sent: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            received: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            elem_bytes: wire.elem_bytes(),
         });
         (0..n)
             .map(|id| Endpoint { id, n, hub: hub.clone() })
@@ -59,35 +62,14 @@ impl Transport for Endpoint {
     fn send(&self, to: PartyId, tag: u64, data: Vec<u64>) {
         assert!(to < self.n, "send to unknown party {to}");
         assert!(to != self.id, "self-send is a protocol bug");
-        self.hub.sent[self.id].fetch_add(data.len() as u64 * ELEM_BYTES, Ordering::Relaxed);
-        self.hub.received[to].fetch_add(data.len() as u64 * ELEM_BYTES, Ordering::Relaxed);
-        let mbox = &self.hub.boxes[to];
-        let mut q = mbox.queues.lock().unwrap();
-        q.entry((self.id, tag)).or_default().push_back(data);
-        mbox.signal.notify_all();
+        let bytes = data.len() as u64 * self.hub.elem_bytes;
+        self.hub.sent[self.id].fetch_add(bytes, Ordering::Relaxed);
+        self.hub.received[to].fetch_add(bytes, Ordering::Relaxed);
+        self.hub.boxes[to].push(self.id, tag, data);
     }
 
     fn recv(&self, from: PartyId, tag: u64) -> Vec<u64> {
-        let mbox = &self.hub.boxes[self.id];
-        let mut q = mbox.queues.lock().unwrap();
-        loop {
-            if let Some(queue) = q.get_mut(&(from, tag)) {
-                if let Some(data) = queue.pop_front() {
-                    return data;
-                }
-            }
-            let (guard, timeout) = mbox
-                .signal
-                .wait_timeout(q, RECV_TIMEOUT)
-                .expect("mailbox lock poisoned");
-            q = guard;
-            if timeout.timed_out() {
-                panic!(
-                    "party {} recv(from={from}, tag={tag}) timed out — protocol deadlock",
-                    self.id
-                );
-            }
-        }
+        self.hub.boxes[self.id].pop_blocking(self.id, from, tag)
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -102,7 +84,7 @@ impl Transport for Endpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::{broadcast, gather_all};
+    use crate::net::{broadcast, gather_all, ELEM_BYTES};
     use std::thread;
 
     #[test]
@@ -146,6 +128,14 @@ mod tests {
     }
 
     #[test]
+    fn u32_wire_accounting_halves_bytes() {
+        let eps = Hub::with_wire(2, Wire::U32);
+        eps[0].send(1, 0, vec![0; 10]);
+        assert_eq!(eps[0].bytes_sent(), 10 * Wire::U32.elem_bytes());
+        assert_eq!(eps[0].bytes_sent() * 2, 10 * ELEM_BYTES);
+    }
+
+    #[test]
     fn broadcast_gather_round_trip() {
         let n = 4;
         let eps = Hub::new(n);
@@ -172,5 +162,20 @@ mod tests {
         eps[0].send(1, 5, vec![2]);
         assert_eq!(eps[1].recv(0, 5), vec![1]);
         assert_eq!(eps[1].recv(0, 5), vec![2]);
+    }
+
+    #[test]
+    fn drained_mailbox_entries_are_removed() {
+        // Regression: every collective consumes a fresh tag, so leaving
+        // empty (from, tag) queues behind grows memory without bound over
+        // long training runs.
+        let eps = Hub::new(2);
+        for tag in 0..100 {
+            eps[0].send(1, tag, vec![1, 2, 3]);
+        }
+        for tag in 0..100 {
+            assert_eq!(eps[1].recv(0, tag), vec![1, 2, 3]);
+        }
+        assert_eq!(eps[1].hub.boxes[1].pending_entries(), 0);
     }
 }

@@ -1,0 +1,167 @@
+//! Tagged blocking mailbox — the delivery structure shared by the
+//! in-process ([`crate::net::local`]) and TCP ([`crate::net::tcp`])
+//! transports.
+//!
+//! A mailbox maps `(from, tag)` to a FIFO of payloads. Entries are removed
+//! the moment their queue drains: the protocols consume a fresh tag per
+//! collective, so keeping drained `(from, tag)` entries around would grow
+//! the map without bound over a long training run.
+//!
+//! A transport that learns a peer is gone (socket EOF, corrupt frame) can
+//! [`close`](TagMailbox::close) that peer: already-delivered payloads stay
+//! receivable, but a receive that would otherwise block on the dead peer
+//! fails immediately with the recorded cause instead of timing out.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::PartyId;
+
+/// How long a blocking receive waits before declaring the protocol
+/// deadlocked.
+pub(crate) const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+#[derive(Default)]
+struct Inner {
+    // (from, tag) -> queued payloads
+    queues: HashMap<(PartyId, u64), VecDeque<Vec<u64>>>,
+    // peers whose delivery stream has ended, with the cause
+    closed: HashMap<PartyId, String>,
+}
+
+/// `(from, tag) → payload queue` with blocking receive.
+#[derive(Default)]
+pub(crate) struct TagMailbox {
+    inner: Mutex<Inner>,
+    signal: Condvar,
+}
+
+impl TagMailbox {
+    /// Deliver a payload from `from` under `tag`.
+    pub(crate) fn push(&self, from: PartyId, tag: u64, data: Vec<u64>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.queues.entry((from, tag)).or_default().push_back(data);
+        self.signal.notify_all();
+    }
+
+    /// Mark `from` as gone (no further payloads will arrive). Queued
+    /// payloads remain receivable; blocked receives on `from` fail fast.
+    pub(crate) fn close(&self, from: PartyId, reason: String) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed.entry(from).or_insert(reason);
+        self.signal.notify_all();
+    }
+
+    /// Blocking pop of the next payload from `from` under `tag`. `me` is
+    /// the receiving party (diagnostics only). Panics immediately if
+    /// `from` was [`close`](TagMailbox::close)d with nothing queued, or
+    /// after [`RECV_TIMEOUT`] — an aligned SPMD protocol never waits that
+    /// long.
+    pub(crate) fn pop_blocking(&self, me: PartyId, from: PartyId, tag: u64) -> Vec<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
+                let data = queue.pop_front();
+                if queue.is_empty() {
+                    // Drained: drop the entry so the map stays bounded.
+                    inner.queues.remove(&(from, tag));
+                }
+                if let Some(data) = data {
+                    return data;
+                }
+            }
+            if let Some(reason) = inner.closed.get(&from) {
+                // Release the lock before unwinding so other threads (the
+                // remaining reader threads, ledger reads) are not poisoned.
+                let reason = reason.clone();
+                drop(inner);
+                panic!(
+                    "party {me} recv(from={from}, tag={tag}): peer is gone ({reason})"
+                );
+            }
+            let (guard, timeout) = self
+                .signal
+                .wait_timeout(inner, RECV_TIMEOUT)
+                .expect("mailbox lock poisoned");
+            inner = guard;
+            if timeout.timed_out() {
+                panic!(
+                    "party {me} recv(from={from}, tag={tag}) timed out — protocol deadlock"
+                );
+            }
+        }
+    }
+
+    /// Number of live `(from, tag)` entries (leak regression tests).
+    #[cfg(test)]
+    pub(crate) fn pending_entries(&self) -> usize {
+        self.inner.lock().unwrap().queues.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_per_key_and_drain_removes_entry() {
+        let mb = TagMailbox::default();
+        mb.push(0, 5, vec![1]);
+        mb.push(0, 5, vec![2]);
+        mb.push(1, 5, vec![3]);
+        assert_eq!(mb.pending_entries(), 2);
+        assert_eq!(mb.pop_blocking(9, 0, 5), vec![1]);
+        assert_eq!(mb.pending_entries(), 2, "queue (0,5) still holds one payload");
+        assert_eq!(mb.pop_blocking(9, 0, 5), vec![2]);
+        assert_eq!(mb.pending_entries(), 1, "drained (0,5) entry must be removed");
+        assert_eq!(mb.pop_blocking(9, 1, 5), vec![3]);
+        assert_eq!(mb.pending_entries(), 0);
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let mb = std::sync::Arc::new(TagMailbox::default());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || mb2.pop_blocking(1, 0, 7));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        mb.push(0, 7, vec![42]);
+        assert_eq!(h.join().unwrap(), vec![42]);
+        assert_eq!(mb.pending_entries(), 0);
+    }
+
+    #[test]
+    fn closed_peer_fails_fast_but_queued_data_survives() {
+        let mb = TagMailbox::default();
+        mb.push(0, 1, vec![7]);
+        mb.close(0, "connection reset".into());
+        // already-delivered payloads still receivable after close
+        assert_eq!(mb.pop_blocking(9, 0, 1), vec![7]);
+        // a receive that would block on the dead peer panics immediately
+        // (not after RECV_TIMEOUT) with the recorded cause
+        let t0 = std::time::Instant::now();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            mb.pop_blocking(9, 0, 2)
+        }))
+        .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not wait for the timeout");
+        let msg = err.downcast_ref::<String>().expect("panic payload");
+        assert!(msg.contains("peer is gone"), "{msg}");
+        assert!(msg.contains("connection reset"), "{msg}");
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_close() {
+        let mb = std::sync::Arc::new(TagMailbox::default());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                mb2.pop_blocking(1, 0, 3)
+            }))
+            .is_err()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        mb.close(0, "EOF".into());
+        assert!(h.join().unwrap(), "blocked receive must fail once the peer closes");
+    }
+}

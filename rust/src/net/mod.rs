@@ -1,28 +1,44 @@
 //! Networking: the transport abstraction the MPC protocols run on, plus the
 //! WAN cost model used to reproduce the paper's EC2 timing experiments.
 //!
-//! Two backends implement [`Transport`]:
+//! Three backends implement [`Transport`]:
 //!
-//! * [`local::Hub`] — threads + channels, *really* moving share data.
-//!   Used by the full-fidelity protocol (tests, examples) and to validate
-//!   the byte ledger of the simulator.
+//! * [`local::Hub`] — threads + in-process mailboxes, *really* moving share
+//!   data. Used by the full-fidelity protocol (tests, examples) and to
+//!   validate the byte ledger of the simulator.
+//! * [`tcp::TcpTransport`] — length-prefixed framed messages over real
+//!   `TcpStream`s, one per peer, with a per-peer reader thread feeding the
+//!   same tagged-mailbox semantics. One OS process per party in a real
+//!   deployment (`copml party`), or the loopback mesh
+//!   ([`tcp::loopback_mesh`]) for tests and demos.
 //! * the virtual-clock simulation in [`wan`] + `bench::cost_model` — exact
 //!   byte counts charged against a bandwidth/latency model
 //!   (paper setup: 40 Mbps WAN between EC2 m3.xlarge instances).
 //!
-//! Messages carry `Vec<u64>` field elements. On the wire the paper's MPI
-//! implementation moves 64-bit words; [`ELEM_BYTES`] makes that explicit
-//! (an ablation in `bench/` explores 32-bit packing, since `p < 2^32`).
+//! Messages carry `Vec<u64>` field elements. The on-wire element encoding
+//! is configurable ([`Wire`]): 64-bit words as in the paper's 64-bit MPI
+//! implementation, or packed 32-bit words — lossless because every
+//! supported modulus satisfies `p < 2^31` — which halves payload bytes
+//! (the packing ablation of EXPERIMENTS.md, now a real measurable change
+//! on the socket transport). Byte ledgers are therefore wire-format
+//! dependent ([`Wire::elem_bytes`]); [`ELEM_BYTES`] is the 64-bit default
+//! used by the baselines' accounting.
 
 pub mod local;
+mod mailbox;
+pub mod tcp;
 pub mod wan;
+pub mod wire;
+
+pub use wire::Wire;
 
 /// Party identifier (0-based).
 pub type PartyId = usize;
 
-/// Bytes per transmitted field element (64-bit words, as in the paper's
-/// 64-bit MPI implementation).
-pub const ELEM_BYTES: u64 = 8;
+/// Bytes per transmitted field element under the default 64-bit wire
+/// format ([`Wire::U64`] — the paper's 64-bit MPI implementation). The
+/// packed alternative is [`Wire::U32`].
+pub const ELEM_BYTES: u64 = Wire::U64.elem_bytes();
 
 /// A point-to-point, tagged, blocking transport between `n` parties.
 ///

@@ -1,0 +1,502 @@
+//! TCP transport: the full-fidelity protocol over real sockets.
+//!
+//! Each party is one endpoint of a full mesh of `TcpStream`s (one OS
+//! process per party in a real deployment via `copml party`, or one thread
+//! per party in the loopback harness). Messages are length-prefixed frames
+//! ([`crate::net::wire`]); a per-peer **reader thread** drains each socket
+//! into the shared tagged mailbox (`TagMailbox`), so the blocking
+//! tagged-`recv` semantics of [`Transport`] — and everything built on them:
+//! the MPC collectives, the byte ledger, the SPMD tag discipline — run
+//! unmodified over the network. Reader threads also decouple socket buffers
+//! from protocol progress: a peer's send never blocks on our `recv` order.
+//!
+//! Mesh construction is deterministic and deadlock-free: party `i` *dials*
+//! every lower-numbered peer (retrying while it boots) and *accepts* a
+//! connection from every higher-numbered one. A 13-byte handshake
+//! (`magic | wire code | party id`) identifies the dialer and rejects
+//! mixed wire-format meshes at connect time.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::mailbox::TagMailbox;
+use super::wire::{self, Wire, HEADER_BYTES};
+use super::{PartyId, Transport};
+
+/// Handshake magic ("COPML wire").
+const MAGIC: [u8; 4] = *b"CPML";
+/// How long `establish` keeps retrying dials / waiting for accepts while
+/// the rest of the mesh boots.
+const MESH_TIMEOUT: Duration = Duration::from_secs(60);
+/// Per-connection handshake read budget on the accept side — a silent
+/// stray socket (scanner, health probe) must not stall the accept loop.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Pause between dial retries against a peer that is not up yet.
+const DIAL_RETRY: Duration = Duration::from_millis(50);
+
+fn bad_proto(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// One party's endpoint of an `n`-party TCP mesh.
+pub struct TcpTransport {
+    id: PartyId,
+    n: usize,
+    wire: Wire,
+    /// Write halves, indexed by peer id (`None` for self).
+    writers: Vec<Option<Mutex<TcpStream>>>,
+    mailbox: Arc<TagMailbox>,
+    sent: AtomicU64,
+    received: Arc<AtomicU64>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Bind `listen` and build the mesh. `peers[j]` is the address party
+    /// `j` listens on, as reachable from this host; `peers[id]` (our own
+    /// entry) is ignored. Blocks until all `n − 1` connections are up
+    /// (bounded by an internal timeout).
+    pub fn establish(
+        id: PartyId,
+        listen: &str,
+        peers: &[String],
+        wire: Wire,
+    ) -> io::Result<TcpTransport> {
+        let listener = TcpListener::bind(listen)?;
+        Self::establish_on(id, listener, peers, wire)
+    }
+
+    /// Like [`TcpTransport::establish`] with an already-bound listener
+    /// (the loopback launcher binds all listeners up front so ephemeral
+    /// ports are known before any dial).
+    pub fn establish_on(
+        id: PartyId,
+        listener: TcpListener,
+        peers: &[String],
+        wire: Wire,
+    ) -> io::Result<TcpTransport> {
+        let n = peers.len();
+        assert!(id < n, "party id {id} out of range for {n} peers");
+        let deadline = Instant::now() + MESH_TIMEOUT;
+        let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        // Dial every lower-numbered peer (it accepts ids above its own).
+        for (peer, slot) in streams.iter_mut().enumerate().take(id) {
+            *slot = Some(dial(&peers[peer], id, wire, deadline)?);
+        }
+        // Accept one connection from every higher-numbered peer, in
+        // whatever order they come up; the handshake names the dialer.
+        for _ in id + 1..n {
+            let (s, from) = accept(&listener, id, n, wire, deadline)?;
+            if streams[from].is_some() {
+                return Err(bad_proto(format!("duplicate connection from party {from}")));
+            }
+            streams[from] = Some(s);
+        }
+        drop(listener);
+
+        let mailbox = Arc::new(TagMailbox::default());
+        let received = Arc::new(AtomicU64::new(0));
+        let mut writers = Vec::with_capacity(n);
+        let mut readers = Vec::new();
+        for (peer, slot) in streams.into_iter().enumerate() {
+            match slot {
+                None => writers.push(None),
+                Some(s) => {
+                    // Protocol messages are latency-sensitive whole frames.
+                    s.set_nodelay(true).ok();
+                    let reader = s.try_clone()?;
+                    let mb = mailbox.clone();
+                    let rc = received.clone();
+                    readers.push(std::thread::spawn(move || {
+                        reader_loop(reader, peer, wire, &mb, &rc)
+                    }));
+                    writers.push(Some(Mutex::new(s)));
+                }
+            }
+        }
+        Ok(TcpTransport {
+            id,
+            n,
+            wire,
+            writers,
+            mailbox,
+            sent: AtomicU64::new(0),
+            received,
+            readers,
+        })
+    }
+
+    /// The wire format this mesh was established with.
+    pub fn wire(&self) -> Wire {
+        self.wire
+    }
+}
+
+fn dial(addr: &str, my_id: PartyId, wire: Wire, deadline: Instant) -> io::Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(mut s) => {
+                s.set_read_timeout(Some(MESH_TIMEOUT))?;
+                let mut hello = [0u8; 13];
+                hello[..4].copy_from_slice(&MAGIC);
+                hello[4] = wire.code();
+                hello[5..].copy_from_slice(&(my_id as u64).to_le_bytes());
+                s.write_all(&hello)?;
+                // The acceptor echoes magic + wire code as the ack.
+                let mut echo = [0u8; 5];
+                s.read_exact(&mut echo)?;
+                if echo[..4] != MAGIC || echo[4] != wire.code() {
+                    return Err(bad_proto(format!(
+                        "handshake with {addr} failed: wire-format mismatch (ours: {wire})"
+                    )));
+                }
+                s.set_read_timeout(None)?;
+                return Ok(s);
+            }
+            Err(e) => {
+                // Only errors a still-booting peer can cause are worth
+                // retrying; anything else (DNS failure, unreachable
+                // network) is permanent and surfaces immediately.
+                let retryable = matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionRefused
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::TimedOut
+                );
+                if !retryable || Instant::now() >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(DIAL_RETRY);
+            }
+        }
+    }
+}
+
+/// Accept connections until one passes the handshake as a valid peer.
+///
+/// Connections that are not copml peers at all — port scanners, health
+/// probes, silent sockets (bad magic, handshake EOF, per-connection
+/// handshake timeout) — are dropped and the loop keeps listening; a lone
+/// stray connection must not abort the whole mesh. Genuine copml
+/// misconfiguration (correct magic but wrong wire format or an
+/// out-of-range party id) fails fast with a clear error.
+fn accept(
+    listener: &TcpListener,
+    my_id: PartyId,
+    n: usize,
+    wire: Wire,
+    deadline: Instant,
+) -> io::Result<(TcpStream, PartyId)> {
+    listener.set_nonblocking(true)?;
+    loop {
+        let mut s = loop {
+            match listener.accept() {
+                Ok((s, _addr)) => break s,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            format!("party {my_id} timed out waiting for peers to connect"),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        match handshake_accept(&mut s, my_id, n, wire)? {
+            Some(from) => return Ok((s, from)),
+            None => continue, // stray connection: drop `s`, keep listening
+        }
+    }
+}
+
+/// Acceptor side of the handshake. `Ok(Some(id))` — valid peer;
+/// `Ok(None)` — stray connection to drop; `Err` — a copml peer with a
+/// conflicting configuration (abort the mesh).
+fn handshake_accept(
+    s: &mut TcpStream,
+    my_id: PartyId,
+    n: usize,
+    wire: Wire,
+) -> io::Result<Option<PartyId>> {
+    s.set_nonblocking(false)?;
+    // Real dialers send their hello immediately after connect; a silent
+    // socket must not stall the accept loop for the whole mesh timeout.
+    s.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let mut hello = [0u8; 13];
+    if s.read_exact(&mut hello).is_err() || hello[..4] != MAGIC {
+        return Ok(None);
+    }
+    if hello[4] != wire.code() {
+        return Err(bad_proto(format!(
+            "wire-format mismatch: this party uses {wire}, the dialer does not"
+        )));
+    }
+    let from = u64::from_le_bytes(hello[5..13].try_into().unwrap()) as usize;
+    if from <= my_id || from >= n {
+        return Err(bad_proto(format!(
+            "unexpected dialer id {from} (party {my_id} accepts ids {}..{n})",
+            my_id + 1
+        )));
+    }
+    let mut echo = [0u8; 5];
+    echo[..4].copy_from_slice(&MAGIC);
+    echo[4] = wire.code();
+    s.write_all(&echo)?;
+    s.set_read_timeout(None)?;
+    Ok(Some(from))
+}
+
+/// Drain one peer's socket into the mailbox until EOF/shutdown. The
+/// termination cause is recorded on the mailbox, so a `recv` blocked on a
+/// dead peer fails immediately with that cause instead of sitting out the
+/// 120-second deadlock timeout and blaming the protocol.
+fn reader_loop(
+    mut stream: TcpStream,
+    from: PartyId,
+    wire: Wire,
+    mailbox: &TagMailbox,
+    received: &AtomicU64,
+) {
+    let mut header = [0u8; HEADER_BYTES];
+    loop {
+        // EOF or shutdown: the peer (or our Drop) closed the connection.
+        if let Err(e) = stream.read_exact(&mut header) {
+            mailbox.close(from, format!("connection closed: {e}"));
+            return;
+        }
+        let (payload_len, tag) = wire::decode_header(&header);
+        let mut payload = vec![0u8; payload_len as usize];
+        if let Err(e) = stream.read_exact(&mut payload) {
+            mailbox.close(from, format!("connection died mid-frame: {e}"));
+            return;
+        }
+        let data = match wire::decode_payload(wire, &payload) {
+            Ok(d) => d,
+            Err(e) => {
+                mailbox.close(from, format!("corrupt frame: {e}"));
+                return;
+            }
+        };
+        received.fetch_add(payload_len as u64, Ordering::Relaxed);
+        mailbox.push(from, tag, data);
+    }
+}
+
+impl Transport for TcpTransport {
+    fn id(&self) -> PartyId {
+        self.id
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, to: PartyId, tag: u64, data: Vec<u64>) {
+        assert!(to < self.n, "send to unknown party {to}");
+        assert!(to != self.id, "self-send is a protocol bug");
+        let frame = wire::encode_frame(self.wire, tag, &data);
+        {
+            let mut s = self.writers[to]
+                .as_ref()
+                .expect("no connection slot for peer")
+                .lock()
+                .unwrap();
+            s.write_all(&frame).expect("tcp send failed — peer gone?");
+        }
+        // Ledger counts payload bytes (header excluded), matching `local`.
+        self.sent
+            .fetch_add(data.len() as u64 * self.wire.elem_bytes(), Ordering::Relaxed);
+    }
+
+    fn recv(&self, from: PartyId, tag: u64) -> Vec<u64> {
+        assert!(from < self.n && from != self.id, "recv from unknown party {from}");
+        self.mailbox.pop_blocking(self.id, from, tag)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        for m in self.writers.iter().flatten() {
+            if let Ok(s) = m.lock() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Launch an `n`-party full mesh over `127.0.0.1` ephemeral ports: every
+/// party is its own socket endpoint, established concurrently on its own
+/// thread. Returns endpoints in id order. This is the loopback launcher
+/// used by the equivalence tests, CI smoke runs, and local demos; real
+/// deployments run one `copml party` process per endpoint instead.
+pub fn loopback_mesh(n: usize, wire: Wire) -> io::Result<Vec<TcpTransport>> {
+    let mut listeners = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(l.local_addr()?.to_string());
+        listeners.push(l);
+    }
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(id, l)| {
+            let addrs = addrs.clone();
+            std::thread::spawn(move || TcpTransport::establish_on(id, l, &addrs, wire))
+        })
+        .collect();
+    let mut out = Vec::with_capacity(n);
+    for h in handles {
+        let ep = h
+            .join()
+            .map_err(|_| io::Error::new(io::ErrorKind::Other, "mesh setup thread panicked"))??;
+        out.push(ep);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{broadcast, gather_all};
+
+    fn pair(wire: Wire) -> (TcpTransport, TcpTransport) {
+        let mut eps = loopback_mesh(2, wire).unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn point_to_point_over_sockets() {
+        for wire in [Wire::U64, Wire::U32] {
+            let (a, b) = pair(wire);
+            let h = std::thread::spawn(move || {
+                a.send(1, 7, vec![1, 2, 3]);
+                a.recv(1, 8)
+            });
+            assert_eq!(b.recv(0, 7), vec![1, 2, 3]);
+            b.send(0, 8, vec![9]);
+            assert_eq!(h.join().unwrap(), vec![9]);
+        }
+    }
+
+    #[test]
+    fn out_of_order_tags_over_sockets() {
+        let (a, b) = pair(Wire::U64);
+        a.send(1, 2, vec![22]);
+        a.send(1, 1, vec![11]);
+        assert_eq!(b.recv(0, 1), vec![11]);
+        assert_eq!(b.recv(0, 2), vec![22]);
+    }
+
+    #[test]
+    fn byte_ledger_counts_payload_and_halves_under_u32() {
+        let mut by_wire = Vec::new();
+        for wire in [Wire::U64, Wire::U32] {
+            let (a, b) = pair(wire);
+            a.send(1, 0, vec![5; 100]);
+            let got = b.recv(0, 0);
+            assert_eq!(got, vec![5; 100]);
+            assert_eq!(a.bytes_sent(), 100 * wire.elem_bytes());
+            assert_eq!(b.bytes_received(), 100 * wire.elem_bytes());
+            by_wire.push(a.bytes_sent());
+        }
+        assert_eq!(by_wire[0], 2 * by_wire[1]);
+    }
+
+    #[test]
+    fn broadcast_gather_over_four_socket_parties() {
+        let eps = loopback_mesh(4, Wire::U32).unwrap();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let own = vec![ep.id() as u64 * 100];
+                    broadcast(&ep, 0, &own);
+                    let all = gather_all(&ep, 0, own);
+                    all.iter().map(|v| v[0]).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![0, 100, 200, 300]);
+        }
+    }
+
+    #[test]
+    fn stray_connection_does_not_abort_the_mesh() {
+        // A port scanner / health probe hitting the listen port during
+        // boot must be dropped, not abort mesh establishment.
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a0 = l0.local_addr().unwrap().to_string();
+        let addrs = vec![a0.clone(), l1.local_addr().unwrap().to_string()];
+        let mut stray = TcpStream::connect(&a0).unwrap();
+        stray.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let addrs2 = addrs.clone();
+        let h0 =
+            std::thread::spawn(move || TcpTransport::establish_on(0, l0, &addrs, Wire::U64));
+        let h1 =
+            std::thread::spawn(move || TcpTransport::establish_on(1, l1, &addrs2, Wire::U64));
+        let t0 = h0.join().unwrap().expect("party 0 must survive the stray connection");
+        let t1 = h1.join().unwrap().expect("party 1 must connect normally");
+        t1.send(0, 0, vec![1, 2]);
+        assert_eq!(t0.recv(1, 0), vec![1, 2]);
+        drop(stray);
+    }
+
+    #[test]
+    fn dead_peer_fails_recv_fast() {
+        // A peer process dying must surface as an immediate "peer is gone"
+        // failure on blocked receives, not a 120 s deadlock timeout.
+        let (a, b) = pair(Wire::U64);
+        drop(a); // party 0 dies: its Drop shuts the sockets down
+        let t0 = std::time::Instant::now();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.recv(0, 0)))
+            .unwrap_err();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "recv must fail fast, not wait out the deadlock timeout"
+        );
+        let msg = err.downcast_ref::<String>().expect("panic payload");
+        assert!(msg.contains("peer is gone"), "{msg}");
+    }
+
+    #[test]
+    fn mixed_wire_mesh_is_rejected() {
+        // Party 0 expects u64 frames, party 1 dials with u32: the
+        // handshake must fail on at least one side (and not hang).
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![
+            l0.local_addr().unwrap().to_string(),
+            l1.local_addr().unwrap().to_string(),
+        ];
+        let addrs2 = addrs.clone();
+        let h0 =
+            std::thread::spawn(move || TcpTransport::establish_on(0, l0, &addrs, Wire::U64));
+        let h1 =
+            std::thread::spawn(move || TcpTransport::establish_on(1, l1, &addrs2, Wire::U32));
+        let r0 = h0.join().unwrap();
+        let r1 = h1.join().unwrap();
+        assert!(r0.is_err() || r1.is_err(), "mixed wire formats must not connect");
+    }
+}

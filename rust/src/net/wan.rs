@@ -35,13 +35,6 @@ impl WanModel {
         WanModel { bandwidth_mbps: 10_000.0, latency_s: 0.0001, msg_proc_s: 0.0 }
     }
 
-    /// Time for a gather of one message from each of `senders` peers at a
-    /// single receiver: latency + serialized per-message processing.
-    pub fn gather_time(&self, senders: usize, bytes_each: u64) -> f64 {
-        self.latency_s
-            + senders as f64 * (self.msg_proc_s + self.serialize_time(bytes_each))
-    }
-
     /// Time for one party to push `bytes` through its NIC.
     pub fn serialize_time(&self, bytes: u64) -> f64 {
         bytes as f64 * 8.0 / (self.bandwidth_mbps * 1e6)

@@ -1,0 +1,192 @@
+//! Wire format: how `Vec<u64>` field elements are framed and encoded on a
+//! byte transport ([`crate::net::tcp`]).
+//!
+//! Every message is one length-prefixed frame:
+//!
+//! ```text
+//! | payload bytes: u32 LE | tag: u64 LE | payload … |
+//! ```
+//!
+//! The payload carries the field elements under the configured [`Wire`]
+//! encoding:
+//!
+//! * [`Wire::U64`] — 8-byte little-endian words, matching the paper's
+//!   64-bit MPI implementation (and the default byte accounting,
+//!   [`crate::net::ELEM_BYTES`]);
+//! * [`Wire::U32`] — packed 4-byte words. Lossless for every supported
+//!   field (`Field::new` requires `p < 2^31`), and **halves** payload
+//!   bytes — the packing ablation of EXPERIMENTS.md.
+//!
+//! The byte ledger (`Transport::bytes_sent`) counts *payload* bytes only,
+//! for both the in-process and the TCP backends, so ledger entries compare
+//! 1:1 across transports; the 12-byte frame header is framing overhead and
+//! is excluded (as the MPI envelope is in the paper's accounting).
+
+/// Element encoding on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    /// 64-bit little-endian words (the paper's MPI layout; default).
+    U64,
+    /// Packed 32-bit little-endian words (`p < 2^31` makes this lossless).
+    U32,
+}
+
+/// Bytes of the frame header: payload length (u32) + tag (u64).
+pub const HEADER_BYTES: usize = 12;
+
+impl Wire {
+    /// Bytes per transmitted field element under this encoding.
+    #[inline]
+    pub const fn elem_bytes(self) -> u64 {
+        match self {
+            Wire::U64 => 8,
+            Wire::U32 => 4,
+        }
+    }
+
+    /// One-byte code used in the TCP handshake.
+    pub(crate) const fn code(self) -> u8 {
+        match self {
+            Wire::U64 => 0,
+            Wire::U32 => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for Wire {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Wire::U64 => "u64",
+            Wire::U32 => "u32",
+        })
+    }
+}
+
+impl std::str::FromStr for Wire {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Wire, String> {
+        match s {
+            "u64" | "64" => Ok(Wire::U64),
+            "u32" | "32" => Ok(Wire::U32),
+            other => Err(format!("unknown wire format '{other}' (expected u64|u32)")),
+        }
+    }
+}
+
+/// Encode one framed message (header + payload).
+///
+/// Panics if an element does not fit the encoding (impossible for reduced
+/// field elements: `p < 2^31`) or the payload exceeds the u32 length
+/// prefix (4 GiB — far above any protocol message).
+pub fn encode_frame(wire: Wire, tag: u64, data: &[u64]) -> Vec<u8> {
+    let payload = data.len() * wire.elem_bytes() as usize;
+    assert!(payload <= u32::MAX as usize, "frame payload exceeds the u32 length prefix");
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload);
+    out.extend_from_slice(&(payload as u32).to_le_bytes());
+    out.extend_from_slice(&tag.to_le_bytes());
+    match wire {
+        Wire::U64 => {
+            for &v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Wire::U32 => {
+            for &v in data {
+                assert!(v <= u32::MAX as u64, "u32 wire format requires elements < 2^32 (got {v})");
+                out.extend_from_slice(&(v as u32).to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Split a frame header into `(payload bytes, tag)`.
+pub fn decode_header(buf: &[u8; HEADER_BYTES]) -> (u32, u64) {
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let tag = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    (len, tag)
+}
+
+/// Decode a frame payload back into field elements.
+pub fn decode_payload(wire: Wire, bytes: &[u8]) -> Result<Vec<u64>, String> {
+    let eb = wire.elem_bytes() as usize;
+    if bytes.len() % eb != 0 {
+        return Err(format!("payload of {} bytes is not a multiple of {eb}", bytes.len()));
+    }
+    Ok(match wire {
+        Wire::U64 => bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        Wire::U32 => bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as u64)
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{P25, P26, P31};
+
+    fn round_trip(wire: Wire, tag: u64, data: &[u64]) {
+        let frame = encode_frame(wire, tag, data);
+        let header: [u8; HEADER_BYTES] = frame[..HEADER_BYTES].try_into().unwrap();
+        let (len, got_tag) = decode_header(&header);
+        assert_eq!(len as usize, frame.len() - HEADER_BYTES);
+        assert_eq!(len as u64, data.len() as u64 * wire.elem_bytes());
+        assert_eq!(got_tag, tag);
+        let decoded = decode_payload(wire, &frame[HEADER_BYTES..]).unwrap();
+        assert_eq!(decoded, data);
+    }
+
+    #[test]
+    fn round_trips_at_field_boundaries() {
+        // Every supported modulus is < 2^31, so its boundary values fit
+        // both encodings.
+        for p in [97u64, P25, P26, P31] {
+            let data = vec![0, 1, p / 2, p - 2, p - 1];
+            for wire in [Wire::U64, Wire::U32] {
+                round_trip(wire, 0, &data);
+                round_trip(wire, u64::MAX, &data);
+            }
+        }
+        // u32 boundary and full u64 range (u64 wire only).
+        round_trip(Wire::U32, 7, &[u32::MAX as u64]);
+        round_trip(Wire::U64, 7, &[u64::MAX, 0, 1 << 63]);
+        // empty payloads frame fine
+        round_trip(Wire::U64, 3, &[]);
+        round_trip(Wire::U32, 3, &[]);
+    }
+
+    #[test]
+    fn u32_payload_is_exactly_half() {
+        let data: Vec<u64> = (0..1000u64).map(|i| i * 2_146_483 % P31).collect();
+        let f64_len = encode_frame(Wire::U64, 1, &data).len() - HEADER_BYTES;
+        let f32_len = encode_frame(Wire::U32, 1, &data).len() - HEADER_BYTES;
+        assert_eq!(f64_len, 2 * f32_len);
+        assert_eq!(f32_len as u64, data.len() as u64 * Wire::U32.elem_bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "requires elements < 2^32")]
+    fn u32_rejects_oversized_elements() {
+        encode_frame(Wire::U32, 0, &[1u64 << 32]);
+    }
+
+    #[test]
+    fn malformed_payload_length_rejected() {
+        assert!(decode_payload(Wire::U64, &[0u8; 7]).is_err());
+        assert!(decode_payload(Wire::U32, &[0u8; 6]).is_err());
+    }
+
+    #[test]
+    fn parse_and_display() {
+        assert_eq!("u64".parse::<Wire>().unwrap(), Wire::U64);
+        assert_eq!("32".parse::<Wire>().unwrap(), Wire::U32);
+        assert!("u16".parse::<Wire>().is_err());
+        assert_eq!(Wire::U32.to_string(), "u32");
+    }
+}

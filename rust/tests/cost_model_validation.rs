@@ -5,7 +5,7 @@
 use copml::bench::cost_model::CopmlCost;
 use copml::coordinator::{protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};
-use copml::net::ELEM_BYTES;
+use copml::net::{Wire, ELEM_BYTES};
 
 /// Analytic per-client bytes of the protocol phases (mirrors
 /// `coordinator::protocol`), for a config with even client split.
@@ -76,10 +76,59 @@ fn copml_cost_model_monotonic_in_n_for_fixed_kt() {
         d: 100,
         iters: 10,
         subgroups: true,
+        wire: Wire::U64,
     }
     .estimate(&cal, &wan);
     let a = mk(10);
     let b = mk(30);
     assert!(b.comm_s > a.comm_s);
     assert!((b.comp_s - a.comp_s).abs() < 1e-9);
+}
+
+#[test]
+fn u32_wire_halves_live_ledger_and_cost_model() {
+    // Acceptance: Wire::U32 reports exactly half the payload bytes of
+    // Wire::U64 — in the live per-phase ledger of a protocol run, and in
+    // the cost model's bytes term — without changing the trajectory.
+    let ds = Dataset::synth(SynthSpec::tiny(), 73);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 7, CaseParams::explicit(2, 1), 73);
+    cfg.iters = 2;
+    let base = protocol::train(&cfg, &ds).unwrap();
+    cfg.wire = Wire::U32;
+    let packed = protocol::train(&cfg, &ds).unwrap();
+    assert_eq!(
+        base.train.w_trace, packed.train.w_trace,
+        "wire packing must be value-transparent"
+    );
+    for (i, (a, b)) in base.ledgers.iter().zip(&packed.ledgers).enumerate() {
+        for p in 0..a.bytes.len() {
+            assert_eq!(a.bytes[p], 2 * b.bytes[p], "client {i} phase {p}");
+        }
+    }
+    // Cost model: zero latency / per-message cost isolates the bytes term.
+    let cal = copml::bench::Calibration {
+        muladd_per_s: 1e9,
+        kernel_cells_per_s: 5e8,
+        share_per_s: 2e8,
+    };
+    let wan = copml::net::wan::WanModel { bandwidth_mbps: 40.0, latency_s: 0.0, msg_proc_s: 0.0 };
+    let c64 = CopmlCost {
+        n: 50,
+        k: 16,
+        t: 1,
+        r: 1,
+        m: 9019,
+        d: 3073,
+        iters: 50,
+        subgroups: true,
+        wire: Wire::U64,
+    };
+    let c32 = CopmlCost { wire: Wire::U32, ..c64 };
+    let e64 = c64.estimate(&cal, &wan);
+    let e32 = c32.estimate(&cal, &wan);
+    let ratio = e64.comm_s / e32.comm_s;
+    assert!((ratio - 2.0).abs() < 1e-12, "cost-model comm ratio {ratio}");
+    // Compute terms are wire-invariant — packing only touches bytes.
+    assert_eq!(e64.comp_s, e32.comp_s);
+    assert_eq!(e64.encdec_s, e32.encdec_s);
 }

@@ -9,6 +9,7 @@
 use copml::coordinator::baseline::{BaselineConfig, MpcFlavor};
 use copml::coordinator::{algo, baseline, protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};
+use copml::net::Wire;
 
 fn tiny_cfg(n: usize, k: usize, t: usize, iters: usize, seed: u64, ds: &Dataset) -> CopmlConfig {
     let mut cfg = CopmlConfig::for_dataset(ds, n, CaseParams::explicit(k, t), seed);
@@ -63,6 +64,41 @@ fn smoke_scale_equivalence_with_case_params() {
     assert_eq!(a.w_trace, p.train.w_trace);
     // and the trained model actually learns
     assert!(p.train.test_accuracy.last().unwrap() > &0.7);
+}
+
+#[test]
+fn tcp_loopback_bit_identical_on_both_wire_formats() {
+    // Acceptance: the full protocol over REAL sockets (every client its
+    // own TCP endpoint on 127.0.0.1) computes a w_trace bit-identical to
+    // the threaded Hub run and to algo mode, under both wire formats —
+    // and u32 packing halves every per-phase ledger byte count exactly.
+    let ds = Dataset::synth(SynthSpec::tiny(), 106);
+    let cfg = tiny_cfg(7, 2, 1, 3, 106, &ds);
+    let algo_out = algo::train(&cfg, &ds).unwrap();
+    let hub = protocol::train(&cfg, &ds).unwrap();
+    assert_eq!(algo_out.w_trace, hub.train.w_trace);
+    let mut ledgers = Vec::new();
+    for wire in [Wire::U64, Wire::U32] {
+        let mut c = cfg.clone();
+        c.wire = wire;
+        let tcp = protocol::train_tcp_loopback(&c, &ds).unwrap();
+        assert_eq!(tcp.train.w_trace, hub.train.w_trace, "wire={wire}");
+        ledgers.push(tcp.ledgers);
+    }
+    for (i, (l64, l32)) in ledgers[0].iter().zip(&ledgers[1]).enumerate() {
+        for p in 0..l64.bytes.len() {
+            assert_eq!(
+                l64.bytes[p],
+                2 * l32.bytes[p],
+                "client {i} phase {p}: u32 packing must halve payload bytes"
+            );
+        }
+    }
+    // And the u64 TCP ledger matches the Hub ledger byte for byte: the
+    // transports charge identical payload accounting.
+    for (lt, lh) in ledgers[0].iter().zip(&hub.ledgers) {
+        assert_eq!(lt.bytes, lh.bytes);
+    }
 }
 
 #[test]
