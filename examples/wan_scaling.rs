@@ -11,6 +11,7 @@
 use copml::bench::{BaselineCost, Calibration, CopmlCost};
 use copml::coordinator::CaseParams;
 use copml::field::Field;
+use copml::mpc::OfflineMode;
 use copml::net::wan::WanModel;
 use copml::net::Wire;
 use copml::report::Table;
@@ -28,12 +29,21 @@ fn main() {
     for n in [10usize, 20, 30, 40, 50] {
         let c1 = CaseParams::case1(n);
         let c2 = CaseParams::case2(n);
-        let copml1 =
-            CopmlCost { n, k: c1.k, t: c1.t, r: 1, m, d, iters, subgroups: true, wire: Wire::U64 }
-                .estimate(&cal, &wan);
-        let copml2 =
-            CopmlCost { n, k: c2.k, t: c2.t, r: 1, m, d, iters, subgroups: true, wire: Wire::U64 }
-                .estimate(&cal, &wan);
+        let cost = |case: CaseParams| CopmlCost {
+            n,
+            k: case.k,
+            t: case.t,
+            r: 1,
+            m,
+            d,
+            iters,
+            subgroups: true,
+            wire: Wire::U64,
+            offline: OfflineMode::Dealer,
+            trunc_bits: 25,
+        };
+        let copml1 = cost(c1).estimate(&cal, &wan);
+        let copml2 = cost(c2).estimate(&cal, &wan);
         let bh08 = BaselineCost::paper(n, m, d, iters, false).estimate(&cal, &wan);
         let bgw = BaselineCost::paper(n, m, d, iters, true).estimate(&cal, &wan);
         table.row(&[

@@ -15,6 +15,7 @@
 use copml::bench::{time_it, BaselineCost, Calibration, CopmlCost};
 use copml::coordinator::CaseParams;
 use copml::field::{Field, MatShape, Parallelism};
+use copml::mpc::OfflineMode;
 use copml::net::wan::WanModel;
 use copml::net::Wire;
 use copml::prng::Rng;
@@ -84,6 +85,8 @@ fn run_dataset(
                 iters,
                 subgroups: true,
                 wire: Wire::U64,
+                offline: OfflineMode::Dealer,
+                trunc_bits: 25,
             }
             .estimate(cal, wan);
             est.comp_s = comp_iter * iters as f64;
@@ -148,6 +151,8 @@ fn main() {
         iters: 50,
         subgroups: true,
         wire: Wire::U64,
+        offline: OfflineMode::Dealer,
+        trunc_bits: 25,
     };
     let copml_n50 = copml_50.estimate(&cal, &wan);
     assert!(

@@ -28,9 +28,9 @@ fn observe(m: usize, d: usize, n: usize, k: usize, t: usize, iters: usize) -> Ob
     // comm: encode-model + share-results + decode openings (per-iteration
     // phases; dataset sharing is the one-time offline step the paper
     // excludes via footnote 5).
-    let comm: u64 = out.ledgers.iter().map(|l| l.bytes[2] + l.bytes[3] + l.bytes[5] + l.bytes[6]).sum();
-    let comp: f64 = out.ledgers.iter().map(|l| l.seconds[4]).sum();
-    let encdec: f64 = out.ledgers.iter().map(|l| l.seconds[2] + l.seconds[3] + l.seconds[6]).sum();
+    let comm: u64 = out.ledgers.iter().map(|l| l.bytes[3] + l.bytes[4] + l.bytes[6] + l.bytes[7]).sum();
+    let comp: f64 = out.ledgers.iter().map(|l| l.seconds[5]).sum();
+    let encdec: f64 = out.ledgers.iter().map(|l| l.seconds[3] + l.seconds[4] + l.seconds[7]).sum();
     Obs { comm_bytes: comm as f64 / nl, comp_s: comp / nl, encdec_s: encdec / nl }
 }
 
@@ -93,5 +93,25 @@ fn main() {
     ));
 
     table.print();
+
+    // Offline column (live): under `--offline distributed` the randomness
+    // generation is real ledger traffic — phase 0 — scaling with the bit
+    // demand (≈ 2·d·J·(k₂+κ) bits); under the dealer it is exactly zero.
+    let spec = SynthSpec { m_train: 96, m_test: 16, d: 12, ..SynthSpec::tiny() };
+    let ds = Dataset::synth(spec, 9);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 7, CaseParams::explicit(2, 1), 9);
+    cfg.iters = 2;
+    let dealer = protocol::train(&cfg, &ds).expect("dealer run");
+    cfg.offline = copml::mpc::OfflineMode::Distributed;
+    let dist = protocol::train(&cfg, &ds).expect("distributed run");
+    let dealer_off: u64 = dealer.ledgers.iter().map(|l| l.bytes[0]).sum();
+    let dist_off: u64 = dist.ledgers.iter().map(|l| l.bytes[0]).sum();
+    let online: u64 = dist.ledgers.iter().map(|l| l.bytes[1..].iter().sum::<u64>()).sum();
+    println!(
+        "offline column (live, N=7 K=2 T=1 J=2): dealer {dealer_off} B, \
+         distributed {dist_off} B (online phases: {online} B)"
+    );
+    assert_eq!(dealer_off, 0, "dealer offline phase must be free on the wire");
+    assert!(dist_off > 0, "distributed offline phase must appear in the ledger");
     println!("table2 scaling checks passed");
 }

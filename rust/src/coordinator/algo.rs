@@ -81,8 +81,22 @@ fn trunc_central(
 
 /// Train COPML in algorithmic-fidelity mode. Returns the per-iteration
 /// field-domain model trace (identical to the protocol's).
+///
+/// Requires [`crate::mpc::OfflineMode::Dealer`]: the central replay works
+/// *because* the truncation randomness is a function of `(seed, stream,
+/// index)` alone. A distributed offline phase has no such closed form —
+/// its randomness exists only in the parties' joint execution — so
+/// `offline = distributed` must run the full protocol (`mode full`).
 pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<TrainOutput, String> {
     cfg.validate(ds)?;
+    if cfg.offline != crate::mpc::OfflineMode::Dealer {
+        return Err(
+            "offline mode 'distributed' cannot be replayed centrally: the \
+             algorithmic-fidelity trainer derives truncation randomness from \
+             the dealer seed — run the full protocol instead (mode 'full')"
+                .into(),
+        );
+    }
     let task = QuantizedTask::new(cfg, ds);
     train_task(cfg, ds, &task)
 }

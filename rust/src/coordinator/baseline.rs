@@ -110,6 +110,9 @@ impl BaselineConfig {
             subgroups: false,
             parallelism: self.parallelism,
             wire: crate::net::Wire::U64,
+            // Baselines reproduce the paper's dealer-assisted setups; the
+            // dealer-free offline phase is a COPML-protocol feature.
+            offline: crate::mpc::OfflineMode::Dealer,
         }
     }
 }

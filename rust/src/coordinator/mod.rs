@@ -28,6 +28,7 @@ use crate::field::{Field, Parallelism};
 use crate::lcc;
 use crate::ml::fit_sigmoid;
 use crate::ml::sigmoid::SigmoidPoly;
+use crate::mpc::OfflineMode;
 use crate::net::Wire;
 use crate::quant::{self, FpPlan};
 use crate::runtime::Engine;
@@ -94,6 +95,11 @@ pub struct CopmlConfig {
     /// bytes. Value-transparent: the model trajectory is bit-identical
     /// under either format.
     pub wire: Wire,
+    /// Who produces the offline randomness pools: the trusted dealer
+    /// (footnote 3's crypto-service provider — the default, bit-identical
+    /// to every pre-existing trace) or the dealer-free distributed phase
+    /// ([`crate::mpc::offline`], DN07 extraction over the live transport).
+    pub offline: OfflineMode,
 }
 
 impl CopmlConfig {
@@ -115,6 +121,7 @@ impl CopmlConfig {
             subgroups: true,
             parallelism: Parallelism::sequential(),
             wire: Wire::U64,
+            offline: OfflineMode::Dealer,
         }
     }
 

@@ -23,8 +23,7 @@ use std::time::Instant;
 use crate::data::Dataset;
 use crate::field::{par, MatShape};
 use crate::lcc;
-use crate::mpc::dealer::Dealer;
-use crate::mpc::Party;
+use crate::mpc::{Dealer, Offline, OfflineMode, Party};
 use crate::net::local::Hub;
 use crate::net::Transport;
 use crate::poly;
@@ -35,7 +34,12 @@ use super::algo::copml_demand;
 use super::{CopmlConfig, QuantizedTask, TrainOutput};
 
 /// Phase labels of the per-client ledger (order = execution order).
-pub const PHASES: [&str; 7] = [
+/// Phase 0 is the offline randomness generation: zero bytes under
+/// [`crate::mpc::OfflineMode::Dealer`] (the crypto-service provider is
+/// free on the wire), real DN07 traffic under
+/// [`crate::mpc::OfflineMode::Distributed`].
+pub const PHASES: [&str; 8] = [
+    "offline",
     "share_dataset",
     "xty",
     "encode_dataset",
@@ -49,9 +53,9 @@ pub const PHASES: [&str; 7] = [
 #[derive(Clone, Debug, Default)]
 pub struct ClientLedger {
     /// Seconds per phase, aligned with [`PHASES`].
-    pub seconds: [f64; 7],
+    pub seconds: [f64; 8],
     /// Payload bytes sent per phase.
-    pub bytes: [u64; 7],
+    pub bytes: [u64; 8],
 }
 
 impl ClientLedger {
@@ -186,12 +190,15 @@ pub fn train_tcp_loopback(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOut
 }
 
 /// Run ONE client of the full protocol over an already-established
-/// transport — the distributed entry point (`copml party`). Every process
-/// derives the same offline dealer pools from `cfg.seed` (the paper's
-/// crypto-service-provider runs offline; here it is replayed from the
-/// shared seed) and executes the same SPMD sequence as the threaded
-/// [`train`], so a mesh of `run_client` processes is bit-identical to the
-/// Hub run for the same configuration.
+/// transport — the distributed entry point (`copml party`). The offline
+/// pool comes from `cfg.offline`'s provider: under `dealer` every process
+/// replays its pool from `cfg.seed` (the paper's crypto-service-provider
+/// runs offline; here it is replayed from the shared seed); under
+/// `distributed` the processes generate it collectively over the mesh —
+/// zero dealer involvement. Either way every process executes the same
+/// SPMD sequence as the threaded [`train`], so a mesh of `run_client`
+/// processes matches the Hub run for the same configuration
+/// (bit-identically — both modes are deterministic per seed).
 pub fn run_client(
     cfg: &CopmlConfig,
     ds: &Dataset,
@@ -207,15 +214,32 @@ pub fn run_client(
     let task = Arc::new(QuantizedTask::new(cfg, ds));
     let f = task.f;
     let demand = copml_demand(cfg, task.d, task.rows_padded);
-    // deal_one: this process only ever holds its own offline pool (not all
-    // n of them) — bit-identical to `Dealer::deal(..)[id]`.
-    let pool =
-        Dealer::deal_one(f, cfg.n, cfg.t, &demand, cfg.plan.k2, cfg.plan.kappa, cfg.seed, net.id());
+    // The offline phase runs first, over the same transport: the dealer
+    // provider replays this party's pool from the shared seed (zero
+    // traffic, bit-identical to `Dealer::deal(..)[id]`); the distributed
+    // provider generates it collectively with the other parties (DN07,
+    // real bytes — ledger phase 0).
+    let t0 = Instant::now();
+    let bytes_mark = net.bytes_sent();
+    let pool = cfg.offline.provider().provide(
+        net,
+        f,
+        cfg.t,
+        &demand,
+        cfg.plan.k2,
+        cfg.plan.kappa,
+        cfg.seed,
+    );
+    let offline_s = t0.elapsed().as_secs_f64();
+    let offline_bytes = net.bytes_sent() - bytes_mark;
     let kernel: Box<dyn GradKernel> =
         Box::new(NativeKernel::with_parallelism(f, cfg.parallelism));
     let ctx = ClientCtx { cfg: cfg.clone(), task, kernel };
     let party = Party::new(net, cfg.t, f, pool, cfg.seed);
-    Ok(client_main(&party, ctx))
+    let mut out = client_main(&party, ctx);
+    out.ledger.seconds[0] = offline_s;
+    out.ledger.bytes[0] = offline_bytes;
+    Ok(out)
 }
 
 /// Spawn one client thread per transport endpoint, join, and aggregate:
@@ -233,15 +257,52 @@ fn run_clients<T: Transport + Send + 'static>(
     let (n, t) = (cfg.n, cfg.t);
     assert_eq!(transports.len(), n, "one endpoint per client");
     let demand = copml_demand(cfg, task.d, task.rows_padded);
-    let pools = Dealer::deal(f, n, t, &demand, cfg.plan.k2, cfg.plan.kappa, cfg.seed);
+
+    // Dealer mode pre-deals all pools in ONE pass here (the provider's
+    // `deal_one` is for one-process-per-party runs — calling it from
+    // every client thread would redo the full N-party share evaluation N
+    // times). The distributed phase has no central shortcut: each thread
+    // runs the DN07 protocol over its own endpoint (ledger phase 0).
+    let predealt: Vec<Option<Offline>> = match cfg.offline {
+        OfflineMode::Dealer => {
+            Dealer::deal(f, n, t, &demand, cfg.plan.k2, cfg.plan.kappa, cfg.seed)
+                .into_iter()
+                .map(Some)
+                .collect()
+        }
+        OfflineMode::Distributed => (0..n).map(|_| None).collect(),
+    };
 
     let mut handles = Vec::new();
-    for (ep, pool) in transports.into_iter().zip(pools) {
+    for (ep, dealt) in transports.into_iter().zip(predealt) {
         let ctx = ClientCtx { cfg: cfg.clone(), task: task.clone(), kernel: mk_kernel() };
         let seed = cfg.seed;
+        let demand = demand.clone();
         handles.push(std::thread::spawn(move || {
+            let (pool, offline_s, offline_bytes) = match dealt {
+                // Crypto-service provider: pool already dealt, free on
+                // the wire — the offline ledger row stays zero.
+                Some(pool) => (pool, 0.0, 0),
+                None => {
+                    let t0 = Instant::now();
+                    let bytes_mark = ep.bytes_sent();
+                    let pool = ctx.cfg.offline.provider().provide(
+                        &ep,
+                        ctx.task.f,
+                        ctx.cfg.t,
+                        &demand,
+                        ctx.cfg.plan.k2,
+                        ctx.cfg.plan.kappa,
+                        seed,
+                    );
+                    (pool, t0.elapsed().as_secs_f64(), ep.bytes_sent() - bytes_mark)
+                }
+            };
             let party = Party::new(&ep, ctx.cfg.t, ctx.task.f, pool, seed);
-            client_main(&party, ctx)
+            let mut out = client_main(&party, ctx);
+            out.ledger.seconds[0] = offline_s;
+            out.ledger.bytes[0] = offline_bytes;
+            out
         }));
     }
     let mut results: Vec<ClientOutput> = handles
@@ -340,7 +401,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         x_share[jl * d..jh * d].copy_from_slice(&xs);
         y_share[jl..jh].copy_from_slice(&ys);
     }
-    timer.tick(&mut ledger, 0, party);
+    timer.tick(&mut ledger, 1, party);
 
     // ---- Phase: [Xᵀy], aligned (Algorithm 1, line 10) -------------------
     let pp = cfg.parallelism;
@@ -349,7 +410,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     let mut xty = party.degree_reduce_bh08(&local); // deg T
     let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
     party.scale(&mut xty, align);
-    timer.tick(&mut ledger, 1, party);
+    timer.tick(&mut ledger, 2, party);
 
     // ---- Phase: Lagrange-encode the dataset (Eq. 3; lines 5–9) ----------
     let enc = lcc::Encoder::standard(f, k, t, n);
@@ -388,7 +449,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     rec.reconstruct(f, &views, &mut x_tilde);
     drop(enc_shares);
     drop(x_share);
-    timer.tick(&mut ledger, 2, party);
+    timer.tick(&mut ledger, 3, party);
 
     // Precompute: model-encoding coefficient rows (Eq. 4 — the K data
     // slots all carry [w], so their coefficients collapse to a row sum).
@@ -441,11 +502,11 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         let views: Vec<&[u64]> = wenc_shares.iter().map(|v| v.as_slice()).collect();
         let mut w_tilde = vec![0u64; d];
         rec.reconstruct(f, &views, &mut w_tilde);
-        timer.tick(&mut ledger, 3, party);
+        timer.tick(&mut ledger, 4, party);
 
         // ---- local encoded gradient (Eq. 7; line 16) --------------------
         let f_mine = ctx.kernel.encoded_gradient(&x_tilde, shape_k, &w_tilde, &task.coeffs_q);
-        timer.tick(&mut ledger, 4, party);
+        timer.tick(&mut ledger, 5, party);
 
         // ---- share the result (line 16b) --------------------------------
         let tag_res = party.fresh_tag();
@@ -465,7 +526,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
                 let _ = party.net.recv(j, tag_res);
             }
         }
-        timer.tick(&mut ledger, 5, party);
+        timer.tick(&mut ledger, 6, party);
 
         // ---- decode + model update (Eq. 10–11; lines 18–23) -------------
         let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
@@ -477,7 +538,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         let g2 = party.trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, true);
         party.sub(&mut w_share, &g2);
         snapshots.push(w_share.clone());
-        timer.tick(&mut ledger, 6, party);
+        timer.tick(&mut ledger, 7, party);
     }
 
     // ---- final: open the model (lines 25–27) ----------------------------

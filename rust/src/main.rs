@@ -5,9 +5,12 @@
 //!               [--iters 50] [--eta 2.0] [--mode algo|full] [--engine native|pjrt]
 //!               [--threads 1]            # 0 = all cores (field::par)
 //!               [--wire u64|u32]         # full mode: wire format / byte ledger
+//!               [--offline dealer|distributed]  # full mode: offline randomness
 //! copml party   --id I --listen ADDR --peers A0,A1,...   # one distributed client
-//!               [--wire u64|u32] [+ train's dataset/config options]
+//!               [--wire u64|u32] [--offline dealer|distributed]
+//!               [+ train's dataset/config options]
 //! copml bench   --dataset cifar --n 50 [--wire u64|u32]  # cost-model Table-I row
+//!               [--offline dealer|distributed]
 //! copml calibrate                                  # machine calibration
 //! copml info                                       # config/threshold explorer
 //! ```
@@ -20,6 +23,7 @@ use copml::cli::Args;
 use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};
 use copml::field::{Field, Parallelism};
+use copml::mpc::OfflineMode;
 use copml::net::tcp::TcpTransport;
 use copml::net::wan::WanModel;
 use copml::net::{Transport, Wire};
@@ -77,6 +81,7 @@ fn config_from_args(args: &Args, ds: &Dataset, n: usize, seed: u64) -> Result<Co
     cfg.iters = args.get_or("iters", cfg.iters)?;
     cfg.eta = args.get_or("eta", cfg.eta)?;
     cfg.wire = args.get_or("wire", Wire::U64)?;
+    cfg.offline = args.get_or("offline", OfflineMode::Dealer)?;
     Ok(cfg)
 }
 
@@ -104,9 +109,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         n => Parallelism::threads(n),
     };
     println!(
-        "COPML train: dataset={} (m={}, d={})  N={} K={} T={} r={}  iters={} η={}  p={}  threads={}",
+        "COPML train: dataset={} (m={}, d={})  N={} K={} T={} r={}  iters={} η={}  p={}  threads={}  offline={}",
         ds.name, ds.m, ds.d, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters, cfg.eta,
-        cfg.plan.field.modulus(), cfg.parallelism.thread_count()
+        cfg.plan.field.modulus(), cfg.parallelism.thread_count(), cfg.offline
     );
     let out = match mode {
         "algo" => algo::train(&cfg, &ds)?,
@@ -180,8 +185,8 @@ fn cmd_party(args: &Args) -> Result<(), String> {
         nt => Parallelism::threads(nt),
     };
     println!(
-        "COPML party {id}/{n}: listen={listen} wire={}  dataset={} (m={}, d={})  K={} T={} iters={}",
-        cfg.wire, ds.name, ds.m, ds.d, cfg.k, cfg.t, cfg.iters
+        "COPML party {id}/{n}: listen={listen} wire={} offline={}  dataset={} (m={}, d={})  K={} T={} iters={}",
+        cfg.wire, cfg.offline, ds.name, ds.m, ds.d, cfg.k, cfg.t, cfg.iters
     );
     let net = TcpTransport::establish(id, listen, &peers, cfg.wire)
         .map_err(|e| format!("establishing the TCP mesh: {e}"))?;
@@ -216,6 +221,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let n = args.get_or("n", 50usize)?;
     let iters = args.get_or("iters", 50usize)?;
     let wire: Wire = args.get_or("wire", Wire::U64)?;
+    let offline: OfflineMode = args.get_or("offline", OfflineMode::Dealer)?;
     let plan = if ds.d > 4096 {
         copml::quant::FpPlan::paper_gisette()
     } else {
@@ -225,8 +231,8 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let cal = Calibration::measure(plan.field);
     let wan = WanModel::paper();
     let mut table = Table::new(
-        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {wire} wire (modeled on measured primitives)"),
-        &["Protocol", "Comp (s)", "Comm (s)", "Enc/Dec (s)", "Total (s)"],
+        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {wire} wire, {offline} offline (modeled on measured primitives)"),
+        &["Protocol", "Comp (s)", "Comm (s)", "Enc/Dec (s)", "Offline (s)", "Total (s)"],
     );
     let case1 = CaseParams::case1(n);
     let case2 = CaseParams::case2(n);
@@ -234,13 +240,25 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         ("COPML (Case 1)", case1.k, case1.t),
         ("COPML (Case 2)", case2.k, case2.t),
     ] {
-        let c = CopmlCost { n, k, t, r: 1, m: ds.m, d: ds.d, iters, subgroups: true, wire }
-            .estimate(&cal, &wan);
-        table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.total_s()], 1);
+        let c = CopmlCost {
+            n,
+            k,
+            t,
+            r: 1,
+            m: ds.m,
+            d: ds.d,
+            iters,
+            subgroups: true,
+            wire,
+            offline,
+            trunc_bits: plan.k2 + plan.kappa,
+        }
+        .estimate(&cal, &wan);
+        table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.offline_s, c.total_s()], 1);
     }
     for (label, bgw) in [("MPC using [BGW88]", true), ("MPC using [BH08]", false)] {
         let c = BaselineCost::paper(n, ds.m, ds.d, iters, bgw).estimate(&cal, &wan);
-        table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.total_s()], 1);
+        table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.offline_s, c.total_s()], 1);
     }
     table.print();
     Ok(())

@@ -19,10 +19,14 @@
 //! All collectives operate element-wise on vectors of shares and consume
 //! one transport tag each; parties execute the same SPMD sequence, so tags
 //! stay aligned. Offline randomness (double sharings, truncation pairs,
-//! random vectors) comes from [`dealer`], mirroring the paper's
-//! crypto-service-provider assumption (footnote 3).
+//! random vectors) comes from an [`offline::OfflineProvider`]: either the
+//! trusted [`dealer`] (the paper's crypto-service-provider assumption,
+//! footnote 3) or the dealer-free distributed phase in [`offline`]
+//! (DN07 randomness extraction — the pseudo-random-secret-sharing
+//! alternative the same footnote names).
 
 pub mod dealer;
+pub mod offline;
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -33,7 +37,8 @@ use crate::poly;
 use crate::prng::Rng;
 use crate::shamir;
 
-pub use dealer::{Dealer, Offline};
+pub use dealer::Dealer;
+pub use offline::{Offline, OfflineMode, OfflineProvider};
 
 /// Stream label for party-local online randomness ("PRTY" in the high
 /// bits, party id in the low bits). Distinct from every `mpc::dealer`
@@ -53,6 +58,44 @@ fn party_rng(seed: u64, id: PartyId) -> Rng {
     Rng::seed_from_u64(seed).fork(STREAM_PARTY | id as u64)
 }
 
+/// King-opening primitive shared by the online [`Party`] and the offline
+/// session ([`offline`]): parties `0..=deg` send their shares to the king
+/// (party 0) under `tag_up`; the king reconstructs with `coeffs`
+/// (evaluation-at-0 row over `λ_1..λ_{deg+1}`) and broadcasts the value
+/// under `tag_down`. `O(N)` total communication.
+pub(crate) fn open_via_king(
+    net: &dyn Transport,
+    f: Field,
+    coeffs: &[u64],
+    tag_up: u64,
+    tag_down: u64,
+    share: &[u64],
+    deg: usize,
+) -> Vec<u64> {
+    const KING: PartyId = 0;
+    let me = net.id();
+    if me == KING {
+        let mut contributions: Vec<Vec<u64>> = Vec::with_capacity(deg + 1);
+        for peer in 0..=deg {
+            contributions.push(if peer == KING {
+                share.to_vec()
+            } else {
+                net.recv(peer, tag_up)
+            });
+        }
+        let views: Vec<&[u64]> = contributions.iter().map(|v| v.as_slice()).collect();
+        let mut value = vec![0u64; share.len()];
+        vecops::weighted_sum(f, coeffs, &views, &mut value);
+        broadcast(net, tag_down, &value);
+        value
+    } else {
+        if me <= deg {
+            net.send(KING, tag_up, share.to_vec());
+        }
+        net.recv(KING, tag_down)
+    }
+}
+
 /// One party's view of an `N`-party MPC session.
 pub struct Party<'a> {
     pub id: PartyId,
@@ -62,7 +105,8 @@ pub struct Party<'a> {
     pub net: &'a dyn Transport,
     /// Shamir evaluation points `λ_1..λ_N` (public).
     pub lambdas: Vec<u64>,
-    /// Offline randomness pools from the dealer.
+    /// Offline randomness pools (dealer-dealt or distributed-generated —
+    /// [`offline::OfflineProvider`]).
     offline: RefCell<Offline>,
     /// Party-local randomness (for online resharing in BGW).
     rng: RefCell<Rng>,
@@ -176,28 +220,8 @@ impl<'a> Party<'a> {
     pub fn open_king(&self, share: &[u64], deg: usize) -> Vec<u64> {
         let tag_up = self.fresh_tag();
         let tag_down = self.fresh_tag();
-        const KING: PartyId = 0;
-        if self.id == KING {
-            let coeffs = self.recon_coeffs(deg);
-            let mut contributions: Vec<Vec<u64>> = Vec::with_capacity(deg + 1);
-            for peer in 0..=deg {
-                contributions.push(if peer == KING {
-                    share.to_vec()
-                } else {
-                    self.net.recv(peer, tag_up)
-                });
-            }
-            let views: Vec<&[u64]> = contributions.iter().map(|v| v.as_slice()).collect();
-            let mut value = vec![0u64; share.len()];
-            vecops::weighted_sum(self.f, &coeffs, &views, &mut value);
-            broadcast(self.net, tag_down, &value);
-            value
-        } else {
-            if self.id <= deg {
-                self.net.send(KING, tag_up, share.to_vec());
-            }
-            self.net.recv(KING, tag_down)
-        }
+        let coeffs = self.recon_coeffs(deg);
+        open_via_king(self.net, self.f, &coeffs, tag_up, tag_down, share, deg)
     }
 
     /// Secret-share a vector this party knows in the clear: sends `[v]_j`

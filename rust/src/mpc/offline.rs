@@ -1,0 +1,826 @@
+//! Offline randomness: the pools the online protocol consumes, and **who
+//! produces them**.
+//!
+//! The paper's footnote 3 allows two sources for the offline randomness
+//! (double sharings, truncation pairs, random sharings):
+//!
+//! * a **crypto-service provider** — the trusted dealer of
+//!   [`super::dealer`], replayed here from the shared seed
+//!   ([`OfflineMode::Dealer`], the default; bit-identical to every
+//!   pre-existing trace);
+//! * **pseudo-random secret sharing by the parties themselves** —
+//!   implemented here as a DN07-style *distributed offline phase*
+//!   ([`OfflineMode::Distributed`]): no dealer, every pool is generated
+//!   collectively over the live [`Transport`], and its traffic lands in
+//!   the byte ledgers like any online phase.
+//!
+//! Both run behind the [`OfflineProvider`] trait, so the trainers select a
+//! source without knowing how the pools were made.
+//!
+//! ## The distributed protocol (semi-honest, `N > 2T`)
+//!
+//! * **Random degree-`T` sharings** — DN07 batched generation: each party
+//!   deals a random degree-`T` sharing of a fresh batch; a Vandermonde
+//!   [`extraction_matrix`] turns the `N` dealt sharings into `N − T`
+//!   outputs that remain uniform to any `T` colluding parties (any
+//!   `N − T` columns of the matrix are invertible, so the honest dealers'
+//!   inputs act as a bijection onto the outputs). Amortized cost:
+//!   `N/(N−T) = O(1)` sharings dealt per usable output — `O(N)` field
+//!   elements of traffic per output across all parties.
+//! * **Double sharings** `([ρ]_T, [ρ]_2T)` — same extraction, run on a
+//!   degree-`T` and a degree-`2T` dealing of the *same* dealer batches;
+//!   the extraction is linear, so both halves reconstruct the same ρ.
+//! * **Shared random bits** (for TruncPr pairs, Catrina–Saxena): take an
+//!   extracted random `[a]_T`, square it locally (degree `2T`), open `a²`
+//!   via the king, compute the canonical root `c = √(a²)` in public, and
+//!   output `[b] = (c⁻¹·[a] + 1)/2` — a uniform bit, because the sign of
+//!   `a` is uniform and independent of `a²`. Slots where `a² = 0` are
+//!   discarded (all parties see the same opened values, so they agree)
+//!   and regenerated.
+//! * **Truncation pairs** `([r']_T, [r'']_T)` for width `m` — composed
+//!   per pair from `m` bits (`r' = Σ 2^i b_i`) and `k₂+κ−m` bits
+//!   (`r''`), entirely linear on the bit shares.
+//!
+//! The phase uses its own tag range ([`TAG_BASE`]) so it can run on the
+//! same transport *before* the online tags start at 0, and a per-party
+//! RNG fork domain-separated from both the dealer streams and the online
+//! resharing streams. In a real deployment each party would seed from its
+//! own entropy; here the forks derive from the shared run seed so
+//! distributed runs stay reproducible (see `prng` module docs — the same
+//! caveat the dealer carries).
+
+use std::collections::HashMap;
+
+use crate::field::{vecops, Field};
+use crate::net::{PartyId, Transport, Wire};
+use crate::poly;
+use crate::prng::Rng;
+use crate::shamir;
+
+use super::dealer::Dealer;
+
+/// First tag of the offline phase's private tag range. The online
+/// protocol allocates tags from 0 upward; the offline phase (which runs
+/// first, over the same transport) allocates from here, so the two can
+/// never collide.
+pub const TAG_BASE: u64 = 1 << 62;
+
+/// Stream label for the per-party offline-phase RNG ("OFFL" in the high
+/// bits, party id in the low bits). Distinct from every `mpc::dealer`
+/// stream label and from `mpc::STREAM_PARTY`.
+const STREAM_OFFLINE: u64 = 0x4F46_464C_0000_0000;
+
+// ---------------------------------------------------------------------
+// Pools (shared by both providers).
+// ---------------------------------------------------------------------
+
+/// Pool sizing for one protocol run.
+#[derive(Clone, Debug, Default)]
+pub struct Demand {
+    /// Elements passing through BH08 degree reduction.
+    pub doubles: usize,
+    /// Elements passing through TruncPr, per truncation width `m`:
+    /// `(m, count)`.
+    pub truncs: Vec<(u32, usize)>,
+    /// Elements of fresh random degree-T sharings.
+    pub randoms: usize,
+}
+
+pub(crate) struct Stream {
+    data: Vec<u64>,
+    pos: usize,
+}
+
+impl Stream {
+    pub(crate) fn new(data: Vec<u64>) -> Stream {
+        Stream { data, pos: 0 }
+    }
+    fn take(&mut self, len: usize, what: &str) -> Vec<u64> {
+        assert!(
+            self.pos + len <= self.data.len(),
+            "offline {what} pool exhausted (need {len} more of {})",
+            self.data.len()
+        );
+        let lo = self.pos;
+        self.pos += len;
+        self.data[lo..lo + len].to_vec()
+    }
+}
+
+/// Per-party pools of offline randomness. Streams are consumed linearly;
+/// exhaustion panics with a sizing hint (the coordinator precomputes exact
+/// demand).
+pub struct Offline {
+    pub(crate) double_t: Stream,
+    pub(crate) double_2t: Stream,
+    pub(crate) trunc_rp: HashMap<u32, Stream>,
+    pub(crate) trunc_rpp: HashMap<u32, Stream>,
+    pub(crate) random_t: Stream,
+}
+
+impl Default for Offline {
+    fn default() -> Self {
+        Offline {
+            double_t: Stream::new(Vec::new()),
+            double_2t: Stream::new(Vec::new()),
+            trunc_rp: HashMap::new(),
+            trunc_rpp: HashMap::new(),
+            random_t: Stream::new(Vec::new()),
+        }
+    }
+}
+
+impl Offline {
+    pub fn take_double(&mut self, len: usize) -> (Vec<u64>, Vec<u64>) {
+        (
+            self.double_t.take(len, "double-sharing"),
+            self.double_2t.take(len, "double-sharing"),
+        )
+    }
+
+    /// Take `len` truncation pairs for width `m`.
+    pub fn take_trunc_pair(&mut self, len: usize, m: u32) -> (Vec<u64>, Vec<u64>) {
+        let rp = self
+            .trunc_rp
+            .get_mut(&m)
+            .unwrap_or_else(|| panic!("no truncation pool for width m={m}"))
+            .take(len, "truncation");
+        let rpp = self
+            .trunc_rpp
+            .get_mut(&m)
+            .unwrap_or_else(|| panic!("no truncation pool for width m={m}"))
+            .take(len, "truncation");
+        (rp, rpp)
+    }
+
+    pub fn take_random(&mut self, len: usize) -> Vec<u64> {
+        self.random_t.take(len, "random-share")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mode + provider trait.
+// ---------------------------------------------------------------------
+
+/// Who produces the offline pools.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OfflineMode {
+    /// Trusted crypto-service provider (footnote 3), replayed from the
+    /// shared seed. Free on the wire; the default, bit-identical to every
+    /// pre-existing trace.
+    #[default]
+    Dealer,
+    /// Dealer-free: the parties generate every pool collectively (DN07
+    /// extraction + Catrina–Saxena bits) over the live transport. The
+    /// offline phase becomes a real, byte-accounted protocol cost.
+    Distributed,
+}
+
+impl OfflineMode {
+    /// The provider implementing this mode.
+    pub fn provider(self) -> Box<dyn OfflineProvider> {
+        match self {
+            OfflineMode::Dealer => Box::new(DealerProvider),
+            OfflineMode::Distributed => Box::new(DistributedProvider),
+        }
+    }
+}
+
+impl std::fmt::Display for OfflineMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            OfflineMode::Dealer => "dealer",
+            OfflineMode::Distributed => "distributed",
+        })
+    }
+}
+
+impl std::str::FromStr for OfflineMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<OfflineMode, String> {
+        match s {
+            "dealer" => Ok(OfflineMode::Dealer),
+            "distributed" | "dist" => Ok(OfflineMode::Distributed),
+            other => Err(format!(
+                "unknown offline mode '{other}' (expected dealer|distributed)"
+            )),
+        }
+    }
+}
+
+/// A source of per-party offline pools. `provide` runs on party
+/// `net.id()`'s thread/process; the distributed provider communicates
+/// over `net` (its own tag range), the dealer provider replays pools from
+/// the shared seed without touching the wire.
+pub trait OfflineProvider {
+    fn mode(&self) -> OfflineMode;
+
+    #[allow(clippy::too_many_arguments)]
+    fn provide(
+        &self,
+        net: &dyn Transport,
+        f: Field,
+        t: usize,
+        demand: &Demand,
+        k2: u32,
+        kappa: u32,
+        seed: u64,
+    ) -> Offline;
+}
+
+/// [`OfflineMode::Dealer`]: the crypto-service provider of
+/// [`super::dealer`], replayed per party from the shared seed
+/// (bit-identical to `Dealer::deal(..)[id]`).
+pub struct DealerProvider;
+
+impl OfflineProvider for DealerProvider {
+    fn mode(&self) -> OfflineMode {
+        OfflineMode::Dealer
+    }
+
+    fn provide(
+        &self,
+        net: &dyn Transport,
+        f: Field,
+        t: usize,
+        demand: &Demand,
+        k2: u32,
+        kappa: u32,
+        seed: u64,
+    ) -> Offline {
+        Dealer::deal_one(f, net.n(), t, demand, k2, kappa, seed, net.id())
+    }
+}
+
+/// [`OfflineMode::Distributed`]: the dealer-free DN07 phase (module docs).
+pub struct DistributedProvider;
+
+impl OfflineProvider for DistributedProvider {
+    fn mode(&self) -> OfflineMode {
+        OfflineMode::Distributed
+    }
+
+    fn provide(
+        &self,
+        net: &dyn Transport,
+        f: Field,
+        t: usize,
+        demand: &Demand,
+        k2: u32,
+        kappa: u32,
+        seed: u64,
+    ) -> Offline {
+        generate(net, f, t, demand, k2, kappa, seed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Extraction core (pure — property-tested in tests/offline_props.rs).
+// ---------------------------------------------------------------------
+
+/// DN07 randomness-extraction matrix: `(N−T) × N` Vandermonde rows
+/// `M[i][j] = λ_j^i` over the standard share points `λ_j = j+1`.
+///
+/// Any `N−T` columns form a transposed Vandermonde on distinct nonzero
+/// points, hence are invertible: with at most `T` corrupt dealers, the
+/// honest dealers' inputs map *bijectively* onto the `N−T` outputs, so
+/// the outputs are uniform (and unknown) to the adversary as long as one
+/// honest dealer's input was.
+pub fn extraction_matrix(f: Field, n: usize, t: usize) -> Vec<Vec<u64>> {
+    assert!(n > t, "need more parties than the threshold (n={n}, t={t})");
+    let xs = shamir::lambda_points(n);
+    (0..n - t)
+        .map(|i| xs.iter().map(|&x| f.pow(x, i as u64)).collect())
+        .collect()
+}
+
+/// Apply the extraction to one party's shares of the `N` dealt batches:
+/// `inputs[j]` is this party's share vector of dealer `j`'s batch. Returns
+/// `N−T` share vectors, one per extracted output sharing. Linear, so the
+/// output shares lie on polynomials of the *same* degree as the inputs and
+/// hide `Σ_j M[i][j]·s_j`.
+pub fn extract(f: Field, matrix: &[Vec<u64>], inputs: &[&[u64]]) -> Vec<Vec<u64>> {
+    matrix
+        .iter()
+        .map(|row| {
+            let mut out = vec![0u64; inputs[0].len()];
+            vecops::weighted_sum(f, row, inputs, &mut out);
+            out
+        })
+        .collect()
+}
+
+/// Interleave the `N−T` extracted output vectors into consumption order
+/// (slot-major: all outputs of batch slot 0, then slot 1, …) and truncate
+/// to `count`. Deterministic, so every party consumes the same sharing at
+/// the same pool index.
+fn flatten_extracted(outs: Vec<Vec<u64>>, count: usize) -> Vec<u64> {
+    let mut flat = Vec::with_capacity(count);
+    let slots = outs.first().map_or(0, |o| o.len());
+    'outer: for slot in 0..slots {
+        for o in &outs {
+            flat.push(o[slot]);
+            if flat.len() == count {
+                break 'outer;
+            }
+        }
+    }
+    assert_eq!(flat.len(), count, "extraction under-produced");
+    flat
+}
+
+/// Modular square root by Tonelli–Shanks, with the `p ≡ 3 (mod 4)`
+/// shortcut. Returns the **canonical** root `min(r, p−r)` so every party
+/// derives the same public `c` from the same opened square. `a` must be a
+/// quadratic residue (callers pass opened squares); panics otherwise.
+pub fn sqrt_mod(f: Field, a: u64) -> u64 {
+    let p = f.modulus();
+    if a == 0 {
+        return 0;
+    }
+    let r = if p % 4 == 3 {
+        f.pow(a, (p + 1) / 4)
+    } else {
+        // Tonelli–Shanks: write p−1 = q·2^s with q odd.
+        let mut q = p - 1;
+        let mut s = 0u32;
+        while q % 2 == 0 {
+            q /= 2;
+            s += 1;
+        }
+        // Any quadratic non-residue works as the generator seed.
+        let mut z = 2u64;
+        while f.pow(z, (p - 1) / 2) != p - 1 {
+            z += 1;
+        }
+        let mut m = s;
+        let mut c = f.pow(z, q);
+        let mut tt = f.pow(a, q);
+        let mut r = f.pow(a, (q + 1) / 2);
+        while tt != 1 {
+            // Find least i with t^(2^i) = 1.
+            let mut i = 0u32;
+            let mut probe = tt;
+            while probe != 1 {
+                probe = f.mul(probe, probe);
+                i += 1;
+                assert!(i < m, "sqrt_mod of a non-residue");
+            }
+            let b = f.pow(c, 1u64 << (m - i - 1));
+            m = i;
+            c = f.mul(b, b);
+            tt = f.mul(tt, c);
+            r = f.mul(r, b);
+        }
+        r
+    };
+    debug_assert_eq!(f.mul(r, r), a, "sqrt_mod produced a wrong root");
+    r.min(p - r)
+}
+
+// ---------------------------------------------------------------------
+// The distributed protocol session.
+// ---------------------------------------------------------------------
+
+struct Session<'a> {
+    net: &'a dyn Transport,
+    f: Field,
+    n: usize,
+    t: usize,
+    lambdas: Vec<u64>,
+    matrix: Vec<Vec<u64>>,
+    rng: Rng,
+    tag: u64,
+}
+
+impl Session<'_> {
+    fn fresh_tag(&mut self) -> u64 {
+        let t = self.tag;
+        self.tag += 1;
+        t
+    }
+
+    /// Deal a degree-`deg` sharing of `vals` to everyone and collect every
+    /// dealer's batch: returns `shares[j]` = this party's share of dealer
+    /// `j`'s batch.
+    fn deal_round(&mut self, vals: &[u64], deg: usize) -> Vec<Vec<u64>> {
+        let tag = self.fresh_tag();
+        let me = self.net.id();
+        let shares = shamir::share_at(self.f, vals, &self.lambdas, deg, &mut self.rng);
+        let mut own = Vec::new();
+        for (j, s) in shares.into_iter().enumerate() {
+            if j == me {
+                own = s;
+            } else {
+                self.net.send(j, tag, s);
+            }
+        }
+        (0..self.n)
+            .map(|j| {
+                if j == me {
+                    std::mem::take(&mut own)
+                } else {
+                    self.net.recv(j, tag)
+                }
+            })
+            .collect()
+    }
+
+    /// One extraction pass: everyone deals `l` fresh random values at
+    /// degree `deg`; returns the `N−T` extracted output share vectors.
+    fn extract_round(&mut self, l: usize, deg: usize) -> Vec<Vec<u64>> {
+        let p = self.f.modulus();
+        let vals: Vec<u64> = (0..l).map(|_| self.rng.gen_range(p)).collect();
+        let dealt = self.deal_round(&vals, deg);
+        let views: Vec<&[u64]> = dealt.iter().map(|v| v.as_slice()).collect();
+        extract(self.f, &self.matrix, &views)
+    }
+
+    /// `count` extracted random degree-`deg` sharings, in consumption
+    /// order.
+    fn extract_random(&mut self, count: usize, deg: usize) -> Vec<u64> {
+        if count == 0 {
+            return Vec::new();
+        }
+        let l = count.div_ceil(self.n - self.t);
+        flatten_extracted(self.extract_round(l, deg), count)
+    }
+
+    /// `count` extracted double sharings `([ρ]_T, [ρ]_2T)`: the same
+    /// dealer batches shared at both degrees, extracted with the same
+    /// matrix (linearity keeps the halves consistent).
+    fn extract_doubles(&mut self, count: usize) -> (Vec<u64>, Vec<u64>) {
+        if count == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let p = self.f.modulus();
+        let l = count.div_ceil(self.n - self.t);
+        let vals: Vec<u64> = (0..l).map(|_| self.rng.gen_range(p)).collect();
+        let dealt_t = self.deal_round(&vals, self.t);
+        let dealt_2t = self.deal_round(&vals, 2 * self.t);
+        let views_t: Vec<&[u64]> = dealt_t.iter().map(|v| v.as_slice()).collect();
+        let views_2t: Vec<&[u64]> = dealt_2t.iter().map(|v| v.as_slice()).collect();
+        let out_t = flatten_extracted(extract(self.f, &self.matrix, &views_t), count);
+        let out_2t = flatten_extracted(extract(self.f, &self.matrix, &views_2t), count);
+        (out_t, out_2t)
+    }
+
+    /// Open degree-`deg` shares via the king (party 0) — the shared
+    /// [`super::open_via_king`] primitive, on the offline tag range.
+    fn open_king(&mut self, share: &[u64], deg: usize) -> Vec<u64> {
+        let tag_up = self.fresh_tag();
+        let tag_down = self.fresh_tag();
+        let coeffs = poly::coeffs_at(self.f, &self.lambdas[..deg + 1], 0);
+        super::open_via_king(self.net, self.f, &coeffs, tag_up, tag_down, share, deg)
+    }
+
+    /// `count` shares of uniformly random bits (module docs): extracted
+    /// random `[a]`, open `a²` via the king, `[b] = (c⁻¹[a]+1)/2` for the
+    /// canonical root `c`. Slots with `a² = 0` are discarded consistently
+    /// (the opened value is public) and regenerated in a further round.
+    fn gen_bits(&mut self, count: usize) -> Vec<u64> {
+        let f = self.f;
+        let inv2 = f.inv(2);
+        let mut bits = Vec::with_capacity(count);
+        while bits.len() < count {
+            let need = count - bits.len();
+            let a = self.extract_random(need, self.t);
+            let sq: Vec<u64> = a.iter().map(|&x| f.mul(x, x)).collect();
+            let opened = self.open_king(&sq, 2 * self.t);
+            for (&ai, &sqv) in a.iter().zip(&opened) {
+                if sqv == 0 {
+                    continue; // a = 0 carries no sign bit — retry the slot
+                }
+                let c = sqrt_mod(f, sqv);
+                let signed = f.mul(f.inv(c), ai); // shares of ±1
+                bits.push(f.mul(inv2, f.add(signed, 1)));
+            }
+        }
+        bits
+    }
+
+    /// `count` truncation pairs for width `m`: `r' = Σ_{i<m} 2^i b_i`,
+    /// `r'' = Σ_{i<k₂+κ−m} 2^i b_{m+i}` — the Catrina–Saxena composition,
+    /// linear on the bit shares.
+    fn trunc_pool(&mut self, m: u32, count: usize, k2: u32, kappa: u32) -> (Vec<u64>, Vec<u64>) {
+        assert!(m < k2 + kappa);
+        let f = self.f;
+        let (wp, wpp) = (m as usize, (k2 + kappa - m) as usize);
+        let bits = self.gen_bits(count * (wp + wpp));
+        let compose = |chunk: &[u64]| -> u64 {
+            let mut acc = 0u64;
+            let mut pow = 1u64;
+            for &b in chunk {
+                acc = f.add(acc, f.mul(pow, b));
+                pow = f.mul(pow, 2);
+            }
+            acc
+        };
+        let mut rp = Vec::with_capacity(count);
+        let mut rpp = Vec::with_capacity(count);
+        for j in 0..count {
+            let base = j * (wp + wpp);
+            rp.push(compose(&bits[base..base + wp]));
+            rpp.push(compose(&bits[base + wp..base + wp + wpp]));
+        }
+        (rp, rpp)
+    }
+}
+
+/// Run the distributed offline phase for party `net.id()`: generate every
+/// pool `demand` asks for, collectively, with zero dealer involvement.
+/// All parties must call this concurrently (SPMD) with the same
+/// arguments. Pool order mirrors the dealer's (doubles, truncation widths
+/// ascending, randoms).
+pub fn generate(
+    net: &dyn Transport,
+    f: Field,
+    t: usize,
+    demand: &Demand,
+    k2: u32,
+    kappa: u32,
+    seed: u64,
+) -> Offline {
+    let n = net.n();
+    assert!(n > 2 * t, "need n > 2t to open squares during bit generation (n={n}, t={t})");
+    let mut s = Session {
+        net,
+        f,
+        n,
+        t,
+        lambdas: shamir::lambda_points(n),
+        matrix: extraction_matrix(f, n, t),
+        rng: Rng::seed_from_u64(seed).fork(STREAM_OFFLINE | net.id() as u64),
+        tag: TAG_BASE,
+    };
+    let mut pool = Offline::default();
+
+    let (dt, d2t) = s.extract_doubles(demand.doubles);
+    pool.double_t = Stream::new(dt);
+    pool.double_2t = Stream::new(d2t);
+
+    let mut widths: Vec<(u32, usize)> = demand.truncs.clone();
+    widths.sort_unstable();
+    for (m, count) in widths {
+        if count == 0 {
+            continue;
+        }
+        let (rp, rpp) = s.trunc_pool(m, count, k2, kappa);
+        pool.trunc_rp.insert(m, Stream::new(rp));
+        pool.trunc_rpp.insert(m, Stream::new(rpp));
+    }
+
+    pool.random_t = Stream::new(s.extract_random(demand.randoms, t));
+    pool
+}
+
+/// Exact payload bytes party `id` sends during [`generate`] (assuming no
+/// `a² = 0` retry rounds — probability ≈ `bits/p` per run). Mirrors the
+/// implementation term by term; validated against the live ledger in
+/// `tests/cost_model_validation.rs`.
+pub fn distributed_bytes_for_party(
+    n: usize,
+    t: usize,
+    demand: &Demand,
+    k2: u32,
+    kappa: u32,
+    id: PartyId,
+    wire: Wire,
+) -> u64 {
+    let ex = n - t; // usable outputs per extraction batch
+    let deal = |count: usize| -> u64 {
+        if count == 0 {
+            0
+        } else {
+            ((n - 1) * count.div_ceil(ex)) as u64
+        }
+    };
+    // Doubles: two deal rounds (degree T and 2T) over the same batch size.
+    let mut elems = 2 * deal(demand.doubles);
+    // Trunc pools: per width, one bit per composed binary digit; each bit
+    // costs one extracted `a` (a deal round) plus one king opening.
+    for &(_, count) in &demand.truncs {
+        if count == 0 {
+            continue;
+        }
+        let bits = count * (k2 + kappa) as usize;
+        elems += deal(bits);
+        if id == 0 {
+            elems += (bits * (n - 1)) as u64; // king broadcasts the squares
+        } else if id <= 2 * t {
+            elems += bits as u64; // share of the squares, up to the king
+        }
+    }
+    // Random degree-T pool: one deal round.
+    elems += deal(demand.randoms);
+    elems * wire.elem_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{P25, P26};
+    use crate::net::local::Hub;
+    use crate::shamir::reconstruct;
+
+    fn demand_basic() -> Demand {
+        Demand { doubles: 10, truncs: vec![(5, 6), (10, 6)], randoms: 16 }
+    }
+
+    /// Run the distributed offline phase with `n` threads over the Hub and
+    /// return every party's pool (id order) plus its sent-byte count.
+    fn run_generate(
+        f: Field,
+        n: usize,
+        t: usize,
+        demand: &Demand,
+        k2: u32,
+        kappa: u32,
+        seed: u64,
+    ) -> Vec<(Offline, u64)> {
+        let endpoints = Hub::new(n);
+        let demand = demand.clone();
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let demand = demand.clone();
+                std::thread::spawn(move || {
+                    let pool = generate(&ep, f, t, &demand, k2, kappa, seed);
+                    (pool, ep.bytes_sent())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn distributed_doubles_reconstruct_consistently() {
+        let f = Field::new(P26);
+        let (n, t) = (7usize, 2usize);
+        let mut pools: Vec<Offline> = run_generate(f, n, t, &demand_basic(), 20, 1, 404)
+            .into_iter()
+            .map(|(p, _)| p)
+            .collect();
+        let taken: Vec<(Vec<u64>, Vec<u64>)> =
+            pools.iter_mut().map(|p| p.take_double(10)).collect();
+        let t_shares: Vec<Vec<u64>> = taken.iter().map(|(a, _)| a.clone()).collect();
+        let t2_shares: Vec<Vec<u64>> = taken.iter().map(|(_, b)| b.clone()).collect();
+        assert_eq!(reconstruct(f, &t_shares, t), reconstruct(f, &t2_shares, 2 * t));
+    }
+
+    #[test]
+    fn distributed_trunc_pairs_in_range() {
+        let f = Field::new(P26);
+        let (n, t, k2, kappa) = (5usize, 1usize, 20u32, 1u32);
+        let mut pools: Vec<Offline> = run_generate(f, n, t, &demand_basic(), k2, kappa, 405)
+            .into_iter()
+            .map(|(p, _)| p)
+            .collect();
+        for m in [5u32, 10] {
+            let taken: Vec<(Vec<u64>, Vec<u64>)> =
+                pools.iter_mut().map(|p| p.take_trunc_pair(6, m)).collect();
+            let rp =
+                reconstruct(f, &taken.iter().map(|x| x.0.clone()).collect::<Vec<_>>(), t);
+            let rpp =
+                reconstruct(f, &taken.iter().map(|x| x.1.clone()).collect::<Vec<_>>(), t);
+            for &v in &rp {
+                assert!(v < 1 << m, "r' = {v} out of range for m={m}");
+            }
+            for &v in &rpp {
+                assert!(v < 1 << (k2 + kappa - m), "r'' = {v} out of range for m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_randoms_are_valid_t_sharings() {
+        let f = Field::new(P26);
+        let (n, t) = (7usize, 2usize);
+        let mut pools: Vec<Offline> = run_generate(f, n, t, &demand_basic(), 20, 1, 406)
+            .into_iter()
+            .map(|(p, _)| p)
+            .collect();
+        let shares: Vec<Vec<u64>> = pools.iter_mut().map(|p| p.take_random(16)).collect();
+        // Any two (t+1)-subsets agree — the sharing is degree ≤ t.
+        let a = reconstruct(f, &shares, t);
+        let pts = shamir::lambda_points(n);
+        let sel: Vec<u64> = pts[n - t - 1..].to_vec();
+        let rec = shamir::Reconstructor::new(f, &sel);
+        let views: Vec<&[u64]> = shares[n - t - 1..].iter().map(|s| s.as_slice()).collect();
+        let mut b = vec![0u64; 16];
+        rec.reconstruct(f, &views, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn distributed_generation_is_deterministic_per_seed() {
+        let f = Field::new(P26);
+        let (n, t) = (5usize, 1usize);
+        let d = demand_basic();
+        fn drain(pools: Vec<(Offline, u64)>) -> Vec<Vec<u64>> {
+            pools
+                .into_iter()
+                .map(|(mut p, _)| {
+                    let (mut v, d2) = p.take_double(10);
+                    v.extend(d2);
+                    for m in [5u32, 10] {
+                        let (rp, rpp) = p.take_trunc_pair(6, m);
+                        v.extend(rp);
+                        v.extend(rpp);
+                    }
+                    v.extend(p.take_random(16));
+                    v
+                })
+                .collect()
+        }
+        let a = drain(run_generate(f, n, t, &d, 20, 1, 7));
+        let b = drain(run_generate(f, n, t, &d, 20, 1, 7));
+        let c = drain(run_generate(f, n, t, &d, 20, 1, 8));
+        assert_eq!(a, b, "same seed must reproduce every pool bit-for-bit");
+        assert_ne!(a, c, "different seeds must produce different pools");
+    }
+
+    #[test]
+    fn ledger_bytes_match_analytic_accounting() {
+        let f = Field::new(P26);
+        let (n, t, k2, kappa) = (7usize, 2usize, 20u32, 1u32);
+        let d = demand_basic();
+        for (id, (_, sent)) in run_generate(f, n, t, &d, k2, kappa, 407).into_iter().enumerate()
+        {
+            let expect =
+                distributed_bytes_for_party(n, t, &d, k2, kappa, id, Wire::U64);
+            assert_eq!(sent, expect, "party {id} byte accounting");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no truncation pool for width m=6")]
+    fn trunc_rpp_mismatch_diagnosable() {
+        // Regression: the r'' lookup used a bare `.unwrap()`, so an rp/rpp
+        // width mismatch died with an anonymous Option panic instead of
+        // the sizing hint the r' path gives.
+        let mut pool = Offline::default();
+        pool.trunc_rp.insert(6, Stream::new(vec![1, 2, 3]));
+        let _ = pool.take_trunc_pair(1, 6);
+    }
+
+    #[test]
+    fn sqrt_mod_both_residue_classes() {
+        // P26 ≡ 3 (mod 4) takes the shortcut; P25 ≡ 1 (mod 4) exercises
+        // Tonelli–Shanks proper.
+        for p in [P26, P25] {
+            let f = Field::new(p);
+            let mut rng = Rng::seed_from_u64(9);
+            for _ in 0..200 {
+                let x = rng.gen_range(p);
+                let sq = f.mul(x, x);
+                let r = sqrt_mod(f, sq);
+                assert_eq!(f.mul(r, r), sq, "p={p} x={x}");
+                assert!(r <= p - r || r == 0, "canonical root must be the smaller one");
+            }
+            assert_eq!(sqrt_mod(f, 0), 0);
+        }
+    }
+
+    #[test]
+    fn distributed_pools_drive_trunc_pr() {
+        // End-to-end: a Party running on distributed pools truncates
+        // correctly (floor or floor+1, exact on multiples).
+        use crate::mpc::Party;
+        let f = Field::new(P26);
+        let (n, t) = (5usize, 1usize);
+        let (k, m, kappa) = (20u32, 5u32, 1u32);
+        let vals_signed: Vec<i64> = vec![0, 64, 100, -64, -100, (1 << 19) - 1];
+        let vals: Vec<u64> = vals_signed.iter().map(|&v| f.from_i64(v)).collect();
+        let mut rng = Rng::seed_from_u64(31);
+        let shares = shamir::share(f, &vals, n, t, &mut rng);
+        let demand =
+            Demand { doubles: 0, truncs: vec![(m, vals.len())], randoms: 0 };
+        let endpoints = Hub::new(n);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .zip(shares)
+            .map(|(ep, input)| {
+                let demand = demand.clone();
+                std::thread::spawn(move || {
+                    let pool = generate(&ep, f, t, &demand, k, kappa, 33);
+                    let party = Party::new(&ep, t, f, pool, 33);
+                    let z = party.trunc_pr(&input, k, m, kappa, true);
+                    party.open_broadcast(&z, t)
+                })
+            })
+            .collect();
+        let results: Vec<Vec<u64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results {
+            for (i, &v) in vals_signed.iter().enumerate() {
+                let got = f.to_i64(r[i]);
+                let floor = v.div_euclid(1 << m);
+                assert!(got == floor || got == floor + 1, "val {v}: got {got}");
+                if v.rem_euclid(1 << m) == 0 {
+                    assert_eq!(got, floor);
+                }
+            }
+        }
+    }
+}

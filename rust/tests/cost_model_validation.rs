@@ -3,8 +3,11 @@
 //! compute is measured, bytes are exact, only the NIC is modeled.
 
 use copml::bench::cost_model::CopmlCost;
+use copml::coordinator::algo::copml_demand;
 use copml::coordinator::{protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};
+use copml::mpc::offline::distributed_bytes_for_party;
+use copml::mpc::OfflineMode;
 use copml::net::{Wire, ELEM_BYTES};
 
 /// Analytic per-client bytes of the protocol phases (mirrors
@@ -26,12 +29,12 @@ fn ledger_matches_analytic_iteration_bytes() {
     cfg.iters = iters;
     let out = protocol::train(&cfg, &ds).unwrap();
 
-    // Phase 3 (encode_model) + phase 5 (share_results) bytes per client:
+    // Phase 4 (encode_model) + phase 6 (share_results) bytes per client:
     // subgroup sizes can exceed t+1 for the tail group, so allow the
     // analytic value as a lower bound and a 2× envelope as upper.
     let lower = analytic_bytes_per_iter(n, t, ds.d, true) * iters as u64;
     for (i, l) in out.ledgers.iter().enumerate() {
-        let measured = l.bytes[3] + l.bytes[5];
+        let measured = l.bytes[4] + l.bytes[6];
         assert!(
             measured >= lower && measured <= lower * 2 + 64,
             "client {i}: measured {measured}, analytic lower {lower}"
@@ -50,11 +53,11 @@ fn trunc_open_bytes_king_shaped() {
     cfg.iters = iters;
     let out = protocol::train(&cfg, &ds).unwrap();
     let d = ds.d as u64;
-    let king_decode = out.ledgers[0].bytes[6];
+    let king_decode = out.ledgers[0].bytes[7];
     let expected_king = 2 * (n as u64 - 1) * d * ELEM_BYTES * iters as u64;
     assert_eq!(king_decode, expected_king);
     // a far client (> t) sends nothing during decode/trunc
-    assert_eq!(out.ledgers[n - 1].bytes[6], 0);
+    assert_eq!(out.ledgers[n - 1].bytes[7], 0);
 }
 
 #[test]
@@ -77,12 +80,63 @@ fn copml_cost_model_monotonic_in_n_for_fixed_kt() {
         iters: 10,
         subgroups: true,
         wire: Wire::U64,
+        offline: OfflineMode::Dealer,
+        trunc_bits: 25,
     }
     .estimate(&cal, &wan);
     let a = mk(10);
     let b = mk(30);
     assert!(b.comm_s > a.comm_s);
     assert!((b.comp_s - a.comp_s).abs() < 1e-9);
+}
+
+#[test]
+fn distributed_offline_ledger_matches_exact_model() {
+    // The offline column is itemized, not estimated: the live per-party
+    // ledger of a distributed-offline run must equal the analytic byte
+    // accounting term for term — including the king's asymmetric opening
+    // traffic — and halve exactly under u32 packing.
+    let ds = Dataset::synth(SynthSpec::tiny(), 74);
+    let (n, k, t) = (7usize, 2usize, 1usize);
+    let mut cfg = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(k, t), 74);
+    cfg.iters = 2;
+    cfg.offline = OfflineMode::Distributed;
+    let demand = copml_demand(&cfg, ds.d, ds.padded_rows(cfg.k));
+    let mut u64_offline = Vec::new();
+    for wire in [Wire::U64, Wire::U32] {
+        cfg.wire = wire;
+        let out = protocol::train(&cfg, &ds).unwrap();
+        for (id, l) in out.ledgers.iter().enumerate() {
+            let expect = distributed_bytes_for_party(
+                n,
+                t,
+                &demand,
+                cfg.plan.k2,
+                cfg.plan.kappa,
+                id,
+                wire,
+            );
+            assert_eq!(l.bytes[0], expect, "party {id} offline bytes ({wire} wire)");
+        }
+        if wire == Wire::U64 {
+            u64_offline = out.ledgers.iter().map(|l| l.bytes[0]).collect();
+        } else {
+            for (id, l) in out.ledgers.iter().enumerate() {
+                assert_eq!(
+                    u64_offline[id],
+                    2 * l.bytes[0],
+                    "party {id}: u32 packing must halve offline bytes"
+                );
+            }
+        }
+    }
+    // The king's fan-out during bit openings makes its offline column the
+    // largest — the asymmetry the cost model charges as the bottleneck.
+    let king = u64_offline[0];
+    assert!(
+        u64_offline[1..].iter().all(|&b| b < king),
+        "king must dominate offline traffic: {u64_offline:?}"
+    );
 }
 
 #[test]
@@ -122,6 +176,8 @@ fn u32_wire_halves_live_ledger_and_cost_model() {
         iters: 50,
         subgroups: true,
         wire: Wire::U64,
+        offline: OfflineMode::Dealer,
+        trunc_bits: 25,
     };
     let c32 = CopmlCost { wire: Wire::U32, ..c64 };
     let e64 = c64.estimate(&cal, &wan);

@@ -51,8 +51,10 @@ fn ledger_accounts_every_phase() {
     for (i, l) in out.ledgers.iter().enumerate() {
         assert!(l.total_seconds() > 0.0, "client {i} recorded no time");
         // every client shares its dataset and its results
-        assert!(l.bytes[0] > 0, "client {i}: no dataset sharing bytes");
-        assert!(l.bytes[5] > 0, "client {i}: no result bytes");
+        assert!(l.bytes[1] > 0, "client {i}: no dataset sharing bytes");
+        assert!(l.bytes[6] > 0, "client {i}: no result bytes");
+        // dealer mode (the default): the offline phase is free on the wire
+        assert_eq!(l.bytes[0], 0, "client {i}: dealer offline phase sent bytes");
     }
 }
 

@@ -1,0 +1,214 @@
+//! Property tests for the DN07 randomness-extraction core
+//! (`mpc::offline`): degree exactness of the extracted sharings, double
+//! sharing consistency, and the bijection argument behind the uniformity
+//! claim — each over randomized `(N, T)` geometries via `testkit::forall`.
+
+use copml::field::{Field, P26};
+use copml::mpc::offline::{extract, extraction_matrix};
+use copml::poly;
+use copml::shamir;
+use copml::testkit::{forall, Gen};
+
+fn field() -> Field {
+    Field::new(P26)
+}
+
+/// Random geometry with `n > 2t` (what the offline phase requires).
+fn geometry(g: &mut Gen) -> (usize, usize) {
+    let t = g.usize_in(1, 3);
+    let n = g.usize_in(2 * t + 1, 2 * t + 5);
+    (n, t)
+}
+
+/// Every party's share vector of each dealer's batch: `shares[party][dealer]`.
+fn deal_all(
+    f: Field,
+    g: &mut Gen,
+    n: usize,
+    deg: usize,
+    secrets: &[Vec<u64>],
+) -> Vec<Vec<Vec<u64>>> {
+    let mut by_party = vec![vec![Vec::new(); n]; n];
+    for (j, s) in secrets.iter().enumerate() {
+        let sh = shamir::share(f, s, n, deg, g.rng());
+        for (i, si) in sh.into_iter().enumerate() {
+            by_party[i][j] = si;
+        }
+    }
+    by_party
+}
+
+/// Run the extraction on every party's inputs; returns
+/// `outputs[party][output_index]` (each a share vector of length L).
+fn extract_all(f: Field, n: usize, t: usize, by_party: &[Vec<Vec<u64>>]) -> Vec<Vec<Vec<u64>>> {
+    let m = extraction_matrix(f, n, t);
+    by_party
+        .iter()
+        .map(|inputs| {
+            let views: Vec<&[u64]> = inputs.iter().map(|v| v.as_slice()).collect();
+            extract(f, &m, &views)
+        })
+        .collect()
+}
+
+/// Shares of output `i`, element `e`, across all parties.
+fn column(outputs: &[Vec<Vec<u64>>], i: usize, e: usize) -> Vec<u64> {
+    outputs.iter().map(|per_party| per_party[i][e]).collect()
+}
+
+/// Degree check: the n shares lie on a polynomial of degree ≤ `deg`
+/// (interpolating the first deg+1 shares predicts all others).
+fn consistent_at_degree(f: Field, shares: &[u64], deg: usize) -> bool {
+    let n = shares.len();
+    if deg + 1 >= n {
+        return true;
+    }
+    let pts = shamir::lambda_points(n);
+    let rows = poly::coeff_matrix(f, &pts[..deg + 1], &pts[deg + 1..]);
+    rows.iter().zip(&shares[deg + 1..]).all(|(row, &actual)| {
+        let mut acc = 0u64;
+        for (&c, &s) in row.iter().zip(&shares[..deg + 1]) {
+            acc = f.add(acc, f.mul(c, s));
+        }
+        acc == actual
+    })
+}
+
+#[test]
+fn extracted_sharings_are_exactly_degree_t() {
+    forall("extraction degree T", 40, |g: &mut Gen| {
+        let f = field();
+        let (n, t) = geometry(g);
+        let l = g.usize_in(1, 4);
+        let secrets: Vec<Vec<u64>> = (0..n).map(|_| g.vec_u64(l, P26)).collect();
+        let outputs = extract_all(f, n, t, &deal_all(f, g, n, t, &secrets));
+        for i in 0..n - t {
+            for e in 0..l {
+                let col = column(&outputs, i, e);
+                assert!(
+                    consistent_at_degree(f, &col, t),
+                    "output {i} elem {e} not degree ≤ {t} (n={n})"
+                );
+                // Exactly degree t: a degree-(t−1) fit must fail (holds
+                // with probability 1 − 1/p per case; seeds are fixed).
+                assert!(
+                    !consistent_at_degree(f, &col, t - 1),
+                    "output {i} elem {e} degenerated below degree {t} (n={n})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn extracted_double_sharings_consistent() {
+    forall("double sharing extraction", 30, |g: &mut Gen| {
+        let f = field();
+        let (n, t) = geometry(g);
+        let l = g.usize_in(1, 3);
+        // Same dealer values under degree T and 2T — as the protocol deals.
+        let secrets: Vec<Vec<u64>> = (0..n).map(|_| g.vec_u64(l, P26)).collect();
+        let out_t = extract_all(f, n, t, &deal_all(f, g, n, t, &secrets));
+        let out_2t = extract_all(f, n, t, &deal_all(f, g, n, 2 * t, &secrets));
+        for i in 0..n - t {
+            for e in 0..l {
+                let col_t = column(&out_t, i, e);
+                let col_2t = column(&out_2t, i, e);
+                // Halves: degree exactly T resp. 2T …
+                assert!(consistent_at_degree(f, &col_t, t));
+                assert!(consistent_at_degree(f, &col_2t, 2 * t));
+                assert!(!consistent_at_degree(f, &col_2t, 2 * t - 1), "2T half degenerated");
+                // … hiding the same extracted value ρ.
+                let sh_t: Vec<Vec<u64>> = col_t.iter().map(|&s| vec![s]).collect();
+                let sh_2t: Vec<Vec<u64>> = col_2t.iter().map(|&s| vec![s]).collect();
+                let rho_t = shamir::reconstruct(f, &sh_t, t);
+                let rho_2t = shamir::reconstruct(f, &sh_2t, 2 * t);
+                assert_eq!(rho_t, rho_2t, "double halves disagree (i={i}, e={e}, n={n})");
+            }
+        }
+    });
+}
+
+#[test]
+fn one_honest_dealer_acts_as_a_bijection() {
+    // The DN07 uniformity argument, made concrete: fix every dealer's
+    // input except dealer `h`'s (the adversary controls them arbitrarily);
+    // the map from dealer h's secret to each extracted value is affine
+    // with a nonzero slope (the Vandermonde coefficient), i.e. a bijection
+    // of F_p — so a uniform honest input keeps every output uniform.
+    forall("honest-dealer bijection", 30, |g: &mut Gen| {
+        let f = field();
+        let (n, t) = geometry(g);
+        let h = g.usize_in(0, n - 1); // the one honest dealer
+        let matrix = extraction_matrix(f, n, t);
+        // Adversarially fixed contributions for everyone but h.
+        let fixed: Vec<u64> = (0..n).map(|_| g.u64_below(P26)).collect();
+        let (v1, v2) = (g.u64_below(P26), g.u64_below(P26));
+        let extracted_value = |v_h: u64, i: usize| -> u64 {
+            let mut acc = 0u64;
+            for j in 0..n {
+                let s = if j == h { v_h } else { fixed[j] };
+                acc = f.add(acc, f.mul(matrix[i][j], s));
+            }
+            acc
+        };
+        for (i, row) in matrix.iter().enumerate() {
+            // Slope = M[i][h] ≠ 0 (λ_h ≠ 0), so distinct inputs give
+            // distinct outputs: the affine map is a bijection.
+            assert!(row[h] != 0, "zero Vandermonde coefficient (i={i}, h={h})");
+            let (o1, o2) = (extracted_value(v1, i), extracted_value(v2, i));
+            assert_eq!(
+                f.sub(o1, o2),
+                f.mul(row[h], f.sub(v1, v2)),
+                "output {i} not affine in the honest input"
+            );
+            if v1 != v2 {
+                assert_ne!(o1, o2, "honest input change must move output {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn any_n_minus_t_columns_invertible() {
+    // The matrix property the privacy argument rests on: every
+    // (N−T)×(N−T) column submatrix of the extraction matrix is
+    // invertible, so ANY set of n−t honest dealers (not just one) maps
+    // bijectively onto the outputs.
+    forall("extraction submatrix rank", 25, |g: &mut Gen| {
+        let f = field();
+        let (n, t) = geometry(g);
+        let matrix = extraction_matrix(f, n, t);
+        let e = n - t;
+        // Random column subset of size n−t.
+        let mut cols: Vec<usize> = (0..n).collect();
+        for i in (1..cols.len()).rev() {
+            let j = g.usize_in(0, i);
+            cols.swap(i, j);
+        }
+        cols.truncate(e);
+        // Gaussian elimination over F_p.
+        let mut a: Vec<Vec<u64>> =
+            (0..e).map(|r| cols.iter().map(|&c| matrix[r][c]).collect()).collect();
+        let mut rank = 0usize;
+        for col in 0..e {
+            let Some(piv) = (rank..e).find(|&r| a[r][col] != 0) else { continue };
+            a.swap(rank, piv);
+            let inv = f.inv(a[rank][col]);
+            for v in a[rank].iter_mut() {
+                *v = f.mul(*v, inv);
+            }
+            let pivot_row = a[rank].clone();
+            for (r, row) in a.iter_mut().enumerate() {
+                if r != rank && row[col] != 0 {
+                    let factor = row[col];
+                    for (v, &pv) in row.iter_mut().zip(&pivot_row) {
+                        *v = f.sub(*v, f.mul(factor, pv));
+                    }
+                }
+            }
+            rank += 1;
+        }
+        assert_eq!(rank, e, "singular {e}×{e} submatrix (n={n}, t={t}, cols {cols:?})");
+    });
+}

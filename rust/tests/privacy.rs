@@ -1,10 +1,12 @@
 //! Statistical privacy checks: what an adversary observing up to `T`
 //! clients' views actually sees. These are sanity tests of the
-//! information-theoretic arguments (Shamir hiding, Lagrange mask hiding),
-//! not proofs — the proofs are the constructions themselves ([13], [32]).
+//! information-theoretic arguments (Shamir hiding, Lagrange mask hiding,
+//! DN07 extraction hiding), not proofs — the proofs are the constructions
+//! themselves ([13], [32], DN07).
 
 use copml::field::{Field, P26};
 use copml::lcc::Encoder;
+use copml::mpc::offline::{extract, extraction_matrix, sqrt_mod};
 use copml::prng::Rng;
 use copml::shamir;
 
@@ -83,6 +85,165 @@ fn masked_opening_hides_product() {
     let z = 123456u64; // "secret" product
     let samples: Vec<u64> = (0..20000).map(|_| f.sub(z, rng.gen_range(P26))).collect();
     assert_roughly_uniform(&samples, P26, "z − ρ");
+}
+
+// ---------------------------------------------------------------------
+// Distributed offline phase (mpc::offline): transcript simulation of the
+// joint view of T colluding parties, over several (N, T) geometries.
+// ---------------------------------------------------------------------
+
+/// Transcript of one extraction round, from the coalition's perspective:
+/// everything parties `0..t` observe — their own shares of every dealt
+/// batch (the messages they receive from honest dealers plus what they
+/// dealt themselves) and their shares of every extracted output.
+fn extraction_coalition_view(
+    f: Field,
+    n: usize,
+    t: usize,
+    honest_secret: u64,
+    rng: &mut Rng,
+) -> Vec<u64> {
+    // Honest dealers (t..n) all deal `honest_secret`; corrupt dealers
+    // (0..t) deal a fixed known value — worst case for the adversary's
+    // inference problem, since its own contributions carry no entropy.
+    let mut by_party: Vec<Vec<Vec<u64>>> = vec![Vec::new(); n];
+    for dealer in 0..n {
+        let secret = if dealer < t { 7u64 } else { honest_secret };
+        let shares = shamir::share(f, &[secret], n, t, rng);
+        for (i, s) in shares.into_iter().enumerate() {
+            by_party[i].push(s);
+        }
+    }
+    let matrix = extraction_matrix(f, n, t);
+    let mut view = Vec::new();
+    for inputs in by_party.iter().take(t) {
+        // Received dealt shares from the honest dealers (the coalition's
+        // own dealings are a function of its randomness — not evidence).
+        for dealt in &inputs[t..] {
+            view.push(dealt[0]);
+        }
+        // Shares of the extracted outputs (a public linear map of the
+        // above — included to make the "joint view" literal).
+        let views: Vec<&[u64]> = inputs.iter().map(|v| v.as_slice()).collect();
+        for out in extract(f, &matrix, &views) {
+            view.push(out[0]);
+        }
+    }
+    view
+}
+
+#[test]
+fn t_collusion_view_of_extraction_uniform() {
+    // The joint view of any T colluding parties during DN07 extraction is
+    // uniform regardless of the honest dealers' inputs — i.e. simulatable
+    // without them. Checked over several (N, T) geometries and honest
+    // inputs at the extremes of the field.
+    let f = Field::new(P26);
+    let mut rng = Rng::seed_from_u64(6);
+    for (n, t) in [(4usize, 1usize), (7, 2), (9, 3)] {
+        let trials = 9000 / n;
+        for honest_secret in [0u64, 1, P26 - 1] {
+            let mut view = Vec::new();
+            for _ in 0..trials {
+                view.extend(extraction_coalition_view(f, n, t, honest_secret, &mut rng));
+            }
+            assert_roughly_uniform(
+                &view,
+                P26,
+                &format!("extraction view n={n} t={t} secret={honest_secret}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn t_collusion_view_of_bit_generation_simulatable() {
+    // Bit generation opens a² and keeps [b] = (c⁻¹a + 1)/2 secret. The
+    // coalition sees: its T shares of [a] (uniform — Shamir) and the
+    // public a². The opened value must carry NO information about the
+    // bit: b is the sign of a, and a² forgets the sign. Checked by
+    // correlation: P(b = 1) conditioned on the magnitude of a² stays ½.
+    let f = Field::new(P26);
+    let mut rng = Rng::seed_from_u64(7);
+    let (n, t) = (5usize, 2usize);
+    let trials = 6000;
+    let mut share_view = Vec::with_capacity(trials * t);
+    let mut opened_and_bit: Vec<(u64, u64)> = Vec::with_capacity(trials);
+    let inv2 = f.inv(2);
+    for _ in 0..trials {
+        let a = rng.gen_range(P26 - 1) + 1; // nonzero, as the protocol retries 0
+        let shares = shamir::share(f, &[a], n, t, &mut rng);
+        for s in shares.iter().take(t) {
+            share_view.push(s[0]);
+        }
+        let sq = f.mul(a, a);
+        let c = sqrt_mod(f, sq);
+        let b = f.mul(inv2, f.add(f.mul(f.inv(c), a), 1));
+        assert!(b == 0 || b == 1, "bit out of domain");
+        opened_and_bit.push((sq, b));
+    }
+    // (1) the coalition's a-shares are uniform;
+    assert_roughly_uniform(&share_view, P26, "bit-gen a-share view");
+    // (2) the public a² is independent of the bit: split the transcript
+    // by the opened value's magnitude — both halves must be fair coins.
+    opened_and_bit.sort_unstable();
+    let half = opened_and_bit.len() / 2;
+    for (name, slice) in
+        [("low a²", &opened_and_bit[..half]), ("high a²", &opened_and_bit[half..])]
+    {
+        let ones: usize = slice.iter().filter(|&&(_, b)| b == 1).count();
+        let frac = ones as f64 / slice.len() as f64;
+        assert!(
+            (frac - 0.5).abs() < 0.04,
+            "{name}: P(b=1) = {frac} — opened square leaks the bit"
+        );
+    }
+    // (3) the bit itself is unbiased.
+    let ones: usize = opened_and_bit.iter().filter(|&&(_, b)| b == 1).count();
+    let frac = ones as f64 / trials as f64;
+    assert!((frac - 0.5).abs() < 0.025, "bit bias {frac}");
+}
+
+#[test]
+fn coalition_cannot_reconstruct_extracted_outputs() {
+    // Sanity that the threshold is real for the *outputs* too: T shares of
+    // an extracted sharing interpolated as degree T−1 give the wrong
+    // value (the coalition's marginal carries no reconstruction power).
+    let f = Field::new(P26);
+    let mut rng = Rng::seed_from_u64(8);
+    let (n, t) = (7usize, 2usize);
+    let matrix = extraction_matrix(f, n, t);
+    let mut wrong = 0usize;
+    let trials = 200;
+    for _ in 0..trials {
+        let secrets: Vec<u64> = (0..n).map(|_| rng.gen_range(P26)).collect();
+        let mut by_party: Vec<Vec<Vec<u64>>> = vec![Vec::new(); n];
+        for &s in &secrets {
+            let shares = shamir::share(f, &[s], n, t, &mut rng);
+            for (i, sh) in shares.into_iter().enumerate() {
+                by_party[i].push(sh);
+            }
+        }
+        let per_party: Vec<Vec<Vec<u64>>> = by_party
+            .iter()
+            .map(|inputs| {
+                let views: Vec<&[u64]> = inputs.iter().map(|v| v.as_slice()).collect();
+                extract(f, &matrix, &views)
+            })
+            .collect();
+        // True value of output 0 (all n shares) vs the coalition's
+        // under-determined degree-(t−1) guess from its t shares.
+        let all: Vec<Vec<u64>> = (0..n).map(|p| vec![per_party[p][0][0]]).collect();
+        let truth = shamir::reconstruct(f, &all, t)[0];
+        let guess = shamir::reconstruct(f, &all[..t], t - 1)[0];
+        if guess != truth {
+            wrong += 1;
+        }
+    }
+    assert!(
+        wrong > trials * 9 / 10,
+        "coalition guessed the extracted value too often ({wrong}/{trials})"
+    );
 }
 
 #[test]

@@ -9,6 +9,7 @@
 use copml::coordinator::baseline::{BaselineConfig, MpcFlavor};
 use copml::coordinator::{algo, baseline, protocol, CaseParams, CopmlConfig};
 use copml::data::{Dataset, SynthSpec};
+use copml::mpc::OfflineMode;
 use copml::net::Wire;
 
 fn tiny_cfg(n: usize, k: usize, t: usize, iters: usize, seed: u64, ds: &Dataset) -> CopmlConfig {
@@ -99,6 +100,71 @@ fn tcp_loopback_bit_identical_on_both_wire_formats() {
     for (lt, lh) in ledgers[0].iter().zip(&hub.ledgers) {
         assert_eq!(lt.bytes, lh.bytes);
     }
+}
+
+#[test]
+fn offline_dealer_mode_is_default_and_stays_bit_identical() {
+    // The mode switch must not move the default trajectory: an explicit
+    // `OfflineMode::Dealer` run — Hub and TCP — matches the seed's algo
+    // trace bit for bit, with a zero-byte offline ledger column.
+    let ds = Dataset::synth(SynthSpec::tiny(), 107);
+    let mut cfg = tiny_cfg(7, 2, 1, 3, 107, &ds);
+    assert_eq!(cfg.offline, OfflineMode::Dealer, "dealer must remain the default");
+    let reference = algo::train(&cfg, &ds).unwrap();
+    cfg.offline = OfflineMode::Dealer; // explicit, not just the default
+    let hub = protocol::train(&cfg, &ds).unwrap();
+    assert_eq!(hub.train.w_trace, reference.w_trace, "Hub dealer trace moved");
+    let tcp = protocol::train_tcp_loopback(&cfg, &ds).unwrap();
+    assert_eq!(tcp.train.w_trace, reference.w_trace, "TCP dealer trace moved");
+    for (i, l) in hub.ledgers.iter().enumerate() {
+        assert_eq!(l.bytes[0], 0, "client {i}: dealer offline phase must be free");
+    }
+}
+
+#[test]
+fn distributed_offline_hub_tcp_bit_identical_and_dealer_free() {
+    // The dealer-free phase is deterministic per seed, so Hub and real
+    // TCP sockets must produce the same trajectory — and its traffic must
+    // appear in the offline ledger column of every client.
+    let ds = Dataset::synth(SynthSpec::tiny(), 108);
+    let mut cfg = tiny_cfg(4, 1, 1, 2, 108, &ds);
+    cfg.offline = OfflineMode::Distributed;
+    let hub = protocol::train(&cfg, &ds).unwrap();
+    let tcp = protocol::train_tcp_loopback(&cfg, &ds).unwrap();
+    assert_eq!(
+        hub.train.w_trace, tcp.train.w_trace,
+        "distributed offline must be transport-invariant"
+    );
+    for (i, (lh, lt)) in hub.ledgers.iter().zip(&tcp.ledgers).enumerate() {
+        assert!(lh.bytes[0] > 0, "client {i}: no offline traffic recorded");
+        assert_eq!(lh.bytes[0], lt.bytes[0], "client {i}: Hub/TCP offline bytes differ");
+    }
+    // Different truncation randomness than the dealer's → different
+    // (equally valid) trajectory; and the central trainer must refuse to
+    // pretend it can replay it.
+    let mut dealer_cfg = cfg.clone();
+    dealer_cfg.offline = OfflineMode::Dealer;
+    let dealer = protocol::train(&dealer_cfg, &ds).unwrap();
+    assert_ne!(hub.train.w_trace, dealer.train.w_trace);
+    let err = algo::train(&cfg, &ds).unwrap_err();
+    assert!(err.contains("distributed"), "unexpected algo-mode error: {err}");
+}
+
+#[test]
+fn distributed_offline_accuracy_within_fig4_tolerance() {
+    // Fig. 4's tolerance (±4 accuracy points) applied to the mode switch:
+    // the dealer-free run converges to the same quality on the tiny
+    // geometry class — only the rounding randomness differs.
+    let ds = Dataset::synth(SynthSpec::smoke(), 109);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 109);
+    cfg.iters = 25;
+    let dealer = protocol::train(&cfg, &ds).unwrap();
+    cfg.offline = OfflineMode::Distributed;
+    let dist = protocol::train(&cfg, &ds).unwrap();
+    let a = *dealer.train.test_accuracy.last().unwrap();
+    let b = *dist.train.test_accuracy.last().unwrap();
+    assert!((a - b).abs() < 0.04, "dealer acc {a} vs distributed acc {b}");
+    assert!(b > 0.8, "distributed mode failed to converge (acc {b})");
 }
 
 #[test]
