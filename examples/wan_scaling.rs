@@ -41,6 +41,7 @@ fn main() {
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
             trunc_bits: 25,
+            stragglers: 0,
         };
         let copml1 = cost(c1).estimate(&cal, &wan);
         let copml2 = cost(c2).estimate(&cal, &wan);

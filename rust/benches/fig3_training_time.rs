@@ -87,6 +87,7 @@ fn run_dataset(
                 wire: Wire::U64,
                 offline: OfflineMode::Dealer,
                 trunc_bits: 25,
+                stragglers: 0,
             }
             .estimate(cal, wan);
             est.comp_s = comp_iter * iters as f64;
@@ -153,6 +154,7 @@ fn main() {
         wire: Wire::U64,
         offline: OfflineMode::Dealer,
         trunc_bits: 25,
+        stragglers: 0,
     };
     let copml_n50 = copml_50.estimate(&cal, &wan);
     assert!(

@@ -1,0 +1,131 @@
+//! `fig_straggler`: training-time insensitivity to the slowest `N − need`
+//! parties — the headline scalability property of LCC encoding (paper
+//! Theorem 1: any `(2r+1)(K+T−1)+1` client results decode).
+//!
+//! Three *real* full-protocol runs (N client threads over the Hub, live
+//! quorum gathers, injected faults — nothing modeled):
+//!
+//! 1. **healthy** — no faults, the per-iteration baseline;
+//! 2. **straggler** — one party sleeps ~10× the healthy iteration time in
+//!    every compute phase, another is killed mid-training (`N − need ≥ 2`
+//!    slack absorbs both);
+//! 3. the claim: the fast parties' per-iteration time stays at the
+//!    fastest-quorum latency — it does NOT inherit the injected delay,
+//!    which a fixed-order gather would add to every round.
+//!
+//! The model trajectory is asserted bit-identical across all runs
+//! (interpolation is exact, so quorum composition and faults cannot move
+//! it). Results are dumped to `BENCH_straggler.json`.
+//!
+//! Run: `cargo bench --bench fig_straggler`
+
+use copml::coordinator::protocol::ProtocolOutput;
+use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig, FaultPlan};
+use copml::data::{Dataset, SynthSpec};
+use copml::report::Json;
+
+/// Mean per-iteration wall time of a *fast* party (the king), counting
+/// only the per-iteration phases (model encode, compute, share results,
+/// decode+update).
+fn per_iter_seconds(po: &ProtocolOutput, iters: usize) -> f64 {
+    let l = &po.ledgers[0];
+    l.seconds[4..8].iter().sum::<f64>() / iters as f64
+}
+
+fn main() {
+    let ds = Dataset::synth(SynthSpec::tiny(), 77);
+    // N=11, T=1: subgroups {0,1}…{6,7} plus the tail group {8,9,10}. The
+    // tail group is the fixture's point — killing ONE member leaves two,
+    // still ≥ T+1, so the delayed member keeps straggling (live) instead
+    // of dying as collateral.
+    let (n, k, t, iters) = (11usize, 2usize, 1usize, 8usize);
+    let mut cfg = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(k, t), 77);
+    cfg.iters = iters;
+    let need = cfg.recovery_threshold();
+    assert!(n - need >= 2, "bench config needs quorum slack ≥ 2 (have {})", n - need);
+    println!("fig_straggler: N={n} K={k} T={t} → recovery threshold {need}, slack {}", n - need);
+
+    // Bit-identity oracle: the central recursion.
+    let reference = algo::train(&cfg, &ds).expect("algo reference");
+
+    // Healthy run (first-arrival quorums active: N > need).
+    let healthy = protocol::train(&cfg, &ds).expect("healthy run");
+    assert_eq!(
+        healthy.train.w_trace, reference.w_trace,
+        "healthy quorum run must match the central recursion bit for bit"
+    );
+    let healthy_iter_s = per_iter_seconds(&healthy, iters);
+    for (i, q) in healthy.ledgers[0].quorums.iter().enumerate() {
+        assert!(q.len() >= need, "round {i}: quorum of {} < need {need}", q.len());
+    }
+
+    // Straggler run: party 8 sleeps ~10× the healthy iteration every
+    // round (a SUSTAINED live straggler — its late results are skipped
+    // round after round until --max-lag excludes it and it self-halts);
+    // its tail-group mate 10 is killed at iteration 1 (party 9 keeps the
+    // group reconstructable). Exclusion after 2 consecutive misses.
+    // 200 ms floor: the 0.5·delay assertion below compares wall-clock
+    // measurements minutes apart on a possibly-shared runner, so the
+    // threshold must dwarf any plausible load-induced per-iteration
+    // inflation of this tiny workload.
+    let delay_ms = ((healthy_iter_s * 10.0) * 1e3).ceil().max(200.0) as u64;
+    let delay_s = delay_ms as f64 / 1e3;
+    let mut faulted_cfg = cfg.clone();
+    faulted_cfg.faults = FaultPlan { delays: vec![(8, delay_ms)], kills: vec![(10, 1)] };
+    faulted_cfg.max_lag = Some(2);
+    let faulted = protocol::train(&faulted_cfg, &ds)
+        .expect("training must survive one straggler and one killed party");
+    assert_eq!(
+        faulted.train.w_trace, reference.w_trace,
+        "faults may cost time, never accuracy: the trajectory must be bit-identical"
+    );
+    let faulted_iter_s = per_iter_seconds(&faulted, iters);
+    let excluded = &faulted.ledgers[0].excluded;
+    println!(
+        "healthy {:.3} ms/iter · faulted {:.3} ms/iter · injected delay {delay_ms} ms · excluded {excluded:?}",
+        healthy_iter_s * 1e3,
+        faulted_iter_s * 1e3
+    );
+
+    // The claim. A fixed-order gather would stall ≥ delay_s on (almost)
+    // every round that waits for party 8; the quorum path must stay well
+    // under half that, bounded by the fastest-quorum latency.
+    assert!(
+        faulted_iter_s < 0.5 * delay_s,
+        "per-iteration time {faulted_iter_s:.4}s is not insensitive to the \
+         injected {delay_s:.4}s straggler delay"
+    );
+    assert!(
+        excluded.contains(&8) && excluded.contains(&10),
+        "delayed and killed parties must both be excluded: {excluded:?}"
+    );
+
+    let quorum_sizes: Vec<Json> = faulted.ledgers[0]
+        .quorums
+        .iter()
+        .map(|q| Json::num(q.len() as f64))
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fig_straggler")),
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("t", Json::num(t as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("recovery_threshold", Json::num(need as f64)),
+        ("healthy_iter_s", Json::num(healthy_iter_s)),
+        ("faulted_iter_s", Json::num(faulted_iter_s)),
+        ("injected_delay_s", Json::num(delay_s)),
+        (
+            "slowdown_vs_delay",
+            Json::num((faulted_iter_s - healthy_iter_s).max(0.0) / delay_s),
+        ),
+        (
+            "excluded",
+            Json::arr(excluded.iter().map(|&e| Json::num(e as f64))),
+        ),
+        ("faulted_quorum_sizes", Json::Arr(quorum_sizes)),
+    ]);
+    std::fs::write("BENCH_straggler.json", doc.to_string()).expect("writing BENCH_straggler.json");
+    println!("wrote BENCH_straggler.json");
+    println!("fig_straggler assertions passed");
+}

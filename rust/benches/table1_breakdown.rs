@@ -40,6 +40,7 @@ fn main() {
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
             trunc_bits: 25,
+            stragglers: 0,
         }
         .estimate(&cal, &wan)
     };
@@ -123,6 +124,7 @@ fn main() {
                 wire,
                 offline: OfflineMode::Dealer,
                 trunc_bits: 25,
+                stragglers: 0,
             }
             .estimate(&cal, &wan)
         };
@@ -168,6 +170,7 @@ fn main() {
                 wire: Wire::U64,
                 offline,
                 trunc_bits,
+                stragglers: 0,
             }
             .estimate(&cal, &wan)
         };

@@ -133,6 +133,14 @@ pub struct CopmlCost {
     /// fixed-point plan (e.g. 25 for the paper's CIFAR plan). Only the
     /// distributed offline model reads this.
     pub trunc_bits: u32,
+    /// The straggler column: parties modeled as excluded (dead or past
+    /// `--max-lag`). The survivors' iteration proceeds on the fastest
+    /// `need`-quorum, so compute and decode terms are unchanged; only the
+    /// roster-dependent byte terms shrink (fewer result shares) and the
+    /// leader's per-round quorum announcement appears whenever the live
+    /// roster still has slack. Must satisfy `n − stragglers ≥ need`
+    /// (Theorem 1) — checked in [`CopmlCost::estimate`].
+    pub stragglers: usize,
 }
 
 impl CopmlCost {
@@ -195,6 +203,14 @@ impl CopmlCost {
     }
 
     pub fn estimate(&self, cal: &Calibration, wan: &WanModel) -> PhaseBreakdown {
+        // Compare via addition: `n - stragglers` would wrap for
+        // stragglers > n in release builds and sail past this check.
+        assert!(
+            self.n >= self.stragglers + self.need(),
+            "stragglers exceed the quorum slack: N − {} < need {} (Theorem 1)",
+            self.stragglers,
+            self.need()
+        );
         let (n, k, t, d, iters) = (
             self.n as f64,
             self.k as f64,
@@ -202,6 +218,8 @@ impl CopmlCost {
             self.d as f64,
             self.iters as f64,
         );
+        // Live roster after exclusions — what the survivors' NICs see.
+        let live = (self.n - self.stragglers) as f64;
         let rows_k = self.rows_k();
         let targets = if self.subgroups { t + 1.0 } else { n };
 
@@ -227,21 +245,39 @@ impl CopmlCost {
         let eb = self.wire.elem_bytes() as f64;
         // One-time: dataset encode exchange within the subgroup.
         let bytes_enc_data = targets * rows_k * d * eb;
-        // Per iteration: model-encode exchange + result sharing to all +
-        // two king-openings for TruncPr (king NIC dominates: (N−1)·d down).
+        // Per iteration: model-encode exchange + result sharing to the
+        // live roster + two king-openings for TruncPr (king NIC
+        // dominates: (live−1)·d down).
         let bytes_model = targets * d * eb;
-        let bytes_results = (n - 1.0) * d * eb;
-        let bytes_trunc_king = 2.0 * (n - 1.0) * d * eb;
+        let bytes_results = (live - 1.0) * d * eb;
+        let bytes_trunc_king = 2.0 * (live - 1.0) * d * eb;
+        // Quorum announcement (share_results phase): whenever the live
+        // roster exceeds the recovery threshold, the leader broadcasts
+        // the first-arrival quorum composition — `need + 2` words (member
+        // count, members, exclusion count) to each live peer. Mirrors the
+        // live king ledger exactly for runs without exclusion
+        // announcements (rust/tests/straggler.rs); a round that announces
+        // exclusions carries one extra word per excluded id — a transient
+        // the model does not attempt to time-resolve.
+        let need = self.need() as f64;
+        let bytes_quorum = if live > need { (live - 1.0) * (need + 2.0) * eb } else { 0.0 };
         let rounds_per_iter = 4.0; // encode, share, 2×trunc-open
         // Per-message processing (MPI4Py): each client ingests ~(targets−1)
-        // encode messages + (N−1) result messages; the king ingests 2(T+1)
-        // truncation shares and emits 2(N−1).
-        let msgs_per_iter = (targets - 1.0) + (n - 1.0) + 2.0 * (t + 1.0) + 2.0 * (n - 1.0);
+        // encode messages + (live−1) result messages (+ the quorum
+        // announcement when present); the king ingests 2(T+1) truncation
+        // shares and emits 2(live−1).
+        let msgs_per_iter = (targets - 1.0)
+            + (live - 1.0)
+            + if live > need { 1.0 } else { 0.0 }
+            + 2.0 * (t + 1.0)
+            + 2.0 * (live - 1.0);
         let comm_s = wan.phase_time(bytes_enc_data as u64)
             + iters
                 * (wan.latency_s * rounds_per_iter
                     + wan.msg_proc_s * msgs_per_iter
-                    + wan.serialize_time((bytes_model + bytes_results + bytes_trunc_king) as u64));
+                    + wan.serialize_time(
+                        (bytes_model + bytes_results + bytes_trunc_king + bytes_quorum) as u64,
+                    ));
 
         let offline_s = match self.offline {
             OfflineMode::Dealer => 0.0,
@@ -398,6 +434,7 @@ mod tests {
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
             trunc_bits: 25,
+            stragglers: 0,
         };
         let c4 = base.estimate(&cal, &wan);
         let c16 = CopmlCost { k: 16, ..base }.estimate(&cal, &wan);
@@ -422,6 +459,7 @@ mod tests {
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
             trunc_bits: 25,
+            stragglers: 0,
         }
         .estimate(&cal, &wan);
         let bh08 = BaselineCost::paper(50, 9019, 3073, 50, false).estimate(&cal, &wan);
@@ -455,6 +493,7 @@ mod tests {
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
             trunc_bits: 25,
+            stragglers: 0,
         };
         let dealer = base.estimate(&cal, &wan);
         assert_eq!(dealer.offline_s, 0.0, "dealer offline must be free");
@@ -470,6 +509,58 @@ mod tests {
             CopmlCost { iters: 100, offline: OfflineMode::Distributed, ..base }
                 .estimate(&cal, &wan);
         assert!(longer.offline_s > dist.offline_s);
+    }
+
+    #[test]
+    fn straggler_column_shrinks_comm_only() {
+        // Losing stragglers removes their NIC traffic (result shares,
+        // trunc fan-out) but never touches compute or decode terms — the
+        // survivors do the same work on the fastest quorum.
+        let wan = WanModel::paper();
+        let cal = fake_cal();
+        let base = CopmlCost {
+            n: 52,
+            k: 16,
+            t: 1,
+            r: 1,
+            m: 9019,
+            d: 3073,
+            iters: 50,
+            subgroups: true,
+            wire: Wire::U64,
+            offline: OfflineMode::Dealer,
+            trunc_bits: 25,
+            stragglers: 0,
+        };
+        let healthy = base.estimate(&cal, &wan);
+        let degraded = CopmlCost { stragglers: 2, ..base }.estimate(&cal, &wan);
+        assert!(degraded.comm_s < healthy.comm_s, "stragglers must shrink comm");
+        assert_eq!(degraded.comp_s, healthy.comp_s);
+        assert_eq!(degraded.encdec_s, healthy.encdec_s);
+        assert_eq!(degraded.offline_s, healthy.offline_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "stragglers exceed the quorum slack")]
+    fn straggler_column_rejects_infeasible_loss() {
+        // n=50 Case 1: need = 49, slack = 1 — two stragglers cannot work.
+        let wan = WanModel::paper();
+        let cal = fake_cal();
+        CopmlCost {
+            n: 50,
+            k: 16,
+            t: 1,
+            r: 1,
+            m: 9019,
+            d: 3073,
+            iters: 50,
+            subgroups: true,
+            wire: Wire::U64,
+            offline: OfflineMode::Dealer,
+            trunc_bits: 25,
+            stragglers: 2,
+        }
+        .estimate(&cal, &wan);
     }
 
     #[test]

@@ -97,6 +97,14 @@ pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<TrainOutput, String> {
                 .into(),
         );
     }
+    if !cfg.faults.is_empty() || cfg.max_lag.is_some() {
+        return Err(
+            "fault injection and straggler exclusion (--delay/--kill-after/--max-lag) \
+             only exist in the full protocol, where real messages can be late — \
+             run with --mode full"
+                .into(),
+        );
+    }
     let task = QuantizedTask::new(cfg, ds);
     train_task(cfg, ds, &task)
 }

@@ -33,6 +33,57 @@ use crate::net::Wire;
 use crate::quant::{self, FpPlan};
 use crate::runtime::Engine;
 
+/// Fault-injection plan for straggler/failure experiments: per-party
+/// compute delays and kill points, threaded from the CLI (`--delay
+/// id:ms`, `--kill-after id:iter`) into the full protocol. Faults only
+/// perturb *timing and liveness* — the decoded gradients are exact
+/// interpolations (Theorem 1), so a run that completes under faults has a
+/// bit-identical `w_trace`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// `(party, milliseconds)`: injected compute-phase sleep per
+    /// iteration — models slow hardware / a congested link.
+    pub delays: Vec<(usize, u64)>,
+    /// `(party, iteration)`: the party exits (closing its transport) at
+    /// the start of that 0-based iteration — models a crash.
+    pub kills: Vec<(usize, usize)>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.delays.is_empty() && self.kills.is_empty()
+    }
+
+    /// Injected per-iteration delay for `party`, if any.
+    pub fn delay_ms(&self, party: usize) -> Option<u64> {
+        self.delays.iter().find(|&&(p, _)| p == party).map(|&(_, ms)| ms)
+    }
+
+    /// Iteration at which `party` is killed, if any.
+    pub fn kill_at(&self, party: usize) -> Option<usize> {
+        self.kills.iter().find(|&&(p, _)| p == party).map(|&(_, it)| it)
+    }
+
+    /// Parse a CLI list like `"3:250,5:100"` into `(party, value)` pairs.
+    pub fn parse_pairs(spec: &str, what: &str) -> Result<Vec<(usize, u64)>, String> {
+        let mut out = Vec::new();
+        for item in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (id, val) = item
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| format!("invalid --{what} entry '{item}' (expected id:value)"))?;
+            let id: usize = id
+                .parse()
+                .map_err(|_| format!("invalid party id in --{what} entry '{item}'"))?;
+            let val: u64 = val
+                .parse()
+                .map_err(|_| format!("invalid value in --{what} entry '{item}'"))?;
+            out.push((id, val));
+        }
+        Ok(out)
+    }
+}
+
 /// Choice of COPML's `(K, T)` operating point (paper §V.A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CaseParams {
@@ -100,6 +151,15 @@ pub struct CopmlConfig {
     /// to every pre-existing trace) or the dealer-free distributed phase
     /// ([`crate::mpc::offline`], DN07 extraction over the live transport).
     pub offline: OfflineMode,
+    /// Injected faults for straggler experiments (full protocol only;
+    /// empty = no faults, the default).
+    pub faults: FaultPlan,
+    /// Straggler exclusion threshold: a party that misses this many
+    /// consecutive quorums is excluded for the rest of training (decided
+    /// by the quorum leader, applied by every live party in the same
+    /// round). `None` (the default) disables exclusion: late parties are
+    /// skipped per-round but stay in the roster.
+    pub max_lag: Option<usize>,
 }
 
 impl CopmlConfig {
@@ -122,6 +182,8 @@ impl CopmlConfig {
             parallelism: Parallelism::sequential(),
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
+            faults: FaultPlan::default(),
+            max_lag: None,
         }
     }
 
@@ -156,6 +218,114 @@ impl CopmlConfig {
                 "N={} below recovery threshold (2r+1)(K+T−1)+1={need} (r={}, K={}, T={})",
                 self.n, self.r, self.k, self.t
             ));
+        }
+        // Fault plan sanity: the quorum machinery tolerates slow and dead
+        // parties, but party 0 is the king (opening hub) AND the quorum
+        // leader — the protocol has no fail-over for it.
+        let fault_ids = || {
+            self.faults
+                .delays
+                .iter()
+                .map(|&(id, _)| id)
+                .chain(self.faults.kills.iter().map(|&(id, _)| id))
+        };
+        for id in fault_ids() {
+            if id >= self.n {
+                return Err(format!("fault plan names party {id}, but N = {}", self.n));
+            }
+            if id == 0 {
+                return Err(
+                    "fault plan may not target party 0: it is the king (opening hub) \
+                     and quorum leader, with no fail-over"
+                        .into(),
+                );
+            }
+        }
+        // Note on opening contributors: the per-round king openings are
+        // the two TruncPr opens at degree T (contributors 0..=T — party
+        // 0's own subgroup, protected by the king-strand check below);
+        // the only degree-2T opening is the one-time Xᵀy reduction, which
+        // completes before the earliest kill can fire. So kills of
+        // parties above T need no special-casing here beyond the
+        // collateral/slack accounting.
+        for &(id, iter) in &self.faults.kills {
+            if iter >= self.iters {
+                return Err(format!(
+                    "--kill-after {id}:{iter} can never fire: training runs {} \
+                     iterations (kill points are 0-based)",
+                    self.iters
+                ));
+            }
+        }
+        // Duplicate entries would silently shadow each other (the first
+        // match wins in delay_ms/kill_at) — reject them instead.
+        for (what, mut ids) in [
+            ("delay", self.faults.delays.iter().map(|&(id, _)| id).collect::<Vec<_>>()),
+            ("kill-after", self.faults.kills.iter().map(|&(id, _)| id).collect::<Vec<_>>()),
+        ] {
+            ids.sort_unstable();
+            if ids.windows(2).any(|w| w[0] == w[1]) {
+                return Err(format!("--{what} names the same party more than once"));
+            }
+        }
+        if !self.faults.kills.is_empty() && self.max_lag.is_none() {
+            return Err(
+                "--kill-after requires --max-lag: without straggler exclusion the \
+                 final model opening would block on the dead party"
+                    .into(),
+            );
+        }
+        if let Some(lag) = self.max_lag {
+            if lag == 0 {
+                return Err("--max-lag must be ≥ 1 (0 would exclude everyone)".into());
+            }
+            // With exclusion armed, every faulted party will eventually
+            // leave the roster — and take subgroup collateral with it:
+            // once a group has fewer than T+1 live members, its survivors
+            // cannot reconstruct their encodings and halt too. Count the
+            // full expected loss, not just the named parties.
+            let mut faulted: Vec<usize> = fault_ids().collect();
+            faulted.sort_unstable();
+            faulted.dedup();
+            let mut lost = faulted.clone();
+            if self.subgroups {
+                for &id in &faulted {
+                    let group = protocol::subgroup(self.n, self.t, id);
+                    let survivors = group.iter().filter(|j| !faulted.contains(j)).count();
+                    if survivors < self.t + 1 {
+                        lost.extend(group);
+                    }
+                }
+                if lost.contains(&0) {
+                    return Err(
+                        "fault plan strands party 0 (the king / quorum leader): its \
+                         subgroup would fall below T+1 live members once the faulted \
+                         mates are excluded — fault parties outside party 0's subgroup"
+                            .into(),
+                    );
+                }
+            } else {
+                // Naive layout: parties 0..=T are everyone's encode
+                // sources; losing any of them strands the whole run.
+                if let Some(&id) = faulted.iter().find(|&&id| id <= self.t) {
+                    return Err(format!(
+                        "fault plan targets party {id}, an encode source of the naive \
+                         (subgroups=false) layout — every client needs its share"
+                    ));
+                }
+            }
+            lost.sort_unstable();
+            lost.dedup();
+            if self.n < need + lost.len() {
+                return Err(format!(
+                    "fault plan disables {} parties ({} named + subgroup collateral) but \
+                     the quorum needs {need} of N={} (Theorem 1 slack N − need = {})",
+                    lost.len(),
+                    faulted.len(),
+                    self.n,
+                    self.n - need
+                ));
+            }
         }
         // Gradient-magnitude bound, *measured* on the data: the largest
         // initial-gradient coordinate |Xᵀ(ĝ(0)−y)|_∞ (one pass), with a 4×
@@ -339,6 +509,86 @@ mod tests {
         // The boundary itself is fine: n = 2(t+1).
         let ok = CopmlConfig::for_dataset(&ds, 4, CaseParams::explicit(1, 1), 1);
         assert!(ok.validate(&ds).is_ok(), "{:?}", ok.validate(&ds));
+    }
+
+    #[test]
+    fn fault_plan_parsing() {
+        assert_eq!(
+            FaultPlan::parse_pairs("3:250, 5:100", "delay").unwrap(),
+            vec![(3, 250), (5, 100)]
+        );
+        assert!(FaultPlan::parse_pairs("", "delay").unwrap().is_empty());
+        assert!(FaultPlan::parse_pairs("3", "delay").is_err());
+        assert!(FaultPlan::parse_pairs("x:1", "delay").is_err());
+        assert!(FaultPlan::parse_pairs("1:y", "delay").is_err());
+        let plan = FaultPlan { delays: vec![(3, 250)], kills: vec![(5, 2)] };
+        assert_eq!(plan.delay_ms(3), Some(250));
+        assert_eq!(plan.delay_ms(4), None);
+        assert_eq!(plan.kill_at(5), Some(2));
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn fault_plan_validation() {
+        let ds = Dataset::synth(SynthSpec::tiny(), 9);
+        // N=10, K=2, T=1: need 7, slack 3.
+        let base = CopmlConfig::for_dataset(&ds, 10, CaseParams::explicit(2, 1), 9);
+        let mut cfg = base.clone();
+        cfg.faults.delays = vec![(8, 100)];
+        assert!(cfg.validate(&ds).is_ok(), "{:?}", cfg.validate(&ds));
+        cfg.max_lag = Some(2);
+        cfg.faults.kills = vec![(9, 1)];
+        assert!(cfg.validate(&ds).is_ok(), "{:?}", cfg.validate(&ds));
+        // kills require exclusion to be armed
+        cfg.max_lag = None;
+        assert!(cfg.validate(&ds).unwrap_err().contains("max-lag"));
+        // the king cannot be faulted
+        let mut cfg = base.clone();
+        cfg.faults.delays = vec![(0, 100)];
+        assert!(cfg.validate(&ds).unwrap_err().contains("party 0"));
+        // out-of-range ids are named
+        let mut cfg = base.clone();
+        cfg.faults.kills = vec![(12, 0)];
+        cfg.max_lag = Some(1);
+        assert!(cfg.validate(&ds).unwrap_err().contains("12"));
+        // killing party 0's subgroup mate would strand the king (its
+        // group falls below T+1) — rejected with the cause named; the
+        // same holds for a delay whose exclusion strands the group
+        let mut cfg = base.clone();
+        cfg.faults.kills = vec![(1, 1)];
+        cfg.max_lag = Some(2);
+        assert!(cfg.validate(&ds).unwrap_err().contains("strands party 0"));
+        let mut cfg = base.clone();
+        cfg.faults.delays = vec![(1, 50)];
+        cfg.max_lag = Some(2);
+        assert!(cfg.validate(&ds).unwrap_err().contains("strands party 0"));
+        // killing a party in (T, 2T] is legitimate: the per-round king
+        // openings gather from 0..=T only, and the one-time degree-2T
+        // opening precedes the earliest kill — the plan validates (its
+        // subgroup mate is counted as collateral: lost {2,3} ≤ slack 3)
+        let mut cfg = base.clone();
+        cfg.faults.kills = vec![(2, 3)];
+        cfg.max_lag = Some(2);
+        assert!(cfg.validate(&ds).is_ok(), "{:?}", cfg.validate(&ds));
+        // faulting more parties than the Theorem-1 slack is rejected
+        let mut cfg = base.clone();
+        cfg.faults.delays = vec![(5, 1), (6, 1), (7, 1), (8, 1)];
+        cfg.max_lag = Some(2);
+        assert!(cfg.validate(&ds).unwrap_err().contains("slack"));
+        // a kill scheduled past the last iteration would never fire
+        let mut cfg = base.clone();
+        cfg.iters = 5;
+        cfg.faults.kills = vec![(9, 7)];
+        cfg.max_lag = Some(2);
+        assert!(cfg.validate(&ds).unwrap_err().contains("never fire"));
+        // duplicate fault entries silently shadow each other — rejected
+        let mut cfg = base.clone();
+        cfg.faults.delays = vec![(8, 100), (8, 900)];
+        assert!(cfg.validate(&ds).unwrap_err().contains("more than once"));
+        // --max-lag 0 is nonsense
+        let mut cfg = base;
+        cfg.max_lag = Some(0);
+        assert!(cfg.validate(&ds).unwrap_err().contains("max-lag"));
     }
 
     #[test]

@@ -16,6 +16,20 @@
 //! * [`run_client`] — ONE client over an already-established transport:
 //!   the entry point of the `copml party` CLI for genuinely distributed
 //!   runs (one OS process per party).
+//!
+//! **Straggler resilience (Theorem 1 made operational):** whenever the
+//! live roster exceeds the recovery threshold `need = (2r+1)(K+T−1)+1`,
+//! the per-iteration encoded-gradient gather completes on the first
+//! `need` arrivals instead of a fixed prefix: the quorum leader (party 0)
+//! collects first-arrivals ([`crate::net::gather_quorum`]), announces the
+//! quorum composition, and every live party decodes from that same
+//! subset through a per-subset [`crate::lcc::DecoderCache`]. Because
+//! Lagrange interpolation is exact, the decoded gradient — and hence the
+//! whole `w_trace` — is bit-identical regardless of which quorum answers.
+//! A party that misses `max_lag` consecutive quorums is excluded for the
+//! rest of training (roster-aware collectives in [`crate::mpc::Party`]);
+//! injected faults for experiments come from
+//! [`crate::coordinator::FaultPlan`] (`--delay`, `--kill-after`).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -25,7 +39,7 @@ use crate::field::{par, MatShape};
 use crate::lcc;
 use crate::mpc::{Dealer, Offline, OfflineMode, Party};
 use crate::net::local::Hub;
-use crate::net::Transport;
+use crate::net::{gather_quorum, Transport};
 use crate::poly;
 use crate::runtime::{native::NativeKernel, Engine, GradKernel, KernelServer};
 use crate::shamir;
@@ -56,6 +70,17 @@ pub struct ClientLedger {
     pub seconds: [f64; 8],
     /// Payload bytes sent per phase.
     pub bytes: [u64; 8],
+    /// Per-iteration quorum of the encoded-gradient decode: the client
+    /// ids whose results interpolated this round's gradient (sorted).
+    /// With no slack (`live == need`) this is the whole live roster.
+    pub quorums: Vec<Vec<usize>>,
+    /// Parties excluded from the roster during this client's run, in
+    /// exclusion order (stragglers past `--max-lag`, killed peers).
+    pub excluded: Vec<usize>,
+    /// Undelivered mailbox state (queued messages + forget-tombstones) at
+    /// client exit. Zero after any clean run — the mailbox-hygiene
+    /// regression guard.
+    pub pending_at_exit: usize,
 }
 
 impl ClientLedger {
@@ -73,7 +98,9 @@ pub struct ProtocolOutput {
 
 /// Per-client subgroup of size `T+1` used for encode exchanges
 /// (paper footnote 4). Returns the member ids of client `i`'s group.
-fn subgroup(n: usize, t: usize, i: usize) -> Vec<usize> {
+/// `pub(crate)` so `CopmlConfig::validate` can compute the subgroup
+/// collateral of a fault plan.
+pub(crate) fn subgroup(n: usize, t: usize, i: usize) -> Vec<usize> {
     let gsize = t + 1;
     let ngroups = (n / gsize).max(1);
     let g = (i / gsize).min(ngroups - 1);
@@ -109,11 +136,15 @@ struct ClientCtx {
 /// One client's result of a full-protocol run.
 pub struct ClientOutput {
     pub id: usize,
-    /// Opened final model (field domain).
-    pub w_final: Vec<u64>,
-    /// Per-iteration share snapshot of `[w]` (for god-mode trace recovery).
+    /// Opened final model (field domain) — `None` if this client halted
+    /// early (fault-plan kill, straggler exclusion, dead subgroup mate).
+    pub w_final: Option<Vec<u64>>,
+    /// Per-iteration share snapshot of `[w]` (for god-mode trace recovery;
+    /// partial for halted clients).
     pub w_share_snapshots: Vec<Vec<u64>>,
     pub ledger: ClientLedger,
+    /// Why the client stopped early, when it did.
+    pub halted: Option<String>,
 }
 
 /// Run the full protocol. Spawns `cfg.n` client threads over the
@@ -307,23 +338,54 @@ fn run_clients<T: Transport + Send + 'static>(
     }
     let mut results: Vec<ClientOutput> = handles
         .into_iter()
-        .map(|h| h.join().map_err(|_| "client thread panicked".to_string()))
+        .map(|h| {
+            h.join().map_err(|e| {
+                // Surface the client's own panic message (e.g. a clear
+                // infeasibility cause) instead of a generic note.
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "no panic message".into());
+                format!("client thread panicked: {msg}")
+            })
+        })
         .collect::<Result<_, _>>()?;
     results.sort_by_key(|r| r.id);
 
-    // All clients must agree on the final model.
-    for r in &results[1..] {
-        if r.w_final != results[0].w_final {
+    // Clients that ran to completion (under faults, the killed/excluded
+    // ones halt early with a recorded reason). The god-mode trace needs
+    // T+1 full snapshot sets; fewer completers means the run failed.
+    let completers: Vec<&ClientOutput> = results.iter().filter(|r| r.w_final.is_some()).collect();
+    if completers.len() < t + 1 {
+        let reasons: Vec<String> = results
+            .iter()
+            .filter_map(|r| r.halted.as_ref().map(|h| format!("party {}: {h}", r.id)))
+            .collect();
+        return Err(format!(
+            "only {} of {n} clients completed training (need ≥ T+1 = {}): {}",
+            completers.len(),
+            t + 1,
+            reasons.join("; ")
+        ));
+    }
+
+    // All completing clients must agree on the final model.
+    for r in &completers[1..] {
+        if r.w_final != completers[0].w_final {
             return Err("clients disagree on the final model".into());
         }
     }
 
-    // God-mode trace: reconstruct w^{(t)} from t+1 share snapshots.
+    // God-mode trace: reconstruct w^{(t)} from T+1 completers' share
+    // snapshots (any T+1 evaluation points interpolate exactly, so which
+    // completers is immaterial).
     let lambdas = shamir::lambda_points(n);
-    let rec = shamir::Reconstructor::new(f, &lambdas[..t + 1]);
+    let pts: Vec<u64> = completers[..t + 1].iter().map(|r| lambdas[r.id]).collect();
+    let rec = shamir::Reconstructor::new(f, &pts);
     let mut train = TrainOutput::default();
     for it in 0..cfg.iters {
-        let views: Vec<&[u64]> = results[..t + 1]
+        let views: Vec<&[u64]> = completers[..t + 1]
             .iter()
             .map(|r| r.w_share_snapshots[it].as_slice())
             .collect();
@@ -332,7 +394,7 @@ fn run_clients<T: Transport + Send + 'static>(
         train.w_trace.push(w);
     }
     // Consistency: reconstructed last iterate must equal the opened model.
-    if train.w_trace.last() != Some(&results[0].w_final) {
+    if train.w_trace.last() != completers[0].w_final.as_ref() {
         return Err("opened model disagrees with reconstructed trace".into());
     }
     train.eval_traces(&cfg.plan, ds);
@@ -352,6 +414,62 @@ pub(crate) fn padded_ranges(rows_padded: usize, n: usize) -> Vec<(usize, usize)>
         start += len;
     }
     out
+}
+
+/// The quorum leader. Party 0 gathers the first-arrival result quorum and
+/// broadcasts its composition (plus any straggler exclusions), so every
+/// live party decodes from the *same* subset — without agreement the
+/// decoded gradient *secrets* would still match (interpolation is exact),
+/// but the parties' shares would sit on different polynomials and the
+/// next opening would reconstruct garbage. Party 0 is already the king of
+/// every opening, so this adds no new trust or fail-over assumption.
+const QUORUM_LEADER: usize = 0;
+
+/// Wire layout of the per-round roster message from the quorum leader:
+/// `[member_count, members…, excluded_count, excluded…]`.
+fn encode_roster_msg(members: &[usize], excluded: &[usize]) -> Vec<u64> {
+    let mut msg = Vec::with_capacity(2 + members.len() + excluded.len());
+    msg.push(members.len() as u64);
+    msg.extend(members.iter().map(|&j| j as u64));
+    msg.push(excluded.len() as u64);
+    msg.extend(excluded.iter().map(|&j| j as u64));
+    msg
+}
+
+/// Parse a roster message; `n` bounds the party ids.
+fn decode_roster_msg(msg: &[u64], n: usize) -> Result<(Vec<usize>, Vec<usize>), String> {
+    let take = |slice: &[u64], what: &str| -> Result<(Vec<usize>, usize), String> {
+        let count = *slice.first().ok_or_else(|| format!("roster message truncated ({what})"))?
+            as usize;
+        // Bound via subtraction (len ≥ 1 here): `1 + count` would wrap
+        // for a corrupt count of usize::MAX and bypass the guard.
+        if slice.len() - 1 < count {
+            return Err(format!("roster message truncated ({what}: {count} entries)"));
+        }
+        let ids: Vec<usize> = slice[1..1 + count].iter().map(|&v| v as usize).collect();
+        if let Some(&bad) = ids.iter().find(|&&id| id >= n) {
+            return Err(format!("roster message names party {bad} of {n}"));
+        }
+        Ok((ids, 1 + count))
+    };
+    let (members, used) = take(msg, "members")?;
+    let (excluded, used2) = take(&msg[used..], "exclusions")?;
+    if used + used2 != msg.len() {
+        return Err("roster message has trailing data".into());
+    }
+    // The leader emits both lists strictly ascending; enforcing it here
+    // rejects duplicates (a repeated member id would double-consume a
+    // single result share and deadlock the gather) the same graceful way
+    // as every other malformed-roster case.
+    for (ids, what) in [(&members, "members"), (&excluded, "exclusions")] {
+        if ids.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(format!("roster message {what} not strictly ascending"));
+        }
+    }
+    if excluded.contains(&0) {
+        return Err("roster message excludes party 0 (the king / quorum leader)".into());
+    }
+    Ok((members, excluded))
 }
 
 fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
@@ -433,7 +551,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     }
     // Reconstruct my encoded matrix X̃_me from the sources' shares.
     let source_pts: Vec<u64> = sources.iter().map(|&i| party.lambdas[i]).collect();
-    let rec = shamir::Reconstructor::new(f, &source_pts);
+    let mut rec = shamir::Reconstructor::new(f, &source_pts);
     let enc_shares: Vec<Vec<u64>> = sources
         .iter()
         .map(|&i| {
@@ -459,92 +577,273 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         .iter()
         .map(|row| row[..k].iter().fold(0u64, |acc, &c| f.add(acc, c)))
         .collect();
-    // Decoder for the aggregate gradient (uses the first `need` clients).
+    // Per-quorum decoder factory: the aggregate gradient decodes from
+    // whichever `need` clients answer first — any such subset
+    // interpolates the same value bit for bit (Theorem 1), so the
+    // trajectory does not depend on quorum composition.
     let need = cfg.recovery_threshold();
     let deg_f = 2 * cfg.r + 1;
-    let decoder = lcc::Decoder::new(f, k, t, deg_f, &alphas[..need], &betas);
+    let mut dec_cache = lcc::DecoderCache::new(f, k, t, deg_f, alphas.clone(), betas.clone());
     let shape_k = MatShape::new(rows_k, d);
+
+    // Fault plan (straggler experiments): this party's injected
+    // compute-phase delay and kill point, if any.
+    let delay = cfg.faults.delay_ms(me).map(std::time::Duration::from_millis);
+    let kill_at = cfg.faults.kill_at(me);
+    // Straggler bookkeeping (quorum leader). `misses[j]` counts j's
+    // consecutive quorum absences; every party applies the leader's
+    // announced exclusions. The leader resolves round i's late set at
+    // round i+1 (`pending_late`): a full round of grace, so a healthy
+    // party that loses the first-arrival race by scheduler jitter has
+    // long delivered by resolution time and never counts as a miss —
+    // only parties lagging a whole round (or dead) accumulate misses.
+    let mut misses = vec![0usize; n];
+    let mut pending_late: Vec<usize> = Vec::new();
+    let mut pending_tag: u64 = 0;
+    // Live members of `sources`, tracked so the model-encode
+    // reconstructor is rebuilt only when exclusions change it.
+    let mut rec_sources: Vec<usize> = sources.clone();
 
     let mut w_share = vec![0u64; d]; // shares of w^(0) = 0
     let mut snapshots: Vec<Vec<u64>> = Vec::with_capacity(cfg.iters);
 
     timer.reset(party);
-    for _iter in 0..cfg.iters {
-        // ---- encode the model (Eq. 4; lines 12–15) ----------------------
-        let vmasks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(d)).collect();
-        let tag_wenc = party.fresh_tag();
-        let mut own_wenc: Option<Vec<u64>> = None;
-        for &i in &targets {
-            let mut buf = w_share.clone();
-            party.scale(&mut buf, w_data_coeff[i]);
-            for (kk, vm) in vmasks.iter().enumerate() {
-                let c = enc_rows[i][k + kk];
-                for (b, &v) in buf.iter_mut().zip(vm) {
-                    *b = f.reduce(*b + c * v);
+    let online = (|| -> Result<Vec<u64>, String> {
+        for iter in 0..cfg.iters {
+            if kill_at == Some(iter) {
+                return Err(format!("killed at iteration {iter} by the fault plan"));
+            }
+            // Roster-adjusted encode roles for this round. Reconstruction
+            // from any T+1 of the original sources is exact, so losing a
+            // source is harmless until fewer than T+1 remain.
+            let live_targets: Vec<usize> =
+                targets.iter().copied().filter(|&j| party.is_live(j)).collect();
+            let cur_sources: Vec<usize> =
+                sources.iter().copied().filter(|&j| party.is_live(j)).collect();
+            if cur_sources.len() < t + 1 {
+                return Err(format!(
+                    "subgroup reconstruction infeasible: only {} of {} encode sources \
+                     live (need T+1 = {})",
+                    cur_sources.len(),
+                    sources.len(),
+                    t + 1
+                ));
+            }
+            // ---- encode the model (Eq. 4; lines 12–15) ------------------
+            let vmasks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(d)).collect();
+            let tag_wenc = party.fresh_tag();
+            let mut own_wenc: Option<Vec<u64>> = None;
+            for &i in &live_targets {
+                let mut buf = w_share.clone();
+                party.scale(&mut buf, w_data_coeff[i]);
+                for (kk, vm) in vmasks.iter().enumerate() {
+                    let c = enc_rows[i][k + kk];
+                    for (b, &v) in buf.iter_mut().zip(vm) {
+                        *b = f.reduce(*b + c * v);
+                    }
                 }
-            }
-            if i == me {
-                own_wenc = Some(buf);
-            } else {
-                party.net.send(i, tag_wenc, buf);
-            }
-        }
-        let wenc_shares: Vec<Vec<u64>> = sources
-            .iter()
-            .map(|&i| {
                 if i == me {
-                    own_wenc.take().unwrap()
+                    own_wenc = Some(buf);
                 } else {
-                    party.net.recv(i, tag_wenc)
+                    party.net.send(i, tag_wenc, buf);
                 }
-            })
-            .collect();
-        let views: Vec<&[u64]> = wenc_shares.iter().map(|v| v.as_slice()).collect();
-        let mut w_tilde = vec![0u64; d];
-        rec.reconstruct(f, &views, &mut w_tilde);
-        timer.tick(&mut ledger, 4, party);
-
-        // ---- local encoded gradient (Eq. 7; line 16) --------------------
-        let f_mine = ctx.kernel.encoded_gradient(&x_tilde, shape_k, &w_tilde, &task.coeffs_q);
-        timer.tick(&mut ledger, 5, party);
-
-        // ---- share the result (line 16b) --------------------------------
-        let tag_res = party.fresh_tag();
-        let own_res = party.share_out(&f_mine, tag_res);
-        let result_shares: Vec<Vec<u64>> = (0..need)
-            .map(|j| {
-                if j == me {
-                    own_res.clone()
-                } else {
-                    party.net.recv(j, tag_res)
-                }
-            })
-            .collect();
-        // Drain the rest (sent for cost parity; not needed to decode).
-        for j in need..n {
-            if j != me {
-                let _ = party.net.recv(j, tag_res);
             }
+            // Gather from the live sources, SKIPPING any that died since
+            // the roster was last updated (exclusion lags death detection
+            // by up to a round): any T+1 of the group's shares
+            // reconstruct the encoding exactly, so a dead mate is only
+            // fatal once fewer than T+1 sources actually answer.
+            let mut got_sources: Vec<usize> = Vec::with_capacity(cur_sources.len());
+            let mut wenc_shares: Vec<Vec<u64>> = Vec::with_capacity(cur_sources.len());
+            for &i in &cur_sources {
+                if i == me {
+                    got_sources.push(i);
+                    wenc_shares.push(own_wenc.take().unwrap());
+                } else {
+                    match party.net.recv_check(i, tag_wenc) {
+                        Ok(s) => {
+                            got_sources.push(i);
+                            wenc_shares.push(s);
+                        }
+                        Err(_) => {} // freshly dead: skip while enough remain
+                    }
+                }
+            }
+            if got_sources.len() < t + 1 {
+                return Err(format!(
+                    "subgroup reconstruction infeasible: only {} of {} encode sources \
+                     answered (need T+1 = {})",
+                    got_sources.len(),
+                    sources.len(),
+                    t + 1
+                ));
+            }
+            if got_sources != rec_sources {
+                let pts: Vec<u64> = got_sources.iter().map(|&i| party.lambdas[i]).collect();
+                rec = shamir::Reconstructor::new(f, &pts);
+                rec_sources = got_sources;
+            }
+            let views: Vec<&[u64]> = wenc_shares.iter().map(|v| v.as_slice()).collect();
+            let mut w_tilde = vec![0u64; d];
+            rec.reconstruct(f, &views, &mut w_tilde);
+            timer.tick(&mut ledger, 4, party);
+
+            // ---- local encoded gradient (Eq. 7; line 16) ----------------
+            let f_mine =
+                ctx.kernel.encoded_gradient(&x_tilde, shape_k, &w_tilde, &task.coeffs_q);
+            if let Some(dl) = delay {
+                std::thread::sleep(dl); // injected straggler (fault plan)
+            }
+            timer.tick(&mut ledger, 5, party);
+
+            // ---- share the result + first-arrival quorum (line 16b) -----
+            let tag_res = party.fresh_tag();
+            let tag_roster = party.fresh_tag();
+            let own_res = party.share_out(&f_mine, tag_res);
+            let live_now = party.live_ids();
+            let mut newly_excluded: Vec<usize> = Vec::new();
+            let (members, result_shares) = if live_now.len() > need {
+                if me == QUORUM_LEADER {
+                    let peers: Vec<usize> =
+                        live_now.iter().copied().filter(|&j| j != me).collect();
+                    let out = gather_quorum(party.net, &peers, tag_res, need, own_res)
+                        .map_err(|e| format!("encoded-gradient gather: {e}"))?;
+                    // Resolve the PREVIOUS round's late set, one round of
+                    // grace later: delivered by now → keeping pace;
+                    // still absent → a genuine miss.
+                    for &j in &pending_late {
+                        let arrived = party.net.forget(j, pending_tag);
+                        if !party.is_live(j) {
+                            continue;
+                        }
+                        if arrived {
+                            misses[j] = 0;
+                        } else {
+                            misses[j] += 1;
+                            if cfg.max_lag.map_or(false, |lag| misses[j] >= lag) {
+                                newly_excluded.push(j);
+                            }
+                        }
+                    }
+                    for &j in &out.members {
+                        misses[j] = 0;
+                    }
+                    // Never exclude below the recovery threshold: with
+                    // more offenders than slack, the excess stays on
+                    // probation (their miss counts keep them first in
+                    // line next round).
+                    newly_excluded.truncate(live_now.len().saturating_sub(need));
+                    pending_late = out.late.clone();
+                    pending_tag = tag_res;
+                    let msg = encode_roster_msg(&out.members, &newly_excluded);
+                    for &j in &peers {
+                        party.net.send(j, tag_roster, msg.clone());
+                    }
+                    (out.members, out.payloads)
+                } else {
+                    let msg = party
+                        .net
+                        .recv_check(QUORUM_LEADER, tag_roster)
+                        .map_err(|e| format!("quorum announcement: {e}"))?;
+                    let (m, x) = decode_roster_msg(&msg, n)?;
+                    newly_excluded = x;
+                    if newly_excluded.contains(&me) {
+                        return Err(format!(
+                            "excluded by the quorum leader after missing {} consecutive \
+                             quorums (--max-lag)",
+                            cfg.max_lag.unwrap_or(0)
+                        ));
+                    }
+                    let mut shares = Vec::with_capacity(m.len());
+                    let mut own_res = Some(own_res);
+                    for &j in &m {
+                        shares.push(if j == me {
+                            own_res.take().expect("own result named twice in the quorum")
+                        } else {
+                            party.net.recv_check(j, tag_res).map_err(|e| {
+                                format!("result share from quorum member {j}: {e}")
+                            })?
+                        });
+                    }
+                    // Skip the non-members' results: already-arrived ones
+                    // are dropped now, in-flight ones on arrival.
+                    for &j in &live_now {
+                        if j != me && !m.contains(&j) {
+                            party.net.forget(j, tag_res);
+                        }
+                    }
+                    (m, shares)
+                }
+            } else {
+                // No slack: every live result is needed — fixed-order
+                // gather, identical to the pre-quorum protocol while the
+                // roster is full (no roster message on the wire).
+                let mut shares = Vec::with_capacity(live_now.len());
+                let mut own_res = Some(own_res);
+                for &j in &live_now {
+                    shares.push(if j == me {
+                        own_res.take().expect("own result gathered twice")
+                    } else {
+                        party
+                            .net
+                            .recv_check(j, tag_res)
+                            .map_err(|e| format!("result share from {j}: {e}"))?
+                    });
+                }
+                (live_now.clone(), shares)
+            };
+            ledger.quorums.push(members.clone());
+            for &j in &newly_excluded {
+                party.exclude(j);
+                ledger.excluded.push(j);
+            }
+            if party.live_count() < need {
+                return Err(format!(
+                    "exclusions dropped the roster below the recovery threshold: \
+                     {} live < {need} needed",
+                    party.live_count()
+                ));
+            }
+            timer.tick(&mut ledger, 6, party);
+
+            // ---- decode + model update (Eq. 10–11; lines 18–23) ---------
+            let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
+            let mut grad = vec![0u64; d];
+            dec_cache.get(&members).decode_sum_par(pp, &views, &mut grad);
+            party.sub(&mut grad, &xty);
+            let mut g1 =
+                party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, true);
+            party.scale(&mut g1, task.eta_q);
+            let g2 = party.trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, true);
+            party.sub(&mut w_share, &g2);
+            snapshots.push(w_share.clone());
+            timer.tick(&mut ledger, 7, party);
         }
-        timer.tick(&mut ledger, 6, party);
 
-        // ---- decode + model update (Eq. 10–11; lines 18–23) -------------
-        let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
-        let mut grad = vec![0u64; d];
-        decoder.decode_sum_par(pp, &views, &mut grad);
-        party.sub(&mut grad, &xty);
-        let mut g1 = party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, true);
-        party.scale(&mut g1, task.eta_q);
-        let g2 = party.trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, true);
-        party.sub(&mut w_share, &g2);
-        snapshots.push(w_share.clone());
-        timer.tick(&mut ledger, 7, party);
+        // Leader: resolve the final round's late set (skip-on-arrival
+        // tombstones) so clean runs exit with an empty mailbox. FIFO
+        // ordering guarantees the stragglers' last result shares land
+        // before their final-open broadcasts below, clearing the
+        // tombstones before exit.
+        for &j in &pending_late {
+            party.net.forget(j, pending_tag);
+        }
+
+        // ---- final: open the model (lines 25–27) ------------------------
+        Ok(party.open_broadcast(&w_share, t))
+    })();
+
+    let (w_final, halted) = match online {
+        Ok(w) => (Some(w), None),
+        Err(reason) => (None, Some(reason)),
+    };
+    ledger.pending_at_exit = party.net.pending_messages();
+    if let Some(reason) = &halted {
+        // Departure: peers' receives blocked on this party fail fast with
+        // the reason instead of stalling, and our mailbox stops growing.
+        party.net.leave(reason);
     }
-
-    // ---- final: open the model (lines 25–27) ----------------------------
-    let w_final = party.open_broadcast(&w_share, t);
-
-    ClientOutput { id: me, w_final, w_share_snapshots: snapshots, ledger }
+    ClientOutput { id: me, w_final, w_share_snapshots: snapshots, ledger, halted }
 }
 
 #[cfg(test)]
@@ -592,6 +891,35 @@ mod tests {
     }
 
     #[test]
+    fn roster_msg_round_trip() {
+        for (members, excluded) in [
+            (vec![0usize, 2, 5, 7], vec![3usize]),
+            (vec![0, 1, 2], vec![]),
+            (vec![], vec![4, 6]),
+        ] {
+            let msg = encode_roster_msg(&members, &excluded);
+            let (m, x) = decode_roster_msg(&msg, 8).unwrap();
+            assert_eq!(m, members);
+            assert_eq!(x, excluded);
+        }
+    }
+
+    #[test]
+    fn roster_msg_rejects_malformed() {
+        assert!(decode_roster_msg(&[], 8).is_err(), "empty");
+        assert!(decode_roster_msg(&[3, 0, 1], 8).is_err(), "truncated member list");
+        assert!(decode_roster_msg(&[1, 0], 8).is_err(), "missing exclusion count");
+        assert!(decode_roster_msg(&[1, 9, 0], 8).is_err(), "member id out of range");
+        assert!(decode_roster_msg(&[u64::MAX, 0], 8).is_err(), "wrapping member count");
+        assert!(decode_roster_msg(&[2, 3, 3, 0], 8).is_err(), "duplicate member id");
+        assert!(decode_roster_msg(&[2, 3, 1, 0], 8).is_err(), "unsorted members");
+        assert!(decode_roster_msg(&[1, 2, 1, 0], 8).is_err(), "excluding the king");
+        let mut msg = encode_roster_msg(&[0, 1], &[2]);
+        msg.push(7);
+        assert!(decode_roster_msg(&msg, 8).is_err(), "trailing data");
+    }
+
+    #[test]
     fn padded_ranges_partition() {
         let r = padded_ranges(100, 7);
         assert_eq!(r[0].0, 0);
@@ -622,7 +950,10 @@ mod tests {
             .collect();
         for h in handles {
             let out = h.join().unwrap();
-            assert_eq!(out.w_final, *reference.train.w_trace.last().unwrap());
+            assert_eq!(
+                out.w_final.expect("client must complete"),
+                *reference.train.w_trace.last().unwrap()
+            );
         }
     }
 

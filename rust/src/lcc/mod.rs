@@ -29,12 +29,21 @@ pub fn recovery_threshold(r: usize, k: usize, t: usize) -> usize {
 
 /// Maximum parallelization for given `n`, `t`, `r`:
 /// largest `K` with `n ≥ (2r+1)(K+T−1)+1`.
+///
+/// Edge cases, made explicit:
+///
+/// * `n < d+1` (with `d = 2r+1`): even `K = 1, T = 1` needs `d+1` results
+///   to interpolate a degree-`d` polynomial, so no parallelization exists
+///   at all — returns 0.
+/// * `(n−1)/d ≤ t−1`: the privacy masks alone exhaust the degree budget;
+///   `saturating_sub` is the underflow guard that clamps this to 0 (both
+///   operands are unsigned — a plain `-` would wrap).
 pub fn max_k(n: usize, t: usize, r: usize) -> usize {
     let d = 2 * r + 1;
     if n < d + 1 {
         return 0;
     }
-    ((n - 1) / d).saturating_sub(t - 1).max(0)
+    ((n - 1) / d).saturating_sub(t - 1)
 }
 
 /// Precomputed Lagrange encoder: maps `K` data partitions + `T` masks to
@@ -174,6 +183,88 @@ impl Decoder {
     pub fn decode_sum_par(&self, pp: Parallelism, results: &[&[u64]], out: &mut [u64]) {
         let agg = self.sum_coeffs(results.len());
         par::weighted_sum(self.field, pp, &agg, results, out);
+    }
+}
+
+/// Per-quorum [`Decoder`] factory for the straggler-resilient online phase:
+/// builds the decoder from the evaluation points of the clients that
+/// *actually answered* a round (any `deg_f(K+T−1)+1` of them interpolate
+/// `h` exactly — Theorem 1 — so the decoded gradient is bit-identical
+/// regardless of which quorum it is), caching the coefficient matrices by
+/// member subset. Quorum composition is sticky in practice (the same fast
+/// clients answer round after round), so the cache stays tiny; it is
+/// bounded at [`DecoderCache::CAPACITY`] entries regardless.
+pub struct DecoderCache {
+    field: Field,
+    k: usize,
+    t: usize,
+    deg_f: usize,
+    /// Evaluation point of client `j` is `alphas[j]`.
+    alphas: Vec<u64>,
+    betas: Vec<u64>,
+    cache: std::collections::HashMap<Vec<usize>, std::rc::Rc<Decoder>>,
+    /// Insertion order for eviction (oldest first).
+    order: std::collections::VecDeque<Vec<usize>>,
+}
+
+impl DecoderCache {
+    /// Cached coefficient matrices. Evicting the oldest subset beyond this
+    /// keeps a run with churning quorums (parties joining/leaving the fast
+    /// set) from accumulating one `K×need` matrix per distinct subset.
+    pub const CAPACITY: usize = 8;
+
+    pub fn new(
+        field: Field,
+        k: usize,
+        t: usize,
+        deg_f: usize,
+        alphas: Vec<u64>,
+        betas: Vec<u64>,
+    ) -> DecoderCache {
+        DecoderCache {
+            field,
+            k,
+            t,
+            deg_f,
+            alphas,
+            betas,
+            cache: std::collections::HashMap::new(),
+            order: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Decoder for the quorum `members` (ascending client ids, each
+    /// indexing into `alphas`). Builds and caches on first sight.
+    pub fn get(&mut self, members: &[usize]) -> std::rc::Rc<Decoder> {
+        if let Some(d) = self.cache.get(members) {
+            return d.clone();
+        }
+        let pts: Vec<u64> = members.iter().map(|&j| self.alphas[j]).collect();
+        let dec = std::rc::Rc::new(Decoder::new(
+            self.field,
+            self.k,
+            self.t,
+            self.deg_f,
+            &pts,
+            &self.betas,
+        ));
+        if self.cache.len() >= Self::CAPACITY {
+            if let Some(oldest) = self.order.pop_front() {
+                self.cache.remove(&oldest);
+            }
+        }
+        self.cache.insert(members.to_vec(), dec.clone());
+        self.order.push_back(members.to_vec());
+        dec
+    }
+
+    /// Number of cached subsets (tests).
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
     }
 }
 
@@ -383,6 +474,78 @@ mod tests {
         let mean = sum / trials as f64;
         let expect = (P26 / 2) as f64;
         assert!((mean - expect).abs() / expect < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn any_quorum_subset_decodes_identically() {
+        // The property the straggler-resilient online phase rests on
+        // (Theorem 1): h has degree ≤ deg_f(K+T−1), so ANY need-subset of
+        // client results interpolates the same Σ_k h(β_k) — bit for bit.
+        let f = Field::new(P26);
+        let (k, t, n) = (2usize, 1usize, 10usize);
+        let deg_f = 3;
+        let need = recovery_threshold(1, k, t); // 7
+        let enc = Encoder::standard(f, k, t, n);
+        let mut rng = Rng::seed_from_u64(11);
+        let len = 24;
+        let parts_data: Vec<Vec<u64>> = (0..k)
+            .map(|_| (0..len).map(|_| rng.gen_range(P26)).collect())
+            .collect();
+        let masks = enc.gen_masks(len, &mut rng);
+        let parts: Vec<&[u64]> =
+            parts_data.iter().chain(masks.iter()).map(|v| v.as_slice()).collect();
+        let encoded = enc.encode_all(&parts);
+        // deg-3 computation: elementwise cube
+        let results: Vec<Vec<u64>> = encoded
+            .iter()
+            .map(|e| e.iter().map(|&v| f.mul(f.mul(v, v), v)).collect())
+            .collect();
+
+        let (betas, alphas) = poly::standard_points(k + t, n);
+        let mut cache = DecoderCache::new(f, k, t, deg_f, alphas, betas);
+        let subsets: [&[usize]; 4] =
+            [&[0, 1, 2, 3, 4, 5, 6], &[3, 4, 5, 6, 7, 8, 9], &[0, 2, 4, 5, 6, 8, 9], &[1, 2, 3, 5, 7, 8, 9]];
+        let mut reference: Option<Vec<u64>> = None;
+        for members in subsets {
+            assert_eq!(members.len(), need);
+            let dec = cache.get(members);
+            let views: Vec<&[u64]> =
+                members.iter().map(|&j| results[j].as_slice()).collect();
+            let mut out = vec![0u64; len];
+            dec.decode_sum(&views, &mut out);
+            match &reference {
+                None => reference = Some(out),
+                Some(want) => assert_eq!(&out, want, "subset {members:?}"),
+            }
+        }
+        // repeated subsets hit the cache (no rebuild), distinct ones fill it
+        assert_eq!(cache.len(), subsets.len());
+        let again = cache.get(subsets[0]);
+        let views: Vec<&[u64]> = subsets[0].iter().map(|&j| results[j].as_slice()).collect();
+        let mut out = vec![0u64; len];
+        again.decode_sum(&views, &mut out);
+        assert_eq!(Some(out), reference);
+        assert_eq!(cache.len(), subsets.len());
+    }
+
+    #[test]
+    fn decoder_cache_is_bounded() {
+        let f = Field::new(P26);
+        let (k, t, n) = (1usize, 1usize, 16usize);
+        let need = recovery_threshold(1, k, t); // 4
+        let (betas, alphas) = poly::standard_points(k + t, n);
+        let mut cache = DecoderCache::new(f, k, t, 3, alphas, betas);
+        for start in 0..DecoderCache::CAPACITY + 3 {
+            let members: Vec<usize> = (start..start + need).map(|j| j % n).collect();
+            let mut members = members;
+            members.sort_unstable();
+            members.dedup();
+            if members.len() < need {
+                continue;
+            }
+            cache.get(&members);
+            assert!(cache.len() <= DecoderCache::CAPACITY, "cache grew past its bound");
+        }
     }
 
     #[test]

@@ -6,11 +6,15 @@
 //!               [--threads 1]            # 0 = all cores (field::par)
 //!               [--wire u64|u32]         # full mode: wire format / byte ledger
 //!               [--offline dealer|distributed]  # full mode: offline randomness
+//!               [--transport hub|tcp]    # full mode: in-process or TCP loopback
+//!               [--delay id:ms,...]      # full mode: per-iteration straggler sleep
+//!               [--kill-after id:iter,...]  # full mode: kill party at iteration
+//!               [--max-lag R]            # exclude after R consecutive missed quorums
 //! copml party   --id I --listen ADDR --peers A0,A1,...   # one distributed client
 //!               [--wire u64|u32] [--offline dealer|distributed]
-//!               [+ train's dataset/config options]
+//!               [+ train's dataset/config/fault options]
 //! copml bench   --dataset cifar --n 50 [--wire u64|u32]  # cost-model Table-I row
-//!               [--offline dealer|distributed]
+//!               [--offline dealer|distributed] [--stragglers S]
 //! copml calibrate                                  # machine calibration
 //! copml info                                       # config/threshold explorer
 //! ```
@@ -20,7 +24,7 @@
 
 use copml::bench::{BaselineCost, Calibration, CopmlCost};
 use copml::cli::Args;
-use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
+use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig, FaultPlan};
 use copml::data::{Dataset, SynthSpec};
 use copml::field::{Field, Parallelism};
 use copml::mpc::OfflineMode;
@@ -82,6 +86,20 @@ fn config_from_args(args: &Args, ds: &Dataset, n: usize, seed: u64) -> Result<Co
     cfg.eta = args.get_or("eta", cfg.eta)?;
     cfg.wire = args.get_or("wire", Wire::U64)?;
     cfg.offline = args.get_or("offline", OfflineMode::Dealer)?;
+    // Straggler experiments: injected faults + exclusion threshold
+    // (validated against N/need in CopmlConfig::validate).
+    if let Some(spec) = args.get("delay") {
+        cfg.faults.delays = FaultPlan::parse_pairs(spec, "delay")?;
+    }
+    if let Some(spec) = args.get("kill-after") {
+        cfg.faults.kills = FaultPlan::parse_pairs(spec, "kill-after")?
+            .into_iter()
+            .map(|(id, iter)| (id, iter as usize))
+            .collect();
+    }
+    if args.get("max-lag").is_some() {
+        cfg.max_lag = Some(args.get_or("max-lag", 0usize)?);
+    }
     Ok(cfg)
 }
 
@@ -113,10 +131,18 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         ds.name, ds.m, ds.d, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters, cfg.eta,
         cfg.plan.field.modulus(), cfg.parallelism.thread_count(), cfg.offline
     );
+    let transport = args.get("transport").unwrap_or("hub");
+    if transport != "hub" && mode != "full" {
+        return Err(format!("--transport {transport} requires --mode full"));
+    }
     let out = match mode {
         "algo" => algo::train(&cfg, &ds)?,
         "full" => {
-            let po = protocol::train(&cfg, &ds)?;
+            let po = match transport {
+                "hub" => protocol::train(&cfg, &ds)?,
+                "tcp" => protocol::train_tcp_loopback(&cfg, &ds)?,
+                other => return Err(format!("unknown transport '{other}' (expected hub|tcp)")),
+            };
             let mut table = Table::new(
                 "per-client ledger (mean across clients)",
                 &["phase", "seconds", "MB sent"],
@@ -130,6 +156,18 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 table.row(&[phase.to_string(), format!("{secs:.4}"), format!("{mb:.3}")]);
             }
             table.print();
+            // Quorum/straggler summary (king's ledger records every
+            // round's quorum and exclusion) — grep-asserted by CI.
+            let need = cfg.recovery_threshold();
+            let l0 = &po.ledgers[0];
+            let mut excluded = l0.excluded.clone();
+            excluded.sort_unstable();
+            let final_q = l0.quorums.last().map(|q| q.len()).unwrap_or(0);
+            println!(
+                "straggler summary: quorum need {need} of N={}, rounds {}, final quorum size {final_q}, excluded: {excluded:?}",
+                cfg.n,
+                l0.quorums.len()
+            );
             po.train
         }
         m => return Err(format!("unknown mode '{m}'")),
@@ -202,15 +240,28 @@ fn cmd_party(args: &Args) -> Result<(), String> {
         ]);
     }
     table.print();
-    let w = copml::quant::dequantize_slice(cfg.plan.field, &out.w_final, cfg.plan.lw);
-    println!(
-        "party {id} done in {:.2}s: test-acc {:.4}, {} B sent / {} B received ({} wire)",
-        t0.elapsed().as_secs_f64(),
-        copml::ml::accuracy(&ds.x_test, &ds.y_test, ds.d, &w),
-        net.bytes_sent(),
-        net.bytes_received(),
-        cfg.wire
-    );
+    match &out.w_final {
+        Some(w_final) => {
+            let w = copml::quant::dequantize_slice(cfg.plan.field, w_final, cfg.plan.lw);
+            println!(
+                "party {id} done in {:.2}s: test-acc {:.4}, {} B sent / {} B received ({} wire)",
+                t0.elapsed().as_secs_f64(),
+                copml::ml::accuracy(&ds.x_test, &ds.y_test, ds.d, &w),
+                net.bytes_sent(),
+                net.bytes_received(),
+                cfg.wire
+            );
+        }
+        None => {
+            // An expected fault-plan/straggler outcome, not an error: the
+            // surviving quorum finishes training without this party.
+            println!(
+                "party {id} halted after {:.2}s: {}",
+                t0.elapsed().as_secs_f64(),
+                out.halted.as_deref().unwrap_or("unknown reason")
+            );
+        }
+    }
     Ok(())
 }
 
@@ -222,6 +273,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let iters = args.get_or("iters", 50usize)?;
     let wire: Wire = args.get_or("wire", Wire::U64)?;
     let offline: OfflineMode = args.get_or("offline", OfflineMode::Dealer)?;
+    // Straggler column: model S parties as excluded (N − S must stay at
+    // or above each case's recovery threshold — estimate() checks).
+    let stragglers = args.get_or("stragglers", 0usize)?;
     let plan = if ds.d > 4096 {
         copml::quant::FpPlan::paper_gisette()
     } else {
@@ -231,7 +285,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let cal = Calibration::measure(plan.field);
     let wan = WanModel::paper();
     let mut table = Table::new(
-        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {wire} wire, {offline} offline (modeled on measured primitives)"),
+        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {wire} wire, {offline} offline, {stragglers} stragglers (modeled on measured primitives)"),
         &["Protocol", "Comp (s)", "Comm (s)", "Enc/Dec (s)", "Offline (s)", "Total (s)"],
     );
     let case1 = CaseParams::case1(n);
@@ -252,6 +306,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             wire,
             offline,
             trunc_bits: plan.k2 + plan.kappa,
+            stragglers,
         }
         .estimate(&cal, &wan);
         table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.offline_s, c.total_s()], 1);

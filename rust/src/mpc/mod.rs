@@ -32,7 +32,7 @@ use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
 use crate::field::{vecops, Field};
-use crate::net::{broadcast, PartyId, Transport};
+use crate::net::{PartyId, Transport};
 use crate::poly;
 use crate::prng::Rng;
 use crate::shamir;
@@ -58,25 +58,28 @@ fn party_rng(seed: u64, id: PartyId) -> Rng {
     Rng::seed_from_u64(seed).fork(STREAM_PARTY | id as u64)
 }
 
-/// King-opening primitive shared by the online [`Party`] and the offline
-/// session ([`offline`]): parties `0..=deg` send their shares to the king
-/// (party 0) under `tag_up`; the king reconstructs with `coeffs`
-/// (evaluation-at-0 row over `λ_1..λ_{deg+1}`) and broadcasts the value
-/// under `tag_down`. `O(N)` total communication.
-pub(crate) fn open_via_king(
+/// King-opening primitive over explicit participant sets, shared by the
+/// online [`Party`] (which passes its live roster) and the offline session
+/// ([`offline`], which always runs pre-exclusion over the full mesh):
+/// `senders` ship their shares to the king (party 0) under `tag_up`; the
+/// king reconstructs with `coeffs` (the evaluation-at-0 row over the
+/// senders' λ points, in `senders` order) and sends the value to every
+/// party in `recipients` under `tag_down`. `O(N)` total communication.
+pub(crate) fn open_via_king_set(
     net: &dyn Transport,
     f: Field,
     coeffs: &[u64],
     tag_up: u64,
     tag_down: u64,
     share: &[u64],
-    deg: usize,
+    senders: &[PartyId],
+    recipients: &[PartyId],
 ) -> Vec<u64> {
     const KING: PartyId = 0;
     let me = net.id();
     if me == KING {
-        let mut contributions: Vec<Vec<u64>> = Vec::with_capacity(deg + 1);
-        for peer in 0..=deg {
+        let mut contributions: Vec<Vec<u64>> = Vec::with_capacity(senders.len());
+        for &peer in senders {
             contributions.push(if peer == KING {
                 share.to_vec()
             } else {
@@ -86,14 +89,35 @@ pub(crate) fn open_via_king(
         let views: Vec<&[u64]> = contributions.iter().map(|v| v.as_slice()).collect();
         let mut value = vec![0u64; share.len()];
         vecops::weighted_sum(f, coeffs, &views, &mut value);
-        broadcast(net, tag_down, &value);
+        for &peer in recipients {
+            if peer != KING {
+                net.send(peer, tag_down, value.clone());
+            }
+        }
         value
     } else {
-        if me <= deg {
+        if senders.contains(&me) {
             net.send(KING, tag_up, share.to_vec());
         }
         net.recv(KING, tag_down)
     }
+}
+
+/// [`open_via_king_set`] over the classic fixed sets: parties `0..=deg`
+/// send, everyone receives — the offline phase's shape (it runs before
+/// any straggler exclusion can exist).
+pub(crate) fn open_via_king(
+    net: &dyn Transport,
+    f: Field,
+    coeffs: &[u64],
+    tag_up: u64,
+    tag_down: u64,
+    share: &[u64],
+    deg: usize,
+) -> Vec<u64> {
+    let senders: Vec<PartyId> = (0..=deg).collect();
+    let recipients: Vec<PartyId> = (0..net.n()).collect();
+    open_via_king_set(net, f, coeffs, tag_up, tag_down, share, &senders, &recipients)
 }
 
 /// One party's view of an `N`-party MPC session.
@@ -111,8 +135,13 @@ pub struct Party<'a> {
     /// Party-local randomness (for online resharing in BGW).
     rng: RefCell<Rng>,
     next_tag: Cell<u64>,
-    /// Cached reconstruction coefficient rows keyed by share degree.
-    recon_cache: RefCell<HashMap<usize, Vec<u64>>>,
+    /// Cached reconstruction coefficient rows keyed by contributor set.
+    recon_cache: RefCell<HashMap<Vec<PartyId>, Vec<u64>>>,
+    /// Live roster: `live[j]` until party `j` is excluded (straggler past
+    /// `max_lag`, fault-plan kill). Collectives send to and gather from
+    /// live parties only; with everyone live the behaviour — and the byte
+    /// ledger — is identical to the fixed-order protocol.
+    live: RefCell<Vec<bool>>,
 }
 
 impl<'a> Party<'a> {
@@ -136,6 +165,7 @@ impl<'a> Party<'a> {
             rng: RefCell::new(party_rng(seed, net.id())),
             next_tag: Cell::new(0),
             recon_cache: RefCell::new(HashMap::new()),
+            live: RefCell::new(vec![true; n]),
         }
     }
 
@@ -146,15 +176,69 @@ impl<'a> Party<'a> {
         t
     }
 
-    /// Reconstruction coefficients (at 0) for shares held by parties
-    /// `0..=deg` — interpolating a degree-`deg` share polynomial.
-    fn recon_coeffs(&self, deg: usize) -> Vec<u64> {
-        if let Some(c) = self.recon_cache.borrow().get(&deg) {
+    // ---------------------------------------------------------------
+    // Roster (straggler exclusion).
+    // ---------------------------------------------------------------
+
+    /// Exclude `id` from every subsequent collective (the quorum leader
+    /// announced it dead or persistently late). All live parties apply the
+    /// same exclusions in the same round, so rosters stay aligned. The
+    /// king (party 0) is the quorum leader and the opening hub; losing it
+    /// is unrecoverable and rejected here with a clear error.
+    pub fn exclude(&self, id: PartyId) {
+        assert!(
+            id != 0,
+            "party 0 (the king / quorum leader) cannot be excluded — \
+             the protocol has no king fail-over"
+        );
+        self.live.borrow_mut()[id] = false;
+    }
+
+    pub fn is_live(&self, id: PartyId) -> bool {
+        self.live.borrow()[id]
+    }
+
+    /// Ids of the parties still in the protocol, ascending.
+    pub fn live_ids(&self) -> Vec<PartyId> {
+        self.live
+            .borrow()
+            .iter()
+            .enumerate()
+            .filter_map(|(j, &l)| l.then_some(j))
+            .collect()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.borrow().iter().filter(|&&l| l).count()
+    }
+
+    /// The first `deg+1` live parties — the contributor set for opening a
+    /// degree-`deg` sharing. Any `deg+1` distinct evaluation points
+    /// interpolate the polynomial exactly, so the roster prefix is as good
+    /// as the classic `0..=deg` (and identical to it while nobody is
+    /// excluded). Panics with a clear message when exclusions have made
+    /// the opening infeasible.
+    fn contributors(&self, deg: usize) -> Vec<PartyId> {
+        let ids: Vec<PartyId> = self.live_ids().into_iter().take(deg + 1).collect();
+        assert!(
+            ids.len() == deg + 1,
+            "exclusions make degree-{deg} opening infeasible: need {} shares, \
+             only {} parties live",
+            deg + 1,
+            self.live_count()
+        );
+        ids
+    }
+
+    /// Reconstruction coefficients (at 0) for shares held by `ids` —
+    /// interpolating a share polynomial of degree `ids.len() − 1`.
+    fn recon_coeffs_for(&self, ids: &[PartyId]) -> Vec<u64> {
+        if let Some(c) = self.recon_cache.borrow().get(ids) {
             return c.clone();
         }
-        assert!(deg < self.n, "cannot open degree-{deg} shares with {} parties", self.n);
-        let c = poly::coeffs_at(self.f, &self.lambdas[..deg + 1], 0);
-        self.recon_cache.borrow_mut().insert(deg, c.clone());
+        let pts: Vec<u64> = ids.iter().map(|&j| self.lambdas[j]).collect();
+        let c = poly::coeffs_at(self.f, &pts, 0);
+        self.recon_cache.borrow_mut().insert(ids.to_vec(), c.clone());
         c
     }
 
@@ -188,24 +272,37 @@ impl<'a> Party<'a> {
     // Collectives.
     // ---------------------------------------------------------------
 
-    /// Open degree-`deg` shares by full broadcast (every party learns the
-    /// value; `O(N²)` total communication — the BGW-style opening).
+    /// Open degree-`deg` shares by full broadcast among the live parties
+    /// (every live party learns the value; `O(N²)` total communication —
+    /// the BGW-style opening). Reconstruction uses the first `deg+1` live
+    /// shares — any `deg+1` points interpolate exactly, so the value is
+    /// independent of the roster.
     pub fn open_broadcast(&self, share: &[u64], deg: usize) -> Vec<u64> {
         let tag = self.fresh_tag();
-        broadcast(self.net, tag, share);
-        let coeffs = self.recon_coeffs(deg);
-        let mut contributions: Vec<Vec<u64>> = Vec::with_capacity(deg + 1);
-        for peer in 0..=deg {
+        let live = self.live_ids();
+        for &peer in &live {
+            if peer != self.id {
+                self.net.send(peer, tag, share.to_vec());
+            }
+        }
+        let contributors = self.contributors(deg);
+        let coeffs = self.recon_coeffs_for(&contributors);
+        let mut contributions: Vec<Vec<u64>> = Vec::with_capacity(contributors.len());
+        for &peer in &contributors {
             contributions.push(if peer == self.id {
                 share.to_vec()
             } else {
                 self.net.recv(peer, tag)
             });
         }
-        // Drain remaining broadcasts so mailboxes stay tag-aligned.
-        for peer in deg + 1..self.n {
-            if peer != self.id {
-                let _ = self.net.recv(peer, tag);
+        // Drain remaining live broadcasts so mailboxes stay tag-aligned.
+        // Non-panicking: a peer that died without ever being excluded
+        // (e.g. killed in the final rounds, after the last exclusion
+        // opportunity) simply has nothing left to drain — its share was
+        // not needed, only the contributors' were.
+        for &peer in &live {
+            if peer != self.id && !contributors.contains(&peer) {
+                let _ = self.net.recv_check(peer, tag);
             }
         }
         let views: Vec<&[u64]> = contributions.iter().map(|v| v.as_slice()).collect();
@@ -214,19 +311,36 @@ impl<'a> Party<'a> {
         out
     }
 
-    /// Open degree-`deg` shares via the king (party 0): parties send their
-    /// shares to the king, the king reconstructs and broadcasts the value
-    /// (`O(N)` total communication — the BH08-style opening).
+    /// Open degree-`deg` shares via the king (party 0): the first `deg+1`
+    /// live parties send their shares to the king, the king reconstructs
+    /// and broadcasts the value to the live roster (`O(N)` total
+    /// communication — the BH08-style opening).
     pub fn open_king(&self, share: &[u64], deg: usize) -> Vec<u64> {
         let tag_up = self.fresh_tag();
         let tag_down = self.fresh_tag();
-        let coeffs = self.recon_coeffs(deg);
-        open_via_king(self.net, self.f, &coeffs, tag_up, tag_down, share, deg)
+        assert!(
+            self.is_live(0),
+            "king (party 0) is gone — king openings are infeasible"
+        );
+        let senders = self.contributors(deg);
+        let coeffs = self.recon_coeffs_for(&senders);
+        open_via_king_set(
+            self.net,
+            self.f,
+            &coeffs,
+            tag_up,
+            tag_down,
+            share,
+            &senders,
+            &self.live_ids(),
+        )
     }
 
     /// Secret-share a vector this party knows in the clear: sends `[v]_j`
-    /// to each party `j`, returns own share. Counterpart of
-    /// [`Party::receive_share_from`].
+    /// to each live party `j`, returns own share. Counterpart of
+    /// [`Party::receive_share_from`]. The sharing polynomial is evaluated
+    /// at all `N` points regardless of the roster, so the share values —
+    /// and hence the trajectory — do not depend on who is excluded.
     pub fn share_out(&self, value: &[u64], tag: u64) -> Vec<u64> {
         let shares = shamir::share_at(
             self.f,
@@ -239,7 +353,7 @@ impl<'a> Party<'a> {
         for (j, s) in shares.into_iter().enumerate() {
             if j == self.id {
                 own = s;
-            } else {
+            } else if self.is_live(j) {
                 self.net.send(j, tag, s);
             }
         }
@@ -269,7 +383,8 @@ impl<'a> Party<'a> {
         // interpolate the degree-2T polynomial); later parties still
         // reshared (cost charged), but their sub-shares are not needed.
         let deg = 2 * self.t;
-        let coeffs = self.recon_coeffs(deg);
+        let fixed: Vec<PartyId> = (0..=deg).collect();
+        let coeffs = self.recon_coeffs_for(&fixed);
         let mut subs: Vec<Vec<u64>> = Vec::with_capacity(deg + 1);
         for peer in 0..=deg {
             subs.push(if peer == self.id {

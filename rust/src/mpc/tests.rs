@@ -95,6 +95,61 @@ fn open_broadcast_and_king_agree() {
 }
 
 #[test]
+fn roster_aware_openings_skip_excluded_party() {
+    // An excluded straggler neither sends nor receives; the survivors'
+    // openings reconstruct from the first deg+1 LIVE shares and reach the
+    // same value — any deg+1 points interpolate exactly.
+    let f = Field::new(P26);
+    let (n, t) = (6usize, 2usize);
+    let secret: Vec<u64> = vec![5, P26 - 3, 1 << 10];
+    let inputs = deal(f, &secret, n, t, 17);
+    let secret2 = secret.clone();
+    let results = run_parties(
+        n,
+        t,
+        f,
+        Demand::default(),
+        (20, 1),
+        inputs,
+        move |party, input| {
+            // Exclude party 1 — INSIDE the default contributor prefix
+            // {0..=2t}, so the roster genuinely changes who reconstructs.
+            let gone = 1;
+            if party.id == gone {
+                party.net.leave("excluded by test");
+                return Vec::new();
+            }
+            party.exclude(gone);
+            let a = party.open_broadcast(&input[0], party.t);
+            let b = party.open_king(&input[0], party.t);
+            assert_eq!(a, b, "broadcast and king openings must agree post-exclusion");
+            a
+        },
+    );
+    for (id, r) in results.iter().enumerate() {
+        if id != 1 {
+            assert_eq!(r, &secret2, "party {id}");
+        }
+    }
+}
+
+#[test]
+fn excluding_the_king_is_rejected() {
+    let f = Field::new(P26);
+    let eps = Hub::new(3);
+    let pool = Dealer::deal(f, 3, 1, &Demand::default(), 20, 1, 0xD1CE).remove(0);
+    let party = Party::new(&eps[0], 1, f, pool, 42);
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| party.exclude(0)))
+        .unwrap_err();
+    let msg = err
+        .downcast_ref::<String>()
+        .map(|s| s.as_str())
+        .or_else(|| err.downcast_ref::<&str>().copied())
+        .expect("panic payload");
+    assert!(msg.contains("king"), "{msg}");
+}
+
+#[test]
 fn secure_addition_is_free_and_correct() {
     let f = Field::new(P26);
     let (n, t) = (4usize, 1usize);

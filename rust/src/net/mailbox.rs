@@ -11,10 +11,23 @@
 //! [`close`](TagMailbox::close) that peer: already-delivered payloads stay
 //! receivable, but a receive that would otherwise block on the dead peer
 //! fails immediately with the recorded cause instead of timing out.
+//!
+//! Two receive modes beyond the fixed-order blocking pop support the
+//! quorum-based online phase:
+//!
+//! * [`pop_any`](TagMailbox::pop_any) — first-arrival receive across a set
+//!   of senders, the primitive behind `net::gather_quorum`: whichever of
+//!   the named peers delivers first wins, and closed peers are skipped
+//!   (reported to the caller) instead of deadlocking the gather;
+//! * [`forget`](TagMailbox::forget) — one-shot discard of a message the
+//!   protocol no longer needs (a straggler's late result). If the message
+//!   is already queued it is dropped now; otherwise a tombstone drops it
+//!   on arrival. Tombstones are bounded by the number of outstanding
+//!   skipped messages and are purged when the peer closes.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::PartyId;
 
@@ -22,12 +35,29 @@ use super::PartyId;
 /// deadlocked.
 pub(crate) const RECV_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// Outcome of a first-arrival receive across several peers
+/// ([`TagMailbox::pop_any`] / `Transport::recv_any`).
+#[derive(Debug)]
+pub enum AnyRecv {
+    /// A message arrived from the named peer.
+    Delivered(PartyId, Vec<u64>),
+    /// None of the peers delivered within the timeout.
+    TimedOut,
+    /// Every named peer is closed with nothing queued; the string lists
+    /// the recorded causes.
+    NoneLive(String),
+}
+
 #[derive(Default)]
 struct Inner {
     // (from, tag) -> queued payloads
     queues: HashMap<(PartyId, u64), VecDeque<Vec<u64>>>,
     // peers whose delivery stream has ended, with the cause
     closed: HashMap<PartyId, String>,
+    // one-shot discards: the next push matching an entry is dropped
+    tombstones: HashSet<(PartyId, u64)>,
+    // this mailbox's owner has left: drop every future push
+    shut_down: bool,
 }
 
 /// `(from, tag) → payload queue` with blocking receive.
@@ -38,19 +68,64 @@ pub(crate) struct TagMailbox {
 }
 
 impl TagMailbox {
-    /// Deliver a payload from `from` under `tag`.
-    pub(crate) fn push(&self, from: PartyId, tag: u64, data: Vec<u64>) {
+    /// Deliver a payload from `from` under `tag`. Returns whether the
+    /// mailbox accepted the delivery: `false` only when the owner has
+    /// [`shutdown`](TagMailbox::shutdown) — a tombstoned message WAS
+    /// delivered (the receiver chose to drop it), so it returns `true`
+    /// and byte ledgers still count it.
+    pub(crate) fn push(&self, from: PartyId, tag: u64, data: Vec<u64>) -> bool {
         let mut inner = self.inner.lock().unwrap();
+        if inner.shut_down {
+            return false; // owner left: discard, nobody will ever pop
+        }
+        if inner.tombstones.remove(&(from, tag)) {
+            return true; // the receiver explicitly skipped this message
+        }
         inner.queues.entry((from, tag)).or_default().push_back(data);
         self.signal.notify_all();
+        true
     }
 
     /// Mark `from` as gone (no further payloads will arrive). Queued
     /// payloads remain receivable; blocked receives on `from` fail fast.
+    /// Tombstones for `from` are purged — nothing will arrive to clear
+    /// them.
     pub(crate) fn close(&self, from: PartyId, reason: String) {
         let mut inner = self.inner.lock().unwrap();
         inner.closed.entry(from).or_insert(reason);
+        inner.tombstones.retain(|&(f, _)| f != from);
         self.signal.notify_all();
+    }
+
+    /// The owner of this mailbox is leaving: drop queued payloads and
+    /// discard every future push (bounds memory for a party that exits
+    /// mid-protocol while peers keep sending).
+    pub(crate) fn shutdown(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.shut_down = true;
+        inner.queues.clear();
+        inner.tombstones.clear();
+        self.signal.notify_all();
+    }
+
+    /// Discard one message from `from` under `tag`: drop it now if queued
+    /// (returns `true` — the peer had already delivered), else leave a
+    /// one-shot tombstone that drops it on arrival (returns `false`). A
+    /// closed peer with nothing queued returns `false` without a
+    /// tombstone — nothing will ever arrive.
+    pub(crate) fn forget(&self, from: PartyId, tag: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
+            queue.pop_front();
+            if queue.is_empty() {
+                inner.queues.remove(&(from, tag));
+            }
+            return true;
+        }
+        if !inner.closed.contains_key(&from) && !inner.shut_down {
+            inner.tombstones.insert((from, tag));
+        }
+        false
     }
 
     /// Blocking pop of the next payload from `from` under `tag`. `me` is
@@ -59,6 +134,21 @@ impl TagMailbox {
     /// after [`RECV_TIMEOUT`] — an aligned SPMD protocol never waits that
     /// long.
     pub(crate) fn pop_blocking(&self, me: PartyId, from: PartyId, tag: u64) -> Vec<u64> {
+        match self.pop_result(me, from, tag) {
+            Ok(data) => data,
+            Err(reason) => panic!("party {me} recv(from={from}, tag={tag}): {reason}"),
+        }
+    }
+
+    /// [`TagMailbox::pop_blocking`] that reports a dead peer as `Err`
+    /// instead of panicking — the protocol can then halt gracefully (e.g.
+    /// a subgroup whose mate died). Still panics on the deadlock timeout.
+    pub(crate) fn pop_result(
+        &self,
+        me: PartyId,
+        from: PartyId,
+        tag: u64,
+    ) -> Result<Vec<u64>, String> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
@@ -68,17 +158,11 @@ impl TagMailbox {
                     inner.queues.remove(&(from, tag));
                 }
                 if let Some(data) = data {
-                    return data;
+                    return Ok(data);
                 }
             }
             if let Some(reason) = inner.closed.get(&from) {
-                // Release the lock before unwinding so other threads (the
-                // remaining reader threads, ledger reads) are not poisoned.
-                let reason = reason.clone();
-                drop(inner);
-                panic!(
-                    "party {me} recv(from={from}, tag={tag}): peer is gone ({reason})"
-                );
+                return Err(format!("peer is gone ({reason})"));
             }
             let (guard, timeout) = self
                 .signal
@@ -86,6 +170,9 @@ impl TagMailbox {
                 .expect("mailbox lock poisoned");
             inner = guard;
             if timeout.timed_out() {
+                // Release the lock before unwinding so other threads (the
+                // remaining reader threads, ledger reads) are not poisoned.
+                drop(inner);
                 panic!(
                     "party {me} recv(from={from}, tag={tag}) timed out — protocol deadlock"
                 );
@@ -93,10 +180,56 @@ impl TagMailbox {
         }
     }
 
-    /// Number of live `(from, tag)` entries (leak regression tests).
-    #[cfg(test)]
+    /// First-arrival pop: the next payload under `tag` from *any* of
+    /// `froms` (scanned lowest id first when several are queued). Closed
+    /// peers are skipped; if every named peer is closed with nothing
+    /// queued the gather is infeasible ([`AnyRecv::NoneLive`]).
+    pub(crate) fn pop_any(
+        &self,
+        _me: PartyId,
+        froms: &[PartyId],
+        tag: u64,
+        timeout: Duration,
+    ) -> AnyRecv {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            for &from in froms {
+                if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
+                    if let Some(data) = queue.pop_front() {
+                        if queue.is_empty() {
+                            inner.queues.remove(&(from, tag));
+                        }
+                        return AnyRecv::Delivered(from, data);
+                    }
+                }
+            }
+            let live = froms.iter().filter(|f| !inner.closed.contains_key(f)).count();
+            if live == 0 {
+                let causes: Vec<String> = froms
+                    .iter()
+                    .filter_map(|f| inner.closed.get(f).map(|r| format!("party {f}: {r}")))
+                    .collect();
+                return AnyRecv::NoneLive(causes.join("; "));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return AnyRecv::TimedOut;
+            }
+            let (guard, _) = self
+                .signal
+                .wait_timeout(inner, deadline - now)
+                .expect("mailbox lock poisoned");
+            inner = guard;
+        }
+    }
+
+    /// Number of live `(from, tag)` queue entries plus outstanding
+    /// tombstones — both must be zero at the end of a clean (fault-free)
+    /// training run (mailbox-hygiene regression tests).
     pub(crate) fn pending_entries(&self) -> usize {
-        self.inner.lock().unwrap().queues.len()
+        let inner = self.inner.lock().unwrap();
+        inner.queues.len() + inner.tombstones.len()
     }
 }
 
@@ -163,5 +296,104 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         mb.close(0, "EOF".into());
         assert!(h.join().unwrap(), "blocked receive must fail once the peer closes");
+    }
+
+    #[test]
+    fn pop_result_reports_dead_peer_instead_of_panicking() {
+        let mb = TagMailbox::default();
+        mb.close(0, "killed".into());
+        let err = mb.pop_result(9, 0, 1).unwrap_err();
+        assert!(err.contains("peer is gone") && err.contains("killed"), "{err}");
+    }
+
+    #[test]
+    fn pop_any_returns_first_arrival_with_sender() {
+        let mb = std::sync::Arc::new(TagMailbox::default());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || mb2.pop_any(9, &[0, 1, 2], 4, RECV_TIMEOUT));
+        std::thread::sleep(Duration::from_millis(20));
+        mb.push(2, 4, vec![22]);
+        match h.join().unwrap() {
+            AnyRecv::Delivered(from, data) => {
+                assert_eq!(from, 2);
+                assert_eq!(data, vec![22]);
+            }
+            other => panic!("expected delivery, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pop_any_skips_closed_peers_and_reports_all_dead() {
+        let mb = TagMailbox::default();
+        mb.close(0, "EOF".into());
+        mb.push(1, 9, vec![5]);
+        // one peer dead, one delivered: delivery wins
+        match mb.pop_any(7, &[0, 1], 9, Duration::from_millis(50)) {
+            AnyRecv::Delivered(1, data) => assert_eq!(data, vec![5]),
+            other => panic!("unexpected {other:?}"),
+        }
+        // all named peers dead with nothing queued: infeasible, not a hang
+        mb.close(1, "reset".into());
+        match mb.pop_any(7, &[0, 1], 10, Duration::from_secs(30)) {
+            AnyRecv::NoneLive(causes) => {
+                assert!(causes.contains("EOF") && causes.contains("reset"), "{causes}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pop_any_times_out() {
+        let mb = TagMailbox::default();
+        let t0 = Instant::now();
+        match mb.pop_any(7, &[0], 1, Duration::from_millis(30)) {
+            AnyRecv::TimedOut => assert!(t0.elapsed() >= Duration::from_millis(30)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn forget_drops_now_or_on_arrival() {
+        let mb = TagMailbox::default();
+        // already queued: dropped immediately, reported as arrived
+        mb.push(0, 1, vec![1]);
+        assert!(mb.forget(0, 1));
+        assert_eq!(mb.pending_entries(), 0);
+        // not yet arrived: tombstone counts as pending, clears on arrival
+        assert!(!mb.forget(0, 2));
+        assert_eq!(mb.pending_entries(), 1);
+        mb.push(0, 2, vec![2]);
+        assert_eq!(mb.pending_entries(), 0, "tombstoned push must be dropped");
+        // a later message under a different tag is unaffected
+        mb.push(0, 3, vec![3]);
+        assert_eq!(mb.pop_blocking(9, 0, 3), vec![3]);
+    }
+
+    #[test]
+    fn forget_on_closed_peer_leaves_no_tombstone() {
+        let mb = TagMailbox::default();
+        mb.close(0, "gone".into());
+        assert!(!mb.forget(0, 5));
+        assert_eq!(mb.pending_entries(), 0, "dead peer must not accumulate tombstones");
+    }
+
+    #[test]
+    fn close_purges_tombstones() {
+        let mb = TagMailbox::default();
+        assert!(!mb.forget(0, 1));
+        assert!(!mb.forget(0, 2));
+        assert_eq!(mb.pending_entries(), 2);
+        mb.close(0, "died".into());
+        assert_eq!(mb.pending_entries(), 0);
+    }
+
+    #[test]
+    fn shutdown_discards_queued_and_future_pushes() {
+        let mb = TagMailbox::default();
+        mb.push(0, 1, vec![1]);
+        mb.shutdown();
+        assert_eq!(mb.pending_entries(), 0);
+        mb.push(0, 2, vec![2]);
+        assert_eq!(mb.pending_entries(), 0, "pushes after shutdown must be discarded");
     }
 }

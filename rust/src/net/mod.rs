@@ -30,7 +30,10 @@ pub mod tcp;
 pub mod wan;
 pub mod wire;
 
+pub use mailbox::AnyRecv;
 pub use wire::Wire;
+
+use std::time::Duration;
 
 /// Party identifier (0-based).
 pub type PartyId = usize;
@@ -48,14 +51,99 @@ pub const ELEM_BYTES: u64 = Wire::U64.elem_bytes();
 pub trait Transport: Send + Sync {
     fn id(&self) -> PartyId;
     fn n(&self) -> usize;
-    /// Asynchronous send of `data` to party `to` under `tag`.
+    /// Asynchronous send of `data` to party `to` under `tag`. Best-effort
+    /// towards a dead peer: the failure surfaces on the *receive* side
+    /// (the peer's closed mailbox), never as a send panic.
     fn send(&self, to: PartyId, tag: u64, data: Vec<u64>);
     /// Blocking receive of the message from `from` under `tag`.
     fn recv(&self, from: PartyId, tag: u64) -> Vec<u64>;
+    /// Blocking receive that reports a dead peer as `Err` (with the
+    /// recorded cause) instead of panicking — lets the protocol halt
+    /// gracefully when a load-bearing peer is gone.
+    fn recv_check(&self, from: PartyId, tag: u64) -> Result<Vec<u64>, String>;
+    /// First-arrival receive: the next message under `tag` from *any* of
+    /// `froms`, tagged with who sent it. Closed peers are skipped (they
+    /// can never deliver); [`AnyRecv::NoneLive`] when every named peer is
+    /// gone, [`AnyRecv::TimedOut`] after `timeout`.
+    fn recv_any(&self, froms: &[PartyId], tag: u64, timeout: Duration) -> AnyRecv;
+    /// Discard one `(from, tag)` message: now if delivered (returns
+    /// `true`), or on arrival via a one-shot tombstone (returns `false`).
+    /// The return value is the straggler signal — `false` means the peer
+    /// had not produced the message by the time the protocol moved on.
+    fn forget(&self, from: PartyId, tag: u64) -> bool;
+    /// Undelivered mailbox state: queued `(from, tag)` entries plus
+    /// outstanding forget-tombstones. Zero at the end of a clean run
+    /// (mailbox-hygiene tests).
+    fn pending_messages(&self) -> usize;
+    /// Announce departure mid-protocol (fault-plan kill, straggler
+    /// exclusion): peers' blocked receives on this party fail fast with
+    /// `reason`, and this party's own mailbox discards future deliveries.
+    fn leave(&self, reason: &str);
     /// Total payload bytes this party has sent.
     fn bytes_sent(&self) -> u64;
     /// Total payload bytes this party has received.
     fn bytes_received(&self) -> u64;
+}
+
+/// Result of [`gather_quorum`]: the first-arrival quorum, sorted by party
+/// id, plus the peers that had not delivered when the quorum filled.
+pub struct QuorumOutcome {
+    /// The quorum member ids, ascending (includes the gatherer).
+    pub members: Vec<PartyId>,
+    /// Payloads aligned with `members` (the gatherer's own entry included).
+    pub payloads: Vec<Vec<u64>>,
+    /// Peers in `froms` that were not part of the quorum.
+    pub late: Vec<PartyId>,
+}
+
+/// Gather the first `need` messages under `tag` across `froms` plus the
+/// caller's own contribution `own` — the quorum primitive of the
+/// straggler-resilient online phase (paper Theorem 1: any
+/// `(2r+1)(K+T−1)+1` results decode). Returns as soon as `need` messages
+/// are in hand, naming the members; peers that were late are reported for
+/// straggler accounting instead of being waited on. Closed (dead) peers
+/// are skipped; if live peers cannot fill the quorum the gather fails
+/// with a clear error rather than deadlocking.
+pub fn gather_quorum(
+    t: &dyn Transport,
+    froms: &[PartyId],
+    tag: u64,
+    need: usize,
+    own: Vec<u64>,
+) -> Result<QuorumOutcome, String> {
+    let me = t.id();
+    assert!(
+        froms.len() + 1 >= need,
+        "quorum of {need} impossible over {} peers + self",
+        froms.len()
+    );
+    let mut got: Vec<(PartyId, Vec<u64>)> = Vec::with_capacity(need);
+    got.push((me, own));
+    let mut waiting: Vec<PartyId> = froms.to_vec();
+    while got.len() < need {
+        match t.recv_any(&waiting, tag, mailbox::RECV_TIMEOUT) {
+            AnyRecv::Delivered(from, data) => {
+                waiting.retain(|&j| j != from);
+                got.push((from, data));
+            }
+            AnyRecv::NoneLive(causes) => {
+                return Err(format!(
+                    "quorum infeasible: need {need}, have {} — every remaining peer is gone ({causes})",
+                    got.len()
+                ));
+            }
+            AnyRecv::TimedOut => {
+                return Err(format!(
+                    "quorum gather timed out: need {need}, have {} after {:?} (tag {tag})",
+                    got.len(),
+                    mailbox::RECV_TIMEOUT
+                ));
+            }
+        }
+    }
+    got.sort_by_key(|(id, _)| *id);
+    let (members, payloads): (Vec<PartyId>, Vec<Vec<u64>>) = got.into_iter().unzip();
+    Ok(QuorumOutcome { members, payloads, late: waiting })
 }
 
 /// Send to every other party (not self).

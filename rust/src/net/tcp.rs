@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 
 use super::mailbox::TagMailbox;
 use super::wire::{self, Wire, HEADER_BYTES};
-use super::{PartyId, Transport};
+use super::{AnyRecv, PartyId, Transport};
 
 /// Handshake magic ("COPML wire").
 const MAGIC: [u8; 4] = *b"CPML";
@@ -37,6 +37,31 @@ const MESH_TIMEOUT: Duration = Duration::from_secs(60);
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
 /// Pause between dial retries against a peer that is not up yet.
 const DIAL_RETRY: Duration = Duration::from_millis(50);
+/// Upper bound on a single frame's payload. Far above any protocol
+/// message (the largest is a dataset-share block, well under 1 GiB), but
+/// small enough that a corrupt or hostile length prefix cannot drive the
+/// reader thread into a multi-gigabyte allocation.
+const MAX_FRAME_BYTES: u32 = 1 << 30;
+/// Reserved tag of the departure notice a leaving party sends before
+/// shutting its sockets ([`Transport::leave`]): the payload carries the
+/// halt reason (one byte per word — tiny, wire-format agnostic), so peers
+/// record the *actual* cause ("killed at iteration 3 …") instead of a
+/// generic EOF. Protocol tags count up from 0 (offline: from 1<<62) and
+/// can never collide.
+const DEPART_TAG: u64 = u64::MAX;
+
+/// Encode a departure reason for the [`DEPART_TAG`] payload.
+fn reason_to_words(reason: &str) -> Vec<u64> {
+    reason.bytes().map(u64::from).collect()
+}
+
+/// Decode a [`DEPART_TAG`] payload back into the departure reason. The
+/// words carry UTF-8 bytes (halt reasons contain em dashes), so decode
+/// them as UTF-8, not byte-per-char Latin-1.
+fn words_to_reason(words: &[u64]) -> String {
+    let bytes: Vec<u8> = words.iter().map(|&w| w as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
 
 fn bad_proto(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
@@ -271,6 +296,15 @@ fn reader_loop(
             return;
         }
         let (payload_len, tag) = wire::decode_header(&header);
+        if payload_len > MAX_FRAME_BYTES {
+            // A corrupt length prefix must not become a giant allocation
+            // (and certainly not a reader-thread abort).
+            mailbox.close(
+                from,
+                format!("corrupt frame: oversized payload ({payload_len} B > {MAX_FRAME_BYTES} B cap)"),
+            );
+            return;
+        }
         let mut payload = vec![0u8; payload_len as usize];
         if let Err(e) = stream.read_exact(&mut payload) {
             mailbox.close(from, format!("connection died mid-frame: {e}"));
@@ -283,8 +317,18 @@ fn reader_loop(
                 return;
             }
         };
-        received.fetch_add(payload_len as u64, Ordering::Relaxed);
-        mailbox.push(from, tag, data);
+        if tag == DEPART_TAG {
+            // Control frame, not ledgered: the peer announces its own
+            // departure with the real halt reason.
+            mailbox.close(from, format!("peer left: {}", words_to_reason(&data)));
+            return;
+        }
+        // Ledger only deliveries the mailbox accepted: frames landing
+        // after this party left (shutdown) are discarded unseen, so they
+        // are not received in any meaningful sense.
+        if mailbox.push(from, tag, data) {
+            received.fetch_add(payload_len as u64, Ordering::Relaxed);
+        }
     }
 }
 
@@ -301,22 +345,59 @@ impl Transport for TcpTransport {
         assert!(to < self.n, "send to unknown party {to}");
         assert!(to != self.id, "self-send is a protocol bug");
         let frame = wire::encode_frame(self.wire, tag, &data);
-        {
+        let wrote = {
             let mut s = self.writers[to]
                 .as_ref()
                 .expect("no connection slot for peer")
                 .lock()
                 .unwrap();
-            s.write_all(&frame).expect("tcp send failed — peer gone?");
+            // Best-effort: a dead peer (fault-plan kill, crashed process)
+            // surfaces on the receive side via its closed mailbox; a send
+            // into its reset socket must not take this party down.
+            s.write_all(&frame).is_ok()
+        };
+        if wrote {
+            // Ledger counts payload bytes (header excluded), matching `local`.
+            self.sent
+                .fetch_add(data.len() as u64 * self.wire.elem_bytes(), Ordering::Relaxed);
         }
-        // Ledger counts payload bytes (header excluded), matching `local`.
-        self.sent
-            .fetch_add(data.len() as u64 * self.wire.elem_bytes(), Ordering::Relaxed);
     }
 
     fn recv(&self, from: PartyId, tag: u64) -> Vec<u64> {
         assert!(from < self.n && from != self.id, "recv from unknown party {from}");
         self.mailbox.pop_blocking(self.id, from, tag)
+    }
+
+    fn recv_check(&self, from: PartyId, tag: u64) -> Result<Vec<u64>, String> {
+        assert!(from < self.n && from != self.id, "recv from unknown party {from}");
+        self.mailbox.pop_result(self.id, from, tag)
+    }
+
+    fn recv_any(&self, froms: &[PartyId], tag: u64, timeout: Duration) -> AnyRecv {
+        self.mailbox.pop_any(self.id, froms, tag, timeout)
+    }
+
+    fn forget(&self, from: PartyId, tag: u64) -> bool {
+        self.mailbox.forget(from, tag)
+    }
+
+    fn pending_messages(&self) -> usize {
+        self.mailbox.pending_entries()
+    }
+
+    fn leave(&self, reason: &str) {
+        // Tell every peer WHY before hanging up ([`DEPART_TAG`] control
+        // frame, best-effort), then shut the sockets down — their reader
+        // threads record the reason, and blocked receives on this party
+        // fail with it instead of a generic EOF.
+        let frame = wire::encode_frame(self.wire, DEPART_TAG, &reason_to_words(reason));
+        for m in self.writers.iter().flatten() {
+            if let Ok(mut s) = m.lock() {
+                let _ = s.write_all(&frame);
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        self.mailbox.shutdown();
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -464,6 +545,19 @@ mod tests {
     }
 
     #[test]
+    fn leave_reason_reaches_peers() {
+        // An explicit departure must surface its real cause at peers, not
+        // a generic EOF — post-mortems over sockets need the reason.
+        let (a, b) = pair(Wire::U32);
+        a.leave("killed at iteration 3 — by the fault plan"); // em dash: UTF-8 survives
+        let err = b.recv_check(0, 0).unwrap_err();
+        assert!(err.contains("killed at iteration 3 — by"), "{err}");
+        // and the departed party's own mailbox discards deliveries
+        b.send(0, 1, vec![7]);
+        assert_eq!(a.pending_messages(), 0);
+    }
+
+    #[test]
     fn dead_peer_fails_recv_fast() {
         // A peer process dying must surface as an immediate "peer is gone"
         // failure on blocked receives, not a 120 s deadlock timeout.
@@ -478,6 +572,104 @@ mod tests {
         );
         let msg = err.downcast_ref::<String>().expect("panic payload");
         assert!(msg.contains("peer is gone"), "{msg}");
+    }
+
+    /// Party 0 of a 2-party mesh, with "party 1" actually a raw socket the
+    /// test drives by hand (valid handshake, then arbitrary bytes) — the
+    /// rig for the malformed-frame hardening tests.
+    fn mesh_with_raw_peer(wire: Wire) -> (TcpTransport, TcpStream) {
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l0.local_addr().unwrap().to_string();
+        // party 1 never listens — it dials party 0 (dial-low rule).
+        let addrs = vec![addr.clone(), "127.0.0.1:1".to_string()];
+        let h0 = std::thread::spawn(move || TcpTransport::establish_on(0, l0, &addrs, wire));
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut hello = [0u8; 13];
+        hello[..4].copy_from_slice(&MAGIC);
+        hello[4] = wire.code();
+        hello[5..].copy_from_slice(&1u64.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        let mut echo = [0u8; 5];
+        s.read_exact(&mut echo).unwrap();
+        (h0.join().unwrap().expect("mesh must establish"), s)
+    }
+
+    /// Assert that party 0's blocked receive on the malformed peer fails
+    /// fast with the recorded corrupt-frame cause — the reader thread
+    /// closed the mailbox cleanly instead of panicking, hanging, or
+    /// swallowing the frame.
+    fn assert_recv_fails_with(t0: TcpTransport, needle: &str) {
+        let start = std::time::Instant::now();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t0.recv(1, 0)))
+            .unwrap_err();
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "recv must fail fast on a malformed frame, not wait out the deadlock timeout"
+        );
+        let msg = err.downcast_ref::<String>().expect("panic payload");
+        assert!(msg.contains(needle), "expected cause '{needle}' in: {msg}");
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_without_allocation() {
+        // A length prefix of u32::MAX must be rejected by the cap, not
+        // turned into a 4 GiB allocation in the reader thread.
+        let (t0, mut s) = mesh_with_raw_peer(Wire::U64);
+        let mut header = [0u8; HEADER_BYTES];
+        header[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        s.write_all(&header).unwrap();
+        assert_recv_fails_with(t0, "oversized payload");
+    }
+
+    #[test]
+    fn odd_length_frame_is_rejected() {
+        // 7 payload bytes is not a multiple of the 8-byte u64 element.
+        let (t0, mut s) = mesh_with_raw_peer(Wire::U64);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&7u32.to_le_bytes());
+        frame.extend_from_slice(&0u64.to_le_bytes());
+        frame.extend_from_slice(&[0xAB; 7]);
+        s.write_all(&frame).unwrap();
+        assert_recv_fails_with(t0, "not a multiple");
+    }
+
+    #[test]
+    fn truncated_frame_is_rejected() {
+        // Header promises 16 bytes, the connection dies after 5.
+        let (t0, mut s) = mesh_with_raw_peer(Wire::U32);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&16u32.to_le_bytes());
+        frame.extend_from_slice(&3u64.to_le_bytes());
+        frame.extend_from_slice(&[0x01; 5]);
+        s.write_all(&frame).unwrap();
+        drop(s);
+        assert_recv_fails_with(t0, "connection");
+    }
+
+    #[test]
+    fn random_garbage_never_panics_the_reader() {
+        // Property-style sweep: random byte blobs after a valid handshake
+        // must always end in a *recorded* close cause (clean reader exit),
+        // never a hang — a reader-thread panic would leave the mailbox
+        // open and the recv below would sit out the 120 s deadlock timeout.
+        let mut rng = crate::prng::Rng::seed_from_u64(0xBADF00D);
+        for trial in 0..8u64 {
+            let wire = if trial % 2 == 0 { Wire::U64 } else { Wire::U32 };
+            let (t0, mut s) = mesh_with_raw_peer(wire);
+            let len = 1 + (rng.gen_range(64) as usize);
+            let blob: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
+            s.write_all(&blob).unwrap();
+            drop(s); // EOF terminates whatever partial frame the blob left
+            let start = std::time::Instant::now();
+            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t0.recv(1, 0)))
+                .unwrap_err();
+            assert!(
+                start.elapsed() < Duration::from_secs(10),
+                "trial {trial}: reader must close the mailbox, not leave recv hanging"
+            );
+            let msg = err.downcast_ref::<String>().expect("panic payload");
+            assert!(msg.contains("peer is gone"), "trial {trial}: {msg}");
+        }
     }
 
     #[test]

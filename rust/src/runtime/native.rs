@@ -31,7 +31,9 @@ fn fused_block(f: Field, x_block: &[u64], cols: usize, w_enc: &[u64], coeffs_q: 
         // z = x_i · w̃ (tiled reduction)
         let z = vecops::dot(f, row, w_enc);
         // g = ĝ(z) by Horner
-        let mut g = *coeffs_q.last().unwrap();
+        let mut g = *coeffs_q
+            .last()
+            .expect("empty sigmoid coefficient vector: ĝ needs at least its constant term");
         for &c in coeffs_q.iter().rev().skip(1) {
             g = f.reduce(f.reduce(g * z) + c);
         }
@@ -176,6 +178,15 @@ mod tests {
                 assert_eq!(par, seq, "{rows}x{cols} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sigmoid coefficient vector")]
+    fn empty_sigmoid_coefficients_panic_clearly() {
+        // Regression: this used to die on an anonymous `last().unwrap()`.
+        let f = Field::new(P26);
+        let k = NativeKernel::new(f);
+        k.encoded_gradient(&[1, 2, 3, 4], MatShape::new(2, 2), &[1, 1], &[]);
     }
 
     #[test]

@@ -82,6 +82,7 @@ fn copml_cost_model_monotonic_in_n_for_fixed_kt() {
         wire: Wire::U64,
         offline: OfflineMode::Dealer,
         trunc_bits: 25,
+        stragglers: 0,
     }
     .estimate(&cal, &wan);
     let a = mk(10);
@@ -178,6 +179,7 @@ fn u32_wire_halves_live_ledger_and_cost_model() {
         wire: Wire::U64,
         offline: OfflineMode::Dealer,
         trunc_bits: 25,
+        stragglers: 0,
     };
     let c32 = CopmlCost { wire: Wire::U32, ..c64 };
     let e64 = c64.estimate(&cal, &wan);
