@@ -37,6 +37,7 @@ fn main() {
             m,
             d,
             iters,
+            batches: 1,
             subgroups: true,
             wire: Wire::U64,
             offline: OfflineMode::Dealer,

@@ -83,6 +83,7 @@ fn run_dataset(
                 m,
                 d,
                 iters,
+                batches: 1,
                 subgroups: true,
                 wire: Wire::U64,
                 offline: OfflineMode::Dealer,
@@ -150,6 +151,7 @@ fn main() {
         m: 9019,
         d: 3073,
         iters: 50,
+        batches: 1,
         subgroups: true,
         wire: Wire::U64,
         offline: OfflineMode::Dealer,

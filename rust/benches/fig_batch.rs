@@ -1,0 +1,174 @@
+//! `fig_batch`: mini-batch SGD's per-iteration speedup and accuracy — the
+//! `--batches` workload axis, measured on REAL full-protocol runs.
+//!
+//! Sweeps `B ∈ {1, 4, 16}` on a CIFAR-like-but-CI-sized task. For each B:
+//!
+//! 1. a full-protocol Hub run (N client threads, live quorum gathers) —
+//!    its `w_trace` is asserted **bit-identical** to the central
+//!    recursion (the batching analogue of the headline equivalence);
+//! 2. the per-iteration *compute* phase from the live ledgers must shrink
+//!    ~linearly in `1/B` (each round's kernel touches `rows_b/K × d`
+//!    cells instead of `rows/K × d`) — the ISSUE's speed claim; the
+//!    modeled cost (`bench::cost_model`, `batches` column) must show the
+//!    same `1/B` law exactly;
+//! 3. final test accuracy must stay within the fig4 tolerance (±4 points)
+//!    of the full-batch run — mini-batch trades per-step cost for
+//!    gradient noise, not for model quality.
+//!
+//! Results are dumped to `BENCH_batch.json` (CI-uploaded artifact).
+//!
+//! Run: `cargo bench --bench fig_batch`
+
+use copml::bench::{Calibration, CopmlCost};
+use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::mpc::OfflineMode;
+use copml::net::wan::WanModel;
+use copml::net::Wire;
+use copml::report::Json;
+
+/// Mean seconds per iteration of one ledger phase, averaged over every
+/// client (N·iters samples — robust to scheduler noise on a loaded
+/// runner).
+fn mean_phase_per_iter(ledgers: &[protocol::ClientLedger], phase: usize, iters: usize) -> f64 {
+    let total: f64 = ledgers.iter().map(|l| l.seconds[phase]).sum();
+    total / (ledgers.len() * iters) as f64
+}
+
+fn main() {
+    // CIFAR-like class-conditional structure at a CI-friendly size, rows
+    // heavy enough that the per-iteration kernel dominates timer noise.
+    let spec = SynthSpec {
+        m_train: 4800,
+        m_test: 1500,
+        d: 128,
+        rank: 6,
+        confound: 0.05,
+        signal_features: 60,
+        signal_amp: 0.03,
+        noise: 0.25,
+        name: "batch-bench",
+    };
+    let ds = Dataset::synth(spec, 88);
+    let (n, k, t, iters) = (10usize, 2usize, 1usize, 64usize);
+    let sweep = [1usize, 4, 16];
+    println!(
+        "fig_batch: {} ({}×{}), N={n} K={k} T={t}, {iters} iterations, B ∈ {sweep:?}",
+        ds.name, ds.m, ds.d
+    );
+
+    println!("calibrating primitives for the modeled column …");
+    let base_cfg = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(k, t), 88);
+    let cal = Calibration::measure(base_cfg.plan.field);
+    let wan = WanModel::paper();
+
+    let mut per_iter_compute = Vec::new();
+    let mut per_iter_online = Vec::new();
+    let mut modeled_comp = Vec::new();
+    let mut accuracy = Vec::new();
+    let mut json_rows: Vec<Json> = Vec::new();
+    for &b in &sweep {
+        let mut cfg = base_cfg.clone();
+        cfg.iters = iters;
+        cfg.batches = b;
+        let reference = algo::train(&cfg, &ds).expect("algo reference");
+        let run = protocol::train(&cfg, &ds).expect("full-protocol run");
+        assert_eq!(
+            run.train.w_trace, reference.w_trace,
+            "B={b}: full protocol must match the central recursion bit for bit"
+        );
+        let compute_s = mean_phase_per_iter(&run.ledgers, 5, iters);
+        let online_s: f64 = (4..8).map(|p| mean_phase_per_iter(&run.ledgers, p, iters)).sum();
+        let est = CopmlCost {
+            n,
+            k,
+            t,
+            r: 1,
+            m: ds.m,
+            d: ds.d,
+            iters,
+            batches: b,
+            subgroups: true,
+            wire: Wire::U64,
+            offline: OfflineMode::Dealer,
+            trunc_bits: cfg.plan.k2 + cfg.plan.kappa,
+            stragglers: 0,
+        }
+        .estimate(&cal, &wan);
+        let acc = *run.train.test_accuracy.last().unwrap();
+        println!(
+            "B={b:>2}: compute {:.3} ms/iter · online {:.3} ms/iter · modeled comp {:.3} ms/iter · test-acc {acc:.4}",
+            compute_s * 1e3,
+            online_s * 1e3,
+            est.comp_s / iters as f64 * 1e3
+        );
+        json_rows.push(Json::obj(vec![
+            ("batches", Json::num(b as f64)),
+            ("measured_compute_per_iter_s", Json::num(compute_s)),
+            ("measured_online_per_iter_s", Json::num(online_s)),
+            ("modeled_comp_per_iter_s", Json::num(est.comp_s / iters as f64)),
+            ("modeled_total_s", Json::num(est.total_s())),
+            ("final_test_accuracy", Json::num(acc)),
+        ]));
+        per_iter_compute.push(compute_s);
+        per_iter_online.push(online_s);
+        modeled_comp.push(est.comp_s / iters as f64);
+        accuracy.push(acc);
+    }
+
+    // --- the claims -------------------------------------------------------
+    // (1) modeled per-iteration compute follows the 1/B law exactly.
+    for (i, &b) in sweep.iter().enumerate().skip(1) {
+        let ratio = modeled_comp[0] / modeled_comp[i];
+        assert!(
+            (ratio - b as f64).abs() / b as f64 < 0.15,
+            "modeled compute must scale ~1/B: B={b} ratio {ratio:.2}"
+        );
+    }
+    // (2) measured per-iteration compute shrinks ~linearly in 1/B (wide
+    // envelopes: tiny absolute times on a shared runner).
+    assert!(
+        per_iter_compute[1] < 0.75 * per_iter_compute[0],
+        "B=4 compute {:.4} ms not < 0.75× full-batch {:.4} ms",
+        per_iter_compute[1] * 1e3,
+        per_iter_compute[0] * 1e3
+    );
+    assert!(
+        per_iter_compute[2] < 0.45 * per_iter_compute[0],
+        "B=16 compute {:.4} ms not < 0.45× full-batch {:.4} ms",
+        per_iter_compute[2] * 1e3,
+        per_iter_compute[0] * 1e3
+    );
+    // …and the whole online iteration gets faster, not just the kernel.
+    assert!(
+        per_iter_online[2] < per_iter_online[0],
+        "B=16 online {:.4} ms/iter not below full-batch {:.4} ms/iter",
+        per_iter_online[2] * 1e3,
+        per_iter_online[0] * 1e3
+    );
+    // (3) accuracy parity within the fig4 tolerance.
+    assert!(accuracy[0] > 0.7, "full-batch failed to converge: acc {}", accuracy[0]);
+    for (i, &b) in sweep.iter().enumerate().skip(1) {
+        assert!(
+            (accuracy[i] - accuracy[0]).abs() < 0.04,
+            "B={b}: accuracy {:.4} strays past the fig4 tolerance from full-batch {:.4}",
+            accuracy[i],
+            accuracy[0]
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fig_batch")),
+        ("dataset", Json::str(&ds.name)),
+        ("m", Json::num(ds.m as f64)),
+        ("d", Json::num(ds.d as f64)),
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("t", Json::num(t as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_batch.json", doc.to_string()).expect("writing BENCH_batch.json");
+    println!("wrote BENCH_batch.json");
+    println!("fig_batch assertions passed");
+}

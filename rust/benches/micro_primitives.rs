@@ -226,6 +226,7 @@ fn main() {
             t: 2,
             plan: copml::quant::FpPlan::paper_cifar(),
             iters: 3,
+            batches: 1,
             eta: 2.0,
             seed: 1,
             fit_range: 4.0,

@@ -36,6 +36,7 @@ fn main() {
             m,
             d,
             iters,
+            batches: 1,
             subgroups: true,
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
@@ -120,6 +121,7 @@ fn main() {
                 m,
                 d,
                 iters,
+                batches: 1,
                 subgroups: true,
                 wire,
                 offline: OfflineMode::Dealer,
@@ -166,6 +168,7 @@ fn main() {
                 m,
                 d,
                 iters,
+                batches: 1,
                 subgroups: true,
                 wire: Wire::U64,
                 offline,

@@ -22,6 +22,7 @@
 //! wins, how it scales with N, where the crossover sits — is the claim
 //! being reproduced (see EXPERIMENTS.md).
 
+use crate::data::BatchPlan;
 use crate::field::{vecops, Field, MatShape};
 use crate::mpc::offline::{self, Demand, OfflineMode};
 use crate::net::wan::WanModel;
@@ -116,6 +117,13 @@ pub struct CopmlCost {
     pub m: usize,
     pub d: usize,
     pub iters: usize,
+    /// Mini-batch count `B` (mirrors `CopmlConfig::batches`; 1 = classic
+    /// full batch). Per-iteration *compute* shrinks by `rows_b/m`; the
+    /// one-time encode covers all `B` batches (same total bytes, one
+    /// message per batch per source); every per-iteration exchange stays
+    /// `d`-sized, so per-iteration bytes are batch-invariant — exactly
+    /// what the live ledger of a `--batches B` run reports.
+    pub batches: usize,
     pub subgroups: bool,
     /// On-the-wire element encoding ([`Wire::U64`] = the paper's 64-bit
     /// MPI words; [`Wire::U32`] = packed, half the payload bytes — the
@@ -144,8 +152,21 @@ pub struct CopmlCost {
 }
 
 impl CopmlCost {
-    fn rows_k(&self) -> f64 {
-        (self.m as f64 / self.k as f64).ceil()
+    /// Padded rows of the *largest* batch per Lagrange partition:
+    /// `⌈⌈m/B⌉/K⌉` (mirrors the per-batch padding of
+    /// `crate::data::BatchPlan`; `⌈m/K⌉` for full batch). Used for the
+    /// per-iteration kernel term (batches differ by at most one real row).
+    fn rows_kb(&self) -> f64 {
+        ((self.m as f64 / self.batches as f64).ceil() / self.k as f64).ceil()
+    }
+
+    /// Exact `Σ_b ⌈m_b/K⌉` over the real batch sizes `BatchPlan` deals
+    /// (`extra = m mod B` batches of `⌊m/B⌋+1` rows, the rest `⌊m/B⌋`) —
+    /// the one-time totals (encode exchange, data-mask randoms) must match
+    /// the live ledger per batch, not `B` copies of the largest batch.
+    fn rows_k_total(&self) -> usize {
+        let (base, extra) = (self.m / self.batches, self.m % self.batches);
+        extra * (base + 1).div_ceil(self.k) + (self.batches - extra) * base.div_ceil(self.k)
     }
 
     /// Recovery threshold `(2r+1)(K+T−1)+1`.
@@ -154,16 +175,18 @@ impl CopmlCost {
     }
 
     /// The offline pool demand this configuration implies (mirrors
-    /// `coordinator::algo::copml_demand`): one BH08 reduction for `Xᵀy`,
-    /// two truncation stages per iteration, `T` Lagrange data masks plus
-    /// `T` model masks per iteration. Width labels are irrelevant to the
-    /// byte counts (every pair costs `trunc_bits` bits regardless of
-    /// where the split between `r'` and `r''` falls).
+    /// `coordinator::algo::copml_demand`): one BH08 reduction of the
+    /// concatenated per-batch `Xᵀ_b y_b` vectors (`B·d` elements), two
+    /// truncation stages per iteration, `T` Lagrange data masks per batch
+    /// (summed exactly: `T·Σ_b ⌈m_b/K⌉·d`, charged once) plus `T` model
+    /// masks per iteration. Width labels are irrelevant to the byte counts (every
+    /// pair costs `trunc_bits` bits regardless of where the split between
+    /// `r'` and `r''` falls).
     fn offline_demand(&self) -> Demand {
         Demand {
-            doubles: self.d,
+            doubles: self.d * self.batches,
             truncs: vec![(1, self.d * self.iters), (2, self.d * self.iters)],
-            randoms: self.t * self.rows_k() as usize * self.d + self.t * self.d * self.iters,
+            randoms: self.t * self.rows_k_total() * self.d + self.t * self.d * self.iters,
         }
     }
 
@@ -203,6 +226,12 @@ impl CopmlCost {
     }
 
     pub fn estimate(&self, cal: &Calibration, wan: &WanModel) -> PhaseBreakdown {
+        // Batch-geometry feasibility via the shared checker — the model
+        // must refuse exactly the configurations a live `--batches` run
+        // refuses instead of pricing nonsense.
+        if let Err(e) = BatchPlan::validate_geometry(self.m, self.k, self.batches, self.iters) {
+            panic!("cost model batch geometry: {e}");
+        }
         // Compare via addition: `n - stragglers` would wrap for
         // stragglers > n in release builds and sail past this check.
         assert!(
@@ -220,18 +249,23 @@ impl CopmlCost {
         );
         // Live roster after exclusions — what the survivors' NICs see.
         let live = (self.n - self.stragglers) as f64;
-        let rows_k = self.rows_k();
+        let batches = self.batches as f64;
+        let rows_kb = self.rows_kb();
+        let rows_k_total = self.rows_k_total() as f64;
         let targets = if self.subgroups { t + 1.0 } else { n };
 
-        // --- computation: the per-iteration encoded gradient (Eq. 7).
-        let comp_s = iters * (rows_k * d) / cal.kernel_cells_per_s;
+        // --- computation: the per-iteration encoded gradient (Eq. 7) on
+        // the round's batch — rows_b/K × d cells, 1/B of the full-batch
+        // kernel (the mini-batch speedup).
+        let comp_s = iters * (rows_kb * d) / cal.kernel_cells_per_s;
 
         // --- encode/decode compute (all public-constant weighted sums):
-        // dataset encode (one-time): `targets` encodings × (K+T) terms ×
-        // (m/K)·d elements; model encode per iter: targets × (1+T) × d;
-        // decode per iter: need × d; plus the one-time Xᵀy (m·d mul-adds)
-        // and result sharing (N shares × d/`share_per_s`).
-        let enc_data = targets * (k + t) * rows_k * d / cal.muladd_per_s;
+        // dataset encode (one-time, covering ALL batches — the one-shot
+        // amortization): `targets` encodings × (K+T) terms × Σ_b ⌈m_b/K⌉·d
+        // elements; model encode per iter: targets × (1+T) × d; decode per
+        // iter: need × d; plus the one-time per-batch Xᵀ_b y_b (m·d
+        // mul-adds total) and result sharing (N shares × d/`share_per_s`).
+        let enc_data = targets * (k + t) * rows_k_total * d / cal.muladd_per_s;
         let enc_model = iters * targets * (1.0 + t) * d / cal.muladd_per_s;
         let dec = iters * self.need() as f64 * d / cal.muladd_per_s;
         let xty = (self.m as f64) * d / cal.muladd_per_s;
@@ -243,8 +277,10 @@ impl CopmlCost {
         // halves every byte term below — exactly what the live ledger of
         // a `Wire::U32` protocol run reports).
         let eb = self.wire.elem_bytes() as f64;
-        // One-time: dataset encode exchange within the subgroup.
-        let bytes_enc_data = targets * rows_k * d * eb;
+        // One-time: dataset encode exchange within the subgroup — all B
+        // batches up front (same total bytes as full batch up to per-batch
+        // padding; one message per batch per source).
+        let bytes_enc_data = targets * rows_k_total * d * eb;
         // Per iteration: model-encode exchange + result sharing to the
         // live roster + two king-openings for TruncPr (king NIC
         // dominates: (live−1)·d down).
@@ -271,7 +307,11 @@ impl CopmlCost {
             + if live > need { 1.0 } else { 0.0 }
             + 2.0 * (t + 1.0)
             + 2.0 * (live - 1.0);
-        let comm_s = wan.phase_time(bytes_enc_data as u64)
+        // The encode exchange delivers one message per batch from each of
+        // the (targets−1) peer sources; receiver-side processing is
+        // charged exactly once per message (`WanModel::phase_time`).
+        let enc_msgs = ((targets - 1.0) * batches).round() as u64;
+        let comm_s = wan.phase_time(bytes_enc_data as u64, enc_msgs)
             + iters
                 * (wan.latency_s * rounds_per_iter
                     + wan.msg_proc_s * msgs_per_iter
@@ -310,6 +350,12 @@ pub struct BaselineCost {
     pub m: usize,
     pub d: usize,
     pub iters: usize,
+    /// Mini-batch count (mirrors `BaselineConfig::batches`, 1 = full
+    /// batch): the per-iteration vectors — and hence the degree-reduction
+    /// openings generic MPC pays for — shrink to the round's `⌈m/B⌉`
+    /// rows, keeping the Table-I comparison batch-fair against
+    /// [`CopmlCost::batches`].
+    pub batches: usize,
     pub bgw: bool,
     /// Number of dataset subgroups (paper: 3).
     pub groups: usize,
@@ -329,6 +375,7 @@ impl BaselineCost {
             m,
             d,
             iters,
+            batches: 1,
             bgw,
             groups: 3,
             round_batch: 1,
@@ -336,8 +383,14 @@ impl BaselineCost {
     }
 
     pub fn estimate(&self, cal: &Calibration, wan: &WanModel) -> PhaseBreakdown {
+        // Same shared batch-geometry rules as the COPML model (K = 1: the
+        // naive baselines never partition the batch further).
+        if let Err(e) = BatchPlan::validate_geometry(self.m, 1, self.batches, self.iters) {
+            panic!("baseline cost model batch geometry: {e}");
+        }
         let committee = (self.n / self.groups).max(2 * self.t + 1) as f64;
-        let rows = self.m as f64 / self.groups as f64;
+        // The round's batch, split across the paper's G subgroups.
+        let rows = (self.m as f64 / self.batches as f64).ceil() / self.groups as f64;
         let d = self.d as f64;
         let iters = self.iters as f64;
 
@@ -430,6 +483,7 @@ mod tests {
             m: 9019,
             d: 3073,
             iters: 50,
+            batches: 1,
             subgroups: true,
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
@@ -455,6 +509,7 @@ mod tests {
             m: 9019,
             d: 3073,
             iters: 50,
+            batches: 1,
             subgroups: true,
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
@@ -489,6 +544,7 @@ mod tests {
             m: 9019,
             d: 3073,
             iters: 50,
+            batches: 1,
             subgroups: true,
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
@@ -526,6 +582,7 @@ mod tests {
             m: 9019,
             d: 3073,
             iters: 50,
+            batches: 1,
             subgroups: true,
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
@@ -554,6 +611,7 @@ mod tests {
             m: 9019,
             d: 3073,
             iters: 50,
+            batches: 1,
             subgroups: true,
             wire: Wire::U64,
             offline: OfflineMode::Dealer,
@@ -561,6 +619,141 @@ mod tests {
             stragglers: 2,
         }
         .estimate(&cal, &wan);
+    }
+
+    #[test]
+    fn batching_scales_per_iteration_compute_not_bytes() {
+        // --batches B: per-iteration compute shrinks ~linearly in 1/B;
+        // every per-iteration exchange stays d-sized, so comm moves only
+        // by the extra per-batch encode messages (one-time, tiny).
+        let cal = fake_cal();
+        let wan = WanModel::paper();
+        let base = CopmlCost {
+            n: 50,
+            k: 16,
+            t: 1,
+            r: 1,
+            m: 9019,
+            d: 3073,
+            iters: 48,
+            batches: 1,
+            subgroups: true,
+            wire: Wire::U64,
+            offline: OfflineMode::Dealer,
+            trunc_bits: 25,
+            stragglers: 0,
+        };
+        let full = base.estimate(&cal, &wan);
+        for b in [4usize, 16] {
+            let est = CopmlCost { batches: b, ..base }.estimate(&cal, &wan);
+            let ratio = full.comp_s / est.comp_s;
+            assert!(
+                (ratio - b as f64).abs() / b as f64 < 0.1,
+                "B={b}: compute ratio {ratio} (want ≈ {b})"
+            );
+            // comm differs only by the (targets−1)·(B−1) extra encode
+            // messages and per-batch padding — a sub-second transient, not
+            // a per-iteration term.
+            assert!(
+                (est.comm_s - full.comm_s).abs() < 1.0,
+                "B={b}: comm moved {} → {}",
+                full.comm_s,
+                est.comm_s
+            );
+            // decode and per-iteration encode terms are batch-invariant;
+            // only the one-time data-encode padding can grow encdec, by
+            // less than the padding ratio bound
+            assert!(est.encdec_s >= full.encdec_s * 0.99 && est.encdec_s < full.encdec_s * 1.1);
+        }
+    }
+
+    #[test]
+    fn batch_totals_match_the_live_batch_plan() {
+        // The one-time totals (encode bytes, data-mask randoms) must sum
+        // the REAL per-batch padded sizes, not B copies of the largest
+        // batch — pinned against data::BatchPlan for uneven geometries.
+        for (m, k, b) in [(100usize, 11usize, 3usize), (9019, 16, 4), (48, 2, 3), (400, 3, 8)] {
+            let cost = CopmlCost {
+                n: 50,
+                k,
+                t: 1,
+                r: 1,
+                m,
+                d: 10,
+                iters: 50,
+                batches: b,
+                subgroups: true,
+                wire: Wire::U64,
+                offline: OfflineMode::Dealer,
+                trunc_bits: 25,
+                stragglers: 0,
+            };
+            let plan = BatchPlan::new(m, k, b, 7);
+            let expect: usize = plan.ranges().iter().map(|&(lo, hi)| (hi - lo) / k).sum();
+            assert_eq!(cost.rows_k_total(), expect, "m={m} k={k} b={b}");
+        }
+    }
+
+    #[test]
+    fn message_processing_charged_exactly_once_per_message() {
+        // Satellite regression (Table-1 gather scaling): switching
+        // msg_proc_s from 0 to x must raise comm by exactly
+        // x · (total messages a client ingests) — encode-exchange messages
+        // (per batch) plus the per-iteration gather/fan-in messages.
+        let cal = fake_cal();
+        let wan0 = WanModel { bandwidth_mbps: 40.0, latency_s: 0.02, msg_proc_s: 0.0 };
+        let wan1 = WanModel { msg_proc_s: 0.001, ..wan0 };
+        let c = CopmlCost {
+            n: 52,
+            k: 16,
+            t: 1,
+            r: 1,
+            m: 9019,
+            d: 3073,
+            iters: 50,
+            batches: 4,
+            subgroups: true,
+            wire: Wire::U64,
+            offline: OfflineMode::Dealer,
+            trunc_bits: 25,
+            stragglers: 0,
+        };
+        let e0 = c.estimate(&cal, &wan0);
+        let e1 = c.estimate(&cal, &wan1);
+        let (n, t) = (c.n as f64, c.t as f64);
+        let targets = t + 1.0; // subgroups on
+        let need = ((2 * c.r + 1) * (c.k + c.t - 1) + 1) as f64;
+        let quorum_msg = if n > need { 1.0 } else { 0.0 };
+        let msgs_per_iter =
+            (targets - 1.0) + (n - 1.0) + quorum_msg + 2.0 * (t + 1.0) + 2.0 * (n - 1.0);
+        let enc_msgs = (targets - 1.0) * c.batches as f64;
+        let expected = 0.001 * (enc_msgs + c.iters as f64 * msgs_per_iter);
+        let got = e1.comm_s - e0.comm_s;
+        assert!(
+            (got - expected).abs() < 1e-9,
+            "msg-proc delta {got} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn baseline_batching_scales_comp_like_copml() {
+        // The bench table is batch-fair only if the baseline model's
+        // per-iteration terms shrink with B exactly like the live batched
+        // baselines do.
+        let cal = fake_cal();
+        let wan = WanModel::paper();
+        let full = BaselineCost::paper(50, 9019, 3073, 64, false).estimate(&cal, &wan);
+        for b in [4usize, 16] {
+            let mut bc = BaselineCost::paper(50, 9019, 3073, 64, false);
+            bc.batches = b;
+            let est = bc.estimate(&cal, &wan);
+            let ratio = full.comp_s / est.comp_s;
+            assert!(
+                (ratio - b as f64).abs() / b as f64 < 0.1,
+                "B={b}: baseline compute ratio {ratio} (want ≈ {b})"
+            );
+            assert!(est.comm_s < full.comm_s, "B={b}: baseline comm must shrink");
+        }
     }
 
     #[test]

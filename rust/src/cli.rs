@@ -15,6 +15,37 @@ use std::collections::HashMap;
 /// the following token as a value (see module docs).
 pub const BOOL_FLAGS: &[&str] = &["verbose"];
 
+/// Every value-taking option the `copml` binary reads (`--name value`).
+/// Purely a registry for the drift guard below: the unit tests extract the
+/// option names `main.rs` actually queries and assert each one appears in
+/// [`BOOL_FLAGS`] or here — so adding a flag to `main.rs` without deciding
+/// its parse class (and hence its flag-before-subcommand behaviour) fails
+/// the build's tests instead of silently mis-parsing.
+pub const VALUE_FLAGS: &[&str] = &[
+    "batches",
+    "case",
+    "dataset",
+    "delay",
+    "engine",
+    "eta",
+    "id",
+    "iters",
+    "k",
+    "kill-after",
+    "listen",
+    "max-lag",
+    "mode",
+    "n",
+    "offline",
+    "peers",
+    "seed",
+    "stragglers",
+    "t",
+    "threads",
+    "transport",
+    "wire",
+];
+
 /// Parsed command line.
 #[derive(Debug, Default)]
 pub struct Args {
@@ -167,5 +198,72 @@ mod tests {
         .unwrap();
         assert_eq!(a.subcommand(), Some("bench"));
         assert!(a.flag("verbose"));
+    }
+
+    /// Option/flag names `src` queries through `.get("…")`, `.get_or("…",
+    /// …)` or `.flag("…")`.
+    fn queried_flag_names(src: &str) -> std::collections::BTreeSet<String> {
+        let mut out = std::collections::BTreeSet::new();
+        for pat in [".get(\"", ".get_or(\"", ".flag(\""] {
+            let mut rest = src;
+            while let Some(pos) = rest.find(pat) {
+                rest = &rest[pos + pat.len()..];
+                if let Some(end) = rest.find('"') {
+                    out.insert(rest[..end].to_string());
+                    rest = &rest[end..];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn every_binary_flag_is_registered_and_subcommand_safe() {
+        // Drift guard for the BOOL_FLAGS/VALUE_FLAGS registries (the PR-2
+        // regression class: a flag placed before the subcommand swallowing
+        // it as its value). Scans the binary's source for every option it
+        // actually reads, asserts each is registered, and exercises each
+        // one in flag-before-subcommand position.
+        let main_src = include_str!("main.rs");
+        let queried = queried_flag_names(main_src);
+        assert!(queried.contains("batches") && queried.contains("stragglers"),
+            "scanner lost known flags — extraction broken? got {queried:?}");
+        for name in &queried {
+            assert!(
+                super::BOOL_FLAGS.contains(&name.as_str())
+                    || super::VALUE_FLAGS.contains(&name.as_str()),
+                "--{name} is read by main.rs but registered in neither BOOL_FLAGS \
+                 nor VALUE_FLAGS — decide its parse class"
+            );
+        }
+        // …and nothing stale lingers in the registries.
+        for name in super::BOOL_FLAGS.iter().chain(super::VALUE_FLAGS) {
+            assert!(
+                queried.contains(*name),
+                "--{name} is registered but main.rs never reads it — remove it"
+            );
+        }
+        // Boolean flags before the subcommand must not swallow it…
+        for &name in super::BOOL_FLAGS {
+            let a = Args::parse_with_flags(
+                [format!("--{name}"), "train".into(), "--n".into(), "10".into()],
+                super::BOOL_FLAGS,
+            )
+            .unwrap();
+            assert_eq!(a.subcommand(), Some("train"), "--{name} swallowed the subcommand");
+            assert!(a.flag(name), "--{name} not recorded as a flag");
+            assert_eq!(a.get(name), None);
+        }
+        // …and value options before the subcommand must consume exactly
+        // their value, leaving the subcommand positional.
+        for &name in super::VALUE_FLAGS {
+            let a = Args::parse_with_flags(
+                [format!("--{name}"), "7".into(), "train".into()],
+                super::BOOL_FLAGS,
+            )
+            .unwrap();
+            assert_eq!(a.get(name), Some("7"), "--{name} lost its value");
+            assert_eq!(a.subcommand(), Some("train"), "--{name} consumed the subcommand");
+        }
     }
 }

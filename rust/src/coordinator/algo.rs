@@ -28,15 +28,19 @@ use crate::mpc::dealer::{Dealer, DealerValues, Demand};
 pub fn copml_demand(cfg: &CopmlConfig, d: usize, rows_padded: usize) -> Demand {
     let iters = cfg.iters;
     Demand {
-        // One BH08 degree reduction for the d-vector Xᵀy.
-        doubles: d,
-        // Two truncation stages per iteration, d elements each.
+        // One BH08 degree reduction of the concatenated per-batch
+        // d-vectors Xᵀ_b y_b (one-time; B·d elements, d for full batch).
+        doubles: d * cfg.batches,
+        // Two truncation stages per iteration, d elements each —
+        // iteration count, not batch count, sizes these pools.
         truncs: vec![
             (cfg.plan.k1_stage1(), d * iters),
             (cfg.plan.k1_stage2(), d * iters),
         ],
-        // Lagrange masks: T data masks of (rows/K)·d (one-time, Eq. 3) +
-        // T model masks of d per iteration (Eq. 4).
+        // Lagrange masks: T data masks per batch of (rows_b/K)·d — summed
+        // over batches that is T·(Σ_b rows_b/K)·d = T·(rows_padded/K)·d,
+        // charged ONCE (the per-batch encodings are amortized across all
+        // epochs) — plus T model masks of d per iteration (Eq. 4).
         randoms: cfg.t * (rows_padded / cfg.k) * d + cfg.t * d * iters,
     }
 }
@@ -117,34 +121,47 @@ pub fn train_task(
 ) -> Result<TrainOutput, String> {
     let f = task.f;
     let (rows, d) = (task.rows_padded, task.d);
-    let shape = MatShape::new(rows, d);
     let demand = copml_demand(cfg, d, rows);
     let mut vals = Dealer::values(f, cfg.seed, &demand, cfg.plan.k2, cfg.plan.kappa);
 
-    // One-time: Xᵀy, aligned to the gradient scale 2^{l_c+l_x+l_w} above
-    // its own l_x (paper Phase 2 end; scaling is a public-constant mult).
+    // One-time, per batch: Xᵀ_b y_b, aligned to the gradient scale
+    // 2^{l_c+l_x+l_w} above its own l_x (paper Phase 2 end; scaling is a
+    // public-constant mult). Mirrors the protocol's single concatenated
+    // BH08 reduction over all batches.
     let pp = cfg.parallelism;
-    let mut xty = par::matvec_t(f, pp, &task.x_q, shape, &task.y_q);
+    let plan_b = &task.batches;
     let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
-    vecops::scale_assign(f, &mut xty, align);
+    let mut xty: Vec<Vec<u64>> = Vec::with_capacity(plan_b.b);
+    for &(lo, hi) in plan_b.ranges() {
+        let sh = MatShape::new(hi - lo, d);
+        let mut v = par::matvec_t(f, pp, &task.x_q[lo * d..hi * d], sh, &task.y_q[lo..hi]);
+        vecops::scale_assign(f, &mut v, align);
+        xty.push(v);
+    }
 
     let mut w = vec![0u64; d]; // w^(0) = 0 (see DESIGN.md: deterministic init)
     let mut out = TrainOutput::default();
 
-    for _iter in 0..cfg.iters {
-        // z = X·w  (scale l_x + l_w)
-        let mut z = par::matvec(f, pp, &task.x_q, shape, &w);
+    for iter in 0..cfg.iters {
+        // batch b = iter mod B (full matrix for B = 1)
+        let bi = plan_b.batch_of_iter(iter);
+        let (lo, hi) = plan_b.ranges()[bi];
+        let xb = &task.x_q[lo * d..hi * d];
+        let sh = MatShape::new(hi - lo, d);
+        // z = X_b·w  (scale l_x + l_w)
+        let mut z = par::matvec(f, pp, xb, sh, &w);
         // ĝ(z)  (scale l_c + l_x + l_w)
         par::poly_eval_assign(f, pp, &task.coeffs_q, &mut z);
-        // Xᵀ ĝ  (scale 2l_x + l_w + l_c) — in the protocol this is the
+        // X_bᵀ ĝ  (scale 2l_x + l_w + l_c) — in the protocol this is the
         // Lagrange-decoded aggregate of the clients' Eq. (7) results.
-        let mut grad = par::matvec_t(f, pp, &task.x_q, shape, &z);
-        // − Xᵀy (aligned)
-        vecops::sub_assign(f, &mut grad, &xty);
+        let mut grad = par::matvec_t(f, pp, xb, sh, &z);
+        // − X_bᵀy_b (aligned)
+        vecops::sub_assign(f, &mut grad, &xty[bi]);
         // Stage-1 truncation → scale l_x + l_w.
         trunc_central(task, &mut vals, &mut grad, cfg.plan.k2, cfg.plan.k1_stage1())?;
-        // × e_q (scale + l_e), stage-2 truncation → scale l_w.
-        vecops::scale_assign(f, &mut grad, task.eta_q);
+        // × e_q[b] = Round(2^{l_e}·η/m_b) (scale + l_e), stage-2
+        // truncation → scale l_w.
+        vecops::scale_assign(f, &mut grad, task.eta_qs[bi]);
         trunc_central(task, &mut vals, &mut grad, cfg.plan.k2, cfg.plan.k1_stage2())?;
         // w ← w − G₂
         vecops::sub_assign(f, &mut w, &grad);
@@ -235,6 +252,36 @@ mod tests {
             let par = train(&cfg, &ds).unwrap();
             assert_eq!(seq.w_trace, par.w_trace, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn minibatch_trajectory_is_k_invariant() {
+        // The BatchPlan's real-row partition is K-independent, so K must
+        // stay trajectory-neutral under batching too (per-batch padding
+        // differs, but zero rows are inert).
+        let ds = Dataset::synth(SynthSpec::smoke(), 17);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 13, CaseParams::explicit(2, 1), 17);
+        cfg.iters = 8;
+        cfg.batches = 4;
+        let a = train(&cfg, &ds).unwrap();
+        cfg.k = 4;
+        let b = train(&cfg, &ds).unwrap();
+        assert_eq!(a.w_trace, b.w_trace);
+    }
+
+    #[test]
+    fn minibatch_converges_and_differs_from_full_batch() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 18);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 18);
+        cfg.iters = 40;
+        let full = train(&cfg, &ds).unwrap();
+        cfg.batches = 8;
+        let mini = train(&cfg, &ds).unwrap();
+        assert_ne!(full.w_trace, mini.w_trace, "batching must change the iterates");
+        let a = *full.test_accuracy.last().unwrap();
+        let b = *mini.test_accuracy.last().unwrap();
+        assert!(b > 0.75, "mini-batch accuracy {b}");
+        assert!((a - b).abs() < 0.08, "full {a} vs mini {b}");
     }
 
     #[test]

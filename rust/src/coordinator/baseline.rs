@@ -30,7 +30,7 @@ use crate::mpc::Party;
 use crate::net::local::Hub;
 use crate::shamir;
 
-use super::{CopmlConfig, QuantizedTask, TrainOutput};
+use super::{CopmlConfig, FaultPlan, QuantizedTask, TrainOutput};
 
 /// Which multiplication protocol the baseline uses (Appendix C).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,6 +70,13 @@ pub struct BaselineConfig {
     pub t: usize,
     pub plan: crate::quant::FpPlan,
     pub iters: usize,
+    /// Mini-batch count, same schedule as [`CopmlConfig::batches`]
+    /// (`batch = iter mod B`) — the baselines must train on the identical
+    /// batch sequence for the Table-1/Fig-3 comparisons to stay
+    /// apples-to-apples. The [`crate::data::BatchPlan`] real-row partition
+    /// is K-independent, so the `K = 1` baseline sees exactly the rows
+    /// COPML's batches hold.
+    pub batches: usize,
     pub eta: f64,
     pub seed: u64,
     pub fit_range: f64,
@@ -80,13 +87,15 @@ pub struct BaselineConfig {
 }
 
 impl BaselineConfig {
-    /// Match a COPML config (same plan/η/iters/seed → same trajectory).
+    /// Match a COPML config (same plan/η/iters/batches/seed → same
+    /// trajectory).
     pub fn matching(cfg: &CopmlConfig, flavor: MpcFlavor) -> BaselineConfig {
         BaselineConfig {
             n: cfg.n,
             t: cfg.t,
             plan: cfg.plan,
             iters: cfg.iters,
+            batches: cfg.batches,
             eta: cfg.eta,
             seed: cfg.seed,
             fit_range: cfg.fit_range,
@@ -103,6 +112,7 @@ impl BaselineConfig {
             r: 1,
             plan: self.plan,
             iters: self.iters,
+            batches: self.batches,
             eta: self.eta,
             seed: self.seed,
             engine: crate::runtime::Engine::Native,
@@ -113,6 +123,10 @@ impl BaselineConfig {
             // Baselines reproduce the paper's dealer-assisted setups; the
             // dealer-free offline phase is a COPML-protocol feature.
             offline: crate::mpc::OfflineMode::Dealer,
+            // Fault injection lives in the COPML quorum machinery, not in
+            // the conventional baselines.
+            faults: FaultPlan::default(),
+            max_lag: None,
         }
     }
 }
@@ -129,18 +143,30 @@ pub fn train(cfg: &BaselineConfig, ds: &Dataset) -> Result<BaselineOutput, Strin
     if cfg.n <= 2 * cfg.t {
         return Err(format!("baseline needs n > 2t (n={}, t={})", cfg.n, cfg.t));
     }
+    // Batch-geometry sanity through the shared checker (K = 1 here — the
+    // naive baselines never partition), so a bad batch count returns the
+    // same clean error the COPML trainers give instead of panicking
+    // inside BatchPlan::new.
+    crate::data::BatchPlan::validate_geometry(ds.m, 1, cfg.batches, cfg.iters)
+        .map_err(|e| format!("baseline batch plan: {e}"))?;
     let ccfg = cfg.as_copml();
     let task = Arc::new(QuantizedTask::new(&ccfg, ds));
     let f = task.f;
     let (n, t) = (cfg.n, cfg.t);
-    let rows = task.rows_padded; // k=1 → no padding
     let d = task.d;
 
     // Offline demand. Truncation streams must match COPML's demand layout
-    // (same widths, same counts) so the trajectories coincide.
+    // (same widths, same counts) so the trajectories coincide. BH08 pays
+    // per-iteration degree reductions of that round's z (rows_b) and grad
+    // (d) vectors — summed over the cyclic batch schedule.
     let doubles = match cfg.flavor {
         MpcFlavor::Bgw => 0,
-        MpcFlavor::Bh08 => (rows + d) * cfg.iters,
+        MpcFlavor::Bh08 => (0..cfg.iters)
+            .map(|it| {
+                let (blo, bhi) = task.batches.ranges()[task.batches.batch_of_iter(it)];
+                (bhi - blo) + d
+            })
+            .sum(),
     };
     let demand = Demand {
         doubles,
@@ -192,7 +218,7 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
     let me = party.id;
     let n = cfg.n;
     let (rows, d) = (task.rows_padded, task.d);
-    let shape = MatShape::new(rows, d);
+    let plan_b = &task.batches;
     let bgw = cfg.flavor == MpcFlavor::Bgw;
     let mut ledger = BaselineLedger::default();
     let mut mark_t = Instant::now();
@@ -234,23 +260,28 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
     let mut snapshots = Vec::with_capacity(cfg.iters);
     let (c0q, c1q) = (task.coeffs_q[0], task.coeffs_q[1]);
 
-    for _it in 0..cfg.iters {
-        // z = X·w — local share products, degree 2T.
-        let z2t = par::matvec(f, cfg.parallelism, &x_share, shape, &w_share);
+    for it in 0..cfg.iters {
+        // Mini-batch schedule, identical to COPML's (batch = iter mod B).
+        let bi = plan_b.batch_of_iter(it);
+        let (blo, bhi) = plan_b.ranges()[bi];
+        let xb = &x_share[blo * d..bhi * d];
+        let shb = MatShape::new(bhi - blo, d);
+        // z = X_b·w — local share products, degree 2T.
+        let z2t = par::matvec(f, cfg.parallelism, xb, shb, &w_share);
         tick!(1);
-        // degree reduction of the m-vector (the step COPML avoids).
+        // degree reduction of the rows_b-vector (the step COPML avoids).
         let mut z = if bgw {
             party.degree_reduce_bgw(&z2t)
         } else {
             party.degree_reduce_bh08(&z2t)
         };
         tick!(2);
-        // ĝ(z) − y·align, affine in the shares (r = 1).
+        // ĝ(z) − y_b·align, affine in the shares (r = 1).
         party.scale(&mut z, c1q);
         party.add_const(&mut z, c0q);
-        party.sub(&mut z, &y_aligned);
-        // grad = Xᵀ·res — local products, degree 2T.
-        let g2t = par::matvec_t(f, cfg.parallelism, &x_share, shape, &z);
+        party.sub(&mut z, &y_aligned[blo..bhi]);
+        // grad = X_bᵀ·res — local products, degree 2T.
+        let g2t = par::matvec_t(f, cfg.parallelism, xb, shb, &z);
         tick!(1);
         let grad = if bgw {
             party.degree_reduce_bgw(&g2t)
@@ -261,7 +292,7 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
         // two-stage truncation + update (identical to COPML's Phase 4).
         let mut g1 =
             party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, !bgw);
-        party.scale(&mut g1, task.eta_q);
+        party.scale(&mut g1, task.eta_qs[bi]);
         let g2 = party.trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, !bgw);
         party.sub(&mut w_share, &g2);
         snapshots.push(w_share.clone());
@@ -319,6 +350,7 @@ mod tests {
             t: 2,
             plan: crate::quant::FpPlan::paper_cifar(),
             iters: 2,
+            batches: 1,
             eta: 2.0,
             seed: 32,
             fit_range: 4.0,
@@ -336,6 +368,44 @@ mod tests {
             bytes(&bgw.ledgers),
             bytes(&bh.ledgers)
         );
+    }
+
+    #[test]
+    fn minibatch_baseline_matches_copml_trajectory() {
+        // The batch schedule and the K-independent real-row partition must
+        // keep the baselines on COPML's exact mini-batch iterates.
+        let ds = Dataset::synth(SynthSpec::tiny(), 33);
+        let mut ccfg = CopmlConfig::for_dataset(&ds, 5, CaseParams::explicit(1, 1), 33);
+        ccfg.iters = 6;
+        ccfg.batches = 3;
+        let reference = algo::train(&ccfg, &ds).unwrap();
+        for flavor in [MpcFlavor::Bh08, MpcFlavor::Bgw] {
+            let bcfg = BaselineConfig::matching(&ccfg, flavor);
+            let out = train(&bcfg, &ds).unwrap();
+            assert_eq!(out.train.w_trace, reference.w_trace, "{flavor:?} B=3");
+        }
+    }
+
+    #[test]
+    fn baseline_rejects_bad_batch_geometry() {
+        let ds = Dataset::synth(SynthSpec::tiny(), 34);
+        let mut cfg = BaselineConfig {
+            n: 5,
+            t: 1,
+            plan: crate::quant::FpPlan::paper_cifar(),
+            iters: 2,
+            batches: 0,
+            eta: 2.0,
+            seed: 34,
+            fit_range: 4.0,
+            flavor: MpcFlavor::Bh08,
+            parallelism: Parallelism::sequential(),
+        };
+        assert!(train(&cfg, &ds).unwrap_err().contains("batches"));
+        cfg.batches = ds.m + 1;
+        assert!(train(&cfg, &ds).unwrap_err().contains("samples"));
+        cfg.batches = 3; // > iters = 2
+        assert!(train(&cfg, &ds).unwrap_err().contains("iters"));
     }
 
     #[test]

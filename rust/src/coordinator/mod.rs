@@ -23,7 +23,7 @@ pub mod algo;
 pub mod baseline;
 pub mod protocol;
 
-use crate::data::Dataset;
+use crate::data::{BatchPlan, Dataset};
 use crate::field::{Field, Parallelism};
 use crate::lcc;
 use crate::ml::fit_sigmoid;
@@ -125,6 +125,13 @@ pub struct CopmlConfig {
     pub plan: FpPlan,
     /// Gradient-descent iterations `J`.
     pub iters: usize,
+    /// Mini-batch count `B` (`--batches`): the padded rows are dealt into
+    /// `B` seeded-permutation batches ([`BatchPlan`]), each Lagrange-encoded
+    /// **once up front** (amortized over all epochs), and iteration `i`
+    /// trains on batch `i mod B` with learning-rate factor
+    /// `Round(2^{l_e}·η/m_b)`. `1` (the default) is classic full-batch
+    /// training, bit-identical to every pre-existing trace.
+    pub batches: usize,
     /// Learning rate `η`.
     pub eta: f64,
     /// Master seed (dealer randomness, share randomness, masks).
@@ -174,6 +181,7 @@ impl CopmlConfig {
             r: 1,
             plan,
             iters: 50,
+            batches: 1,
             eta: 2.0,
             seed,
             engine: Engine::Native,
@@ -197,6 +205,10 @@ impl CopmlConfig {
         if self.k == 0 || self.t == 0 {
             return Err("K and T must be ≥ 1".into());
         }
+        // Mini-batch geometry — the shared checker, so the trainers, the
+        // baselines, and the cost model agree on which geometries are
+        // legal (every batch needs ≥ K real rows and a schedule slot).
+        BatchPlan::validate_geometry(ds.m, self.k, self.batches, self.iters)?;
         // Footnote-4 subgroups partition the clients into groups of T+1;
         // with N < 2(T+1) there is at most one (possibly undersized) group
         // (degenerate at N < T+1, e.g. N=3, T=3, where reconstruction is
@@ -346,10 +358,15 @@ impl CopmlConfig {
         if !rep.ok {
             return Err(format!("fixed-point plan invalid: {:?}", rep.errors));
         }
-        if self.plan.eta_factor(self.eta, ds.m) == 0 {
+        // The largest batch has the smallest learning-rate factor; if it
+        // quantizes to zero the updates for that batch are no-ops. With
+        // B = 1 this is exactly the legacy full-batch check.
+        let mb_max = ds.m.div_ceil(self.batches);
+        if self.plan.eta_factor(self.eta, mb_max) == 0 {
             return Err(format!(
-                "learning rate quantizes to zero: Round(2^{}·{}/{}) = 0 — raise η or l_e",
-                self.plan.le, self.eta, ds.m
+                "learning rate quantizes to zero: Round(2^{}·{}/{mb_max}) = 0 \
+                 (largest of {} batches) — raise η or l_e",
+                self.plan.le, self.eta, self.batches
             ));
         }
         Ok(())
@@ -379,39 +396,50 @@ impl CopmlConfig {
     }
 }
 
-/// The dataset quantized into the field, padded so `K | rows`, plus the
-/// quantized learning-rate factor — everything the secure trainers consume.
+/// The dataset quantized into the field in the [`BatchPlan`]'s permuted,
+/// per-batch-padded layout (`K | rows` within every batch), plus the
+/// per-batch quantized learning-rate factors — everything the secure
+/// trainers consume. With `batches = 1` this is exactly the classic
+/// full-batch layout (identity permutation, one padded range).
 pub struct QuantizedTask {
     pub f: Field,
-    /// Quantized features, `(rows_padded × d)`, scale `2^{l_x}`.
+    /// Quantized features, `(rows_padded × d)`, scale `2^{l_x}` — rows in
+    /// batch-plan order, padding rows zero at every batch tail.
     pub x_q: Vec<u64>,
     /// Quantized labels at scale `2^0`, length `rows_padded` (padding rows
     /// carry label 0 — inert, as their feature rows are zero).
     pub y_q: Vec<u64>,
     pub rows_padded: usize,
     pub d: usize,
-    /// True (unpadded) sample count `m` — the denominator of `η/m`.
+    /// True (unpadded) sample count `m`.
     pub m: usize,
-    /// `e_q = Round(2^{l_e}·η/m)`.
-    pub eta_q: u64,
+    /// Per-batch `e_q[b] = Round(2^{l_e}·η/m_b)` with `m_b` the batch's
+    /// real-row count (`m_b = m` for full batch). Public constants, so the
+    /// per-batch scaling stays a communication-free share operation.
+    pub eta_qs: Vec<u64>,
     /// Quantized sigmoid coefficients (see `CopmlConfig::quantized_sigmoid`).
     pub coeffs_q: Vec<u64>,
     /// The real-valued fit (for reference links).
     pub poly: SigmoidPoly,
+    /// The mini-batch partition this layout was built for.
+    pub batches: BatchPlan,
 }
 
 impl QuantizedTask {
     pub fn new(cfg: &CopmlConfig, ds: &Dataset) -> QuantizedTask {
         let f = cfg.plan.field;
-        let rows_padded = ds.padded_rows(cfg.k);
+        let plan = BatchPlan::new(ds.m, cfg.k, cfg.batches, cfg.seed);
+        let rows_padded = plan.rows_padded();
         let mut x_q = vec![0u64; rows_padded * ds.d];
-        for i in 0..ds.m * ds.d {
-            x_q[i] = quant::quantize(f, ds.x[i], cfg.plan.lx);
-        }
         let mut y_q = vec![0u64; rows_padded];
-        for i in 0..ds.m {
-            y_q[i] = quant::quantize(f, ds.y[i], 0);
+        for (slot, src) in plan.slots() {
+            for j in 0..ds.d {
+                x_q[slot * ds.d + j] = quant::quantize(f, ds.x[src * ds.d + j], cfg.plan.lx);
+            }
+            y_q[slot] = quant::quantize(f, ds.y[src], 0);
         }
+        let eta_qs: Vec<u64> =
+            (0..plan.b).map(|b| cfg.plan.eta_factor(cfg.eta, plan.real_rows(b))).collect();
         let (poly, coeffs_q) = cfg.quantized_sigmoid();
         QuantizedTask {
             f,
@@ -420,9 +448,10 @@ impl QuantizedTask {
             rows_padded,
             d: ds.d,
             m: ds.m,
-            eta_q: cfg.plan.eta_factor(cfg.eta, ds.m),
+            eta_qs,
             coeffs_q,
             poly,
+            batches: plan,
         }
     }
 }
@@ -614,11 +643,77 @@ mod tests {
         let task = QuantizedTask::new(&cfg, &ds);
         assert_eq!(task.rows_padded % 3, 0);
         assert!(task.rows_padded >= ds.m);
-        // padding rows all zero
+        // padding rows all zero (B = 1: padding sits at the global tail)
         for i in ds.m..task.rows_padded {
             assert!(task.x_q[i * ds.d..(i + 1) * ds.d].iter().all(|&v| v == 0));
             assert_eq!(task.y_q[i], 0);
         }
-        assert!(task.eta_q >= 1);
+        assert_eq!(task.eta_qs.len(), 1);
+        assert!(task.eta_qs[0] >= 1);
+    }
+
+    #[test]
+    fn quantized_task_batched_layout() {
+        // B > 1: every batch padded to K | rows with zero rows at its own
+        // tail, per-batch η factors keyed to the batch's real size, and
+        // the multiset of real quantized rows preserved (a permutation).
+        let ds = Dataset::synth(SynthSpec::smoke(), 4);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::explicit(3, 1), 4);
+        cfg.batches = 7;
+        let task = QuantizedTask::new(&cfg, &ds);
+        let plan = &task.batches;
+        assert_eq!(plan.b, 7);
+        assert_eq!(task.eta_qs.len(), 7);
+        for (bi, &(lo, hi)) in plan.ranges().iter().enumerate() {
+            assert_eq!((hi - lo) % cfg.k, 0, "batch {bi}");
+            let mb = plan.real_rows(bi);
+            assert_eq!(task.eta_qs[bi], cfg.plan.eta_factor(cfg.eta, mb), "batch {bi}");
+            // padding rows of this batch are zero
+            for i in lo + mb..hi {
+                assert!(
+                    task.x_q[i * ds.d..(i + 1) * ds.d].iter().all(|&v| v == 0),
+                    "batch {bi} padding row {i}"
+                );
+                assert_eq!(task.y_q[i], 0);
+            }
+        }
+        // real rows are a permutation of the B=1 quantization
+        let full = QuantizedTask::new(
+            &CopmlConfig { batches: 1, ..cfg.clone() },
+            &ds,
+        );
+        let row = |xq: &[u64], i: usize| xq[i * ds.d..(i + 1) * ds.d].to_vec();
+        let mut batched_rows: Vec<Vec<u64>> = plan
+            .slots()
+            .iter()
+            .map(|&(slot, _)| row(&task.x_q, slot))
+            .collect();
+        let mut full_rows: Vec<Vec<u64>> = (0..ds.m).map(|i| row(&full.x_q, i)).collect();
+        batched_rows.sort_unstable();
+        full_rows.sort_unstable();
+        assert_eq!(batched_rows, full_rows);
+    }
+
+    #[test]
+    fn validate_batch_geometry() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 5); // m = 400
+        let base = CopmlConfig::for_dataset(&ds, 10, CaseParams::explicit(3, 1), 5);
+        let mut cfg = base.clone();
+        cfg.batches = 8;
+        assert!(cfg.validate(&ds).is_ok(), "{:?}", cfg.validate(&ds));
+        // zero batches
+        cfg.batches = 0;
+        assert!(cfg.validate(&ds).unwrap_err().contains("batches"));
+        // more batches than samples
+        cfg.batches = ds.m + 1;
+        assert!(cfg.validate(&ds).unwrap_err().contains("samples"));
+        // rows_b < K
+        cfg.batches = 200; // ⌊400/200⌋ = 2 < K = 3
+        assert!(cfg.validate(&ds).unwrap_err().contains("rows_b"));
+        // batches past the schedule
+        let mut cfg = base;
+        cfg.iters = 4;
+        cfg.batches = 8;
+        assert!(cfg.validate(&ds).unwrap_err().contains("iters"));
     }
 }

@@ -30,6 +30,17 @@
 //! rest of training (roster-aware collectives in [`crate::mpc::Party`]);
 //! injected faults for experiments come from
 //! [`crate::coordinator::FaultPlan`] (`--delay`, `--kill-after`).
+//!
+//! **Mini-batch SGD (`--batches B`):** the padded rows are dealt into `B`
+//! seeded-permutation batches ([`crate::data::BatchPlan`]); Phase 2
+//! Lagrange-encodes **each batch once up front** (amortized across every
+//! epoch — re-encoding per epoch would erase the speedup) and precomputes
+//! the per-batch `Xᵀ_b y_b` through one concatenated BH08 reduction; the
+//! iteration loop then trains batch `iter mod B`, shrinking per-round
+//! compute by the batch ratio while every exchanged vector stays
+//! `d`-sized. Batching composes with the quorum path above — the decoded
+//! batch gradient is still an exact interpolation, so `w_trace` remains
+//! bit-identical to the central recursion for every `B`.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -479,7 +490,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     let me = party.id;
     let (n, t, k) = (cfg.n, cfg.t, cfg.k);
     let (rows, d) = (task.rows_padded, task.d);
-    let rows_k = rows / k;
+    let plan_b = &task.batches;
     let mut ledger = ClientLedger::default();
     struct PhaseTimer {
         start: Instant,
@@ -521,51 +532,78 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     }
     timer.tick(&mut ledger, 1, party);
 
-    // ---- Phase: [Xᵀy], aligned (Algorithm 1, line 10) -------------------
+    // ---- Phase: per-batch [Xᵀ_b y_b], aligned (Algorithm 1, line 10) ----
+    // All B local products are concatenated into one (B·d)-vector and pay
+    // a single BH08 degree reduction — one protocol round regardless of B
+    // (for B = 1 this is byte-identical to the classic full-batch phase).
     let pp = cfg.parallelism;
-    let shape_full = MatShape::new(rows, d);
-    let local = par::matvec_t(f, pp, &x_share, shape_full, &y_share); // deg 2T
-    let mut xty = party.degree_reduce_bh08(&local); // deg T
+    let nb = plan_b.b;
+    let mut local = vec![0u64; nb * d];
+    for (bi, &(blo, bhi)) in plan_b.ranges().iter().enumerate() {
+        let sh = MatShape::new(bhi - blo, d);
+        let lb = par::matvec_t(f, pp, &x_share[blo * d..bhi * d], sh, &y_share[blo..bhi]); // deg 2T
+        local[bi * d..(bi + 1) * d].copy_from_slice(&lb);
+    }
+    let mut xty_all = party.degree_reduce_bh08(&local); // deg T, B·d doubles
     let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
-    party.scale(&mut xty, align);
+    party.scale(&mut xty_all, align);
+    let xty: Vec<Vec<u64>> = (0..nb).map(|bi| xty_all[bi * d..(bi + 1) * d].to_vec()).collect();
+    drop(xty_all);
     timer.tick(&mut ledger, 2, party);
 
-    // ---- Phase: Lagrange-encode the dataset (Eq. 3; lines 5–9) ----------
+    // ---- Phase: Lagrange-encode the dataset, once per batch (Eq. 3;
+    // lines 5–9) ----------------------------------------------------------
+    // Every batch is encoded ONE time here and reused by every epoch that
+    // revisits it — the one-shot amortization that makes mini-batch
+    // training pay the encode exchange exactly as often as full-batch
+    // does. Tags are allocated per batch inside the loop; all parties
+    // iterate batches in the same order, so the SPMD tag sequence stays
+    // aligned.
     let enc = lcc::Encoder::standard(f, k, t, n);
-    // Partition [X] into K parts + T mask shares from the offline pool.
-    let parts: Vec<&[u64]> = (0..k).map(|kk| &x_share[kk * rows_k * d..(kk + 1) * rows_k * d]).collect();
-    let masks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(rows_k * d)).collect();
-    let all_parts: Vec<&[u64]> = parts.into_iter().chain(masks.iter().map(|m| m.as_slice())).collect();
     let (targets, sources) = encode_roles(n, t, me, cfg.subgroups);
-    let tag_xenc = party.fresh_tag();
-    // Compute and send [X̃_i]_me for every target i.
-    let mut own_enc_share: Option<Vec<u64>> = None;
-    for &i in &targets {
-        let mut buf = vec![0u64; rows_k * d];
-        enc.encode_one_par(pp, i, &all_parts, &mut buf);
-        if i == me {
-            own_enc_share = Some(buf);
-        } else {
-            party.net.send(i, tag_xenc, buf);
-        }
-    }
-    // Reconstruct my encoded matrix X̃_me from the sources' shares.
     let source_pts: Vec<u64> = sources.iter().map(|&i| party.lambdas[i]).collect();
     let mut rec = shamir::Reconstructor::new(f, &source_pts);
-    let enc_shares: Vec<Vec<u64>> = sources
-        .iter()
-        .map(|&i| {
+    let mut x_tildes: Vec<Vec<u64>> = Vec::with_capacity(nb);
+    let mut shapes_k: Vec<MatShape> = Vec::with_capacity(nb);
+    for &(blo, bhi) in plan_b.ranges() {
+        let rows_bk = (bhi - blo) / k;
+        // Partition [X_b] into K parts + T mask shares from the offline
+        // pool (per-batch masks — the Demand charges Σ_b rows_b/K once).
+        let parts: Vec<&[u64]> = (0..k)
+            .map(|kk| &x_share[(blo + kk * rows_bk) * d..(blo + (kk + 1) * rows_bk) * d])
+            .collect();
+        let masks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(rows_bk * d)).collect();
+        let all_parts: Vec<&[u64]> =
+            parts.into_iter().chain(masks.iter().map(|m| m.as_slice())).collect();
+        let tag_xenc = party.fresh_tag();
+        // Compute and send [X̃_{b,i}]_me for every target i.
+        let mut own_enc_share: Option<Vec<u64>> = None;
+        for &i in &targets {
+            let mut buf = vec![0u64; rows_bk * d];
+            enc.encode_one_par(pp, i, &all_parts, &mut buf);
             if i == me {
-                own_enc_share.take().unwrap()
+                own_enc_share = Some(buf);
             } else {
-                party.net.recv(i, tag_xenc)
+                party.net.send(i, tag_xenc, buf);
             }
-        })
-        .collect();
-    let views: Vec<&[u64]> = enc_shares.iter().map(|v| v.as_slice()).collect();
-    let mut x_tilde = vec![0u64; rows_k * d];
-    rec.reconstruct(f, &views, &mut x_tilde);
-    drop(enc_shares);
+        }
+        // Reconstruct my encoded matrix X̃_{b,me} from the sources' shares.
+        let enc_shares: Vec<Vec<u64>> = sources
+            .iter()
+            .map(|&i| {
+                if i == me {
+                    own_enc_share.take().unwrap()
+                } else {
+                    party.net.recv(i, tag_xenc)
+                }
+            })
+            .collect();
+        let views: Vec<&[u64]> = enc_shares.iter().map(|v| v.as_slice()).collect();
+        let mut x_tilde = vec![0u64; rows_bk * d];
+        rec.reconstruct(f, &views, &mut x_tilde);
+        x_tildes.push(x_tilde);
+        shapes_k.push(MatShape::new(rows_bk, d));
+    }
     drop(x_share);
     timer.tick(&mut ledger, 3, party);
 
@@ -584,7 +622,6 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     let need = cfg.recovery_threshold();
     let deg_f = 2 * cfg.r + 1;
     let mut dec_cache = lcc::DecoderCache::new(f, k, t, deg_f, alphas.clone(), betas.clone());
-    let shape_k = MatShape::new(rows_k, d);
 
     // Fault plan (straggler experiments): this party's injected
     // compute-phase delay and kill point, if any.
@@ -613,6 +650,10 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             if kill_at == Some(iter) {
                 return Err(format!("killed at iteration {iter} by the fault plan"));
             }
+            // Mini-batch schedule: iteration i trains on batch i mod B
+            // (bit-identical across algo mode, both transports, and the
+            // baselines — the schedule is pure arithmetic on `iter`).
+            let bi = plan_b.batch_of_iter(iter);
             // Roster-adjusted encode roles for this round. Reconstruction
             // from any T+1 of the original sources is exact, so losing a
             // source is harmless until fewer than T+1 remain.
@@ -689,8 +730,11 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             timer.tick(&mut ledger, 4, party);
 
             // ---- local encoded gradient (Eq. 7; line 16) ----------------
+            // The round's batch: compute scales with rows_b/K instead of
+            // rows/K — the mini-batch speedup (decode and every other
+            // per-round exchange below stay d-sized).
             let f_mine =
-                ctx.kernel.encoded_gradient(&x_tilde, shape_k, &w_tilde, &task.coeffs_q);
+                ctx.kernel.encoded_gradient(&x_tildes[bi], shapes_k[bi], &w_tilde, &task.coeffs_q);
             if let Some(dl) = delay {
                 std::thread::sleep(dl); // injected straggler (fault plan)
             }
@@ -810,10 +854,10 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
             let mut grad = vec![0u64; d];
             dec_cache.get(&members).decode_sum_par(pp, &views, &mut grad);
-            party.sub(&mut grad, &xty);
+            party.sub(&mut grad, &xty[bi]);
             let mut g1 =
                 party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, true);
-            party.scale(&mut g1, task.eta_q);
+            party.scale(&mut g1, task.eta_qs[bi]);
             let g2 = party.trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, true);
             party.sub(&mut w_share, &g2);
             snapshots.push(w_share.clone());
@@ -965,6 +1009,21 @@ mod tests {
         let ds = Dataset::synth(SynthSpec::tiny(), 21);
         let mut cfg = super::super::CopmlConfig::for_dataset(&ds, 7, CaseParams::explicit(2, 1), 21);
         cfg.iters = 4;
+        let algo = super::super::algo::train(&cfg, &ds).unwrap();
+        let full = train(&cfg, &ds).unwrap();
+        assert_eq!(algo.w_trace, full.train.w_trace);
+    }
+
+    #[test]
+    fn full_protocol_matches_algo_mode_minibatch_tiny() {
+        // Same invariant under the mini-batch pipeline: per-batch one-shot
+        // encodings, the concatenated Xᵀ_b y_b reduction, and the cyclic
+        // schedule must leave protocol ≡ algo bit for bit.
+        let ds = Dataset::synth(SynthSpec::tiny(), 23);
+        let mut cfg =
+            super::super::CopmlConfig::for_dataset(&ds, 7, CaseParams::explicit(2, 1), 23);
+        cfg.iters = 6;
+        cfg.batches = 3;
         let algo = super::super::algo::train(&cfg, &ds).unwrap();
         let full = train(&cfg, &ds).unwrap();
         assert_eq!(algo.w_trace, full.train.w_trace);

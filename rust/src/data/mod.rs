@@ -13,6 +13,149 @@
 
 use crate::prng::Rng;
 
+/// Stream label for the batch-permutation RNG ("BTCH" in the high bits) —
+/// domain-separated from the dealer stream labels (`mpc::dealer`), the
+/// per-party online streams (`mpc::STREAM_PARTY`), and the offline-phase
+/// streams (`mpc::offline`), so adding batching perturbs no other
+/// randomness.
+const STREAM_BATCH: u64 = 0x4254_4348_0000_0000;
+
+/// Deterministic mini-batch partition of a dataset's training rows.
+///
+/// The `m` real rows are dealt into `B` batches by a **seeded permutation**
+/// (identity for `B = 1`, so the full-batch layout — and every full-batch
+/// trace — is reproduced bit for bit), split as evenly as `client_ranges`
+/// splits clients (remainders to the first batches), and each batch is
+/// **independently zero-padded** up to a multiple of `K` so the Lagrange
+/// encoder can partition every batch into `K` equal submatrices
+/// (`runtime::padding`: zero rows are provably inert in the gradient).
+///
+/// Two load-bearing invariants:
+///
+/// * each batch occupies one **contiguous padded row range**, with its
+///   padding at the batch tail — so per-batch matrix views are plain
+///   slices and `coordinator::protocol::padded_ranges` keeps working on
+///   the concatenated layout;
+/// * the real-row partition (which rows train in which batch, and hence
+///   the per-batch learning-rate denominators) depends only on
+///   `(m, B, seed)` — **never on `K`** — so the COPML trainers and the
+///   `K = 1` conventional-MPC baselines walk bit-identical trajectories
+///   (asserted in `tests/protocol_equivalence.rs`).
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    /// Number of batches `B` (iteration `i` trains on batch `i mod B`).
+    pub b: usize,
+    /// Permuted order of the `m` real rows: permuted slot `i` holds
+    /// original dataset row `perm[i]`. Identity for `B = 1`.
+    perm: Vec<usize>,
+    /// Real (unpadded) rows per batch — the `η/m_b` denominators.
+    real: Vec<usize>,
+    /// Padded `[lo, hi)` row range per batch; `hi − lo` is a multiple of
+    /// `K` and the ranges tile `0..rows_padded` in order.
+    ranges: Vec<(usize, usize)>,
+    rows_padded: usize,
+}
+
+impl BatchPlan {
+    /// Build the plan for `m` rows, `K` Lagrange partitions, `B` batches.
+    /// Deterministic in `seed` (the permutation comes from a
+    /// domain-separated fork of the master seed).
+    pub fn new(m: usize, k: usize, b: usize, seed: u64) -> BatchPlan {
+        assert!(b >= 1, "batch count must be ≥ 1");
+        assert!(k >= 1, "partition count must be ≥ 1");
+        assert!(b <= m, "more batches ({b}) than samples ({m})");
+        let perm: Vec<usize> = if b == 1 {
+            (0..m).collect()
+        } else {
+            Rng::seed_from_u64(seed).fork(STREAM_BATCH).permutation(m)
+        };
+        let (base, extra) = (m / b, m % b);
+        let mut real = Vec::with_capacity(b);
+        let mut ranges = Vec::with_capacity(b);
+        let mut off = 0usize;
+        for i in 0..b {
+            let mb = base + usize::from(i < extra);
+            let pb = mb.div_ceil(k) * k;
+            real.push(mb);
+            ranges.push((off, off + pb));
+            off += pb;
+        }
+        BatchPlan { b, perm, real, ranges, rows_padded: off }
+    }
+
+    /// Total padded rows `Σ_b (hi − lo)` — the row count of the
+    /// concatenated per-batch-padded matrix.
+    pub fn rows_padded(&self) -> usize {
+        self.rows_padded
+    }
+
+    /// Padded `[lo, hi)` row ranges, one per batch, tiling `0..rows_padded`.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Real (unpadded) sample count of batch `b` — the denominator of the
+    /// batch's learning-rate factor `η/m_b`.
+    pub fn real_rows(&self, b: usize) -> usize {
+        self.real[b]
+    }
+
+    /// Which batch gradient-descent iteration `iter` trains on: the cyclic
+    /// schedule `iter mod B` (shared bit-identically by the full protocol,
+    /// the central recursion, and the baselines).
+    pub fn batch_of_iter(&self, iter: usize) -> usize {
+        iter % self.b
+    }
+
+    /// The batch-geometry feasibility rules, shared by every layer that
+    /// accepts a batch count (`CopmlConfig::validate`, the conventional
+    /// baselines, the cost model) so they can never drift on which
+    /// geometries are legal: `B ≥ 1`, every batch holds at least one —
+    /// and at least `K` — real rows, and the cyclic schedule visits every
+    /// batch within `iters`.
+    pub fn validate_geometry(m: usize, k: usize, b: usize, iters: usize) -> Result<(), String> {
+        if b == 0 {
+            return Err("--batches must be ≥ 1".into());
+        }
+        if b > m {
+            return Err(format!(
+                "--batches {b} exceeds the dataset's m = {m} samples: every batch \
+                 needs at least one real row"
+            ));
+        }
+        if m / b < k {
+            return Err(format!(
+                "infeasible batch geometry: rows_b = ⌊m/B⌋ = {} < K = {k} — every \
+                 batch must hold at least K real rows (m = {m}, B = {b}); lower \
+                 --batches or K",
+                m / b
+            ));
+        }
+        if b > iters {
+            return Err(format!(
+                "--batches {b} exceeds --iters {iters}: the cyclic schedule (batch = \
+                 iter mod B) would never train on the tail batches"
+            ));
+        }
+        Ok(())
+    }
+
+    /// `(padded_slot, original_row)` for every real row, in layout order —
+    /// the scatter map quantization uses to build the permuted,
+    /// per-batch-padded matrix (slots not named here are padding, zero).
+    pub fn slots(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.perm.len());
+        let mut i = 0usize;
+        for (bi, &(lo, _)) in self.ranges.iter().enumerate() {
+            for j in 0..self.real[bi] {
+                out.push((lo + j, self.perm[i]));
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
 /// A dense binary-classification dataset, features in `[0, 1]`, last
 /// feature column fixed to 1 (bias), labels in `{0, 1}`.
 #[derive(Clone)]
@@ -307,6 +450,107 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0);
             }
         }
+    }
+
+    #[test]
+    fn batch_plan_full_batch_is_identity_layout() {
+        // B = 1 must reproduce the classic layout exactly: identity
+        // permutation, one range, the same padding `padded_rows` computes.
+        let ds = Dataset::synth(SynthSpec::smoke(), 7);
+        for k in [1usize, 3, 7] {
+            let plan = BatchPlan::new(ds.m, k, 1, 99);
+            assert_eq!(plan.rows_padded(), ds.padded_rows(k));
+            assert_eq!(plan.ranges().to_vec(), vec![(0, ds.padded_rows(k))]);
+            assert_eq!(plan.real_rows(0), ds.m);
+            let slots = plan.slots();
+            assert_eq!(slots.len(), ds.m);
+            for (i, &(slot, src)) in slots.iter().enumerate() {
+                assert_eq!((slot, src), (i, i), "B=1 must not permute");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_plan_partitions_exactly() {
+        for (m, k, b) in [(48usize, 2usize, 3usize), (50, 3, 4), (400, 3, 16), (7, 1, 7)] {
+            let plan = BatchPlan::new(m, k, b, 5);
+            assert_eq!(plan.ranges().len(), b);
+            // contiguous tiling, K | padded size, padding < K per batch
+            let mut off = 0;
+            let mut total_real = 0;
+            for (bi, &(lo, hi)) in plan.ranges().iter().enumerate() {
+                assert_eq!(lo, off, "batch {bi} not contiguous");
+                let pb = hi - lo;
+                assert_eq!(pb % k, 0, "batch {bi} padded size not divisible by K");
+                let mb = plan.real_rows(bi);
+                assert!(pb >= mb && pb < mb + k, "batch {bi} overpadded");
+                total_real += mb;
+                off = hi;
+            }
+            assert_eq!(off, plan.rows_padded());
+            assert_eq!(total_real, m);
+            // batch sizes even: differ by at most one real row
+            let (mn, mx) = (0..b).fold((usize::MAX, 0), |(mn, mx), bi| {
+                (mn.min(plan.real_rows(bi)), mx.max(plan.real_rows(bi)))
+            });
+            assert!(mx - mn <= 1, "uneven batches: {mn}..{mx}");
+            // slots form a bijection real rows → distinct padded slots
+            let slots = plan.slots();
+            assert_eq!(slots.len(), m);
+            let mut srcs: Vec<usize> = slots.iter().map(|&(_, s)| s).collect();
+            srcs.sort_unstable();
+            assert_eq!(srcs, (0..m).collect::<Vec<_>>());
+            let mut dsts: Vec<usize> = slots.iter().map(|&(d, _)| d).collect();
+            dsts.sort_unstable();
+            dsts.dedup();
+            assert_eq!(dsts.len(), m, "padded slots must be distinct");
+        }
+    }
+
+    #[test]
+    fn batch_plan_real_partition_is_k_invariant() {
+        // The property the baseline bit-identity rests on: which real rows
+        // land in which batch must not depend on K (only padding does).
+        let (m, b, seed) = (400usize, 8usize, 11u64);
+        let reference = BatchPlan::new(m, 1, b, seed);
+        for k in [2usize, 3, 5, 16] {
+            let plan = BatchPlan::new(m, k, b, seed);
+            for bi in 0..b {
+                assert_eq!(plan.real_rows(bi), reference.real_rows(bi), "k={k} batch {bi}");
+            }
+            // same rows in the same batches: compare per-batch source sets
+            let by_batch = |p: &BatchPlan| -> Vec<Vec<usize>> {
+                let slots = p.slots();
+                let mut i = 0;
+                (0..b)
+                    .map(|bi| {
+                        let mb = p.real_rows(bi);
+                        let v: Vec<usize> = slots[i..i + mb].iter().map(|&(_, s)| s).collect();
+                        i += mb;
+                        v
+                    })
+                    .collect()
+            };
+            assert_eq!(by_batch(&plan), by_batch(&reference), "k={k}");
+        }
+    }
+
+    #[test]
+    fn batch_plan_deterministic_and_seed_sensitive() {
+        let a = BatchPlan::new(100, 2, 4, 1);
+        let b = BatchPlan::new(100, 2, 4, 1);
+        assert_eq!(a.slots(), b.slots());
+        let c = BatchPlan::new(100, 2, 4, 2);
+        assert_ne!(a.slots(), c.slots(), "different seed must reshuffle");
+        // schedule is the cyclic one
+        assert_eq!(a.batch_of_iter(0), 0);
+        assert_eq!(a.batch_of_iter(5), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "more batches")]
+    fn batch_plan_rejects_more_batches_than_samples() {
+        BatchPlan::new(3, 1, 4, 1);
     }
 
     #[test]

@@ -92,10 +92,30 @@ impl Field {
         r
     }
 
-    /// Reduce a u128 (e.g. a product of two u64s) to `[0, p)`.
+    /// Reduce a u128 (e.g. a `(p−1)²`-scale product chain accumulated past
+    /// the u64 budget) to `[0, p)` — **two-stage Barrett**, honoring the
+    /// module's no-hardware-divide contract:
+    ///
+    /// 1. fold the high word: `x = hi·2^64 + lo ≡ (hi mod p)·(2^64 mod p)
+    ///    + (lo mod p)`, with both per-word reductions Barrett
+    ///    ([`Field::reduce`]) and `2^64 mod p` recovered from the Barrett
+    ///    constant for free (`2^64 − μ·p`, exact in wrapping arithmetic);
+    /// 2. one more Barrett reduction of the folded product (inside
+    ///    [`Field::mul`]) plus a modular add.
+    ///
+    /// A u128 `%` on a runtime modulus would lower to a `__umodti3` call
+    /// (~100 cycles); this is four multiplies and change.
     #[inline(always)]
     pub fn reduce_u128(&self, x: u128) -> u64 {
-        (x % self.p as u128) as u64
+        let hi = (x >> 64) as u64;
+        let lo = x as u64;
+        if hi == 0 {
+            return self.reduce(lo);
+        }
+        // 2^64 mod p = 2^64 − μ·p: μ·p ∈ (2^64 − p, 2^64) for any non-power-
+        // of-two p, so the wrapping negation is exactly the residue.
+        let r64 = 0u64.wrapping_sub(self.mu.wrapping_mul(self.p));
+        self.add(self.mul(self.reduce(hi), r64), self.reduce(lo))
     }
 
     #[inline(always)]
@@ -205,6 +225,51 @@ mod tests {
         // boundary values
         for x in [0, 1, P26 - 1, P26, P26 + 1, u64::MAX, u64::MAX - 1] {
             assert_eq!(f.reduce(x), x % P26);
+        }
+    }
+
+    #[test]
+    fn reduce_u128_matches_modulo_boundaries_and_random() {
+        // Exhaustive boundary sweep: multiples of p (±1) at every scale a
+        // u128 can hold, (p−1)²-scale products and their d-accumulated
+        // sums, word boundaries, and u128 extremes — plus random probes.
+        for p in [97u64, P25, P26, P31] {
+            let f = Field::new(p);
+            let pp = p as u128;
+            let sq = (pp - 1) * (pp - 1);
+            let mut xs: Vec<u128> = vec![
+                0,
+                1,
+                pp - 1,
+                pp,
+                pp + 1,
+                u64::MAX as u128,
+                (u64::MAX as u128) + 1,
+                u128::MAX - 1,
+                u128::MAX,
+                sq - 1,
+                sq,
+                sq + 1,
+                sq * 2,
+                sq * 3073, // the paper's d-term accumulation scale
+                sq * 5000,
+            ];
+            for k in [1u128, 2, 1 << 20, 1 << 40, (1u128 << 64) / pp, u128::MAX / pp] {
+                let base = pp * k;
+                xs.push(base - 1);
+                xs.push(base);
+                if let Some(v) = base.checked_add(1) {
+                    xs.push(v);
+                }
+            }
+            for x in xs {
+                assert_eq!(f.reduce_u128(x), (x % pp) as u64, "p={p} x={x}");
+            }
+            let mut r = Rng::seed_from_u64(17);
+            for _ in 0..5000 {
+                let x = ((r.next_u64() as u128) << 64) | r.next_u64() as u128;
+                assert_eq!(f.reduce_u128(x), (x % pp) as u64, "p={p} x={x}");
+            }
         }
     }
 

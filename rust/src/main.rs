@@ -3,6 +3,7 @@
 //! ```text
 //! copml train   --dataset smoke|cifar|gisette --n 10 --case 1|2 [--k K --t T]
 //!               [--iters 50] [--eta 2.0] [--mode algo|full] [--engine native|pjrt]
+//!               [--batches B]            # mini-batch SGD: iteration i → batch i mod B
 //!               [--threads 1]            # 0 = all cores (field::par)
 //!               [--wire u64|u32]         # full mode: wire format / byte ledger
 //!               [--offline dealer|distributed]  # full mode: offline randomness
@@ -14,7 +15,7 @@
 //!               [--wire u64|u32] [--offline dealer|distributed]
 //!               [+ train's dataset/config/fault options]
 //! copml bench   --dataset cifar --n 50 [--wire u64|u32]  # cost-model Table-I row
-//!               [--offline dealer|distributed] [--stragglers S]
+//!               [--offline dealer|distributed] [--stragglers S] [--batches B]
 //! copml calibrate                                  # machine calibration
 //! copml info                                       # config/threshold explorer
 //! ```
@@ -25,7 +26,7 @@
 use copml::bench::{BaselineCost, Calibration, CopmlCost};
 use copml::cli::Args;
 use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig, FaultPlan};
-use copml::data::{Dataset, SynthSpec};
+use copml::data::{BatchPlan, Dataset, SynthSpec};
 use copml::field::{Field, Parallelism};
 use copml::mpc::OfflineMode;
 use copml::net::tcp::TcpTransport;
@@ -83,6 +84,7 @@ fn config_from_args(args: &Args, ds: &Dataset, n: usize, seed: u64) -> Result<Co
     cfg.k = args.get_or("k", cfg.k)?;
     cfg.t = args.get_or("t", cfg.t)?;
     cfg.iters = args.get_or("iters", cfg.iters)?;
+    cfg.batches = args.get_or("batches", cfg.batches)?;
     cfg.eta = args.get_or("eta", cfg.eta)?;
     cfg.wire = args.get_or("wire", Wire::U64)?;
     cfg.offline = args.get_or("offline", OfflineMode::Dealer)?;
@@ -131,6 +133,20 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         ds.name, ds.m, ds.d, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters, cfg.eta,
         cfg.plan.field.modulus(), cfg.parallelism.thread_count(), cfg.offline
     );
+    // Batch schedule summary (grep-asserted by CI for --batches runs).
+    // Infeasible geometries skip the print and fall through to validate's
+    // clear error below.
+    if (1..=ds.m).contains(&cfg.batches) && cfg.k >= 1 {
+        let plan = BatchPlan::new(ds.m, cfg.k, cfg.batches, seed);
+        let sizes: Vec<usize> = (0..plan.b).map(|b| plan.real_rows(b)).collect();
+        println!(
+            "batch schedule: B={} (real rows per batch {:?}, padded rows {}), iteration i → batch i mod {}",
+            plan.b,
+            sizes,
+            plan.rows_padded(),
+            plan.b
+        );
+    }
     let transport = args.get("transport").unwrap_or("hub");
     if transport != "hub" && mode != "full" {
         return Err(format!("--transport {transport} requires --mode full"));
@@ -223,8 +239,8 @@ fn cmd_party(args: &Args) -> Result<(), String> {
         nt => Parallelism::threads(nt),
     };
     println!(
-        "COPML party {id}/{n}: listen={listen} wire={} offline={}  dataset={} (m={}, d={})  K={} T={} iters={}",
-        cfg.wire, cfg.offline, ds.name, ds.m, ds.d, cfg.k, cfg.t, cfg.iters
+        "COPML party {id}/{n}: listen={listen} wire={} offline={}  dataset={} (m={}, d={})  K={} T={} iters={} B={}",
+        cfg.wire, cfg.offline, ds.name, ds.m, ds.d, cfg.k, cfg.t, cfg.iters, cfg.batches
     );
     let net = TcpTransport::establish(id, listen, &peers, cfg.wire)
         .map_err(|e| format!("establishing the TCP mesh: {e}"))?;
@@ -276,6 +292,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     // Straggler column: model S parties as excluded (N − S must stay at
     // or above each case's recovery threshold — estimate() checks).
     let stragglers = args.get_or("stragglers", 0usize)?;
+    // Batches column: per-iteration compute scaled by rows_b/m, one-shot
+    // per-batch encode charged up front (estimate() checks B ≥ 1).
+    let batches = args.get_or("batches", 1usize)?;
     let plan = if ds.d > 4096 {
         copml::quant::FpPlan::paper_gisette()
     } else {
@@ -285,7 +304,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let cal = Calibration::measure(plan.field);
     let wan = WanModel::paper();
     let mut table = Table::new(
-        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {wire} wire, {offline} offline, {stragglers} stragglers (modeled on measured primitives)"),
+        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {batches} batches, {wire} wire, {offline} offline, {stragglers} stragglers (modeled on measured primitives)"),
         &["Protocol", "Comp (s)", "Comm (s)", "Enc/Dec (s)", "Offline (s)", "Total (s)"],
     );
     let case1 = CaseParams::case1(n);
@@ -302,6 +321,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             m: ds.m,
             d: ds.d,
             iters,
+            batches,
             subgroups: true,
             wire,
             offline,
@@ -312,7 +332,11 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.offline_s, c.total_s()], 1);
     }
     for (label, bgw) in [("MPC using [BGW88]", true), ("MPC using [BH08]", false)] {
-        let c = BaselineCost::paper(n, ds.m, ds.d, iters, bgw).estimate(&cal, &wan);
+        // The baselines follow the same batch schedule (batch-fair table:
+        // their per-iteration vectors shrink with B too).
+        let mut bc = BaselineCost::paper(n, ds.m, ds.d, iters, bgw);
+        bc.batches = batches;
+        let c = bc.estimate(&cal, &wan);
         table.row_f64(label, &[c.comp_s, c.comm_s, c.encdec_s, c.offline_s, c.total_s()], 1);
     }
     table.print();

@@ -46,10 +46,17 @@ impl WanModel {
     }
 
     /// Completion time of a bulk-synchronous exchange where each party
-    /// sends `per_party_bytes` (possibly to many peers — already summed):
-    /// every NIC drains in parallel, then the last message lands.
-    pub fn phase_time(&self, per_party_bytes: u64) -> f64 {
-        self.latency_s + self.serialize_time(per_party_bytes)
+    /// sends `per_party_bytes` (possibly to many peers — already summed)
+    /// and ingests `messages_received` messages: every NIC drains in
+    /// parallel, the last message lands, and the receiver pays
+    /// [`WanModel::msg_proc_s`] **exactly once per ingested message** —
+    /// the term that makes gather-heavy phases scale with the number of
+    /// senders. (Regression note: this method used to drop the processing
+    /// term entirely, flattening the Table-I gather scaling.)
+    pub fn phase_time(&self, per_party_bytes: u64, messages_received: u64) -> f64 {
+        self.latency_s
+            + self.serialize_time(per_party_bytes)
+            + self.msg_proc_s * messages_received as f64
     }
 }
 
@@ -68,9 +75,24 @@ mod tests {
     #[test]
     fn phase_scales_linearly_in_bytes() {
         let w = WanModel::paper();
-        let t1 = w.phase_time(1_000_000);
-        let t2 = w.phase_time(2_000_000);
+        let t1 = w.phase_time(1_000_000, 0);
+        let t2 = w.phase_time(2_000_000, 0);
         assert!((t2 - t1 - w.serialize_time(1_000_000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_charges_processing_once_per_message() {
+        // The gather-scaling regression: at constant total bytes, a phase
+        // fed by more senders must cost more — msg_proc_s per message,
+        // exactly once each.
+        let w = WanModel::paper();
+        let base = w.phase_time(1_000_000, 0);
+        let many = w.phase_time(1_000_000, 49);
+        assert!((many - base - 49.0 * w.msg_proc_s).abs() < 1e-12);
+        assert!(w.phase_time(1_000_000, 49) > w.phase_time(1_000_000, 9));
+        // LAN zeroes the processing term, not the bytes term.
+        let lan = WanModel::lan();
+        assert_eq!(lan.phase_time(1 << 20, 100), lan.phase_time(1 << 20, 0));
     }
 
     #[test]

@@ -178,6 +178,58 @@ mod tests {
     }
 
     #[test]
+    fn gen_range_boundary_bounds_terminate_and_spread() {
+        // Rejection sampling at the extremes: bound = u64::MAX (Lemire
+        // threshold t = 1, rejection probability 2^-64), 2^63 + 1 (just
+        // past the half-range), and p − 1 for the largest supported
+        // modulus. Every call must terminate, stay under the bound, and
+        // look roughly uniform (mean ≈ bound/2, both halves populated).
+        use crate::field::P31;
+        let mut r = Rng::seed_from_u64(21);
+        let n = 4000u32;
+        for &bound in &[u64::MAX, (1u64 << 63) + 1, P31 - 1] {
+            let mut upper = 0usize;
+            let mut sum: u128 = 0;
+            for _ in 0..n {
+                let v = r.gen_range(bound);
+                assert!(v < bound, "bound {bound}: drew {v}");
+                if v >= bound / 2 {
+                    upper += 1;
+                }
+                sum += v as u128;
+            }
+            let frac = upper as f64 / n as f64;
+            assert!((frac - 0.5).abs() < 0.08, "bound {bound}: upper-half fraction {frac}");
+            let mean = sum as f64 / n as f64;
+            let expect = bound as f64 / 2.0;
+            assert!(
+                (mean - expect).abs() / expect < 0.1,
+                "bound {bound}: mean {mean} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn gen_field_stays_in_domain_at_p31() {
+        // The headroom prime is the largest modulus the field layer
+        // supports — the boundary where a rejection-sampling bias or an
+        // off-by-one would first show.
+        use crate::field::P31;
+        let mut r = Rng::seed_from_u64(23);
+        let (mut lo, mut hi) = (false, false);
+        for _ in 0..20_000 {
+            let v = r.gen_field(P31);
+            assert!(v < P31, "gen_field left the domain: {v}");
+            if v < P31 / 2 {
+                lo = true;
+            } else {
+                hi = true;
+            }
+        }
+        assert!(lo && hi, "gen_field never visited both halves of F_p");
+    }
+
+    #[test]
     fn fork_streams_independent() {
         let mut root = Rng::seed_from_u64(5);
         let mut a = root.fork(1);

@@ -61,6 +61,32 @@ fn trunc_open_bytes_king_shaped() {
 }
 
 #[test]
+fn minibatch_ledger_bytes_batch_invariant_per_iteration() {
+    // The wire story of batching, pinned against the live ledger: every
+    // per-iteration phase (model encode, compute, share results,
+    // decode/trunc) moves d-sized vectors and must be byte-identical
+    // across B; the one-time Xᵀ_b y_b reduction scales ×B exactly; and for
+    // a geometry whose batches pad to the same total, the one-time encode
+    // exchange is byte-identical too.
+    let ds = Dataset::synth(SynthSpec::tiny(), 75); // m = 48
+    let (n, k, t, iters, b) = (7usize, 2usize, 1usize, 6usize, 3usize);
+    let mut cfg = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(k, t), 75);
+    cfg.iters = iters;
+    let full = protocol::train(&cfg, &ds).unwrap();
+    cfg.batches = b;
+    let mini = protocol::train(&cfg, &ds).unwrap();
+    // 48 rows → batches of 16, each a multiple of K=2: padded totals match.
+    for (i, (lf, lm)) in full.ledgers.iter().zip(&mini.ledgers).enumerate() {
+        assert_eq!(lf.bytes[1], lm.bytes[1], "client {i}: share_dataset moved");
+        assert_eq!(b as u64 * lf.bytes[2], lm.bytes[2], "client {i}: xty must scale ×B");
+        assert_eq!(lf.bytes[3], lm.bytes[3], "client {i}: encode_dataset moved");
+        for p in 4..8 {
+            assert_eq!(lf.bytes[p], lm.bytes[p], "client {i} phase {p}: per-iter bytes moved");
+        }
+    }
+}
+
+#[test]
 fn copml_cost_model_monotonic_in_n_for_fixed_kt() {
     // More clients, same (K,T): comm grows (more result shares), compute
     // constant.
@@ -78,6 +104,7 @@ fn copml_cost_model_monotonic_in_n_for_fixed_kt() {
         m: 2000,
         d: 100,
         iters: 10,
+        batches: 1,
         subgroups: true,
         wire: Wire::U64,
         offline: OfflineMode::Dealer,
@@ -175,6 +202,7 @@ fn u32_wire_halves_live_ledger_and_cost_model() {
         m: 9019,
         d: 3073,
         iters: 50,
+        batches: 1,
         subgroups: true,
         wire: Wire::U64,
         offline: OfflineMode::Dealer,

@@ -168,6 +168,86 @@ fn distributed_offline_accuracy_within_fig4_tolerance() {
 }
 
 #[test]
+fn minibatch_bit_identical_algo_vs_full_on_hub_and_tcp_both_wires() {
+    // Acceptance: `--batches B` is bit-identical between the central
+    // recursion and the full MPC protocol — Hub and real TCP sockets,
+    // both wire formats — for more than one B.
+    let ds = Dataset::synth(SynthSpec::tiny(), 110);
+    for b in [2usize, 3] {
+        let mut cfg = tiny_cfg(7, 2, 1, 6, 110, &ds);
+        cfg.batches = b;
+        let reference = algo::train(&cfg, &ds).unwrap();
+        for wire in [Wire::U64, Wire::U32] {
+            let mut c = cfg.clone();
+            c.wire = wire;
+            let hub = protocol::train(&c, &ds).unwrap();
+            assert_eq!(hub.train.w_trace, reference.w_trace, "hub B={b} {wire} wire");
+            let tcp = protocol::train_tcp_loopback(&c, &ds).unwrap();
+            assert_eq!(tcp.train.w_trace, reference.w_trace, "tcp B={b} {wire} wire");
+        }
+    }
+}
+
+#[test]
+fn minibatch_distributed_offline_transport_invariant() {
+    // Acceptance (both offline modes): the dealer-free offline phase under
+    // batching — Hub and TCP must agree bit for bit; the dealer trace (a
+    // different, equally valid truncation-randomness stream) differs.
+    let ds = Dataset::synth(SynthSpec::tiny(), 111);
+    let mut cfg = tiny_cfg(4, 1, 1, 4, 111, &ds);
+    cfg.batches = 2;
+    cfg.offline = OfflineMode::Distributed;
+    let hub = protocol::train(&cfg, &ds).unwrap();
+    let tcp = protocol::train_tcp_loopback(&cfg, &ds).unwrap();
+    assert_eq!(
+        hub.train.w_trace, tcp.train.w_trace,
+        "mini-batch distributed offline must be transport-invariant"
+    );
+    for (i, l) in hub.ledgers.iter().enumerate() {
+        assert!(l.bytes[0] > 0, "client {i}: no offline traffic recorded");
+    }
+    let mut dealer_cfg = cfg.clone();
+    dealer_cfg.offline = OfflineMode::Dealer;
+    let dealer = protocol::train(&dealer_cfg, &ds).unwrap();
+    assert_ne!(hub.train.w_trace, dealer.train.w_trace);
+}
+
+#[test]
+fn batches_one_reproduces_the_full_batch_trace() {
+    // Acceptance: B = 1 is byte-for-byte today's full-batch pipeline —
+    // identity permutation, one padded range, the same offline demand, the
+    // same η factor — so an explicit `--batches 1` run must match the
+    // default-config run exactly, in algo mode and the full protocol.
+    let ds = Dataset::synth(SynthSpec::tiny(), 112);
+    let cfg = tiny_cfg(7, 2, 1, 4, 112, &ds); // batches defaults to 1
+    assert_eq!(cfg.batches, 1, "full batch must remain the default");
+    let mut explicit = cfg.clone();
+    explicit.batches = 1;
+    let a = algo::train(&cfg, &ds).unwrap();
+    let b = algo::train(&explicit, &ds).unwrap();
+    assert_eq!(a.w_trace, b.w_trace);
+    let p = protocol::train(&explicit, &ds).unwrap();
+    assert_eq!(p.train.w_trace, a.w_trace);
+}
+
+#[test]
+fn minibatch_baselines_equal_copml_trajectory() {
+    // The Table-1/Fig-3 fairness invariant under batching: the K = 1
+    // baselines follow the identical batch schedule (the BatchPlan
+    // real-row partition is K-independent), so their iterates coincide
+    // with COPML's for every flavour.
+    let ds = Dataset::synth(SynthSpec::tiny(), 113);
+    let mut cfg = tiny_cfg(7, 2, 1, 6, 113, &ds);
+    cfg.batches = 3;
+    let reference = algo::train(&cfg, &ds).unwrap();
+    for flavor in [MpcFlavor::Bgw, MpcFlavor::Bh08] {
+        let bcfg = BaselineConfig::matching(&cfg, flavor);
+        let out = baseline::train(&bcfg, &ds).unwrap();
+        assert_eq!(out.train.w_trace, reference.w_trace, "{flavor:?} B=3");
+    }
+}
+
+#[test]
 fn different_seeds_diverge() {
     // Sanity: the equality above is not vacuous (trajectories depend on
     // the truncation randomness).

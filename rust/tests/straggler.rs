@@ -138,6 +138,32 @@ fn delayed_and_killed_parties_leave_the_trace_bit_identical() {
 }
 
 #[test]
+fn minibatch_composes_with_faults_bit_identically() {
+    // Batching × straggler machinery: a mini-batch run that loses one
+    // party mid-training (excluded via --max-lag) must still match the
+    // fault-free central recursion bit for bit — the decoded per-batch
+    // gradient is an exact interpolation from whichever quorum answers.
+    let ds = Dataset::synth(SynthSpec::tiny(), 308);
+    let mut clean = CopmlConfig::for_dataset(&ds, 11, CaseParams::explicit(2, 1), 308);
+    clean.iters = 6;
+    clean.batches = 2;
+    let reference = algo::train(&clean, &ds).unwrap();
+    let mut cfg = clean.clone();
+    cfg.faults = FaultPlan { delays: vec![], kills: vec![(10, 2)] };
+    cfg.max_lag = Some(2);
+    let run = protocol::train(&cfg, &ds).unwrap();
+    assert_eq!(
+        run.train.w_trace, reference.w_trace,
+        "mini-batch + kill: faults may cost time, never accuracy"
+    );
+    assert!(
+        run.ledgers[0].excluded.contains(&10),
+        "killed party must be excluded: {:?}",
+        run.ledgers[0].excluded
+    );
+}
+
+#[test]
 fn fault_plans_that_cannot_fill_a_quorum_are_rejected_upfront() {
     // Killing 3 parties also strands their 3 subgroup mates (a group
     // below T+1 live members cannot reconstruct its encodings): 6 lost >
