@@ -38,6 +38,7 @@ pub const VALUE_FLAGS: &[&str] = &[
     "n",
     "offline",
     "peers",
+    "runtime",
     "seed",
     "stragglers",
     "t",

@@ -22,6 +22,7 @@
 pub mod algo;
 pub mod baseline;
 pub mod protocol;
+pub mod rounds;
 
 use crate::data::{BatchPlan, Dataset};
 use crate::field::{Field, Parallelism};
@@ -29,7 +30,7 @@ use crate::lcc;
 use crate::ml::fit_sigmoid;
 use crate::ml::sigmoid::SigmoidPoly;
 use crate::mpc::OfflineMode;
-use crate::net::Wire;
+use crate::net::{Runtime, Wire};
 use crate::quant::{self, FpPlan};
 use crate::runtime::Engine;
 
@@ -153,6 +154,13 @@ pub struct CopmlConfig {
     /// bytes. Value-transparent: the model trajectory is bit-identical
     /// under either format.
     pub wire: Wire,
+    /// How the socket transports drain peer connections: one blocking
+    /// reader thread per peer ([`Runtime::Threaded`], the default and the
+    /// bit-identity oracle) or a single shared `poll(2)` reactor thread
+    /// over non-blocking sockets ([`Runtime::Event`] — the large-N
+    /// runtime). Value-transparent: the trajectory is bit-identical under
+    /// either, and the in-process hub ignores the choice entirely.
+    pub runtime: Runtime,
     /// Who produces the offline randomness pools: the trusted dealer
     /// (footnote 3's crypto-service provider — the default, bit-identical
     /// to every pre-existing trace) or the dealer-free distributed phase
@@ -189,6 +197,7 @@ impl CopmlConfig {
             subgroups: true,
             parallelism: Parallelism::sequential(),
             wire: Wire::U64,
+            runtime: Runtime::Threaded,
             offline: OfflineMode::Dealer,
             faults: FaultPlan::default(),
             max_lag: None,

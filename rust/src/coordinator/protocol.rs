@@ -21,7 +21,9 @@
 //! live roster exceeds the recovery threshold `need = (2r+1)(K+T−1)+1`,
 //! the per-iteration encoded-gradient gather completes on the first
 //! `need` arrivals instead of a fixed prefix: the quorum leader (party 0)
-//! collects first-arrivals ([`crate::net::gather_quorum`]), announces the
+//! collects first-arrivals ([`super::rounds::AwaitEncodedGradients`];
+//! [`crate::net::gather_quorum`] remains the blocking reference
+//! implementation the rounds tests pin against), announces the
 //! quorum composition, and every live party decodes from that same
 //! subset through a per-subset [`crate::lcc::DecoderCache`]. Because
 //! Lagrange interpolation is exact, the decoded gradient — and hence the
@@ -30,6 +32,16 @@
 //! rest of training (roster-aware collectives in [`crate::mpc::Party`]);
 //! injected faults for experiments come from
 //! [`crate::coordinator::FaultPlan`] (`--delay`, `--kill-after`).
+//!
+//! **Event-driven rounds (`--runtime threaded|event`):** the per-iteration
+//! result gathers run through the explicit per-round states of
+//! [`super::rounds`] ([`super::rounds::AwaitEncodedGradients`],
+//! [`super::rounds::AwaitQuorumRoster`], …) under *both* runtimes — the
+//! flag only selects who feeds the socket transport's mailbox (per-peer
+//! reader threads, or one shared `poll(2)` reactor thread for every
+//! connection), which is why `w_trace` is bit-identical across runtimes
+//! by construction. On the in-process [`Hub`] the choice is structurally
+//! a no-op.
 //!
 //! **Mini-batch SGD (`--batches B`):** the padded rows are dealt into `B`
 //! seeded-permutation batches ([`crate::data::BatchPlan`]); Phase 2
@@ -50,12 +62,15 @@ use crate::field::{par, MatShape};
 use crate::lcc;
 use crate::mpc::{Dealer, Offline, OfflineMode, Party};
 use crate::net::local::Hub;
-use crate::net::{gather_quorum, Transport};
+use crate::net::{drive, Transport};
 use crate::poly;
 use crate::runtime::{native::NativeKernel, Engine, GradKernel, KernelServer};
 use crate::shamir;
 
 use super::algo::copml_demand;
+use super::rounds::{
+    AwaitAllResults, AwaitEncodedGradients, AwaitQuorumRoster, AwaitQuorumShares,
+};
 use super::{CopmlConfig, QuantizedTask, TrainOutput};
 
 /// Phase labels of the per-client ledger (order = execution order).
@@ -222,7 +237,7 @@ pub fn train_tcp_loopback(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOut
     if !matches!(cfg.engine, Engine::Native) {
         return Err("tcp loopback training supports the native engine only".into());
     }
-    let transports = crate::net::tcp::loopback_mesh(cfg.n, cfg.wire)
+    let transports = crate::net::tcp::loopback_mesh_runtime(cfg.n, cfg.wire, cfg.runtime)
         .map_err(|e| format!("establishing the loopback TCP mesh: {e}"))?;
     let f = cfg.plan.field;
     let kernel_par = cfg.parallelism;
@@ -447,8 +462,10 @@ fn encode_roster_msg(members: &[usize], excluded: &[usize]) -> Vec<u64> {
     msg
 }
 
-/// Parse a roster message; `n` bounds the party ids.
-fn decode_roster_msg(msg: &[u64], n: usize) -> Result<(Vec<usize>, Vec<usize>), String> {
+/// Parse a roster message; `n` bounds the party ids. `pub(crate)` so the
+/// follower round state ([`AwaitQuorumRoster`]) parses announcements the
+/// moment they arrive.
+pub(crate) fn decode_roster_msg(msg: &[u64], n: usize) -> Result<(Vec<usize>, Vec<usize>), String> {
     let take = |slice: &[u64], what: &str| -> Result<(Vec<usize>, usize), String> {
         let count = *slice.first().ok_or_else(|| format!("roster message truncated ({what})"))?
             as usize;
@@ -650,6 +667,12 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             if kill_at == Some(iter) {
                 return Err(format!("killed at iteration {iter} by the fault plan"));
             }
+            // One-line runtime marker (grep-asserted by CI): the iteration
+            // loop below runs through the explicit per-round states of
+            // `coordinator::rounds` under either runtime.
+            if me == QUORUM_LEADER && iter == 0 {
+                println!("round-state: party {me} iter {iter} runtime={}", cfg.runtime);
+            }
             // Mini-batch schedule: iteration i trains on batch i mod B
             // (bit-identical across algo mode, both transports, and the
             // baselines — the schedule is pure arithmetic on `iter`).
@@ -750,8 +773,9 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
                 if me == QUORUM_LEADER {
                     let peers: Vec<usize> =
                         live_now.iter().copied().filter(|&j| j != me).collect();
-                    let out = gather_quorum(party.net, &peers, tag_res, need, own_res)
-                        .map_err(|e| format!("encoded-gradient gather: {e}"))?;
+                    let out =
+                        drive(party.net, AwaitEncodedGradients::new(me, &peers, tag_res, need, own_res))
+                            .map_err(|e| format!("encoded-gradient gather: {e}"))?;
                     // Resolve the PREVIOUS round's late set, one round of
                     // grace later: delivered by now → keeping pace;
                     // still absent → a genuine miss.
@@ -785,11 +809,8 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
                     }
                     (out.members, out.payloads)
                 } else {
-                    let msg = party
-                        .net
-                        .recv_check(QUORUM_LEADER, tag_roster)
-                        .map_err(|e| format!("quorum announcement: {e}"))?;
-                    let (m, x) = decode_roster_msg(&msg, n)?;
+                    let (m, x) =
+                        drive(party.net, AwaitQuorumRoster::new(QUORUM_LEADER, tag_roster, n))?;
                     newly_excluded = x;
                     if newly_excluded.contains(&me) {
                         return Err(format!(
@@ -798,17 +819,8 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
                             cfg.max_lag.unwrap_or(0)
                         ));
                     }
-                    let mut shares = Vec::with_capacity(m.len());
-                    let mut own_res = Some(own_res);
-                    for &j in &m {
-                        shares.push(if j == me {
-                            own_res.take().expect("own result named twice in the quorum")
-                        } else {
-                            party.net.recv_check(j, tag_res).map_err(|e| {
-                                format!("result share from quorum member {j}: {e}")
-                            })?
-                        });
-                    }
+                    let shares =
+                        drive(party.net, AwaitQuorumShares::new(me, &m, tag_res, own_res))?;
                     // Skip the non-members' results: already-arrived ones
                     // are dropped now, in-flight ones on arrival.
                     for &j in &live_now {
@@ -822,18 +834,8 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
                 // No slack: every live result is needed — fixed-order
                 // gather, identical to the pre-quorum protocol while the
                 // roster is full (no roster message on the wire).
-                let mut shares = Vec::with_capacity(live_now.len());
-                let mut own_res = Some(own_res);
-                for &j in &live_now {
-                    shares.push(if j == me {
-                        own_res.take().expect("own result gathered twice")
-                    } else {
-                        party
-                            .net
-                            .recv_check(j, tag_res)
-                            .map_err(|e| format!("result share from {j}: {e}"))?
-                    });
-                }
+                let shares =
+                    drive(party.net, AwaitAllResults::new(me, &live_now, tag_res, own_res))?;
                 (live_now.clone(), shares)
             };
             ledger.quorums.push(members.clone());

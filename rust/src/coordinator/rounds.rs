@@ -1,0 +1,372 @@
+//! Explicit per-round protocol states for the iteration loop of
+//! [`protocol`](super::protocol) — the event-driven restructuring of the
+//! result-quorum machinery (ROADMAP item 1, large-N runtime).
+//!
+//! Each struct is one stage of an iteration expressed as a
+//! [`RoundState`]: a `poll` pass consumes whatever relevant messages are
+//! already queued and yields [`Step::Pending`](crate::net::Step) when a
+//! tag has not arrived, instead of parking the client thread on one
+//! specific peer. [`drive`](crate::net::drive) runs a state to
+//! completion, sleeping on the transport's activity counter between
+//! passes. Both `--runtime threaded` and `--runtime event` execute the
+//! protocol through these same states — the runtime flag only changes
+//! who feeds the mailbox (per-peer reader threads vs the shared
+//! `net::reactor` poll loop) — which is what makes the two runtimes
+//! bit-identical by construction.
+//!
+//! Per-iteration state flow (every live party, iteration `i`):
+//!
+//! ```text
+//!                 ┌────────────────────────────────────────────────┐
+//!                 │ compute encoded gradient  (Eq. 7, local)       │
+//!                 └───────────────┬────────────────────────────────┘
+//!                                 │ share_out(result)
+//!             leader (party 0)    │           follower (party ≠ 0)
+//!            ┌────────────────────┴───────────────────┐
+//!            ▼                                        ▼
+//!  ┌───────────────────────┐              ┌───────────────────────┐
+//!  │ AwaitEncodedGradients │              │   AwaitQuorumRoster   │
+//!  │  first `need` arrive  │─roster msg──▶│  leader's member set  │
+//!  └───────────┬───────────┘              └───────────┬───────────┘
+//!              │                                      ▼
+//!              │                          ┌───────────────────────┐
+//!              │                          │   AwaitQuorumShares   │
+//!              │                          │  members' result shares│
+//!              │                          └───────────┬───────────┘
+//!              └──────────────────┬───────────────────┘
+//!                                 │ (no quorum slack: AwaitAllResults
+//!                                 │  replaces all three — fixed order)
+//!                                 ▼
+//!                 ┌────────────────────────────────────────────────┐
+//!                 │ decode Σf(X̃ᵢ) → gradient; TruncPr update       │
+//!                 │ (king openings: non-king side = `AwaitKingOpen`│
+//!                 │  in `crate::mpc`)                              │
+//!                 └────────────────────────────────────────────────┘
+//! ```
+
+use crate::net::{PartyId, QuorumOutcome, RoundState, Step, Transport, TryRecv};
+
+use super::protocol::decode_roster_msg;
+
+/// Leader-side first-arrival quorum gather (the event-driven form of
+/// [`crate::net::gather_quorum`]): collect the first `need` encoded-
+/// gradient result shares across the live peers plus the leader's own.
+/// Queued messages from a peer that has since died still count (they
+/// were delivered); a peer whose stream closed before delivering can
+/// never fill a slot and is retired from polling. Fails with the same
+/// "quorum infeasible" wording as the blocking gather when every
+/// remaining peer is gone.
+pub struct AwaitEncodedGradients {
+    tag: u64,
+    need: usize,
+    /// Arrived contributions (leader's own seeded at construction).
+    got: Vec<(PartyId, Vec<u64>)>,
+    /// Peers that may still deliver.
+    open: Vec<PartyId>,
+    /// Peers whose stream closed before delivering, with causes.
+    dead: Vec<(PartyId, String)>,
+}
+
+impl AwaitEncodedGradients {
+    pub fn new(
+        me: PartyId,
+        peers: &[PartyId],
+        tag: u64,
+        need: usize,
+        own: Vec<u64>,
+    ) -> AwaitEncodedGradients {
+        assert!(
+            peers.len() + 1 >= need,
+            "quorum of {need} impossible over {} peers + self",
+            peers.len()
+        );
+        AwaitEncodedGradients {
+            tag,
+            need,
+            got: vec![(me, own)],
+            open: peers.to_vec(),
+            dead: Vec::new(),
+        }
+    }
+}
+
+impl RoundState for AwaitEncodedGradients {
+    type Output = QuorumOutcome;
+
+    fn poll(&mut self, net: &dyn Transport) -> Result<Step<QuorumOutcome>, String> {
+        let mut i = 0;
+        while i < self.open.len() && self.got.len() < self.need {
+            let from = self.open[i];
+            match net.try_recv(from, self.tag) {
+                TryRecv::Ready(data) => {
+                    self.got.push((from, data));
+                    self.open.remove(i);
+                }
+                TryRecv::Closed(cause) => {
+                    self.dead.push((from, cause));
+                    self.open.remove(i);
+                }
+                TryRecv::Pending => i += 1,
+            }
+        }
+        if self.got.len() >= self.need {
+            let mut got = std::mem::take(&mut self.got);
+            got.sort_by_key(|(id, _)| *id);
+            let (members, payloads): (Vec<PartyId>, Vec<Vec<u64>>) = got.into_iter().unzip();
+            // Late = every peer that had not delivered when the quorum
+            // filled — still-open ones and dead ones alike, as in the
+            // blocking gather (closed peers stay in its waiting set).
+            let mut late: Vec<PartyId> = self
+                .open
+                .iter()
+                .copied()
+                .chain(self.dead.iter().map(|&(j, _)| j))
+                .collect();
+            late.sort_unstable();
+            return Ok(Step::Ready(QuorumOutcome { members, payloads, late }));
+        }
+        if self.open.is_empty() {
+            let causes: Vec<String> =
+                self.dead.iter().map(|(j, r)| format!("party {j}: {r}")).collect();
+            return Err(format!(
+                "quorum infeasible: need {}, have {} — every remaining peer is gone ({})",
+                self.need,
+                self.got.len(),
+                causes.join("; ")
+            ));
+        }
+        Ok(Step::Pending)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "AwaitEncodedGradients(tag {}, {}/{} in quorum)",
+            self.tag,
+            self.got.len(),
+            self.need
+        )
+    }
+}
+
+/// Follower-side wait for the leader's per-round roster announcement:
+/// the quorum member set plus any straggler exclusions, parsed and
+/// validated ([`decode_roster_msg`]) the moment it arrives.
+pub struct AwaitQuorumRoster {
+    leader: PartyId,
+    tag: u64,
+    n: usize,
+}
+
+impl AwaitQuorumRoster {
+    pub fn new(leader: PartyId, tag: u64, n: usize) -> AwaitQuorumRoster {
+        AwaitQuorumRoster { leader, tag, n }
+    }
+}
+
+impl RoundState for AwaitQuorumRoster {
+    type Output = (Vec<usize>, Vec<usize>);
+
+    fn poll(&mut self, net: &dyn Transport) -> Result<Step<Self::Output>, String> {
+        match net.try_recv(self.leader, self.tag) {
+            TryRecv::Ready(msg) => Ok(Step::Ready(decode_roster_msg(&msg, self.n)?)),
+            TryRecv::Pending => Ok(Step::Pending),
+            TryRecv::Closed(cause) => Err(format!("quorum announcement: {cause}")),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("AwaitQuorumRoster(leader {}, tag {})", self.leader, self.tag)
+    }
+}
+
+/// Shared mechanics of the ordered result-share gathers below: fill one
+/// slot per listed party, opportunistically consuming whatever is queued
+/// each pass. Error determinism matches the blocking fixed-order gather:
+/// a closed peer only fails the round once every slot *before* it is
+/// filled — the first unfilled member is always the one reported, no
+/// matter in which order later peers were discovered dead.
+struct OrderedGather {
+    tag: u64,
+    members: Vec<PartyId>,
+    slots: Vec<Option<Vec<u64>>>,
+}
+
+impl OrderedGather {
+    fn new(me: PartyId, members: &[PartyId], tag: u64, own: Vec<u64>, what: &str) -> OrderedGather {
+        let mut own = Some(own);
+        let mut slots: Vec<Option<Vec<u64>>> = vec![None; members.len()];
+        for (idx, &j) in members.iter().enumerate() {
+            if j == me {
+                let own = own.take().unwrap_or_else(|| panic!("own result {what} twice"));
+                slots[idx] = Some(own);
+            }
+        }
+        OrderedGather { tag, members: members.to_vec(), slots }
+    }
+
+    /// One pass; `Err((j, cause))` names the first unfilled member whose
+    /// stream is closed (only when every earlier slot is filled).
+    fn poll(&mut self, net: &dyn Transport) -> Result<Step<Vec<Vec<u64>>>, (PartyId, String)> {
+        let mut blocked = false;
+        for (idx, &j) in self.members.iter().enumerate() {
+            if self.slots[idx].is_some() {
+                continue;
+            }
+            match net.try_recv(j, self.tag) {
+                TryRecv::Ready(data) => self.slots[idx] = Some(data),
+                TryRecv::Pending => blocked = true,
+                TryRecv::Closed(cause) => {
+                    if !blocked {
+                        return Err((j, cause));
+                    }
+                    blocked = true; // sticky: re-reported once it is first
+                }
+            }
+        }
+        if blocked {
+            Ok(Step::Pending)
+        } else {
+            let slots = std::mem::take(&mut self.slots);
+            Ok(Step::Ready(slots.into_iter().map(|s| s.expect("all slots filled")).collect()))
+        }
+    }
+
+    fn progress(&self) -> String {
+        let filled = self.slots.iter().filter(|s| s.is_some()).count();
+        format!("tag {}, {filled}/{} shares", self.tag, self.members.len())
+    }
+}
+
+/// Follower-side gather of the announced quorum members' result shares,
+/// in roster order (the caller's own share seeded at construction).
+pub struct AwaitQuorumShares {
+    inner: OrderedGather,
+}
+
+impl AwaitQuorumShares {
+    pub fn new(me: PartyId, members: &[PartyId], tag: u64, own: Vec<u64>) -> AwaitQuorumShares {
+        AwaitQuorumShares {
+            inner: OrderedGather::new(me, members, tag, own, "named in the quorum"),
+        }
+    }
+}
+
+impl RoundState for AwaitQuorumShares {
+    type Output = Vec<Vec<u64>>;
+
+    fn poll(&mut self, net: &dyn Transport) -> Result<Step<Vec<Vec<u64>>>, String> {
+        self.inner
+            .poll(net)
+            .map_err(|(j, cause)| format!("result share from quorum member {j}: {cause}"))
+    }
+
+    fn describe(&self) -> String {
+        format!("AwaitQuorumShares({})", self.inner.progress())
+    }
+}
+
+/// Fixed-order gather of every live party's result share — the
+/// no-quorum-slack round shape, identical on the wire to the pre-quorum
+/// protocol while the roster is full (no roster message).
+pub struct AwaitAllResults {
+    inner: OrderedGather,
+}
+
+impl AwaitAllResults {
+    pub fn new(me: PartyId, live: &[PartyId], tag: u64, own: Vec<u64>) -> AwaitAllResults {
+        AwaitAllResults { inner: OrderedGather::new(me, live, tag, own, "gathered") }
+    }
+}
+
+impl RoundState for AwaitAllResults {
+    type Output = Vec<Vec<u64>>;
+
+    fn poll(&mut self, net: &dyn Transport) -> Result<Step<Vec<Vec<u64>>>, String> {
+        self.inner
+            .poll(net)
+            .map_err(|(j, cause)| format!("result share from {j}: {cause}"))
+    }
+
+    fn describe(&self) -> String {
+        format!("AwaitAllResults({})", self.inner.progress())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::local::Hub;
+    use crate::net::{drive, Transport};
+
+    #[test]
+    fn await_encoded_gradients_matches_blocking_quorum_semantics() {
+        let eps = Hub::new(4);
+        for ep in &eps[1..3] {
+            ep.send(0, 5, vec![ep.id() as u64 * 10]);
+        }
+        let st = AwaitEncodedGradients::new(0, &[1, 2, 3], 5, 3, vec![0]);
+        let out = drive(&eps[0], st).unwrap();
+        assert_eq!(out.members, vec![0, 1, 2]);
+        assert_eq!(out.payloads, vec![vec![0], vec![10], vec![20]]);
+        assert_eq!(out.late, vec![3]);
+    }
+
+    #[test]
+    fn await_encoded_gradients_counts_queued_mail_from_dead_peers() {
+        let eps = Hub::new(3);
+        eps[1].send(0, 0, vec![11]);
+        eps[1].leave("killed after sending");
+        eps[2].send(0, 0, vec![22]);
+        let st = AwaitEncodedGradients::new(0, &[1, 2], 0, 3, vec![0]);
+        let out = drive(&eps[0], st).unwrap();
+        assert_eq!(out.members, vec![0, 1, 2], "delivered-then-died still counts");
+    }
+
+    #[test]
+    fn await_encoded_gradients_fails_like_the_blocking_gather() {
+        let eps = Hub::new(3);
+        eps[1].leave("killed by test");
+        eps[2].leave("killed by test");
+        let st = AwaitEncodedGradients::new(0, &[1, 2], 0, 3, vec![0]);
+        let err = drive(&eps[0], st).unwrap_err();
+        assert!(err.contains("quorum infeasible"), "{err}");
+        assert!(err.contains("killed by test"), "{err}");
+    }
+
+    #[test]
+    fn await_quorum_roster_surfaces_dead_leader() {
+        let eps = Hub::new(2);
+        eps[0].leave("leader crashed");
+        let err = drive(&eps[1], AwaitQuorumRoster::new(0, 7, 2)).unwrap_err();
+        assert!(err.contains("quorum announcement"), "{err}");
+        assert!(err.contains("leader crashed"), "{err}");
+    }
+
+    #[test]
+    fn ordered_gather_reports_the_first_unfilled_dead_member() {
+        // Peer 2 dies first, but peer 1's share is still outstanding: the
+        // error must name 1 once it dies too — never 2 while 1 is merely
+        // slow, matching the blocking gather's in-order semantics.
+        let eps = Hub::new(4);
+        eps[2].leave("late death");
+        let st = AwaitQuorumShares::new(0, &[0, 1, 2], 9, vec![0]);
+        let err = std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                eps[1].leave("early death, reported late");
+            });
+            drive(&eps[0], st).unwrap_err()
+        });
+        assert!(err.contains("quorum member 1"), "{err}");
+        assert!(err.contains("early death, reported late"), "{err}");
+    }
+
+    #[test]
+    fn await_all_results_completes_out_of_order() {
+        let eps = Hub::new(3);
+        eps[2].send(0, 3, vec![22]); // higher id arrives first
+        eps[1].send(0, 3, vec![11]);
+        let shares = drive(&eps[0], AwaitAllResults::new(0, &[0, 1, 2], 3, vec![0])).unwrap();
+        assert_eq!(shares, vec![vec![0], vec![11], vec![22]], "output stays in roster order");
+    }
+}

@@ -8,14 +8,16 @@
 //!               [--wire u64|u32]         # full mode: wire format / byte ledger
 //!               [--offline dealer|distributed]  # full mode: offline randomness
 //!               [--transport hub|tcp]    # full mode: in-process or TCP loopback
+//!               [--runtime threaded|event]  # tcp: reader threads or poll reactor
 //!               [--delay id:ms,...]      # full mode: per-iteration straggler sleep
 //!               [--kill-after id:iter,...]  # full mode: kill party at iteration
 //!               [--max-lag R]            # exclude after R consecutive missed quorums
 //! copml party   --id I --listen ADDR --peers A0,A1,...   # one distributed client
 //!               [--wire u64|u32] [--offline dealer|distributed]
-//!               [+ train's dataset/config/fault options]
+//!               [--runtime threaded|event] [+ train's dataset/config/fault options]
 //! copml bench   --dataset cifar --n 50 [--wire u64|u32]  # cost-model Table-I row
 //!               [--offline dealer|distributed] [--stragglers S] [--batches B]
+//!               [--runtime threaded|event]   # header note only (bytes are equal)
 //! copml calibrate                                  # machine calibration
 //! copml info                                       # config/threshold explorer
 //! ```
@@ -31,7 +33,7 @@ use copml::field::{Field, Parallelism};
 use copml::mpc::OfflineMode;
 use copml::net::tcp::TcpTransport;
 use copml::net::wan::WanModel;
-use copml::net::{Transport, Wire};
+use copml::net::{Runtime, Transport, Wire};
 use copml::report::Table;
 use copml::runtime::Engine;
 
@@ -87,6 +89,7 @@ fn config_from_args(args: &Args, ds: &Dataset, n: usize, seed: u64) -> Result<Co
     cfg.batches = args.get_or("batches", cfg.batches)?;
     cfg.eta = args.get_or("eta", cfg.eta)?;
     cfg.wire = args.get_or("wire", Wire::U64)?;
+    cfg.runtime = args.get_or("runtime", Runtime::Threaded)?;
     cfg.offline = args.get_or("offline", OfflineMode::Dealer)?;
     // Straggler experiments: injected faults + exclusion threshold
     // (validated against N/need in CopmlConfig::validate).
@@ -239,10 +242,10 @@ fn cmd_party(args: &Args) -> Result<(), String> {
         nt => Parallelism::threads(nt),
     };
     println!(
-        "COPML party {id}/{n}: listen={listen} wire={} offline={}  dataset={} (m={}, d={})  K={} T={} iters={} B={}",
-        cfg.wire, cfg.offline, ds.name, ds.m, ds.d, cfg.k, cfg.t, cfg.iters, cfg.batches
+        "COPML party {id}/{n}: listen={listen} wire={} runtime={} offline={}  dataset={} (m={}, d={})  K={} T={} iters={} B={}",
+        cfg.wire, cfg.runtime, cfg.offline, ds.name, ds.m, ds.d, cfg.k, cfg.t, cfg.iters, cfg.batches
     );
-    let net = TcpTransport::establish(id, listen, &peers, cfg.wire)
+    let net = TcpTransport::establish_runtime(id, listen, &peers, cfg.wire, cfg.runtime)
         .map_err(|e| format!("establishing the TCP mesh: {e}"))?;
     println!("party {id}: mesh up ({} peers), running the protocol …", n - 1);
     let t0 = std::time::Instant::now();
@@ -288,6 +291,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let n = args.get_or("n", 50usize)?;
     let iters = args.get_or("iters", 50usize)?;
     let wire: Wire = args.get_or("wire", Wire::U64)?;
+    // Header note only: the runtime changes threads and wall-clock, never
+    // bytes, so the modeled costs are runtime-invariant.
+    let runtime: Runtime = args.get_or("runtime", Runtime::Threaded)?;
     let offline: OfflineMode = args.get_or("offline", OfflineMode::Dealer)?;
     // Straggler column: model S parties as excluded (N − S must stay at
     // or above each case's recovery threshold — estimate() checks).
@@ -304,7 +310,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let cal = Calibration::measure(plan.field);
     let wan = WanModel::paper();
     let mut table = Table::new(
-        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {batches} batches, {wire} wire, {offline} offline, {stragglers} stragglers (modeled on measured primitives)"),
+        &format!("Table-I-style breakdown — {name}, N={n}, {iters} iterations, {batches} batches, {wire} wire, {runtime} runtime, {offline} offline, {stragglers} stragglers (modeled on measured primitives)"),
         &["Protocol", "Comp (s)", "Comm (s)", "Enc/Dec (s)", "Offline (s)", "Total (s)"],
     );
     let case1 = CaseParams::case1(n);

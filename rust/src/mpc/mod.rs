@@ -29,10 +29,10 @@ pub mod dealer;
 pub mod offline;
 
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::field::{vecops, Field};
-use crate::net::{PartyId, Transport};
+use crate::net::{drive, PartyId, RoundState, Step, Transport, TryRecv};
 use crate::poly;
 use crate::prng::Rng;
 use crate::shamir;
@@ -56,6 +56,37 @@ const STREAM_PARTY: u64 = 0x5052_5459_0000_0000;
 /// randomness.
 fn party_rng(seed: u64, id: PartyId) -> Rng {
     Rng::seed_from_u64(seed).fork(STREAM_PARTY | id as u64)
+}
+
+/// Event-driven wait for the king's opened value — the non-king side of
+/// every king opening ([`open_via_king_set`]) expressed as a per-round
+/// state: TruncPr's per-iteration opens flow through this under both
+/// runtimes. A dead king fails with the exact message the blocking
+/// receive would have panicked with (the caller re-panics it, preserving
+/// behaviour — a lost king is unrecoverable).
+struct AwaitKingOpen {
+    me: PartyId,
+    king: PartyId,
+    tag_down: u64,
+}
+
+impl RoundState for AwaitKingOpen {
+    type Output = Vec<u64>;
+
+    fn poll(&mut self, net: &dyn Transport) -> Result<Step<Vec<u64>>, String> {
+        match net.try_recv(self.king, self.tag_down) {
+            TryRecv::Ready(value) => Ok(Step::Ready(value)),
+            TryRecv::Pending => Ok(Step::Pending),
+            TryRecv::Closed(cause) => Err(format!(
+                "party {} recv(from={}, tag={}): {cause}",
+                self.me, self.king, self.tag_down
+            )),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("AwaitKingOpen(party {}, tag {})", self.me, self.tag_down)
+    }
 }
 
 /// King-opening primitive over explicit participant sets, shared by the
@@ -99,7 +130,10 @@ pub(crate) fn open_via_king_set(
         if senders.contains(&me) {
             net.send(KING, tag_up, share.to_vec());
         }
-        net.recv(KING, tag_down)
+        match drive(net, AwaitKingOpen { me, king: KING, tag_down }) {
+            Ok(value) => value,
+            Err(e) => panic!("{e}"),
+        }
     }
 }
 
@@ -135,8 +169,13 @@ pub struct Party<'a> {
     /// Party-local randomness (for online resharing in BGW).
     rng: RefCell<Rng>,
     next_tag: Cell<u64>,
-    /// Cached reconstruction coefficient rows keyed by contributor set.
-    recon_cache: RefCell<HashMap<Vec<PartyId>, Vec<u64>>>,
+    /// Cached reconstruction coefficient rows keyed by contributor set,
+    /// FIFO-bounded at [`Party::RECON_CACHE_CAP`] (insertion-order deque
+    /// evicts the oldest set). Contributor sets are roster prefixes, so
+    /// in practice only exclusions rotate them — but unbounded growth
+    /// under a churning roster is the same hazard
+    /// [`crate::lcc::DecoderCache`] bounds, handled the same way.
+    recon_cache: RefCell<(HashMap<Vec<PartyId>, Vec<u64>>, VecDeque<Vec<PartyId>>)>,
     /// Live roster: `live[j]` until party `j` is excluded (straggler past
     /// `max_lag`, fault-plan kill). Collectives send to and gather from
     /// live parties only; with everyone live the behaviour — and the byte
@@ -164,7 +203,7 @@ impl<'a> Party<'a> {
             offline: RefCell::new(offline),
             rng: RefCell::new(party_rng(seed, net.id())),
             next_tag: Cell::new(0),
-            recon_cache: RefCell::new(HashMap::new()),
+            recon_cache: RefCell::new((HashMap::new(), VecDeque::new())),
             live: RefCell::new(vec![true; n]),
         }
     }
@@ -230,16 +269,37 @@ impl<'a> Party<'a> {
         ids
     }
 
+    /// Bound of the reconstruction-coefficient cache: evicting the oldest
+    /// contributor set beyond this keeps a long run with a churning
+    /// roster from accumulating one coefficient row per distinct set.
+    pub const RECON_CACHE_CAP: usize = 8;
+
     /// Reconstruction coefficients (at 0) for shares held by `ids` —
     /// interpolating a share polynomial of degree `ids.len() − 1`.
+    /// Cached per contributor set, FIFO-bounded at
+    /// [`Party::RECON_CACHE_CAP`].
     fn recon_coeffs_for(&self, ids: &[PartyId]) -> Vec<u64> {
-        if let Some(c) = self.recon_cache.borrow().get(ids) {
+        if let Some(c) = self.recon_cache.borrow().0.get(ids) {
             return c.clone();
         }
         let pts: Vec<u64> = ids.iter().map(|&j| self.lambdas[j]).collect();
         let c = poly::coeffs_at(self.f, &pts, 0);
-        self.recon_cache.borrow_mut().insert(ids.to_vec(), c.clone());
+        let mut cache = self.recon_cache.borrow_mut();
+        let (map, order) = &mut *cache;
+        if map.len() >= Self::RECON_CACHE_CAP {
+            if let Some(oldest) = order.pop_front() {
+                map.remove(&oldest);
+            }
+        }
+        map.insert(ids.to_vec(), c.clone());
+        order.push_back(ids.to_vec());
         c
+    }
+
+    /// Current number of cached reconstruction rows (regression tests).
+    #[cfg(test)]
+    fn recon_cache_len(&self) -> usize {
+        self.recon_cache.borrow().0.len()
     }
 
     // ---------------------------------------------------------------

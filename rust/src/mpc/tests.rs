@@ -150,6 +150,42 @@ fn excluding_the_king_is_rejected() {
 }
 
 #[test]
+fn recon_cache_is_bounded_and_correct_under_rotating_exclusions() {
+    // Regression: the reconstruction-coefficient cache used to grow one
+    // row per distinct contributor set with no bound — a run whose roster
+    // churns (rotating exclusions) would accumulate them forever.
+    let f = Field::new(P26);
+    let n = 16usize;
+    let eps = Hub::new(n);
+    let pool = Dealer::deal(f, n, 3, &Demand::default(), 20, 1, 0xD1CE).remove(0);
+    let party = Party::new(&eps[0], 3, f, pool, 42);
+    let deg = 3usize;
+    // Slide the contributor window across the roster: every rotation is a
+    // distinct set, the churn an exclusion-heavy run produces.
+    for round in 0..3 * Party::RECON_CACHE_CAP {
+        let start = round % (n - deg);
+        let ids: Vec<PartyId> = (start..=start + deg).collect();
+        let coeffs = party.recon_coeffs_for(&ids);
+        let pts: Vec<u64> = ids.iter().map(|&j| party.lambdas[j]).collect();
+        assert_eq!(
+            coeffs,
+            crate::poly::coeffs_at(f, &pts, 0),
+            "cached row must stay correct (round {round})"
+        );
+        assert!(
+            party.recon_cache_len() <= Party::RECON_CACHE_CAP,
+            "cache grew past its bound ({} sets)",
+            party.recon_cache_len()
+        );
+    }
+    // The first set was evicted rounds ago; re-requesting recomputes the
+    // identical row — eviction is invisible apart from the recompute.
+    let ids: Vec<PartyId> = (0..=deg).collect();
+    let pts: Vec<u64> = ids.iter().map(|&j| party.lambdas[j]).collect();
+    assert_eq!(party.recon_coeffs_for(&ids), crate::poly::coeffs_at(f, &pts, 0));
+}
+
+#[test]
 fn secure_addition_is_free_and_correct() {
     let f = Field::new(P26);
     let (n, t) = (4usize, 1usize);

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::mailbox::TagMailbox;
-use super::{AnyRecv, PartyId, Transport, Wire};
+use super::{AnyRecv, PartyId, Transport, TryRecv, Wire};
 
 /// Shared state for an `n`-party in-process network.
 pub struct Hub {
@@ -87,6 +87,19 @@ impl Transport for Endpoint {
 
     fn recv_any(&self, froms: &[PartyId], tag: u64, timeout: Duration) -> AnyRecv {
         self.hub.boxes[self.id].pop_any(self.id, froms, tag, timeout)
+    }
+
+    fn try_recv(&self, from: PartyId, tag: u64) -> TryRecv {
+        assert!(from < self.n && from != self.id, "recv from unknown party {from}");
+        self.hub.boxes[self.id].try_pop(from, tag)
+    }
+
+    fn activity(&self) -> u64 {
+        self.hub.boxes[self.id].activity()
+    }
+
+    fn wait_activity(&self, since: u64, timeout: Duration) -> u64 {
+        self.hub.boxes[self.id].wait_activity(since, timeout)
     }
 
     fn forget(&self, from: PartyId, tag: u64) -> bool {

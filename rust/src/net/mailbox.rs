@@ -48,6 +48,21 @@ pub enum AnyRecv {
     NoneLive(String),
 }
 
+/// Outcome of a non-blocking receive attempt ([`TagMailbox::try_pop`] /
+/// `Transport::try_recv`) — the primitive the event-driven per-round
+/// state machines poll instead of parking a thread per peer.
+#[derive(Debug)]
+pub enum TryRecv {
+    /// A queued message was consumed.
+    Ready(Vec<u64>),
+    /// Nothing queued yet, peer still live — poll again after the next
+    /// mailbox activity ([`TagMailbox::wait_activity`]).
+    Pending,
+    /// The peer is closed with nothing queued: this message will never
+    /// arrive. Carries the recorded cause.
+    Closed(String),
+}
+
 #[derive(Default)]
 struct Inner {
     // (from, tag) -> queued payloads
@@ -58,6 +73,11 @@ struct Inner {
     tombstones: HashSet<(PartyId, u64)>,
     // this mailbox's owner has left: drop every future push
     shut_down: bool,
+    // monotone event counter, bumped on every delivery/close/shutdown.
+    // Pollers snapshot it before a scan and wait for it to advance
+    // (`wait_activity`), which closes the scan-then-sleep race without
+    // per-tag bookkeeping.
+    activity: u64,
 }
 
 /// `(from, tag) → payload queue` with blocking receive.
@@ -82,6 +102,7 @@ impl TagMailbox {
             return true; // the receiver explicitly skipped this message
         }
         inner.queues.entry((from, tag)).or_default().push_back(data);
+        inner.activity += 1;
         self.signal.notify_all();
         true
     }
@@ -94,6 +115,7 @@ impl TagMailbox {
         let mut inner = self.inner.lock().unwrap();
         inner.closed.entry(from).or_insert(reason);
         inner.tombstones.retain(|&(f, _)| f != from);
+        inner.activity += 1;
         self.signal.notify_all();
     }
 
@@ -105,6 +127,7 @@ impl TagMailbox {
         inner.shut_down = true;
         inner.queues.clear();
         inner.tombstones.clear();
+        inner.activity += 1;
         self.signal.notify_all();
     }
 
@@ -222,6 +245,55 @@ impl TagMailbox {
                 .expect("mailbox lock poisoned");
             inner = guard;
         }
+    }
+
+    /// Non-blocking pop: consume the next payload from `from` under `tag`
+    /// if one is queued, report a dead peer, or say "not yet". The
+    /// event-driven round states poll through this and park on
+    /// [`wait_activity`](TagMailbox::wait_activity) between passes.
+    pub(crate) fn try_pop(&self, from: PartyId, tag: u64) -> TryRecv {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
+            let data = queue.pop_front();
+            if queue.is_empty() {
+                inner.queues.remove(&(from, tag));
+            }
+            if let Some(data) = data {
+                return TryRecv::Ready(data);
+            }
+        }
+        if let Some(reason) = inner.closed.get(&from) {
+            return TryRecv::Closed(format!("peer is gone ({reason})"));
+        }
+        TryRecv::Pending
+    }
+
+    /// Current value of the activity counter. Snapshot this *before* a
+    /// polling pass: if anything was delivered (or a peer closed) while
+    /// the pass ran, [`wait_activity`](TagMailbox::wait_activity) with the
+    /// snapshot returns immediately instead of sleeping — no lost wakeup.
+    pub(crate) fn activity(&self) -> u64 {
+        self.inner.lock().unwrap().activity
+    }
+
+    /// Block until the activity counter advances past `since` or `timeout`
+    /// elapses. Returns the counter's current value (`== since` only on
+    /// timeout).
+    pub(crate) fn wait_activity(&self, since: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        while inner.activity == since {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self
+                .signal
+                .wait_timeout(inner, deadline - now)
+                .expect("mailbox lock poisoned");
+            inner = guard;
+        }
+        inner.activity
     }
 
     /// Number of live `(from, tag)` queue entries plus outstanding
@@ -395,5 +467,195 @@ mod tests {
         assert_eq!(mb.pending_entries(), 0);
         mb.push(0, 2, vec![2]);
         assert_eq!(mb.pending_entries(), 0, "pushes after shutdown must be discarded");
+    }
+
+    #[test]
+    fn try_pop_ready_pending_closed() {
+        let mb = TagMailbox::default();
+        assert!(matches!(mb.try_pop(0, 1), TryRecv::Pending));
+        mb.push(0, 1, vec![11]);
+        match mb.try_pop(0, 1) {
+            TryRecv::Ready(data) => assert_eq!(data, vec![11]),
+            other => panic!("expected Ready, got {other:?}"),
+        }
+        assert_eq!(mb.pending_entries(), 0, "drained entry must be removed");
+        // queued data from a closed peer is still consumed before the
+        // closed verdict — same precedence as the blocking pop
+        mb.push(0, 2, vec![22]);
+        mb.close(0, "gone away".into());
+        assert!(matches!(mb.try_pop(0, 2), TryRecv::Ready(_)));
+        match mb.try_pop(0, 3) {
+            TryRecv::Closed(cause) => {
+                assert!(cause.contains("peer is gone") && cause.contains("gone away"), "{cause}")
+            }
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_activity_sees_events_between_snapshot_and_wait() {
+        // The lost-wakeup scenario the snapshot protocol exists for: a
+        // poller scans (nothing there), a delivery lands, the poller goes
+        // to sleep. With the pre-scan snapshot the sleep returns
+        // immediately because the counter already advanced.
+        let mb = TagMailbox::default();
+        let since = mb.activity();
+        mb.push(0, 1, vec![1]); // lands "during the scan"
+        let t0 = Instant::now();
+        let now = mb.wait_activity(since, Duration::from_secs(30));
+        assert!(now > since, "counter must have advanced");
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not sleep");
+        // and a wait with a fresh snapshot does time out when idle
+        let since = mb.activity();
+        let t0 = Instant::now();
+        assert_eq!(mb.wait_activity(since, Duration::from_millis(30)), since);
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn wait_activity_wakes_on_close() {
+        let mb = std::sync::Arc::new(TagMailbox::default());
+        let since = mb.activity();
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || mb2.wait_activity(since, RECV_TIMEOUT));
+        std::thread::sleep(Duration::from_millis(20));
+        mb.close(3, "EOF".into());
+        assert!(h.join().unwrap() > since, "close must wake activity waiters");
+    }
+
+    /// Seeded multi-producer/multi-consumer torture: 4 steady producers,
+    /// one dying producer, and 3 consumers interleaving `pop_blocking` /
+    /// `pop_result` / `pop_any` / `forget` on a partition of the
+    /// `(from, tag)` space, plus a fan-in `pop_any` over three senders.
+    /// Every message has exactly one consuming action, so the accounting
+    /// is exact: no lost wakeups (the run completes under a watchdog
+    /// timeout) and no leaks (`pending_entries() == 0` at exit).
+    #[test]
+    fn mpmc_torture_interleaved_ops_drain_clean() {
+        use std::sync::mpsc;
+        use std::sync::Arc;
+
+        const PRODUCERS: usize = 4; // ids 0..4, M msgs each
+        const M: u64 = 150;
+        const DYING: PartyId = 7; // pushes DYING_M msgs, then closes
+        const DYING_M: u64 = 40;
+        const CONSUMERS: usize = 3;
+        const FAN_TAG: u64 = 1_000_000; // one fan-in message per producer 0..3
+
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let mb = Arc::new(TagMailbox::default());
+            let mut handles = Vec::new();
+            for from in 0..PRODUCERS {
+                let mb = mb.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = crate::prng::Rng::seed_from_u64(0xF00D + from as u64);
+                    for tag in 0..M {
+                        mb.push(from, tag, vec![from as u64, tag]);
+                        if rng.gen_range(8) == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                    if from < 3 {
+                        mb.push(from, FAN_TAG, vec![from as u64]);
+                    }
+                }));
+            }
+            {
+                let mb = mb.clone();
+                handles.push(std::thread::spawn(move || {
+                    for tag in 0..DYING_M {
+                        mb.push(DYING, tag, vec![tag]);
+                    }
+                    mb.close(DYING, "torture: producer died".into());
+                }));
+            }
+            // Consumers partition (from, tag) by (from + tag) % CONSUMERS;
+            // the per-pair action comes from a consumer-local seeded rng,
+            // so the schedule is deterministic while the interleaving with
+            // the producers is genuinely racy.
+            let mut consumed = Vec::new();
+            for c in 0..CONSUMERS {
+                let mb = mb.clone();
+                consumed.push(std::thread::spawn(move || {
+                    let mut rng = crate::prng::Rng::seed_from_u64(0xC0FFEE + c as u64);
+                    let mut received = 0u64;
+                    let mut forgotten = 0u64;
+                    let pairs = (0..PRODUCERS)
+                        .flat_map(|f| (0..M).map(move |t| (f, t)))
+                        .chain((0..DYING_M).map(|t| (DYING, t)));
+                    for (from, tag) in pairs {
+                        if (from + tag as usize) % CONSUMERS != c {
+                            continue;
+                        }
+                        match rng.gen_range(4) {
+                            0 => {
+                                assert_eq!(mb.pop_blocking(99, from, tag)[0], from as u64);
+                                received += 1;
+                            }
+                            1 => {
+                                // the dying producer finishes its pushes
+                                // before closing, so even its tags resolve Ok
+                                let data = mb.pop_result(99, from, tag).unwrap();
+                                assert_eq!(data[0], from as u64);
+                                received += 1;
+                            }
+                            2 => match mb.pop_any(99, &[from], tag, RECV_TIMEOUT) {
+                                AnyRecv::Delivered(f, _) => {
+                                    assert_eq!(f, from);
+                                    received += 1;
+                                }
+                                other => panic!("pop_any({from}, {tag}): {other:?}"),
+                            },
+                            _ => {
+                                // true: dropped a queued message; false:
+                                // tombstoned, cleared by the later push (or,
+                                // for the dying peer post-close, a no-op on
+                                // an already-purged stream)
+                                mb.forget(from, tag);
+                                forgotten += 1;
+                            }
+                        }
+                    }
+                    (received, forgotten)
+                }));
+            }
+            // Fan-in: three senders, one gatherer, first-arrival order.
+            let fan = {
+                let mb = mb.clone();
+                std::thread::spawn(move || {
+                    let mut seen = Vec::new();
+                    for _ in 0..3 {
+                        match mb.pop_any(99, &[0, 1, 2], FAN_TAG, RECV_TIMEOUT) {
+                            AnyRecv::Delivered(f, _) => seen.push(f),
+                            other => panic!("fan-in: {other:?}"),
+                        }
+                    }
+                    seen.sort_unstable();
+                    assert_eq!(seen, vec![0, 1, 2]);
+                })
+            };
+            for h in handles {
+                h.join().unwrap();
+            }
+            let mut received = 0u64;
+            let mut forgotten = 0u64;
+            for h in consumed {
+                let (r, f) = h.join().unwrap();
+                received += r;
+                forgotten += f;
+            }
+            fan.join().unwrap();
+            assert_eq!(
+                received + forgotten,
+                PRODUCERS as u64 * M + DYING_M,
+                "every partitioned message needs exactly one consuming action"
+            );
+            assert_eq!(mb.pending_entries(), 0, "no queued messages or tombstones may leak");
+            done_tx.send(()).unwrap();
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("mailbox torture deadlocked (lost wakeup?)");
     }
 }

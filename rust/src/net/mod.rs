@@ -7,10 +7,11 @@
 //!   data. Used by the full-fidelity protocol (tests, examples) and to
 //!   validate the byte ledger of the simulator.
 //! * [`tcp::TcpTransport`] — length-prefixed framed messages over real
-//!   `TcpStream`s, one per peer, with a per-peer reader thread feeding the
-//!   same tagged-mailbox semantics. One OS process per party in a real
-//!   deployment (`copml party`), or the loopback mesh
-//!   ([`tcp::loopback_mesh`]) for tests and demos.
+//!   `TcpStream`s, one per peer, drained into the same tagged-mailbox
+//!   semantics by per-peer reader threads or by one shared poll reactor
+//!   ([`Runtime`]). One OS process per party in a real deployment
+//!   (`copml party`), or the loopback mesh ([`tcp::loopback_mesh`]) for
+//!   tests and demos.
 //! * the virtual-clock simulation in [`wan`] + `bench::cost_model` — exact
 //!   byte counts charged against a bandwidth/latency model
 //!   (paper setup: 40 Mbps WAN between EC2 m3.xlarge instances).
@@ -26,17 +27,58 @@
 
 pub mod local;
 mod mailbox;
+mod reactor;
 pub mod tcp;
 pub mod wan;
 pub mod wire;
 
-pub use mailbox::AnyRecv;
+pub use mailbox::{AnyRecv, TryRecv};
 pub use wire::Wire;
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Party identifier (0-based).
 pub type PartyId = usize;
+
+/// How a socket transport drains its peer connections into the mailbox.
+///
+/// Value-transparent by construction: both runtimes feed the same
+/// tagged-mailbox delivery semantics, so the protocol — and every trained
+/// `w_trace` — is bit-identical under either (pinned by
+/// `tests/protocol_equivalence.rs`). The in-process [`local::Hub`] has no
+/// sockets to drain, so the choice is structurally a no-op there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Runtime {
+    /// One blocking reader thread per peer connection — the original
+    /// architecture and the bit-identity oracle. A loopback mesh pays
+    /// `n(n−1)` reader threads.
+    Threaded,
+    /// One poll-driven reactor thread over non-blocking sockets for all
+    /// connections (a whole loopback mesh shares a single reactor): the
+    /// large-N runtime (ROADMAP item 1).
+    Event,
+}
+
+impl std::fmt::Display for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Runtime::Threaded => "threaded",
+            Runtime::Event => "event",
+        })
+    }
+}
+
+impl std::str::FromStr for Runtime {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Runtime, String> {
+        match s {
+            "threaded" => Ok(Runtime::Threaded),
+            "event" => Ok(Runtime::Event),
+            other => Err(format!("unknown runtime '{other}' (expected threaded|event)")),
+        }
+    }
+}
 
 /// Bytes per transmitted field element under the default 64-bit wire
 /// format ([`Wire::U64`] — the paper's 64-bit MPI implementation). The
@@ -66,6 +108,20 @@ pub trait Transport: Send + Sync {
     /// can never deliver); [`AnyRecv::NoneLive`] when every named peer is
     /// gone, [`AnyRecv::TimedOut`] after `timeout`.
     fn recv_any(&self, froms: &[PartyId], tag: u64, timeout: Duration) -> AnyRecv;
+    /// Non-blocking receive attempt: the per-round state machines
+    /// ([`RoundState`]) poll through this instead of parking a thread per
+    /// peer. Same precedence as the blocking pop — queued data is
+    /// consumed before a recorded close is reported.
+    fn try_recv(&self, from: PartyId, tag: u64) -> TryRecv;
+    /// Monotone mailbox event counter: bumped on every delivery, peer
+    /// close, and shutdown. Snapshot it *before* a [`RoundState::poll`]
+    /// pass; [`Transport::wait_activity`] with that snapshot returns
+    /// immediately if anything landed during the pass (no lost wakeup).
+    fn activity(&self) -> u64;
+    /// Park until the activity counter advances past `since` or `timeout`
+    /// elapses. Returns the current counter value (`== since` only on
+    /// timeout).
+    fn wait_activity(&self, since: u64, timeout: Duration) -> u64;
     /// Discard one `(from, tag)` message: now if delivered (returns
     /// `true`), or on arrival via a one-shot tombstone (returns `false`).
     /// The return value is the straggler signal — `false` means the peer
@@ -83,6 +139,64 @@ pub trait Transport: Send + Sync {
     fn bytes_sent(&self) -> u64;
     /// Total payload bytes this party has received.
     fn bytes_received(&self) -> u64;
+}
+
+/// Outcome of one non-blocking [`RoundState::poll`] pass.
+pub enum Step<T> {
+    /// The round completed with this output.
+    Ready(T),
+    /// Some tag has not arrived yet: park until the next mailbox activity
+    /// and poll again.
+    Pending,
+}
+
+/// One per-round stage of the protocol's iteration loop (await the
+/// encoded gradients, await the quorum roster, await a king opening, …)
+/// expressed as an explicit state over the message stream: each
+/// [`poll`](RoundState::poll) consumes whatever relevant messages are
+/// queued and yields [`Step::Pending`] when a tag is not available yet,
+/// instead of blocking a thread on it.
+///
+/// Both runtimes execute the protocol through these states (see
+/// [`drive`]), which is what makes `--runtime event` bit-identical to the
+/// threaded oracle by construction; the runtime flag only changes who
+/// feeds the mailbox (reader threads vs the reactor).
+pub trait RoundState {
+    type Output;
+    /// One non-blocking pass: consume available messages, advance
+    /// internal state. `Err` is a protocol-fatal condition (a
+    /// load-bearing peer died, an infeasible quorum) with the recorded
+    /// cause.
+    fn poll(&mut self, net: &dyn Transport) -> Result<Step<Self::Output>, String>;
+    /// Short label naming the round, used in timeout diagnostics.
+    fn describe(&self) -> String;
+}
+
+/// Run a [`RoundState`] to completion: poll, and between polls park on
+/// the transport's activity counter. The counter is snapshotted *before*
+/// each poll pass, so a delivery that lands mid-pass makes the park
+/// return immediately — the classic scan-then-sleep lost-wakeup race
+/// cannot occur. Fails (rather than deadlocks) if the state is still
+/// pending after the receive timeout.
+pub fn drive<S: RoundState>(net: &dyn Transport, mut state: S) -> Result<S::Output, String> {
+    let deadline = Instant::now() + mailbox::RECV_TIMEOUT;
+    loop {
+        let since = net.activity();
+        match state.poll(net)? {
+            Step::Ready(out) => return Ok(out),
+            Step::Pending => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(format!(
+                        "{} timed out after {:?} — protocol deadlock",
+                        state.describe(),
+                        mailbox::RECV_TIMEOUT
+                    ));
+                }
+                net.wait_activity(since, deadline - now);
+            }
+        }
+    }
 }
 
 /// Result of [`gather_quorum`]: the first-arrival quorum, sorted by party

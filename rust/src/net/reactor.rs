@@ -1,0 +1,421 @@
+//! Poll-driven socket reactor: the event runtime's replacement for the
+//! per-peer reader threads of [`crate::net::tcp`].
+//!
+//! One OS thread multiplexes every registered connection through a
+//! hand-rolled `poll(2)` readiness loop (no async runtime, no extra
+//! crates): sockets are switched to non-blocking mode, readable bytes are
+//! accumulated per connection, and complete length-prefixed frames
+//! ([`crate::net::wire`]) are decoded incrementally and pushed into the
+//! owning party's [`TagMailbox`] — the same tagged delivery surface the
+//! reader threads feed, so everything above the mailbox (blocking `recv`,
+//! quorum gathers, the per-round state machines of
+//! [`crate::coordinator::rounds`]) is runtime-agnostic.
+//!
+//! Failure handling mirrors the reader threads byte for byte: EOF records
+//! `connection closed` / `connection died mid-frame` (depending on
+//! whether a frame was in flight), an oversized length prefix records the
+//! `corrupt frame: oversized payload` cause *without* allocating, a
+//! payload that does not decode records `corrupt frame: …`, and a
+//! [`DEPART_TAG`] control frame records the peer's own halt reason — so
+//! blocked rounds fail fast with identical causes under either runtime
+//! (the replayed fault-path tests in `net::tcp` pin this).
+//!
+//! A `UnixStream` self-wake pair interrupts a parked `poll` for dynamic
+//! registration and shutdown. The reactor thread exits when the last
+//! owning transport drops its [`Reactor`] handle.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::mailbox::TagMailbox;
+use super::tcp::{words_to_reason, DEPART_TAG, MAX_FRAME_BYTES};
+use super::wire::{self, Wire, HEADER_BYTES};
+use super::PartyId;
+
+// `struct pollfd` and the event bits from `<poll.h>`, declared by hand so
+// the reactor needs no extra crate: std already links libc on every unix
+// target. `nfds_t` is `unsigned long` on Linux (the platform this crate
+// targets and CI runs on).
+#[repr(C)]
+struct PollFd {
+    fd: RawFd,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+}
+
+/// Block until `fd` is writable. The event runtime's sockets are
+/// non-blocking (the reader half shares the open file description with
+/// the writer half via `try_clone`, so `O_NONBLOCK` applies to both), and
+/// a full socket buffer turns `write` into `WouldBlock` — this is the
+/// wait that turns the non-blocking writer back into the blocking
+/// `write_all` semantics the send path expects. Error/hangup readiness
+/// returns `Ok` too: the caller's next write surfaces the actual error
+/// (sends are best-effort towards dead peers).
+pub(crate) fn wait_writable(fd: RawFd) -> io::Result<()> {
+    loop {
+        let mut pfd = PollFd { fd, events: POLLOUT, revents: 0 };
+        let rc = unsafe { poll(&mut pfd, 1, -1) };
+        if rc < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(e);
+        }
+        if pfd.revents & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0 {
+            return Ok(());
+        }
+    }
+}
+
+/// One registered connection: a non-blocking read half plus the
+/// incremental frame-decode state ferrying its bytes into the owning
+/// party's mailbox.
+struct Conn {
+    stream: TcpStream,
+    /// Peer id the frames come from.
+    from: PartyId,
+    wire: Wire,
+    mailbox: Arc<TagMailbox>,
+    /// The owning transport's received-bytes ledger.
+    received: Arc<AtomicU64>,
+    /// Bytes read but not yet assembled into a complete frame.
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    /// Drain everything readable right now and deliver the complete
+    /// frames. Returns `false` when the stream ended (EOF, error, corrupt
+    /// frame, departure notice) — the cause is recorded on the mailbox
+    /// and the connection is dropped from the loop.
+    fn service(&mut self) -> bool {
+        let mut scratch = [0u8; 64 * 1024];
+        loop {
+            match self.stream.read(&mut scratch) {
+                Ok(0) => {
+                    // EOF. Same causes the reader threads record: a death
+                    // between frames is an orderly close, a death with a
+                    // frame in flight truncated it.
+                    let cause = if self.buf.is_empty() {
+                        "connection closed: end of stream".to_string()
+                    } else {
+                        "connection died mid-frame: end of stream".to_string()
+                    };
+                    self.mailbox.close(self.from, cause);
+                    return false;
+                }
+                Ok(k) => {
+                    self.buf.extend_from_slice(&scratch[..k]);
+                    if !self.deliver_frames() {
+                        return false;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    let cause = if self.buf.is_empty() {
+                        format!("connection closed: {e}")
+                    } else {
+                        format!("connection died mid-frame: {e}")
+                    };
+                    self.mailbox.close(self.from, cause);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Decode and deliver every complete frame in `buf`, leaving any
+    /// partial tail for the next readiness event. Returns `false` on a
+    /// terminal frame (corrupt or departure) with the cause recorded.
+    fn deliver_frames(&mut self) -> bool {
+        let mut consumed = 0usize;
+        loop {
+            let avail = self.buf.len() - consumed;
+            if avail < HEADER_BYTES {
+                break;
+            }
+            let header: [u8; HEADER_BYTES] =
+                self.buf[consumed..consumed + HEADER_BYTES].try_into().unwrap();
+            let (payload_len, tag) = wire::decode_header(&header);
+            if payload_len > MAX_FRAME_BYTES {
+                // Reject by the cap before reserving a single byte — same
+                // guard as the reader threads.
+                self.mailbox.close(
+                    self.from,
+                    format!(
+                        "corrupt frame: oversized payload ({payload_len} B > {MAX_FRAME_BYTES} B cap)"
+                    ),
+                );
+                return false;
+            }
+            let total = HEADER_BYTES + payload_len as usize;
+            if avail < total {
+                break; // partial frame: wait for more bytes
+            }
+            let payload = &self.buf[consumed + HEADER_BYTES..consumed + total];
+            match wire::decode_payload(self.wire, payload) {
+                Ok(data) => {
+                    if tag == DEPART_TAG {
+                        // Control frame, not ledgered: the peer announces
+                        // its own departure with the real halt reason.
+                        self.mailbox
+                            .close(self.from, format!("peer left: {}", words_to_reason(&data)));
+                        return false;
+                    }
+                    // Ledger only deliveries the mailbox accepted (frames
+                    // landing after this party left are discarded unseen).
+                    if self.mailbox.push(self.from, tag, data) {
+                        self.received.fetch_add(payload_len as u64, Ordering::Relaxed);
+                    }
+                }
+                Err(e) => {
+                    self.mailbox.close(self.from, format!("corrupt frame: {e}"));
+                    return false;
+                }
+            }
+            consumed += total;
+        }
+        self.buf.drain(..consumed);
+        true
+    }
+}
+
+struct Shared {
+    /// Write end of the self-wake pair: one byte unparks `poll`.
+    wake_tx: UnixStream,
+    /// Connections registered since the last loop pass.
+    pending: Mutex<Vec<Conn>>,
+    shutdown: AtomicBool,
+}
+
+/// Handle to one reactor thread. Clone-shared (via `Arc`) by every
+/// transport it serves — a loopback mesh runs its whole `N`-party socket
+/// fabric on a single reactor. Dropping the last handle shuts the thread
+/// down and joins it.
+pub(crate) struct Reactor {
+    shared: Arc<Shared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Start the reactor thread (named `copml-reactor` in thread listings,
+    /// so the bench's thread accounting can point at it).
+    pub(crate) fn spawn() -> io::Result<Reactor> {
+        let (wake_tx, wake_rx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            wake_tx,
+            pending: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+        });
+        let shared2 = shared.clone();
+        let thread = std::thread::Builder::new()
+            .name("copml-reactor".into())
+            .spawn(move || event_loop(&shared2, &wake_rx))?;
+        Ok(Reactor { shared, thread: Some(thread) })
+    }
+
+    /// Hand a connection's read half to the reactor: frames from `from`
+    /// flow into `mailbox`, accepted payload bytes into `received`.
+    /// Switches the stream non-blocking (which, via the shared file
+    /// description, also makes the transport's write half non-blocking —
+    /// see [`wait_writable`]).
+    pub(crate) fn register(
+        &self,
+        stream: TcpStream,
+        from: PartyId,
+        wire: Wire,
+        mailbox: Arc<TagMailbox>,
+        received: Arc<AtomicU64>,
+    ) -> io::Result<()> {
+        stream.set_nonblocking(true)?;
+        self.shared
+            .pending
+            .lock()
+            .unwrap()
+            .push(Conn { stream, from, wire, mailbox, received, buf: Vec::new() });
+        self.wake();
+        Ok(())
+    }
+
+    fn wake(&self) {
+        let _ = (&self.shared.wake_tx).write(&[1]);
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.wake();
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn event_loop(shared: &Shared, wake_rx: &UnixStream) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut fds: Vec<PollFd> = Vec::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        {
+            let mut pending = shared.pending.lock().unwrap();
+            conns.append(&mut pending);
+        }
+        // fds[0] is the wake pipe; fds[i + 1] tracks conns[i].
+        fds.clear();
+        fds.push(PollFd { fd: wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        for c in &conns {
+            fds.push(PollFd { fd: c.stream.as_raw_fd(), events: POLLIN, revents: 0 });
+        }
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, -1) };
+        if rc < 0 {
+            if io::Error::last_os_error().kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return; // poll itself failed: no recovery that isn't a spin
+        }
+        if fds[0].revents != 0 {
+            drain_wake(wake_rx);
+        }
+        // Service every connection with readiness (including error/hangup
+        // states — `service` turns those into recorded close causes) and
+        // drop the ones whose stream ended.
+        let mut keep = Vec::with_capacity(conns.len());
+        for (i, mut c) in conns.drain(..).enumerate() {
+            if fds[i + 1].revents == 0 || c.service() {
+                keep.push(c);
+            }
+        }
+        conns = keep;
+    }
+}
+
+/// Swallow whatever wake bytes have accumulated.
+fn drain_wake(wake_rx: &UnixStream) {
+    let mut buf = [0u8; 64];
+    loop {
+        match (&*wake_rx).read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return, // WouldBlock: drained
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    /// A raw loopback TCP pair: (write end, read end registered later).
+    fn tcp_pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = l.accept().unwrap();
+        (tx, rx)
+    }
+
+    #[test]
+    fn frames_split_across_arbitrary_write_boundaries() {
+        // The incremental decoder must reassemble frames no matter how
+        // the byte stream is chopped — single bytes, header/payload
+        // splits, two frames in one burst.
+        let reactor = Reactor::spawn().unwrap();
+        let (mut tx, rx) = tcp_pair();
+        let mailbox = Arc::new(TagMailbox::default());
+        let received = Arc::new(AtomicU64::new(0));
+        reactor.register(rx, 1, Wire::U64, mailbox.clone(), received.clone()).unwrap();
+
+        // Frame 1 dribbled one byte at a time.
+        let f1 = wire::encode_frame(Wire::U64, 7, &[10, 20, 30]);
+        for b in &f1 {
+            tx.write_all(std::slice::from_ref(b)).unwrap();
+            tx.flush().unwrap();
+        }
+        assert_eq!(mailbox.pop_blocking(0, 1, 7), vec![10, 20, 30]);
+
+        // Frames 2+3 in a single burst, plus the header of frame 4.
+        let f2 = wire::encode_frame(Wire::U64, 8, &[1]);
+        let f3 = wire::encode_frame(Wire::U64, 9, &[2, 3]);
+        let f4 = wire::encode_frame(Wire::U64, 10, &[4]);
+        let mut burst = Vec::new();
+        burst.extend_from_slice(&f2);
+        burst.extend_from_slice(&f3);
+        burst.extend_from_slice(&f4[..HEADER_BYTES]);
+        tx.write_all(&burst).unwrap();
+        assert_eq!(mailbox.pop_blocking(0, 1, 8), vec![1]);
+        assert_eq!(mailbox.pop_blocking(0, 1, 9), vec![2, 3]);
+        // ... and frame 4 completes later.
+        tx.write_all(&f4[HEADER_BYTES..]).unwrap();
+        assert_eq!(mailbox.pop_blocking(0, 1, 10), vec![4]);
+        assert_eq!(received.load(Ordering::Relaxed), 7 * 8, "7 u64 payload words ledgered");
+        assert_eq!(mailbox.pending_entries(), 0);
+    }
+
+    #[test]
+    fn one_reactor_serves_many_connections() {
+        let reactor = Reactor::spawn().unwrap();
+        let mailbox = Arc::new(TagMailbox::default());
+        let received = Arc::new(AtomicU64::new(0));
+        let mut txs = Vec::new();
+        for from in 1..=4usize {
+            let (tx, rx) = tcp_pair();
+            reactor
+                .register(rx, from, Wire::U32, mailbox.clone(), received.clone())
+                .unwrap();
+            txs.push((from, tx));
+        }
+        for (from, tx) in &mut txs {
+            let frame = wire::encode_frame(Wire::U32, 5, &[*from as u64]);
+            tx.write_all(&frame).unwrap();
+        }
+        for (from, _) in &txs {
+            assert_eq!(mailbox.pop_blocking(0, *from, 5), vec![*from as u64]);
+        }
+    }
+
+    #[test]
+    fn eof_closes_with_recorded_cause_and_drop_joins() {
+        let reactor = Reactor::spawn().unwrap();
+        let (tx, rx) = tcp_pair();
+        let mailbox = Arc::new(TagMailbox::default());
+        reactor
+            .register(rx, 2, Wire::U64, mailbox.clone(), Arc::new(AtomicU64::new(0)))
+            .unwrap();
+        drop(tx); // peer dies between frames
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            match mailbox.try_pop(2, 0) {
+                super::super::mailbox::TryRecv::Closed(cause) => {
+                    assert!(cause.contains("connection closed"), "{cause}");
+                    break;
+                }
+                _ if std::time::Instant::now() > deadline => panic!("close never recorded"),
+                _ => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        drop(reactor); // must join the thread, not leak or hang
+    }
+}

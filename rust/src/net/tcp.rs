@@ -3,12 +3,23 @@
 //! Each party is one endpoint of a full mesh of `TcpStream`s (one OS
 //! process per party in a real deployment via `copml party`, or one thread
 //! per party in the loopback harness). Messages are length-prefixed frames
-//! ([`crate::net::wire`]); a per-peer **reader thread** drains each socket
-//! into the shared tagged mailbox (`TagMailbox`), so the blocking
-//! tagged-`recv` semantics of [`Transport`] — and everything built on them:
-//! the MPC collectives, the byte ledger, the SPMD tag discipline — run
-//! unmodified over the network. Reader threads also decouple socket buffers
-//! from protocol progress: a peer's send never blocks on our `recv` order.
+//! ([`crate::net::wire`]) drained into the shared tagged mailbox
+//! (`TagMailbox`), so the blocking tagged-`recv` semantics of
+//! [`Transport`] — and everything built on them: the MPC collectives, the
+//! byte ledger, the SPMD tag discipline — run unmodified over the network.
+//! *How* the sockets are drained is the [`Runtime`] choice:
+//!
+//! * [`Runtime::Threaded`] — a per-peer **reader thread** per socket (the
+//!   original architecture, and the bit-identity oracle). Simple, but a
+//!   loopback mesh pays ~N² reader threads at large N.
+//! * [`Runtime::Event`] — all sockets registered with one poll-driven
+//!   reactor thread (`net::reactor`, a hand-rolled `poll(2)` readiness
+//!   loop) over non-blocking I/O; a whole loopback mesh runs its socket
+//!   fabric on a single shared reactor. Same frames, same mailbox, same
+//!   recorded failure causes.
+//!
+//! Either way, socket buffers stay decoupled from protocol progress: a
+//! peer's send never blocks on our `recv` order.
 //!
 //! Mesh construction is deterministic and deadlock-free: party `i` *dials*
 //! every lower-numbered peer (retrying while it boots) and *accepts* a
@@ -18,14 +29,16 @@
 
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::mailbox::TagMailbox;
+use super::reactor::{self, Reactor};
 use super::wire::{self, Wire, HEADER_BYTES};
-use super::{AnyRecv, PartyId, Transport};
+use super::{AnyRecv, PartyId, Runtime, Transport, TryRecv};
 
 /// Handshake magic ("COPML wire").
 const MAGIC: [u8; 4] = *b"CPML";
@@ -40,15 +53,15 @@ const DIAL_RETRY: Duration = Duration::from_millis(50);
 /// Upper bound on a single frame's payload. Far above any protocol
 /// message (the largest is a dataset-share block, well under 1 GiB), but
 /// small enough that a corrupt or hostile length prefix cannot drive the
-/// reader thread into a multi-gigabyte allocation.
-const MAX_FRAME_BYTES: u32 = 1 << 30;
+/// reader thread (or the reactor) into a multi-gigabyte allocation.
+pub(crate) const MAX_FRAME_BYTES: u32 = 1 << 30;
 /// Reserved tag of the departure notice a leaving party sends before
 /// shutting its sockets ([`Transport::leave`]): the payload carries the
 /// halt reason (one byte per word — tiny, wire-format agnostic), so peers
 /// record the *actual* cause ("killed at iteration 3 …") instead of a
 /// generic EOF. Protocol tags count up from 0 (offline: from 1<<62) and
 /// can never collide.
-const DEPART_TAG: u64 = u64::MAX;
+pub(crate) const DEPART_TAG: u64 = u64::MAX;
 
 /// Encode a departure reason for the [`DEPART_TAG`] payload.
 fn reason_to_words(reason: &str) -> Vec<u64> {
@@ -58,7 +71,7 @@ fn reason_to_words(reason: &str) -> Vec<u64> {
 /// Decode a [`DEPART_TAG`] payload back into the departure reason. The
 /// words carry UTF-8 bytes (halt reasons contain em dashes), so decode
 /// them as UTF-8, not byte-per-char Latin-1.
-fn words_to_reason(words: &[u64]) -> String {
+pub(crate) fn words_to_reason(words: &[u64]) -> String {
     let bytes: Vec<u8> = words.iter().map(|&w| w as u8).collect();
     String::from_utf8_lossy(&bytes).into_owned()
 }
@@ -77,22 +90,42 @@ pub struct TcpTransport {
     mailbox: Arc<TagMailbox>,
     sent: AtomicU64,
     received: Arc<AtomicU64>,
+    /// Per-peer reader threads ([`Runtime::Threaded`]; empty under the
+    /// event runtime).
     readers: Vec<JoinHandle<()>>,
+    /// The reactor draining this endpoint's sockets ([`Runtime::Event`];
+    /// `None` under the threaded runtime). Possibly shared with other
+    /// endpoints (the loopback mesh); the thread is joined when the last
+    /// handle drops.
+    reactor: Option<Arc<Reactor>>,
 }
 
 impl TcpTransport {
-    /// Bind `listen` and build the mesh. `peers[j]` is the address party
-    /// `j` listens on, as reachable from this host; `peers[id]` (our own
-    /// entry) is ignored. Blocks until all `n − 1` connections are up
-    /// (bounded by an internal timeout).
+    /// Bind `listen` and build the mesh under the threaded runtime.
+    /// `peers[j]` is the address party `j` listens on, as reachable from
+    /// this host; `peers[id]` (our own entry) is ignored. Blocks until
+    /// all `n − 1` connections are up (bounded by an internal timeout).
     pub fn establish(
         id: PartyId,
         listen: &str,
         peers: &[String],
         wire: Wire,
     ) -> io::Result<TcpTransport> {
+        Self::establish_runtime(id, listen, peers, wire, Runtime::Threaded)
+    }
+
+    /// [`TcpTransport::establish`] with an explicit [`Runtime`]: per-peer
+    /// reader threads, or one poll-driven reactor for all of this
+    /// endpoint's sockets (`copml party --runtime event`).
+    pub fn establish_runtime(
+        id: PartyId,
+        listen: &str,
+        peers: &[String],
+        wire: Wire,
+        runtime: Runtime,
+    ) -> io::Result<TcpTransport> {
         let listener = TcpListener::bind(listen)?;
-        Self::establish_on(id, listener, peers, wire)
+        Self::establish_on_runtime(id, listener, peers, wire, runtime)
     }
 
     /// Like [`TcpTransport::establish`] with an already-bound listener
@@ -103,6 +136,34 @@ impl TcpTransport {
         listener: TcpListener,
         peers: &[String],
         wire: Wire,
+    ) -> io::Result<TcpTransport> {
+        Self::establish_on_with(id, listener, peers, wire, None)
+    }
+
+    /// [`TcpTransport::establish_on`] with an explicit [`Runtime`]. Under
+    /// [`Runtime::Event`] this endpoint gets its own reactor; the
+    /// loopback mesh shares one reactor across all `n` endpoints instead
+    /// (see [`loopback_mesh_runtime`]).
+    pub fn establish_on_runtime(
+        id: PartyId,
+        listener: TcpListener,
+        peers: &[String],
+        wire: Wire,
+        runtime: Runtime,
+    ) -> io::Result<TcpTransport> {
+        let reactor = match runtime {
+            Runtime::Threaded => None,
+            Runtime::Event => Some(Arc::new(Reactor::spawn()?)),
+        };
+        Self::establish_on_with(id, listener, peers, wire, reactor)
+    }
+
+    fn establish_on_with(
+        id: PartyId,
+        listener: TcpListener,
+        peers: &[String],
+        wire: Wire,
+        reactor: Option<Arc<Reactor>>,
     ) -> io::Result<TcpTransport> {
         let n = peers.len();
         assert!(id < n, "party id {id} out of range for {n} peers");
@@ -134,11 +195,22 @@ impl TcpTransport {
                     // Protocol messages are latency-sensitive whole frames.
                     s.set_nodelay(true).ok();
                     let reader = s.try_clone()?;
-                    let mb = mailbox.clone();
-                    let rc = received.clone();
-                    readers.push(std::thread::spawn(move || {
-                        reader_loop(reader, peer, wire, &mb, &rc)
-                    }));
+                    match &reactor {
+                        // Event runtime: the reactor drains this socket
+                        // (and flips the shared file description
+                        // non-blocking — the send path compensates, see
+                        // `write_frame`).
+                        Some(r) => {
+                            r.register(reader, peer, wire, mailbox.clone(), received.clone())?
+                        }
+                        None => {
+                            let mb = mailbox.clone();
+                            let rc = received.clone();
+                            readers.push(std::thread::spawn(move || {
+                                reader_loop(reader, peer, wire, &mb, &rc)
+                            }));
+                        }
+                    }
                     writers.push(Some(Mutex::new(s)));
                 }
             }
@@ -152,12 +224,42 @@ impl TcpTransport {
             sent: AtomicU64::new(0),
             received,
             readers,
+            reactor,
         })
     }
 
     /// The wire format this mesh was established with.
     pub fn wire(&self) -> Wire {
         self.wire
+    }
+
+    /// Write one encoded frame to an already-locked peer stream,
+    /// best-effort (`false` = the peer's socket rejected it; the failure
+    /// surfaces receive-side). Under the threaded runtime the stream is
+    /// blocking and this is a plain `write_all`; under the event runtime
+    /// the stream is non-blocking (its file description is shared with
+    /// the reactor-registered read half), so `WouldBlock` parks on
+    /// `POLLOUT` until the socket drains — restoring blocking-send
+    /// semantics without ever blocking the reactor.
+    fn write_frame(&self, s: &mut TcpStream, frame: &[u8]) -> bool {
+        if self.reactor.is_none() {
+            return s.write_all(frame).is_ok();
+        }
+        let mut off = 0;
+        while off < frame.len() {
+            match s.write(&frame[off..]) {
+                Ok(0) => return false,
+                Ok(k) => off += k,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if reactor::wait_writable(s.as_raw_fd()).is_err() {
+                        return false;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        true
     }
 }
 
@@ -354,7 +456,7 @@ impl Transport for TcpTransport {
             // Best-effort: a dead peer (fault-plan kill, crashed process)
             // surfaces on the receive side via its closed mailbox; a send
             // into its reset socket must not take this party down.
-            s.write_all(&frame).is_ok()
+            self.write_frame(&mut s, &frame)
         };
         if wrote {
             // Ledger counts payload bytes (header excluded), matching `local`.
@@ -377,6 +479,19 @@ impl Transport for TcpTransport {
         self.mailbox.pop_any(self.id, froms, tag, timeout)
     }
 
+    fn try_recv(&self, from: PartyId, tag: u64) -> TryRecv {
+        assert!(from < self.n && from != self.id, "recv from unknown party {from}");
+        self.mailbox.try_pop(from, tag)
+    }
+
+    fn activity(&self) -> u64 {
+        self.mailbox.activity()
+    }
+
+    fn wait_activity(&self, since: u64, timeout: Duration) -> u64 {
+        self.mailbox.wait_activity(since, timeout)
+    }
+
     fn forget(&self, from: PartyId, tag: u64) -> bool {
         self.mailbox.forget(from, tag)
     }
@@ -393,7 +508,7 @@ impl Transport for TcpTransport {
         let frame = wire::encode_frame(self.wire, DEPART_TAG, &reason_to_words(reason));
         for m in self.writers.iter().flatten() {
             if let Ok(mut s) = m.lock() {
-                let _ = s.write_all(&frame);
+                let _ = self.write_frame(&mut s, &frame);
                 let _ = s.shutdown(Shutdown::Both);
             }
         }
@@ -428,6 +543,21 @@ impl Drop for TcpTransport {
 /// used by the equivalence tests, CI smoke runs, and local demos; real
 /// deployments run one `copml party` process per endpoint instead.
 pub fn loopback_mesh(n: usize, wire: Wire) -> io::Result<Vec<TcpTransport>> {
+    loopback_mesh_runtime(n, wire, Runtime::Threaded)
+}
+
+/// [`loopback_mesh`] with an explicit [`Runtime`]. Thread accounting is
+/// where the runtimes diverge: the threaded mesh spawns a reader thread
+/// per connection end — `n(n−1)` across the process, the ~N² that makes
+/// N≥25 loopback runs thrash — while the event mesh registers every
+/// socket with ONE shared reactor thread (`copml-reactor`), so the whole
+/// fabric adds a single OS thread regardless of `n` (the `fig_runtime`
+/// bench pins this).
+pub fn loopback_mesh_runtime(
+    n: usize,
+    wire: Wire,
+    runtime: Runtime,
+) -> io::Result<Vec<TcpTransport>> {
     let mut listeners = Vec::with_capacity(n);
     let mut addrs = Vec::with_capacity(n);
     for _ in 0..n {
@@ -435,12 +565,19 @@ pub fn loopback_mesh(n: usize, wire: Wire) -> io::Result<Vec<TcpTransport>> {
         addrs.push(l.local_addr()?.to_string());
         listeners.push(l);
     }
+    let reactor = match runtime {
+        Runtime::Threaded => None,
+        Runtime::Event => Some(Arc::new(Reactor::spawn()?)),
+    };
     let handles: Vec<_> = listeners
         .into_iter()
         .enumerate()
         .map(|(id, l)| {
             let addrs = addrs.clone();
-            std::thread::spawn(move || TcpTransport::establish_on(id, l, &addrs, wire))
+            let reactor = reactor.clone();
+            std::thread::spawn(move || {
+                TcpTransport::establish_on_with(id, l, &addrs, wire, reactor)
+            })
         })
         .collect();
     let mut out = Vec::with_capacity(n);
@@ -458,8 +595,14 @@ mod tests {
     use super::*;
     use crate::net::{broadcast, gather_all};
 
+    const RUNTIMES: [Runtime; 2] = [Runtime::Threaded, Runtime::Event];
+
     fn pair(wire: Wire) -> (TcpTransport, TcpTransport) {
-        let mut eps = loopback_mesh(2, wire).unwrap();
+        pair_rt(wire, Runtime::Threaded)
+    }
+
+    fn pair_rt(wire: Wire, runtime: Runtime) -> (TcpTransport, TcpTransport) {
+        let mut eps = loopback_mesh_runtime(2, wire, runtime).unwrap();
         let b = eps.pop().unwrap();
         let a = eps.pop().unwrap();
         (a, b)
@@ -467,15 +610,17 @@ mod tests {
 
     #[test]
     fn point_to_point_over_sockets() {
-        for wire in [Wire::U64, Wire::U32] {
-            let (a, b) = pair(wire);
-            let h = std::thread::spawn(move || {
-                a.send(1, 7, vec![1, 2, 3]);
-                a.recv(1, 8)
-            });
-            assert_eq!(b.recv(0, 7), vec![1, 2, 3]);
-            b.send(0, 8, vec![9]);
-            assert_eq!(h.join().unwrap(), vec![9]);
+        for runtime in RUNTIMES {
+            for wire in [Wire::U64, Wire::U32] {
+                let (a, b) = pair_rt(wire, runtime);
+                let h = std::thread::spawn(move || {
+                    a.send(1, 7, vec![1, 2, 3]);
+                    a.recv(1, 8)
+                });
+                assert_eq!(b.recv(0, 7), vec![1, 2, 3]);
+                b.send(0, 8, vec![9]);
+                assert_eq!(h.join().unwrap(), vec![9]);
+            }
         }
     }
 
@@ -505,20 +650,24 @@ mod tests {
 
     #[test]
     fn broadcast_gather_over_four_socket_parties() {
-        let eps = loopback_mesh(4, Wire::U32).unwrap();
-        let handles: Vec<_> = eps
-            .into_iter()
-            .map(|ep| {
-                std::thread::spawn(move || {
-                    let own = vec![ep.id() as u64 * 100];
-                    broadcast(&ep, 0, &own);
-                    let all = gather_all(&ep, 0, own);
-                    all.iter().map(|v| v[0]).collect::<Vec<u64>>()
+        // Both runtimes drive the same mesh collective; the event variant
+        // runs all 12 connection ends on one shared reactor thread.
+        for runtime in RUNTIMES {
+            let eps = loopback_mesh_runtime(4, Wire::U32, runtime).unwrap();
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|ep| {
+                    std::thread::spawn(move || {
+                        let own = vec![ep.id() as u64 * 100];
+                        broadcast(&ep, 0, &own);
+                        let all = gather_all(&ep, 0, own);
+                        all.iter().map(|v| v[0]).collect::<Vec<u64>>()
+                    })
                 })
-            })
-            .collect();
-        for h in handles {
-            assert_eq!(h.join().unwrap(), vec![0, 100, 200, 300]);
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), vec![0, 100, 200, 300]);
+            }
         }
     }
 
@@ -548,41 +697,48 @@ mod tests {
     fn leave_reason_reaches_peers() {
         // An explicit departure must surface its real cause at peers, not
         // a generic EOF — post-mortems over sockets need the reason.
-        let (a, b) = pair(Wire::U32);
-        a.leave("killed at iteration 3 — by the fault plan"); // em dash: UTF-8 survives
-        let err = b.recv_check(0, 0).unwrap_err();
-        assert!(err.contains("killed at iteration 3 — by"), "{err}");
-        // and the departed party's own mailbox discards deliveries
-        b.send(0, 1, vec![7]);
-        assert_eq!(a.pending_messages(), 0);
+        for runtime in RUNTIMES {
+            let (a, b) = pair_rt(Wire::U32, runtime);
+            a.leave("killed at iteration 3 — by the fault plan"); // em dash: UTF-8 survives
+            let err = b.recv_check(0, 0).unwrap_err();
+            assert!(err.contains("killed at iteration 3 — by"), "{err}");
+            // and the departed party's own mailbox discards deliveries
+            b.send(0, 1, vec![7]);
+            assert_eq!(a.pending_messages(), 0);
+        }
     }
 
     #[test]
     fn dead_peer_fails_recv_fast() {
         // A peer process dying must surface as an immediate "peer is gone"
         // failure on blocked receives, not a 120 s deadlock timeout.
-        let (a, b) = pair(Wire::U64);
-        drop(a); // party 0 dies: its Drop shuts the sockets down
-        let t0 = std::time::Instant::now();
-        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.recv(0, 0)))
-            .unwrap_err();
-        assert!(
-            t0.elapsed() < std::time::Duration::from_secs(10),
-            "recv must fail fast, not wait out the deadlock timeout"
-        );
-        let msg = err.downcast_ref::<String>().expect("panic payload");
-        assert!(msg.contains("peer is gone"), "{msg}");
+        for runtime in RUNTIMES {
+            let (a, b) = pair_rt(Wire::U64, runtime);
+            drop(a); // party 0 dies: its Drop shuts the sockets down
+            let t0 = std::time::Instant::now();
+            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.recv(0, 0)))
+                .unwrap_err();
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "recv must fail fast, not wait out the deadlock timeout"
+            );
+            let msg = err.downcast_ref::<String>().expect("panic payload");
+            assert!(msg.contains("peer is gone"), "{msg}");
+        }
     }
 
     /// Party 0 of a 2-party mesh, with "party 1" actually a raw socket the
     /// test drives by hand (valid handshake, then arbitrary bytes) — the
-    /// rig for the malformed-frame hardening tests.
-    fn mesh_with_raw_peer(wire: Wire) -> (TcpTransport, TcpStream) {
+    /// rig for the malformed-frame hardening tests, replayed under both
+    /// runtimes (reader thread and reactor must record identical causes).
+    fn mesh_with_raw_peer_rt(wire: Wire, runtime: Runtime) -> (TcpTransport, TcpStream) {
         let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = l0.local_addr().unwrap().to_string();
         // party 1 never listens — it dials party 0 (dial-low rule).
         let addrs = vec![addr.clone(), "127.0.0.1:1".to_string()];
-        let h0 = std::thread::spawn(move || TcpTransport::establish_on(0, l0, &addrs, wire));
+        let h0 = std::thread::spawn(move || {
+            TcpTransport::establish_on_runtime(0, l0, &addrs, wire, runtime)
+        });
         let mut s = TcpStream::connect(&addr).unwrap();
         let mut hello = [0u8; 13];
         hello[..4].copy_from_slice(&MAGIC);
@@ -613,62 +769,73 @@ mod tests {
     #[test]
     fn oversized_frame_is_rejected_without_allocation() {
         // A length prefix of u32::MAX must be rejected by the cap, not
-        // turned into a 4 GiB allocation in the reader thread.
-        let (t0, mut s) = mesh_with_raw_peer(Wire::U64);
-        let mut header = [0u8; HEADER_BYTES];
-        header[..4].copy_from_slice(&u32::MAX.to_le_bytes());
-        s.write_all(&header).unwrap();
-        assert_recv_fails_with(t0, "oversized payload");
+        // turned into a 4 GiB allocation in the reader thread / reactor.
+        for runtime in RUNTIMES {
+            let (t0, mut s) = mesh_with_raw_peer_rt(Wire::U64, runtime);
+            let mut header = [0u8; HEADER_BYTES];
+            header[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+            s.write_all(&header).unwrap();
+            assert_recv_fails_with(t0, "oversized payload");
+        }
     }
 
     #[test]
     fn odd_length_frame_is_rejected() {
         // 7 payload bytes is not a multiple of the 8-byte u64 element.
-        let (t0, mut s) = mesh_with_raw_peer(Wire::U64);
-        let mut frame = Vec::new();
-        frame.extend_from_slice(&7u32.to_le_bytes());
-        frame.extend_from_slice(&0u64.to_le_bytes());
-        frame.extend_from_slice(&[0xAB; 7]);
-        s.write_all(&frame).unwrap();
-        assert_recv_fails_with(t0, "not a multiple");
+        for runtime in RUNTIMES {
+            let (t0, mut s) = mesh_with_raw_peer_rt(Wire::U64, runtime);
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&7u32.to_le_bytes());
+            frame.extend_from_slice(&0u64.to_le_bytes());
+            frame.extend_from_slice(&[0xAB; 7]);
+            s.write_all(&frame).unwrap();
+            assert_recv_fails_with(t0, "not a multiple");
+        }
     }
 
     #[test]
     fn truncated_frame_is_rejected() {
         // Header promises 16 bytes, the connection dies after 5.
-        let (t0, mut s) = mesh_with_raw_peer(Wire::U32);
-        let mut frame = Vec::new();
-        frame.extend_from_slice(&16u32.to_le_bytes());
-        frame.extend_from_slice(&3u64.to_le_bytes());
-        frame.extend_from_slice(&[0x01; 5]);
-        s.write_all(&frame).unwrap();
-        drop(s);
-        assert_recv_fails_with(t0, "connection");
+        for runtime in RUNTIMES {
+            let (t0, mut s) = mesh_with_raw_peer_rt(Wire::U32, runtime);
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&16u32.to_le_bytes());
+            frame.extend_from_slice(&3u64.to_le_bytes());
+            frame.extend_from_slice(&[0x01; 5]);
+            s.write_all(&frame).unwrap();
+            drop(s);
+            assert_recv_fails_with(t0, "connection");
+        }
     }
 
     #[test]
     fn random_garbage_never_panics_the_reader() {
         // Property-style sweep: random byte blobs after a valid handshake
         // must always end in a *recorded* close cause (clean reader exit),
-        // never a hang — a reader-thread panic would leave the mailbox
-        // open and the recv below would sit out the 120 s deadlock timeout.
+        // never a hang — a reader panic would leave the mailbox open and
+        // the recv below would sit out the 120 s deadlock timeout. Run
+        // under both runtimes: the reactor's incremental decoder faces the
+        // same blobs as the reader threads' read_exact loop.
         let mut rng = crate::prng::Rng::seed_from_u64(0xBADF00D);
-        for trial in 0..8u64 {
-            let wire = if trial % 2 == 0 { Wire::U64 } else { Wire::U32 };
-            let (t0, mut s) = mesh_with_raw_peer(wire);
-            let len = 1 + (rng.gen_range(64) as usize);
-            let blob: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
-            s.write_all(&blob).unwrap();
-            drop(s); // EOF terminates whatever partial frame the blob left
-            let start = std::time::Instant::now();
-            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t0.recv(1, 0)))
-                .unwrap_err();
-            assert!(
-                start.elapsed() < Duration::from_secs(10),
-                "trial {trial}: reader must close the mailbox, not leave recv hanging"
-            );
-            let msg = err.downcast_ref::<String>().expect("panic payload");
-            assert!(msg.contains("peer is gone"), "trial {trial}: {msg}");
+        for runtime in RUNTIMES {
+            for trial in 0..8u64 {
+                let wire = if trial % 2 == 0 { Wire::U64 } else { Wire::U32 };
+                let (t0, mut s) = mesh_with_raw_peer_rt(wire, runtime);
+                let len = 1 + (rng.gen_range(64) as usize);
+                let blob: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
+                s.write_all(&blob).unwrap();
+                drop(s); // EOF terminates whatever partial frame the blob left
+                let start = std::time::Instant::now();
+                let err =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t0.recv(1, 0)))
+                        .unwrap_err();
+                assert!(
+                    start.elapsed() < Duration::from_secs(10),
+                    "trial {trial}: reader must close the mailbox, not leave recv hanging"
+                );
+                let msg = err.downcast_ref::<String>().expect("panic payload");
+                assert!(msg.contains("peer is gone"), "trial {trial}: {msg}");
+            }
         }
     }
 

@@ -7,10 +7,10 @@
 //! faithful to the full protocol.
 
 use copml::coordinator::baseline::{BaselineConfig, MpcFlavor};
-use copml::coordinator::{algo, baseline, protocol, CaseParams, CopmlConfig};
+use copml::coordinator::{algo, baseline, protocol, CaseParams, CopmlConfig, FaultPlan};
 use copml::data::{Dataset, SynthSpec};
 use copml::mpc::OfflineMode;
-use copml::net::Wire;
+use copml::net::{Runtime, Wire};
 
 fn tiny_cfg(n: usize, k: usize, t: usize, iters: usize, seed: u64, ds: &Dataset) -> CopmlConfig {
     let mut cfg = CopmlConfig::for_dataset(ds, n, CaseParams::explicit(k, t), seed);
@@ -244,6 +244,100 @@ fn minibatch_baselines_equal_copml_trajectory() {
         let bcfg = BaselineConfig::matching(&cfg, flavor);
         let out = baseline::train(&bcfg, &ds).unwrap();
         assert_eq!(out.train.w_trace, reference.w_trace, "{flavor:?} B=3");
+    }
+}
+
+#[test]
+fn event_runtime_bit_identical_across_transports_wires_and_batches() {
+    // ISSUE-6 acceptance: `--runtime event` (the poll-reactor party
+    // runtime) is a transport-layer swap ONLY — for every combination of
+    // transport (Hub, TCP loopback), wire format, and batch count, the
+    // model trajectory is bit-identical to the threaded reference and to
+    // the central recursion. Both runtimes drive the same per-round state
+    // machine; only the socket-draining strategy differs.
+    let ds = Dataset::synth(SynthSpec::tiny(), 114);
+    for b in [1usize, 2] {
+        let mut cfg = tiny_cfg(7, 2, 1, 4, 114, &ds);
+        cfg.batches = b;
+        let reference = algo::train(&cfg, &ds).unwrap();
+        let threaded_hub = protocol::train(&cfg, &ds).unwrap();
+        assert_eq!(threaded_hub.train.w_trace, reference.w_trace, "threaded hub B={b}");
+        for wire in [Wire::U64, Wire::U32] {
+            let mut c = cfg.clone();
+            c.wire = wire;
+            c.runtime = Runtime::Event;
+            let hub = protocol::train(&c, &ds).unwrap();
+            assert_eq!(hub.train.w_trace, reference.w_trace, "event hub B={b} {wire} wire");
+            let tcp = protocol::train_tcp_loopback(&c, &ds).unwrap();
+            assert_eq!(tcp.train.w_trace, reference.w_trace, "event tcp B={b} {wire} wire");
+            // The reactor charges the same payload accounting as the
+            // reader threads: byte ledgers must match the Hub run's.
+            if wire == Wire::U64 {
+                for (lt, lh) in tcp.ledgers.iter().zip(&threaded_hub.ledgers) {
+                    assert_eq!(lt.bytes, lh.bytes, "event tcp ledger drifted (B={b})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn event_runtime_distributed_offline_bit_identical() {
+    // The dealer-free offline phase (DN07 extraction) has its own message
+    // patterns (pairwise PRSS traffic, king openings); the event runtime
+    // must replay them bit for bit on both transports.
+    let ds = Dataset::synth(SynthSpec::tiny(), 115);
+    let mut cfg = tiny_cfg(4, 1, 1, 2, 115, &ds);
+    cfg.offline = OfflineMode::Distributed;
+    let threaded_hub = protocol::train(&cfg, &ds).unwrap();
+    let mut c = cfg.clone();
+    c.runtime = Runtime::Event;
+    let event_hub = protocol::train(&c, &ds).unwrap();
+    assert_eq!(event_hub.train.w_trace, threaded_hub.train.w_trace, "event hub");
+    let event_tcp = protocol::train_tcp_loopback(&c, &ds).unwrap();
+    assert_eq!(event_tcp.train.w_trace, threaded_hub.train.w_trace, "event tcp");
+    for (i, (le, lh)) in event_tcp.ledgers.iter().zip(&threaded_hub.ledgers).enumerate() {
+        assert!(lh.bytes[0] > 0, "client {i}: no offline traffic recorded");
+        assert_eq!(le.bytes[0], lh.bytes[0], "client {i}: event offline bytes drifted");
+    }
+}
+
+#[test]
+fn event_runtime_fault_injection_matches_threaded() {
+    // Faults under the event runtime: a killed party's EOF now arrives
+    // via the reactor instead of a dying reader thread, and a straggler's
+    // late frames queue behind the poll loop — neither may move the
+    // trajectory or change who gets excluded for dying. N=10, K=2, T=1 →
+    // need 7, slack 3: enough to absorb one sustained straggler (party 8,
+    // delayed every compute phase) plus one crash (party 9 at iteration
+    // 1, excluded after 2 consecutive misses).
+    let ds = Dataset::synth(SynthSpec::tiny(), 116);
+    let mut cfg = tiny_cfg(10, 2, 1, 4, 116, &ds);
+    cfg.faults = FaultPlan { delays: vec![(8, 40)], kills: vec![(9, 1)] };
+    cfg.max_lag = Some(2);
+    let need = cfg.recovery_threshold();
+    assert!(cfg.n - need >= 2, "fixture needs quorum slack ≥ 2");
+    let reference = algo::train(&cfg, &ds).unwrap();
+    for runtime in [Runtime::Threaded, Runtime::Event] {
+        let mut c = cfg.clone();
+        c.runtime = runtime;
+        let out = protocol::train_tcp_loopback(&c, &ds)
+            .unwrap_or_else(|e| panic!("{runtime} faulted run failed: {e}"));
+        assert_eq!(
+            out.train.w_trace, reference.w_trace,
+            "{runtime}: faults may cost time, never accuracy"
+        );
+        // The crash is deterministic (party 9 misses every quorum from
+        // iteration 1 on), so exclusion must fire under either runtime.
+        // The straggler's exclusion is timing-dependent — not asserted.
+        assert!(
+            out.ledgers[0].excluded.contains(&9),
+            "{runtime}: killed party 9 not excluded: {:?}",
+            out.ledgers[0].excluded
+        );
+        for (i, q) in out.ledgers[0].quorums.iter().enumerate() {
+            assert!(q.len() >= need, "{runtime} round {i}: quorum {} < need {need}", q.len());
+        }
     }
 }
 
