@@ -1,0 +1,414 @@
+//! A minimal, hand-rolled Rust lexer for [`crate::analysis`] (`copml lint`).
+//!
+//! This is **not** a general Rust front-end: it produces exactly the token
+//! stream the lint rules in [`crate::analysis::rules`] need — identifiers,
+//! numbers, string/char literals, lifetimes and punctuation, each stamped
+//! with its 1-based source line — plus a side table of comments (used for
+//! the `SAFETY:` audit and `copml-lint: allow(..)` suppressions). It keeps
+//! the repo's vendored-only policy: no syn, no proc-macro2, just `std`.
+//!
+//! Handled edge cases (each has a unit test below):
+//!
+//! * nested block comments (`/* a /* b */ c */`),
+//! * raw and byte strings (`r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`),
+//! * char literal vs. lifetime disambiguation (`'a'` vs. `'static`),
+//! * multi-character operators by longest match (`<<=` before `<<`
+//!   before `<`),
+//! * `#[cfg(test)]` item stripping for both the semicolon form
+//!   (`#[cfg(test)] mod tests;`) and brace-matched bodies.
+
+/// Token classes `copml lint` distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (the rules match keywords by text).
+    Ident,
+    /// Numeric literal (integer or float, any base).
+    Num,
+    /// String literal (escaped, raw, or byte); text is the raw source span.
+    Str,
+    /// Char literal, e.g. `'a'` or `'\n'`.
+    Char,
+    /// Lifetime, e.g. `'static`.
+    Lifetime,
+    /// Punctuation/operator, longest-match (`::`, `->`, `<<=`, …).
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// A comment (line or block) with the line it starts on.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Lexer output: code tokens plus the comment side table.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Three- and two-character operators, tried longest-first so `<<=` never
+/// lexes as `<<` `=`.
+const OPS3: &[&str] = &["<<=", ">>=", "..=", "..."];
+const OPS2: &[&str] = &[
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=", "*=", "/=", "%=", "^=",
+    "&=", "|=", "<<", ">>", "..",
+];
+
+/// Tokenize `src`. Never fails: unrecognized bytes become 1-char `Punct`
+/// tokens, which is good enough for linting (rustc has already accepted
+/// the file if it is in the tree).
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < chars.len() && chars[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: chars[start..i].iter().collect() });
+        } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let (start, start_line) = (i, line);
+            i += 2;
+            let mut depth = 1usize;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: chars[start..i].iter().collect() });
+        } else if c == '"' {
+            let (text, ni, nl) = lex_escaped_string(&chars, i, line);
+            toks.push(Tok { kind: TokKind::Str, text, line });
+            i = ni;
+            line = nl;
+        } else if c == '\'' {
+            let (tok, ni, nl) = lex_char_or_lifetime(&chars, i, line);
+            toks.push(tok);
+            i = ni;
+            line = nl;
+        } else if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            let next = chars.get(i).copied();
+            let raw_prefix = (text == "r" || text == "br") && matches!(next, Some('"') | Some('#'));
+            let byte_prefix = text == "b" && next == Some('"');
+            if raw_prefix {
+                let (s, ni, nl) = lex_raw_string(&chars, i, line);
+                toks.push(Tok { kind: TokKind::Str, text: format!("{text}{s}"), line });
+                i = ni;
+                line = nl;
+            } else if byte_prefix {
+                let (s, ni, nl) = lex_escaped_string(&chars, i, line);
+                toks.push(Tok { kind: TokKind::Str, text: format!("{text}{s}"), line });
+                i = ni;
+                line = nl;
+            } else {
+                toks.push(Tok { kind: TokKind::Ident, text, line });
+            }
+        } else if c.is_ascii_digit() {
+            let start = i;
+            while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            // float continuation: `1.5` but not `1.method()` or `0..n`
+            if chars.get(i) == Some(&'.') && chars.get(i + 1).is_some_and(|d| d.is_ascii_digit()) {
+                i += 1;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text: chars[start..i].iter().collect(), line });
+        } else {
+            let rest: String = chars[i..chars.len().min(i + 3)].iter().collect();
+            let op = OPS3
+                .iter()
+                .find(|o| rest.starts_with(**o))
+                .or_else(|| OPS2.iter().find(|o| rest.starts_with(**o)));
+            let text = match op {
+                Some(o) => (*o).to_string(),
+                None => c.to_string(),
+            };
+            i += text.chars().count();
+            toks.push(Tok { kind: TokKind::Punct, text, line });
+        }
+    }
+    Lexed { toks, comments }
+}
+
+/// Lex an escaped (non-raw) string starting at the opening quote.
+/// Returns (source text, next index, next line).
+fn lex_escaped_string(chars: &[char], mut i: usize, mut line: usize) -> (String, usize, usize) {
+    let start = i;
+    i += 1; // opening quote
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => i += 2,
+            '"' => {
+                i += 1;
+                break;
+            }
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (chars[start..i.min(chars.len())].iter().collect(), i, line)
+}
+
+/// Lex a raw string body starting at the `#`s or `"` after the `r`/`br`
+/// prefix. Returns (source text from that point, next index, next line).
+fn lex_raw_string(chars: &[char], mut i: usize, mut line: usize) -> (String, usize, usize) {
+    let start = i;
+    let mut hashes = 0usize;
+    while chars.get(i) == Some(&'#') {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    while i < chars.len() {
+        if chars[i] == '\n' {
+            line += 1;
+            i += 1;
+        } else if chars[i] == '"' && chars[i + 1..].iter().take(hashes).filter(|c| **c == '#').count() == hashes {
+            i += 1 + hashes;
+            break;
+        } else {
+            i += 1;
+        }
+    }
+    (chars[start..i.min(chars.len())].iter().collect(), i, line)
+}
+
+/// Disambiguate `'a'` (char) from `'static` (lifetime) at a `'`.
+fn lex_char_or_lifetime(chars: &[char], mut i: usize, mut line: usize) -> (Tok, usize, usize) {
+    let start = i;
+    let start_line = line;
+    let next = chars.get(i + 1).copied();
+    let is_lifetime = matches!(next, Some(c) if c.is_alphabetic() || c == '_')
+        && chars.get(i + 2) != Some(&'\'');
+    if is_lifetime {
+        i += 1;
+        while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+            i += 1;
+        }
+        let text: String = chars[start..i].iter().collect();
+        return (Tok { kind: TokKind::Lifetime, text, line }, i, line);
+    }
+    i += 1; // opening quote
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => i += 2,
+            '\'' => {
+                i += 1;
+                break;
+            }
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    let text: String = chars[start..i.min(chars.len())].iter().collect();
+    (Tok { kind: TokKind::Char, text, line: start_line }, i, line)
+}
+
+/// Drop `#[cfg(test)]` items from the token stream: the attribute, any
+/// stacked attributes after it, and the item itself — either up to a `;`
+/// at depth 0 (`mod tests;`) or through its brace-matched body.
+///
+/// The match is exact (`cfg` `(` `test` `)`): `#[cfg(not(test))]` and
+/// `cfg!(test)` are *not* stripped.
+pub fn strip_cfg_test(toks: &[Tok]) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text == "#" && toks.get(i + 1).is_some_and(|t| t.text == "[") {
+            let (inner, end) = scan_attr(toks, i + 1);
+            let is_cfg_test = inner.len() == 4
+                && inner[0].text == "cfg"
+                && inner[1].text == "("
+                && inner[2].text == "test"
+                && inner[3].text == ")";
+            if is_cfg_test {
+                let mut j = end;
+                // stacked attributes on the same item
+                while j < toks.len()
+                    && toks[j].text == "#"
+                    && toks.get(j + 1).is_some_and(|t| t.text == "[")
+                {
+                    let (_, e2) = scan_attr(toks, j + 1);
+                    j = e2;
+                }
+                // the item body
+                let mut depth = 0i64;
+                let mut entered_brace = false;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "(" | "[" => depth += 1,
+                        "{" => {
+                            depth += 1;
+                            entered_brace = true;
+                        }
+                        ")" | "]" => depth -= 1,
+                        "}" => {
+                            depth -= 1;
+                            if entered_brace && depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        ";" if depth == 0 && !entered_brace => {
+                            j += 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// From the index of an attribute's `[`, return its inner tokens and the
+/// index just past the matching `]`.
+fn scan_attr<'a>(toks: &'a [Tok], open: usize) -> (Vec<&'a Tok>, usize) {
+    let mut depth = 0i64;
+    let mut inner = Vec::new();
+    let mut i = open;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "[" => {
+                depth += 1;
+                if depth > 1 {
+                    inner.push(&toks[i]);
+                }
+            }
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return (inner, i + 1);
+                }
+                inner.push(&toks[i]);
+            }
+            _ => inner.push(&toks[i]),
+        }
+        i += 1;
+    }
+    (inner, i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_numbers_and_longest_match_ops() {
+        assert_eq!(texts("a <<= 1 << 2 <= 3"), vec!["a", "<<=", "1", "<<", "2", "<=", "3"]);
+        assert_eq!(texts("x..=y .. z"), vec!["x", "..=", "y", "..", "z"]);
+        assert_eq!(texts("p::q->r"), vec!["p", "::", "q", "->", "r"]);
+        assert_eq!(texts("1.5 + v2.iter"), vec!["1.5", "+", "v2", ".", "iter"]);
+    }
+
+    #[test]
+    fn nested_block_comments_and_line_numbers() {
+        let l = lex("a /* x /* y */ z */ b\nc");
+        assert_eq!(l.toks.iter().map(|t| t.text.as_str()).collect::<Vec<_>>(), vec!["a", "b", "c"]);
+        assert_eq!(l.toks[1].line, 1);
+        assert_eq!(l.toks[2].line, 2);
+        assert_eq!(l.comments.len(), 1);
+    }
+
+    #[test]
+    fn raw_and_byte_strings_swallow_contents() {
+        let l = lex(r##"let s = r#"tag + 1 "quoted" "#; next"##);
+        let texts: Vec<_> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts[..3], ["let", "s", "="]);
+        assert_eq!(l.toks[3].kind, TokKind::Str);
+        assert_eq!(texts[4..], [";", "next"]);
+        let l2 = lex(r#"b"bytes \" still" x"#);
+        assert_eq!(l2.toks[0].kind, TokKind::Str);
+        assert_eq!(l2.toks[1].text, "x");
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let l = lex(r"'a' 'static '_ '\n' x");
+        let kinds: Vec<_> = l.toks.iter().map(|t| t.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![TokKind::Char, TokKind::Lifetime, TokKind::Lifetime, TokKind::Char, TokKind::Ident]
+        );
+    }
+
+    #[test]
+    fn strips_cfg_test_semicolon_and_brace_forms() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests;\nfn b() {}";
+        let kept = strip_cfg_test(&lex(src).toks);
+        let texts: Vec<_> = kept.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["fn", "a", "(", ")", "{", "}", "fn", "b", "(", ")", "{", "}"]);
+
+        let src2 = "#[cfg(test)]\nmod tests { fn t() { let x = vec![1]; } }\nfn c() {}";
+        let kept2 = strip_cfg_test(&lex(src2).toks);
+        let texts2: Vec<_> = kept2.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts2, vec!["fn", "c", "(", ")", "{", "}"]);
+    }
+
+    #[test]
+    fn does_not_strip_cfg_not_test() {
+        let src = "#[cfg(not(test))]\nfn keep() {}";
+        let kept = strip_cfg_test(&lex(src).toks);
+        assert!(kept.iter().any(|t| t.text == "keep"));
+    }
+
+    #[test]
+    fn strips_stacked_attributes_with_cfg_test() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\nfn gone() {}\nfn kept() {}";
+        let kept = strip_cfg_test(&lex(src).toks);
+        assert!(!kept.iter().any(|t| t.text == "gone"));
+        assert!(kept.iter().any(|t| t.text == "kept"));
+    }
+}

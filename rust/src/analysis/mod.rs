@@ -1,0 +1,165 @@
+//! `copml lint` — a source-level static analyzer for the protocol tree.
+//!
+//! COPML is an SPMD protocol: every party must allocate message tags in
+//! the same order, consume randomness in the same order, and never branch
+//! protocol state on anything local (wall clocks, thread identity, hash
+//! iteration order). A violation does not fail loudly — it shows up as a
+//! garbage decode or a 120 s receive timeout in a 50-party run. This
+//! module enforces the discipline *statically*, at the source level, with
+//! a hand-rolled lexer ([`lexer`]) and a small rule engine ([`rules`]) —
+//! no external parser crates, matching the repo's vendored-only policy.
+//!
+//! Run it as `copml lint` (CI gates on zero findings) or in-process via
+//! [`run_lint`].
+//!
+//! ## Rule catalog
+//!
+//! | rule | what it bans | where |
+//! |------|--------------|-------|
+//! | `tag-arith` | arithmetic on tag-like identifiers (`tag_base + i`) | everywhere except `net/tags.rs` |
+//! | `tag-computed` | inline tag expressions in `.send`/`.recv`-family calls | everywhere except `net/tags.rs` |
+//! | `map-iter` | iterating `HashMap`/`HashSet` in protocol state | `coordinator/`, `mpc/`, `net/` |
+//! | `wall-clock` | `Instant::now`/`SystemTime` outside the deadline machinery | `coordinator/`, `mpc/`, `net/` minus `net/{mailbox,mod,tcp}.rs` |
+//! | `thread-id` | `thread::current()`/`ThreadId` dependence | `coordinator/`, `mpc/`, `net/` |
+//! | `recv-unwrap` | bare `.unwrap()` on the same line as a receive call | `coordinator/`, `mpc/`, `net/` |
+//! | `unsafe-block` | `unsafe` outside `net/reactor.rs`, or without `// SAFETY:` | everywhere |
+//!
+//! `#[cfg(test)]` items are exempt (tests use literal tags and wall clocks
+//! freely), as are out-of-line test modules — files named `tests.rs`, the
+//! bodies of `#[cfg(test)] mod tests;` declarations. A finding can be
+//! suppressed in place with
+//!
+//! ```text
+//! // copml-lint: allow(rule-id) why this site is sound
+//! ```
+//!
+//! on the finding's line or the line above — the justification text is
+//! **mandatory**; a bare `allow(rule-id)` is ignored and the finding
+//! stands.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One lint rule's identity, for the catalog and the CI rule-count pin.
+pub struct Rule {
+    pub id: &'static str,
+    pub desc: &'static str,
+}
+
+/// The full rule catalog. The CI gate greps the rendered summary for
+/// `copml lint: {RULES.len()} rules`, so adding a rule means updating the
+/// pinned count in `.github/workflows/ci.yml` — a deliberate speed bump.
+pub const RULES: &[Rule] = &[
+    Rule { id: "tag-arith", desc: "no raw arithmetic on tag-like identifiers outside net/tags.rs" },
+    Rule { id: "tag-computed", desc: "transport calls take a pre-bound tag, not an inline expression" },
+    Rule { id: "map-iter", desc: "no HashMap/HashSet iteration in protocol state" },
+    Rule { id: "wall-clock", desc: "no Instant::now/SystemTime outside the deadline machinery" },
+    Rule { id: "thread-id", desc: "no thread::current()/ThreadId dependence in protocol state" },
+    Rule { id: "recv-unwrap", desc: "no bare unwrap() on receive paths" },
+    Rule { id: "unsafe-block", desc: "unsafe only in net/reactor.rs, and only with a // SAFETY: comment" },
+];
+
+/// One finding: file-relative path, 1-based line, rule id, message.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// The result of linting a source tree.
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// True when the tree is clean (the CI gate).
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report: one `path:line: [rule] msg` line per finding
+    /// plus a summary line the CI job greps verbatim.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            let _ = writeln!(s, "{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+        }
+        let _ = writeln!(
+            s,
+            "copml lint: {} rules, {} findings ({} files scanned)",
+            RULES.len(),
+            self.findings.len(),
+            self.files_scanned
+        );
+        s
+    }
+}
+
+/// Lint every `.rs` file under `root` (the crate's `src/` directory).
+/// Deterministic: files are visited in sorted path order and findings are
+/// sorted by (file, line, rule).
+pub fn run_lint(root: &Path) -> Result<LintReport, String> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("copml lint: cannot read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(rules::lint_file(&rel, &src));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(LintReport { findings, files_scanned: files.len() })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir)
+        .map_err(|e| format!("copml lint: cannot list {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("copml lint: bad entry under {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs")
+            // Out-of-line test modules (`#[cfg(test)] mod tests;` bodies)
+            // are exempt exactly like inline `#[cfg(test)]` items.
+            && path.file_stem().map_or(true, |s| s != "tests")
+        {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_catalog_ids_are_unique_and_counted() {
+        let mut ids: Vec<_> = RULES.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), RULES.len(), "duplicate rule id in RULES");
+        assert_eq!(RULES.len(), 7, "CI pins the rule count; update ci.yml when adding a rule");
+    }
+
+    #[test]
+    fn render_contains_the_ci_summary_line() {
+        let report = LintReport { findings: vec![], files_scanned: 3 };
+        assert!(report.ok());
+        assert!(report.render().contains("copml lint: 7 rules, 0 findings"));
+    }
+}

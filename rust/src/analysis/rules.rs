@@ -1,0 +1,480 @@
+//! The rule set behind `copml lint` — see [`crate::analysis`] for the
+//! catalog and suppression mechanics.
+//!
+//! Every rule is a pure function from a lexed file to findings. Rules see
+//! the token stream with `#[cfg(test)]` items already stripped (tests may
+//! use literal tags and wall clocks freely), plus the comment side table
+//! for the `SAFETY:` audit.
+
+use std::collections::{HashMap, HashSet};
+
+use super::lexer::{lex, strip_cfg_test, Comment, Tok, TokKind};
+use super::Finding;
+
+/// Arithmetic and compound-assignment operators banned next to tag-like
+/// identifiers. Comparisons and plain `=` stay legal; `<<`/`>>` are
+/// handled separately so `Vec<Tag>>` in a generic position never trips.
+const ARITH: &[&str] = &[
+    "+", "-", "*", "/", "%", "+=", "-=", "*=", "/=", "%=", "<<=", ">>=", "&=", "|=", "^=",
+];
+const SHIFT: &[&str] = &["<<", ">>"];
+
+/// Transport calls whose **second** argument is the message tag.
+const COMM: &[&str] = &["send", "recv", "recv_check", "recv_any", "try_recv", "forget"];
+
+/// Iteration methods that expose `HashMap`/`HashSet` ordering.
+const ITER_METHODS: &[&str] = &["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain"];
+
+/// Receive-shaped calls for the `recv-unwrap` rule.
+const RECVISH: &[&str] = &["recv", "recv_check", "recv_any", "try_recv", "pop_result", "pop_any", "try_pop"];
+
+/// Files allowed to read wall clocks: the receive-deadline machinery that
+/// *implements* timeouts (and the ledger plumbing in `net/mod.rs`). All
+/// other protocol-state code must take timing through the phase ledger.
+const WALL_CLOCK_ALLOW: &[&str] = &["net/mailbox.rs", "net/mod.rs", "net/tcp.rs"];
+
+/// The only file allowed to contain `unsafe` (the poll(2) FFI).
+const UNSAFE_ALLOW: &[&str] = &["net/reactor.rs"];
+
+/// Lint one file. `rel` is the path relative to the scanned source root,
+/// with `/` separators (e.g. `coordinator/protocol.rs`).
+pub fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let toks = strip_cfg_test(&lexed.toks);
+    let mut out = Vec::new();
+    rule_tag_arith(rel, &toks, &mut out);
+    rule_tag_computed(rel, &toks, &mut out);
+    rule_map_iter(rel, &toks, &mut out);
+    rule_wall_clock(rel, &toks, &mut out);
+    rule_thread_id(rel, &toks, &mut out);
+    rule_recv_unwrap(rel, &toks, &mut out);
+    rule_unsafe_block(rel, &toks, &lexed.comments, &mut out);
+    let sups = suppressions(&lexed.comments);
+    out.retain(|f| !sups.get(f.rule).is_some_and(|lines| lines.contains(&f.line)));
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Parse `// copml-lint: allow(rule-id) justification` comments. A
+/// suppression covers its own line and the line below, and is honored
+/// **only** when a non-empty justification follows the closing paren —
+/// an unjustified suppression is silently ignored, so the finding stands.
+fn suppressions(comments: &[Comment]) -> HashMap<String, HashSet<usize>> {
+    let mut map: HashMap<String, HashSet<usize>> = HashMap::new();
+    for c in comments {
+        let body = c.text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("copml-lint:") else { continue };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else { continue };
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim();
+        let justification = rest[close + 1..].trim();
+        if rule.is_empty() || justification.is_empty() {
+            continue;
+        }
+        let entry = map.entry(rule.to_string()).or_default();
+        entry.insert(c.line);
+        entry.insert(c.line + 1);
+    }
+    map
+}
+
+fn in_protocol_dirs(rel: &str) -> bool {
+    rel.starts_with("coordinator/") || rel.starts_with("mpc/") || rel.starts_with("net/")
+}
+
+/// Identifiers the tag-discipline rules treat as tags.
+fn is_tag_ident(t: &Tok) -> bool {
+    if t.kind != TokKind::Ident {
+        return false;
+    }
+    let l = t.text.to_ascii_lowercase();
+    l == "tag" || l.contains("tag_") || l.contains("_tag")
+}
+
+fn is_operand(t: Option<&Tok>) -> bool {
+    matches!(
+        t,
+        Some(t) if t.kind == TokKind::Ident
+            || t.kind == TokKind::Num
+            || t.text == ")"
+            || t.text == "]"
+    )
+}
+
+/// `tag-arith`: no raw arithmetic on tag-like identifiers outside the
+/// allocator module — tags come from `net::tags::TagAlloc`, never from
+/// `base + offset` math that can silently diverge across parties.
+fn rule_tag_arith(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if rel == "net/tags.rs" || rel.starts_with("analysis/") {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if !is_tag_ident(t) {
+            continue;
+        }
+        let next = toks.get(i + 1);
+        let after_op = |n: &Tok| {
+            // `tag << 2` yes; `Vec<Tag>> =` no (shift must feed an operand)
+            let follows = toks.get(i + 2);
+            matches!(follows, Some(f) if f.kind == TokKind::Ident || f.kind == TokKind::Num || f.text == "(")
+                && SHIFT.contains(&n.text.as_str())
+        };
+        let flagged_right = match next {
+            Some(n) if n.kind == TokKind::Punct && ARITH.contains(&n.text.as_str()) => true,
+            Some(n) if n.kind == TokKind::Punct && after_op(n) => true,
+            _ => false,
+        };
+        let flagged_left = i >= 2
+            && toks[i - 1].kind == TokKind::Punct
+            && (ARITH.contains(&toks[i - 1].text.as_str()) || SHIFT.contains(&toks[i - 1].text.as_str()))
+            && is_operand(toks.get(i - 2));
+        if flagged_right || flagged_left {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "tag-arith",
+                msg: format!(
+                    "raw arithmetic on tag-like identifier `{}` — allocate tags through `net::tags::TagAlloc` instead",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// `tag-computed`: the tag argument of `.send`/`.recv`/`.recv_check`/
+/// `.recv_any`/`.try_recv`/`.forget` must be a plain identifier path or
+/// literal, not an inline expression.
+fn rule_tag_computed(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if rel == "net/tags.rs" || rel.starts_with("analysis/") {
+        return;
+    }
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        let is_call = toks[i].text == "."
+            && toks[i + 1].kind == TokKind::Ident
+            && COMM.contains(&toks[i + 1].text.as_str())
+            && toks[i + 2].text == "(";
+        if !is_call {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text.clone();
+        let line = toks[i + 1].line;
+        // split the argument list at depth-1 commas
+        let mut depth = 1i64;
+        let mut j = i + 3;
+        let mut args: Vec<Vec<&Tok>> = vec![Vec::new()];
+        while j < toks.len() && depth > 0 {
+            match toks[j].text.as_str() {
+                "(" | "[" | "{" => {
+                    depth += 1;
+                    args.last_mut().expect("args starts non-empty").push(&toks[j]);
+                }
+                ")" | "]" | "}" => {
+                    depth -= 1;
+                    if depth > 0 {
+                        args.last_mut().expect("args starts non-empty").push(&toks[j]);
+                    }
+                }
+                "," if depth == 1 => args.push(Vec::new()),
+                _ => args.last_mut().expect("args starts non-empty").push(&toks[j]),
+            }
+            j += 1;
+        }
+        // one-argument `send` (mpsc channels etc.) carries no tag
+        if args.len() >= 2 {
+            let tag_arg = &args[1];
+            let simple = !tag_arg.is_empty()
+                && tag_arg.iter().all(|t| {
+                    t.kind == TokKind::Ident
+                        || t.kind == TokKind::Num
+                        || t.text == "."
+                        || t.text == "::"
+                });
+            if !simple {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line,
+                    rule: "tag-computed",
+                    msg: format!(
+                        "computed tag expression in `.{name}(..)` — bind the tag from `net::tags` to a local first"
+                    ),
+                });
+            }
+        }
+        i = j;
+    }
+}
+
+/// `map-iter`: no iteration over `HashMap`/`HashSet` in protocol state —
+/// iteration order is randomized per process and breaks SPMD lock-step.
+fn rule_map_iter(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_protocol_dirs(rel) {
+        return;
+    }
+    // names declared in this file with a HashMap/HashSet type or initializer
+    let mut names: HashSet<&str> = HashSet::new();
+    for i in 0..toks.len() {
+        if toks[i].text == "HashMap" || toks[i].text == "HashSet" {
+            if i >= 2
+                && (toks[i - 1].text == ":" || toks[i - 1].text == "=")
+                && toks[i - 2].kind == TokKind::Ident
+            {
+                names.insert(toks[i - 2].text.as_str());
+            }
+        }
+    }
+    for i in 0..toks.len() {
+        // name.iter() / name.keys() / …
+        if toks[i].kind == TokKind::Ident
+            && names.contains(toks[i].text.as_str())
+            && toks.get(i + 1).is_some_and(|t| t.text == ".")
+            && toks.get(i + 2).is_some_and(|t| ITER_METHODS.contains(&t.text.as_str()))
+            && toks.get(i + 3).is_some_and(|t| t.text == "(")
+        {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: toks[i].line,
+                rule: "map-iter",
+                msg: format!(
+                    "iteration over hash collection `{}` (`.{}()`) in protocol state — order is nondeterministic",
+                    toks[i].text,
+                    toks[i + 2].text
+                ),
+            });
+        }
+        // for … in <expr containing a hash-typed name> { …
+        if toks[i].text == "for" && toks[i].kind == TokKind::Ident {
+            let mut j = i + 1;
+            let mut found_in = None;
+            while j < toks.len() && j < i + 40 && toks[j].text != "{" {
+                if toks[j].text == "in" && toks[j].kind == TokKind::Ident {
+                    found_in = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(in_idx) = found_in {
+                let mut k = in_idx + 1;
+                while k < toks.len() && toks[k].text != "{" {
+                    if toks[k].kind == TokKind::Ident && names.contains(toks[k].text.as_str()) {
+                        out.push(Finding {
+                            file: rel.to_string(),
+                            line: toks[k].line,
+                            rule: "map-iter",
+                            msg: format!(
+                                "`for … in` over hash collection `{}` in protocol state — order is nondeterministic",
+                                toks[k].text
+                            ),
+                        });
+                        break;
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// `wall-clock`: no `Instant::now`/`SystemTime` in protocol state outside
+/// the receive-deadline machinery — timing goes through the phase ledger.
+fn rule_wall_clock(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_protocol_dirs(rel) || WALL_CLOCK_ALLOW.contains(&rel) {
+        return;
+    }
+    for i in 0..toks.len() {
+        let instant_now = toks[i].text == "Instant"
+            && toks.get(i + 1).is_some_and(|t| t.text == "::")
+            && toks.get(i + 2).is_some_and(|t| t.text == "now");
+        let system_time = toks[i].text == "SystemTime" && toks[i].kind == TokKind::Ident;
+        if instant_now || system_time {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: toks[i].line,
+                rule: "wall-clock",
+                msg: "wall-clock read in protocol state — route timing through the phase ledger (or justify with a suppression)".to_string(),
+            });
+        }
+    }
+}
+
+/// `thread-id`: no `thread::current()`/`ThreadId` dependence in protocol
+/// state — party identity comes from `Transport::id`, never the OS.
+fn rule_thread_id(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_protocol_dirs(rel) {
+        return;
+    }
+    for i in 0..toks.len() {
+        let current = toks[i].text == "thread"
+            && toks.get(i + 1).is_some_and(|t| t.text == "::")
+            && toks.get(i + 2).is_some_and(|t| t.text == "current");
+        let thread_id = toks[i].text == "ThreadId" && toks[i].kind == TokKind::Ident;
+        if current || thread_id {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: toks[i].line,
+                rule: "thread-id",
+                msg: "thread-identity dependence in protocol state — party identity is `Transport::id`".to_string(),
+            });
+        }
+    }
+}
+
+/// `recv-unwrap`: no bare `.unwrap()` on the same line as a receive call —
+/// a failed receive must surface its cause (`expect`/`?`), not a bare
+/// panic with no context.
+fn rule_recv_unwrap(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_protocol_dirs(rel) {
+        return;
+    }
+    let mut unwrap_lines: HashSet<usize> = HashSet::new();
+    let mut recv_lines: HashSet<usize> = HashSet::new();
+    for i in 0..toks.len() {
+        if toks[i].text == "." && toks.get(i + 2).is_some_and(|t| t.text == "(") {
+            if let Some(name) = toks.get(i + 1) {
+                if name.kind == TokKind::Ident {
+                    if name.text == "unwrap" {
+                        unwrap_lines.insert(name.line);
+                    } else if RECVISH.contains(&name.text.as_str()) {
+                        recv_lines.insert(name.line);
+                    }
+                }
+            }
+        }
+    }
+    let mut lines: Vec<usize> = unwrap_lines.intersection(&recv_lines).copied().collect();
+    lines.sort_unstable();
+    for line in lines {
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: "recv-unwrap",
+            msg: "bare `unwrap()` on a receive path — use `expect` with context or propagate the error".to_string(),
+        });
+    }
+}
+
+/// `unsafe-block`: every `unsafe` must live in an allow-listed file and
+/// carry a `// SAFETY:` comment within the 3 preceding lines.
+fn rule_unsafe_block(rel: &str, toks: &[Tok], comments: &[Comment], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if !UNSAFE_ALLOW.contains(&rel) {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "unsafe-block",
+                msg: format!(
+                    "`unsafe` outside the allow-list ({}) — the crate is `deny(unsafe_code)` everywhere else",
+                    UNSAFE_ALLOW.join(", ")
+                ),
+            });
+            continue;
+        }
+        let documented = comments
+            .iter()
+            .any(|c| c.text.contains("SAFETY:") && c.line <= t.line && t.line - c.line <= 3);
+        if !documented {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "unsafe-block",
+                msg: "`unsafe` without a `// SAFETY:` comment within the 3 preceding lines".to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<&'static str> {
+        lint_file(rel, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn tag_arith_fires_on_offsets_and_shifts() {
+        assert_eq!(rules_fired("mpc/x.rs", "let t = tag_base + i;"), vec!["tag-arith"]);
+        assert_eq!(rules_fired("mpc/x.rs", "let t = 2 * round_tag;"), vec!["tag-arith"]);
+        assert_eq!(rules_fired("mpc/x.rs", "let t = tag_hi << 4;"), vec!["tag-arith"]);
+        assert_eq!(rules_fired("mpc/x.rs", "my_tag += 1;"), vec!["tag-arith"]);
+    }
+
+    #[test]
+    fn tag_arith_allows_compares_assigns_and_generics() {
+        assert!(rules_fired("mpc/x.rs", "if tag_x == other { }").is_empty());
+        assert!(rules_fired("mpc/x.rs", "let tag_x = party.tag(kind);").is_empty());
+        assert!(rules_fired("mpc/x.rs", "fn f(tag: Tag) -> Vec<Tag> { v }").is_empty());
+        assert!(rules_fired("mpc/x.rs", "let m: HashMap<u64, Vec<Tag>> = make();").is_empty());
+        // the allocator module itself is exempt
+        assert!(rules_fired("net/tags.rs", "let t = tag_base + 1;").is_empty());
+    }
+
+    #[test]
+    fn tag_computed_fires_on_inline_expressions_only() {
+        assert_eq!(rules_fired("mpc/x.rs", "net.send(to, base + i, data);"), vec!["tag-computed"]);
+        assert_eq!(rules_fired("net/x.rs", "net.recv(from, self.tag(kind))"), vec!["tag-computed"]);
+        assert!(rules_fired("mpc/x.rs", "net.send(to, tag_x, data);").is_empty());
+        assert!(rules_fired("mpc/x.rs", "net.recv(from, tags::DEPART)").is_empty());
+        // mpsc-style one-argument send carries no tag
+        assert!(rules_fired("coordinator/x.rs", "tx.send(result).ok();").is_empty());
+    }
+
+    #[test]
+    fn map_iter_fires_in_protocol_dirs_only() {
+        let src = "let mut m: HashMap<u64, u64> = HashMap::new();\nfor (k, v) in m.iter() { }";
+        assert_eq!(rules_fired("coordinator/x.rs", src), vec!["map-iter", "map-iter"]);
+        assert!(rules_fired("report.rs", src).is_empty());
+        // lookups and mutation stay legal
+        let ok = "let mut m: HashMap<u64, u64> = HashMap::new();\nm.insert(1, 2); let v = m.get(&1);";
+        assert!(rules_fired("coordinator/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_and_thread_id_scoping() {
+        assert_eq!(rules_fired("coordinator/x.rs", "let t0 = Instant::now();"), vec!["wall-clock"]);
+        assert!(rules_fired("net/tcp.rs", "let t0 = Instant::now();").is_empty());
+        assert_eq!(
+            rules_fired("mpc/x.rs", "let me = thread::current().id();"),
+            vec!["thread-id"]
+        );
+    }
+
+    #[test]
+    fn recv_unwrap_is_same_line_only() {
+        assert_eq!(
+            rules_fired("net/x.rs", "let v = net.recv_check(from, tag).unwrap();"),
+            vec!["recv-unwrap"]
+        );
+        let multi = "let v = net\n    .recv_check(from, tag);\nlet w = opt.unwrap();";
+        assert!(rules_fired("net/x.rs", multi).is_empty());
+    }
+
+    #[test]
+    fn unsafe_audit_checks_allow_list_and_safety_comment() {
+        assert_eq!(rules_fired("mpc/x.rs", "unsafe { go() }"), vec!["unsafe-block"]);
+        assert_eq!(rules_fired("net/reactor.rs", "unsafe { go() }"), vec!["unsafe-block"]);
+        let ok = "// SAFETY: fd is live and repr(C)\nunsafe { go() }";
+        assert!(rules_fired("net/reactor.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn suppression_needs_a_justification() {
+        let justified =
+            "// copml-lint: allow(wall-clock) ledger start stamp, not protocol state\nlet t = Instant::now();";
+        assert!(rules_fired("coordinator/x.rs", justified).is_empty());
+        let bare = "// copml-lint: allow(wall-clock)\nlet t = Instant::now();";
+        assert_eq!(rules_fired("coordinator/x.rs", bare), vec!["wall-clock"]);
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests { fn t() { let x = tag_base + 1; } }";
+        assert!(rules_fired("mpc/x.rs", src).is_empty());
+    }
+}

@@ -38,6 +38,7 @@ pub const VALUE_FLAGS: &[&str] = &[
     "n",
     "offline",
     "peers",
+    "root",
     "runtime",
     "seed",
     "stragglers",

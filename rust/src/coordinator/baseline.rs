@@ -221,12 +221,14 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
     let plan_b = &task.batches;
     let bgw = cfg.flavor == MpcFlavor::Bgw;
     let mut ledger = BaselineLedger::default();
+    // copml-lint: allow(wall-clock) phase-ledger stamp: measures elapsed time, never steers protocol state
     let mut mark_t = Instant::now();
     let mut mark_b = party.net.bytes_sent();
     macro_rules! tick {
         ($phase:expr) => {{
             ledger.seconds[$phase] += mark_t.elapsed().as_secs_f64();
             ledger.bytes[$phase] += party.net.bytes_sent() - mark_b;
+            // copml-lint: allow(wall-clock) phase-ledger stamp: measures elapsed time, never steers protocol state
             mark_t = Instant::now();
             mark_b = party.net.bytes_sent();
         }};

@@ -214,6 +214,30 @@ impl CopmlConfig {
         if self.k == 0 || self.t == 0 {
             return Err("K and T must be ≥ 1".into());
         }
+        // Tag-space capacity (`net::tags`): every iteration claims one
+        // ROUND-window stride and every batch one ENCODE-window stride.
+        // A config that outruns either window would panic mid-run inside
+        // the allocator — reject it here with the budget named instead
+        // (checked before batch geometry so the tag-window diagnosis wins
+        // for absurd batch counts).
+        if (self.iters as u64) > crate::net::tags::max_iters() {
+            return Err(format!(
+                "iters={} exceeds the ROUND tag window capacity ({} iterations of {} \
+                 tags each — see net::tags)",
+                self.iters,
+                crate::net::tags::max_iters(),
+                crate::net::tags::ROUND_STRIDE
+            ));
+        }
+        if (self.batches as u64) > crate::net::tags::max_batches() {
+            return Err(format!(
+                "batches={} exceeds the ENCODE tag window capacity ({} batches of {} \
+                 tags each — see net::tags)",
+                self.batches,
+                crate::net::tags::max_batches(),
+                crate::net::tags::ENCODE_STRIDE
+            ));
+        }
         // Mini-batch geometry — the shared checker, so the trainers, the
         // baselines, and the cost model agree on which geometries are
         // legal (every batch needs ≥ K real rows and a schedule slot).

@@ -62,6 +62,7 @@ use crate::field::{par, MatShape};
 use crate::lcc;
 use crate::mpc::{Dealer, Offline, OfflineMode, Party};
 use crate::net::local::Hub;
+use crate::net::tags::{self, SpmdTagTrace};
 use crate::net::{drive, Transport};
 use crate::poly;
 use crate::runtime::{native::NativeKernel, Engine, GradKernel, KernelServer};
@@ -107,6 +108,11 @@ pub struct ClientLedger {
     /// client exit. Zero after any clean run — the mailbox-hygiene
     /// regression guard.
     pub pending_at_exit: usize,
+    /// `(from, tag)` pairs that were delivered again after the mailbox
+    /// had already drained them (debug builds; 0 in release). Any nonzero
+    /// count means two protocol steps shared a tag — the dynamic
+    /// complement of the static window discipline in [`crate::net::tags`].
+    pub tag_reuse: usize,
 }
 
 impl ClientLedger {
@@ -276,6 +282,7 @@ pub fn run_client(
     // traffic, bit-identical to `Dealer::deal(..)[id]`); the distributed
     // provider generates it collectively with the other parties (DN07,
     // real bytes — ledger phase 0).
+    // copml-lint: allow(wall-clock) offline phase-ledger stamp: measures elapsed time, never steers protocol state
     let t0 = Instant::now();
     let bytes_mark = net.bytes_sent();
     let pool = cfg.offline.provider().provide(
@@ -330,17 +337,25 @@ fn run_clients<T: Transport + Send + 'static>(
         OfflineMode::Distributed => (0..n).map(|_| None).collect(),
     };
 
+    // Cross-party SPMD fingerprint (debug builds): every in-process party
+    // reports each tag allocation into one shared trace, so a divergence
+    // panics at the divergent allocation with the step name instead of
+    // surfacing as a 120 s receive timeout. See `net::tags::SpmdTagTrace`.
+    let trace = if cfg!(debug_assertions) { Some(SpmdTagTrace::new(n)) } else { None };
+
     let mut handles = Vec::new();
     for (ep, dealt) in transports.into_iter().zip(predealt) {
         let ctx = ClientCtx { cfg: cfg.clone(), task: task.clone(), kernel: mk_kernel() };
         let seed = cfg.seed;
         let demand = demand.clone();
+        let trace = trace.clone();
         handles.push(std::thread::spawn(move || {
             let (pool, offline_s, offline_bytes) = match dealt {
                 // Crypto-service provider: pool already dealt, free on
                 // the wire — the offline ledger row stays zero.
                 Some(pool) => (pool, 0.0, 0),
                 None => {
+                    // copml-lint: allow(wall-clock) offline phase-ledger stamp: measures elapsed time, never steers protocol state
                     let t0 = Instant::now();
                     let bytes_mark = ep.bytes_sent();
                     let pool = ctx.cfg.offline.provider().provide(
@@ -356,6 +371,9 @@ fn run_clients<T: Transport + Send + 'static>(
                 }
             };
             let party = Party::new(&ep, ctx.cfg.t, ctx.task.f, pool, seed);
+            if let Some(tr) = trace {
+                party.set_tag_trace(tr);
+            }
             let mut out = client_main(&party, ctx);
             out.ledger.seconds[0] = offline_s;
             out.ledger.bytes[0] = offline_bytes;
@@ -401,6 +419,15 @@ fn run_clients<T: Transport + Send + 'static>(
         if r.w_final != completers[0].w_final {
             return Err("clients disagree on the final model".into());
         }
+    }
+
+    // End-of-run SPMD check (debug builds): every completer must have
+    // walked the full agreed tag-allocation sequence — a shorter walk is
+    // a divergence `record` alone cannot see. Halted clients legitimately
+    // stop early and are exempt.
+    if let Some(tr) = &trace {
+        let done: Vec<usize> = completers.iter().map(|r| r.id).collect();
+        tr.assert_converged(&done);
     }
 
     // God-mode trace: reconstruct w^{(t)} from T+1 completers' share
@@ -515,6 +542,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     }
     impl PhaseTimer {
         fn reset(&mut self, party: &Party) {
+            // copml-lint: allow(wall-clock) phase-ledger stamp: measures elapsed time, never steers protocol state
             self.start = Instant::now();
             self.bytes_mark = party.net.bytes_sent();
         }
@@ -524,15 +552,20 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             self.reset(party);
         }
     }
+    // copml-lint: allow(wall-clock) phase-ledger start stamp: measures elapsed time, never steers protocol state
     let mut timer = PhaseTimer { start: Instant::now(), bytes_mark: party.net.bytes_sent() };
+
+    // All protocol tags come from the typed windows of `net::tags`; the
+    // seeks below are SPMD steps every party performs at the same point.
+    party.seek_tags(tags::SETUP);
 
     // ---- Phase: share the dataset (Algorithm 1, lines 1–3) -------------
     let ranges = padded_ranges(rows, n);
     let (lo, hi) = ranges[me];
     let my_x = &task.x_q[lo * d..hi * d];
     let my_y = &task.y_q[lo..hi];
-    let tag_x = party.fresh_tag();
-    let tag_y = party.fresh_tag();
+    let tag_x = party.tag("share.x");
+    let tag_y = party.tag("share.y");
     let own_x = party.share_out(my_x, tag_x);
     let own_y = party.share_out(my_y, tag_y);
     // Assemble [X]_me, [y]_me in global row order.
@@ -573,16 +606,17 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     // Every batch is encoded ONE time here and reused by every epoch that
     // revisits it — the one-shot amortization that makes mini-batch
     // training pay the encode exchange exactly as often as full-batch
-    // does. Tags are allocated per batch inside the loop; all parties
-    // iterate batches in the same order, so the SPMD tag sequence stays
-    // aligned.
+    // does. Each batch seeks its own `tags::encode_window(b)`; all
+    // parties iterate batches in the same order, so the SPMD tag
+    // sequence stays aligned.
     let enc = lcc::Encoder::standard(f, k, t, n);
     let (targets, sources) = encode_roles(n, t, me, cfg.subgroups);
     let source_pts: Vec<u64> = sources.iter().map(|&i| party.lambdas[i]).collect();
     let mut rec = shamir::Reconstructor::new(f, &source_pts);
     let mut x_tildes: Vec<Vec<u64>> = Vec::with_capacity(nb);
     let mut shapes_k: Vec<MatShape> = Vec::with_capacity(nb);
-    for &(blo, bhi) in plan_b.ranges() {
+    for (bidx, &(blo, bhi)) in plan_b.ranges().iter().enumerate() {
+        party.seek_tags(tags::encode_window(bidx));
         let rows_bk = (bhi - blo) / k;
         // Partition [X_b] into K parts + T mask shares from the offline
         // pool (per-batch masks — the Demand charges Σ_b rows_b/K once).
@@ -592,7 +626,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         let masks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(rows_bk * d)).collect();
         let all_parts: Vec<&[u64]> =
             parts.into_iter().chain(masks.iter().map(|m| m.as_slice())).collect();
-        let tag_xenc = party.fresh_tag();
+        let tag_xenc = party.tag("encode.x");
         // Compute and send [X̃_{b,i}]_me for every target i.
         let mut own_enc_share: Option<Vec<u64>> = None;
         for &i in &targets {
@@ -667,6 +701,10 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             if kill_at == Some(iter) {
                 return Err(format!("killed at iteration {iter} by the fault plan"));
             }
+            // Every tag of this round comes from the iteration's own
+            // ROUND_STRIDE-wide window — disjoint from every other round
+            // by construction (`net::tags`).
+            party.seek_tags(tags::round_window(iter));
             // One-line runtime marker (grep-asserted by CI): the iteration
             // loop below runs through the explicit per-round states of
             // `coordinator::rounds` under either runtime.
@@ -695,7 +733,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             }
             // ---- encode the model (Eq. 4; lines 12–15) ------------------
             let vmasks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(d)).collect();
-            let tag_wenc = party.fresh_tag();
+            let tag_wenc = party.tag("encode.w");
             let mut own_wenc: Option<Vec<u64>> = None;
             for &i in &live_targets {
                 let mut buf = w_share.clone();
@@ -764,8 +802,8 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             timer.tick(&mut ledger, 5, party);
 
             // ---- share the result + first-arrival quorum (line 16b) -----
-            let tag_res = party.fresh_tag();
-            let tag_roster = party.fresh_tag();
+            let tag_res = party.tag("round.res");
+            let tag_roster = party.tag("round.roster");
             let own_res = party.share_out(&f_mine, tag_res);
             let live_now = party.live_ids();
             let mut newly_excluded: Vec<usize> = Vec::new();
@@ -876,6 +914,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         }
 
         // ---- final: open the model (lines 25–27) ------------------------
+        party.seek_tags(tags::FINAL);
         Ok(party.open_broadcast(&w_share, t))
     })();
 
@@ -884,6 +923,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         Err(reason) => (None, Some(reason)),
     };
     ledger.pending_at_exit = party.net.pending_messages();
+    ledger.tag_reuse = party.net.tag_reuse();
     if let Some(reason) = &halted {
         // Departure: peers' receives blocked on this party fail fast with
         // the reason instead of stalling, and our mailbox stops growing.

@@ -44,6 +44,7 @@
 //!                 └────────────────────────────────────────────────┘
 //! ```
 
+use crate::net::tags::Tag;
 use crate::net::{PartyId, QuorumOutcome, RoundState, Step, Transport, TryRecv};
 
 use super::protocol::decode_roster_msg;
@@ -57,7 +58,7 @@ use super::protocol::decode_roster_msg;
 /// "quorum infeasible" wording as the blocking gather when every
 /// remaining peer is gone.
 pub struct AwaitEncodedGradients {
-    tag: u64,
+    tag: Tag,
     need: usize,
     /// Arrived contributions (leader's own seeded at construction).
     got: Vec<(PartyId, Vec<u64>)>,
@@ -71,7 +72,7 @@ impl AwaitEncodedGradients {
     pub fn new(
         me: PartyId,
         peers: &[PartyId],
-        tag: u64,
+        tag: Tag,
         need: usize,
         own: Vec<u64>,
     ) -> AwaitEncodedGradients {
@@ -153,12 +154,12 @@ impl RoundState for AwaitEncodedGradients {
 /// validated ([`decode_roster_msg`]) the moment it arrives.
 pub struct AwaitQuorumRoster {
     leader: PartyId,
-    tag: u64,
+    tag: Tag,
     n: usize,
 }
 
 impl AwaitQuorumRoster {
-    pub fn new(leader: PartyId, tag: u64, n: usize) -> AwaitQuorumRoster {
+    pub fn new(leader: PartyId, tag: Tag, n: usize) -> AwaitQuorumRoster {
         AwaitQuorumRoster { leader, tag, n }
     }
 }
@@ -186,13 +187,13 @@ impl RoundState for AwaitQuorumRoster {
 /// filled — the first unfilled member is always the one reported, no
 /// matter in which order later peers were discovered dead.
 struct OrderedGather {
-    tag: u64,
+    tag: Tag,
     members: Vec<PartyId>,
     slots: Vec<Option<Vec<u64>>>,
 }
 
 impl OrderedGather {
-    fn new(me: PartyId, members: &[PartyId], tag: u64, own: Vec<u64>, what: &str) -> OrderedGather {
+    fn new(me: PartyId, members: &[PartyId], tag: Tag, own: Vec<u64>, what: &str) -> OrderedGather {
         let mut own = Some(own);
         let mut slots: Vec<Option<Vec<u64>>> = vec![None; members.len()];
         for (idx, &j) in members.iter().enumerate() {
@@ -244,7 +245,7 @@ pub struct AwaitQuorumShares {
 }
 
 impl AwaitQuorumShares {
-    pub fn new(me: PartyId, members: &[PartyId], tag: u64, own: Vec<u64>) -> AwaitQuorumShares {
+    pub fn new(me: PartyId, members: &[PartyId], tag: Tag, own: Vec<u64>) -> AwaitQuorumShares {
         AwaitQuorumShares {
             inner: OrderedGather::new(me, members, tag, own, "named in the quorum"),
         }
@@ -273,7 +274,7 @@ pub struct AwaitAllResults {
 }
 
 impl AwaitAllResults {
-    pub fn new(me: PartyId, live: &[PartyId], tag: u64, own: Vec<u64>) -> AwaitAllResults {
+    pub fn new(me: PartyId, live: &[PartyId], tag: Tag, own: Vec<u64>) -> AwaitAllResults {
         AwaitAllResults { inner: OrderedGather::new(me, live, tag, own, "gathered") }
     }
 }

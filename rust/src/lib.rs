@@ -39,7 +39,12 @@
 //! the paper's evaluation section (the mapping lives in `EXPERIMENTS.md`).
 
 #![deny(rustdoc::broken_intra_doc_links)]
+// `unsafe` is deny (not forbid) so the one allow-listed module —
+// `net::reactor`, the poll(2) FFI — can opt back in locally. `copml lint`'s
+// unsafe audit enforces the same allow-list at the source level.
+#![deny(unsafe_code)]
 
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

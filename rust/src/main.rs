@@ -20,10 +20,15 @@
 //!               [--runtime threaded|event]   # header note only (bytes are equal)
 //! copml calibrate                                  # machine calibration
 //! copml info                                       # config/threshold explorer
+//! copml lint    [--root DIR]   # protocol static analyzer (CI gates on 0 findings)
 //! ```
 //!
 //! Full usage and examples live in the top-level README (the distributed
 //! mode — launching N `copml party` processes — has its own section).
+
+// The binary never needs `unsafe`; the library's single allow-listed
+// unsafe module is `net::reactor` (see `copml::analysis`).
+#![forbid(unsafe_code)]
 
 use copml::bench::{BaselineCost, Calibration, CopmlCost};
 use copml::cli::Args;
@@ -51,9 +56,10 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         Some("calibrate") => cmd_calibrate(),
         Some("info") => cmd_info(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: copml <train|party|bench|calibrate|info> [options]   (see README)"
+                "usage: copml <train|party|bench|calibrate|info|lint> [options]   (see README)"
             );
             std::process::exit(2);
         }
@@ -356,6 +362,35 @@ fn cmd_calibrate() -> Result<(), String> {
     println!("  gradient kernel     : {:.1} M cells/s", cal.kernel_cells_per_s / 1e6);
     println!("  shamir share eval   : {:.1} M element·shares/s", cal.share_per_s / 1e6);
     Ok(())
+}
+
+/// `copml lint`: run the protocol static analyzer over the crate sources
+/// (rule catalog in [`copml::analysis`]). Prints one line per finding plus
+/// the summary line CI greps, and fails (exit 1) on any finding.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => ["rust/src", "src"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.join("lib.rs").is_file())
+            // Fall back to the build-time source path (e.g. `cargo run --
+            // lint` from an arbitrary working directory).
+            .unwrap_or_else(|| {
+                std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))
+            }),
+    };
+    let report = copml::analysis::run_lint(&root)?;
+    print!("{}", report.render());
+    if report.ok() {
+        Ok(())
+    } else {
+        Err(format!(
+            "{} lint finding(s) under {}",
+            report.findings.len(),
+            root.display()
+        ))
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<(), String> {

@@ -28,10 +28,12 @@
 pub mod dealer;
 pub mod offline;
 
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::field::{vecops, Field};
+use crate::net::tags::{self, SpmdTagTrace, Tag, TagAlloc, TagRange};
 use crate::net::{drive, PartyId, RoundState, Step, Transport, TryRecv};
 use crate::poly;
 use crate::prng::Rng;
@@ -67,7 +69,7 @@ fn party_rng(seed: u64, id: PartyId) -> Rng {
 struct AwaitKingOpen {
     me: PartyId,
     king: PartyId,
-    tag_down: u64,
+    tag_down: Tag,
 }
 
 impl RoundState for AwaitKingOpen {
@@ -100,8 +102,8 @@ pub(crate) fn open_via_king_set(
     net: &dyn Transport,
     f: Field,
     coeffs: &[u64],
-    tag_up: u64,
-    tag_down: u64,
+    tag_up: Tag,
+    tag_down: Tag,
     share: &[u64],
     senders: &[PartyId],
     recipients: &[PartyId],
@@ -144,8 +146,8 @@ pub(crate) fn open_via_king(
     net: &dyn Transport,
     f: Field,
     coeffs: &[u64],
-    tag_up: u64,
-    tag_down: u64,
+    tag_up: Tag,
+    tag_down: Tag,
     share: &[u64],
     deg: usize,
 ) -> Vec<u64> {
@@ -168,7 +170,10 @@ pub struct Party<'a> {
     offline: RefCell<Offline>,
     /// Party-local randomness (for online resharing in BGW).
     rng: RefCell<Rng>,
-    next_tag: Cell<u64>,
+    /// Tag allocator over the typed windows of [`tags`] (default:
+    /// [`tags::FLAT`], counting from 0 like the legacy counter). All
+    /// parties must allocate — and seek — in the same SPMD order.
+    tags: RefCell<TagAlloc>,
     /// Cached reconstruction coefficient rows keyed by contributor set,
     /// FIFO-bounded at [`Party::RECON_CACHE_CAP`] (insertion-order deque
     /// evicts the oldest set). Contributor sets are roster prefixes, so
@@ -202,17 +207,40 @@ impl<'a> Party<'a> {
             lambdas: shamir::lambda_points(n),
             offline: RefCell::new(offline),
             rng: RefCell::new(party_rng(seed, net.id())),
-            next_tag: Cell::new(0),
+            tags: RefCell::new(TagAlloc::new(net.id(), tags::FLAT)),
             recon_cache: RefCell::new((HashMap::new(), VecDeque::new())),
             live: RefCell::new(vec![true; n]),
         }
     }
 
-    /// Allocate the next protocol-step tag (identical across parties).
-    pub fn fresh_tag(&self) -> u64 {
-        let t = self.next_tag.get();
-        self.next_tag.set(t + 1);
-        t
+    /// Allocate the next protocol-step tag (identical across parties)
+    /// from the current [`tags`] window. Growth is bounded: the
+    /// allocator panics with the window name if a window is exhausted,
+    /// so a long-running session can never bleed into the `1 << 62`
+    /// offline range (see [`tags::OFFLINE`]); the coordinator's
+    /// `validate` rejects configs that would get near a window edge
+    /// up front.
+    pub fn fresh_tag(&self) -> Tag {
+        self.tag("step")
+    }
+
+    /// [`Party::fresh_tag`] with a named step `kind`, carried into the
+    /// SPMD divergence diagnostics of [`SpmdTagTrace`].
+    pub fn tag(&self, kind: &'static str) -> Tag {
+        self.tags.borrow_mut().fresh(kind)
+    }
+
+    /// Jump the allocator to the start of `window` (e.g. the
+    /// per-iteration [`tags::round_window`]). A seek is itself an SPMD
+    /// step: every party must seek at the same point of the protocol.
+    pub fn seek_tags(&self, window: TagRange) {
+        self.tags.borrow_mut().seek(window);
+    }
+
+    /// Attach the shared cross-party allocation fingerprint (debug
+    /// builds; see [`SpmdTagTrace`]).
+    pub fn set_tag_trace(&self, trace: Arc<SpmdTagTrace>) {
+        self.tags.borrow_mut().attach_trace(trace);
     }
 
     // ---------------------------------------------------------------
@@ -338,7 +366,7 @@ impl<'a> Party<'a> {
     /// shares — any `deg+1` points interpolate exactly, so the value is
     /// independent of the roster.
     pub fn open_broadcast(&self, share: &[u64], deg: usize) -> Vec<u64> {
-        let tag = self.fresh_tag();
+        let tag = self.tag("open.bcast");
         let live = self.live_ids();
         for &peer in &live {
             if peer != self.id {
@@ -376,8 +404,8 @@ impl<'a> Party<'a> {
     /// and broadcasts the value to the live roster (`O(N)` total
     /// communication — the BH08-style opening).
     pub fn open_king(&self, share: &[u64], deg: usize) -> Vec<u64> {
-        let tag_up = self.fresh_tag();
-        let tag_down = self.fresh_tag();
+        let tag_up = self.tag("king.up");
+        let tag_down = self.tag("king.down");
         assert!(
             self.is_live(0),
             "king (party 0) is gone — king openings are infeasible"
@@ -401,7 +429,7 @@ impl<'a> Party<'a> {
     /// [`Party::receive_share_from`]. The sharing polynomial is evaluated
     /// at all `N` points regardless of the roster, so the share values —
     /// and hence the trajectory — do not depend on who is excluded.
-    pub fn share_out(&self, value: &[u64], tag: u64) -> Vec<u64> {
+    pub fn share_out(&self, value: &[u64], tag: Tag) -> Vec<u64> {
         let shares = shamir::share_at(
             self.f,
             value,
@@ -422,7 +450,7 @@ impl<'a> Party<'a> {
 
     /// Receive the share of a value dealt by `from` via
     /// [`Party::share_out`].
-    pub fn receive_share_from(&self, from: PartyId, tag: u64) -> Vec<u64> {
+    pub fn receive_share_from(&self, from: PartyId, tag: Tag) -> Vec<u64> {
         self.net.recv(from, tag)
     }
 
@@ -437,7 +465,7 @@ impl<'a> Party<'a> {
     /// polynomial; the new share is the reconstruction-weighted sum of the
     /// received sub-shares. `O(N²)` total communication.
     pub fn degree_reduce_bgw(&self, z: &[u64]) -> Vec<u64> {
-        let tag = self.fresh_tag();
+        let tag = self.tag("reduce.bgw");
         let own_sub = self.share_out(z, tag);
         // Gather sub-shares from the first 2T+1 parties (sufficient to
         // interpolate the degree-2T polynomial); later parties still

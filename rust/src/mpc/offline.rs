@@ -52,6 +52,7 @@
 use std::collections::HashMap;
 
 use crate::field::{vecops, Field};
+use crate::net::tags::{self, TagAlloc};
 use crate::net::{PartyId, Transport, Wire};
 use crate::poly;
 use crate::prng::Rng;
@@ -59,11 +60,14 @@ use crate::shamir;
 
 use super::dealer::Dealer;
 
-/// First tag of the offline phase's private tag range. The online
-/// protocol allocates tags from 0 upward; the offline phase (which runs
-/// first, over the same transport) allocates from here, so the two can
+/// First tag of the offline phase's private tag range
+/// ([`tags::OFFLINE`]). The online protocol allocates from the windows
+/// below it; disjointness is const-asserted in [`tags`], so the two can
 /// never collide.
-pub const TAG_BASE: u64 = 1 << 62;
+///
+/// [`tags`]: crate::net::tags
+/// [`tags::OFFLINE`]: crate::net::tags::OFFLINE
+pub const TAG_BASE: u64 = crate::net::tags::OFFLINE.start;
 
 /// Stream label for the per-party offline-phase RNG ("OFFL" in the high
 /// bits, party id in the low bits). Distinct from every `mpc::dealer`
@@ -391,14 +395,16 @@ struct Session<'a> {
     lambdas: Vec<u64>,
     matrix: Vec<Vec<u64>>,
     rng: Rng,
-    tag: u64,
+    /// Allocator over [`tags::OFFLINE`] — the phase's private window.
+    /// Separate-process parties cannot share an in-process
+    /// [`tags::SpmdTagTrace`], so divergence here is caught by the
+    /// mailbox's `(from, tag)` reuse counter instead.
+    tags: TagAlloc,
 }
 
 impl Session<'_> {
     fn fresh_tag(&mut self) -> u64 {
-        let t = self.tag;
-        self.tag += 1;
-        t
+        self.tags.fresh("offline.step")
     }
 
     /// Deal a degree-`deg` sharing of `vals` to everyone and collect every
@@ -552,7 +558,7 @@ pub fn generate(
         lambdas: shamir::lambda_points(n),
         matrix: extraction_matrix(f, n, t),
         rng: Rng::seed_from_u64(seed).fork(STREAM_OFFLINE | net.id() as u64),
-        tag: TAG_BASE,
+        tags: TagAlloc::new(net.id(), tags::OFFLINE),
     };
     let mut pool = Offline::default();
 

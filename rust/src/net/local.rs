@@ -126,6 +126,10 @@ impl Transport for Endpoint {
     fn bytes_received(&self) -> u64 {
         self.hub.received[self.id].load(Ordering::Relaxed)
     }
+
+    fn tag_reuse(&self) -> usize {
+        self.hub.boxes[self.id].tag_reuse()
+    }
 }
 
 #[cfg(test)]

@@ -78,6 +78,18 @@ struct Inner {
     // (`wait_activity`), which closes the scan-then-sleep race without
     // per-tag bookkeeping.
     activity: u64,
+    // Debug builds only: every (from, tag) key that has ever been queued,
+    // and how many deliveries re-used a key *after* its queue had drained.
+    // An aligned SPMD protocol allocates a fresh tag per collective (see
+    // `crate::net::tags`), so a drained key can never legitimately come
+    // back — a nonzero count is the dynamic symptom of tag divergence on
+    // deployments that cannot share an in-process `SpmdTagTrace`.
+    // (Several payloads queued under one key *before* draining is plain
+    // FIFO delivery and is not counted.)
+    #[cfg(debug_assertions)]
+    seen: HashSet<(PartyId, u64)>,
+    #[cfg(debug_assertions)]
+    reused: usize,
 }
 
 /// `(from, tag) → payload queue` with blocking receive.
@@ -94,12 +106,20 @@ impl TagMailbox {
     /// delivered (the receiver chose to drop it), so it returns `true`
     /// and byte ledgers still count it.
     pub(crate) fn push(&self, from: PartyId, tag: u64, data: Vec<u64>) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().expect("mailbox lock poisoned");
         if inner.shut_down {
             return false; // owner left: discard, nobody will ever pop
         }
         if inner.tombstones.remove(&(from, tag)) {
             return true; // the receiver explicitly skipped this message
+        }
+        #[cfg(debug_assertions)]
+        {
+            let key = (from, tag);
+            if inner.seen.contains(&key) && !inner.queues.contains_key(&key) {
+                inner.reused += 1;
+            }
+            inner.seen.insert(key);
         }
         inner.queues.entry((from, tag)).or_default().push_back(data);
         inner.activity += 1;
@@ -112,7 +132,7 @@ impl TagMailbox {
     /// Tombstones for `from` are purged — nothing will arrive to clear
     /// them.
     pub(crate) fn close(&self, from: PartyId, reason: String) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().expect("mailbox lock poisoned");
         inner.closed.entry(from).or_insert(reason);
         inner.tombstones.retain(|&(f, _)| f != from);
         inner.activity += 1;
@@ -123,7 +143,7 @@ impl TagMailbox {
     /// discard every future push (bounds memory for a party that exits
     /// mid-protocol while peers keep sending).
     pub(crate) fn shutdown(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().expect("mailbox lock poisoned");
         inner.shut_down = true;
         inner.queues.clear();
         inner.tombstones.clear();
@@ -137,7 +157,7 @@ impl TagMailbox {
     /// closed peer with nothing queued returns `false` without a
     /// tombstone — nothing will ever arrive.
     pub(crate) fn forget(&self, from: PartyId, tag: u64) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().expect("mailbox lock poisoned");
         if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
             queue.pop_front();
             if queue.is_empty() {
@@ -172,7 +192,7 @@ impl TagMailbox {
         from: PartyId,
         tag: u64,
     ) -> Result<Vec<u64>, String> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().expect("mailbox lock poisoned");
         loop {
             if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
                 let data = queue.pop_front();
@@ -215,7 +235,7 @@ impl TagMailbox {
         timeout: Duration,
     ) -> AnyRecv {
         let deadline = Instant::now() + timeout;
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().expect("mailbox lock poisoned");
         loop {
             for &from in froms {
                 if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
@@ -252,7 +272,7 @@ impl TagMailbox {
     /// event-driven round states poll through this and park on
     /// [`wait_activity`](TagMailbox::wait_activity) between passes.
     pub(crate) fn try_pop(&self, from: PartyId, tag: u64) -> TryRecv {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().expect("mailbox lock poisoned");
         if let Some(queue) = inner.queues.get_mut(&(from, tag)) {
             let data = queue.pop_front();
             if queue.is_empty() {
@@ -273,7 +293,7 @@ impl TagMailbox {
     /// the pass ran, [`wait_activity`](TagMailbox::wait_activity) with the
     /// snapshot returns immediately instead of sleeping — no lost wakeup.
     pub(crate) fn activity(&self) -> u64 {
-        self.inner.lock().unwrap().activity
+        self.inner.lock().expect("mailbox lock poisoned").activity
     }
 
     /// Block until the activity counter advances past `since` or `timeout`
@@ -281,7 +301,7 @@ impl TagMailbox {
     /// timeout).
     pub(crate) fn wait_activity(&self, since: u64, timeout: Duration) -> u64 {
         let deadline = Instant::now() + timeout;
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().expect("mailbox lock poisoned");
         while inner.activity == since {
             let now = Instant::now();
             if now >= deadline {
@@ -300,8 +320,22 @@ impl TagMailbox {
     /// tombstones — both must be zero at the end of a clean (fault-free)
     /// training run (mailbox-hygiene regression tests).
     pub(crate) fn pending_entries(&self) -> usize {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock().expect("mailbox lock poisoned");
         inner.queues.len() + inner.tombstones.len()
+    }
+
+    /// Debug-build count of deliveries that re-used a `(from, tag)` key
+    /// after its queue had drained (see the [`Inner`] field docs). Always
+    /// 0 in release builds.
+    pub(crate) fn tag_reuse(&self) -> usize {
+        #[cfg(debug_assertions)]
+        {
+            self.inner.lock().expect("mailbox lock poisoned").reused
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            0
+        }
     }
 }
 
@@ -322,6 +356,30 @@ mod tests {
         assert_eq!(mb.pending_entries(), 1, "drained (0,5) entry must be removed");
         assert_eq!(mb.pop_blocking(9, 1, 5), vec![3]);
         assert_eq!(mb.pending_entries(), 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn tag_reuse_counts_only_post_drain_redelivery() {
+        let mb = TagMailbox::default();
+        // FIFO under one key before draining: legal, not reuse.
+        mb.push(0, 5, vec![1]);
+        mb.push(0, 5, vec![2]);
+        assert_eq!(mb.tag_reuse(), 0);
+        assert_eq!(mb.pop_blocking(9, 0, 5), vec![1]);
+        // Still queued (one payload left): a further push is still FIFO.
+        mb.push(0, 5, vec![3]);
+        assert_eq!(mb.tag_reuse(), 0);
+        assert_eq!(mb.pop_blocking(9, 0, 5), vec![2]);
+        assert_eq!(mb.pop_blocking(9, 0, 5), vec![3]);
+        // Drained; the key coming back is the SPMD-divergence symptom.
+        mb.push(0, 5, vec![4]);
+        assert_eq!(mb.tag_reuse(), 1);
+        // A tombstone-consumed push is not a queued delivery: no reuse.
+        assert_eq!(mb.pop_blocking(9, 0, 5), vec![4]);
+        assert!(!mb.forget(1, 8));
+        mb.push(1, 8, vec![0]);
+        assert_eq!(mb.tag_reuse(), 1);
     }
 
     #[test]

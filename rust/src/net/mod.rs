@@ -25,9 +25,17 @@
 //! dependent ([`Wire::elem_bytes`]); [`ELEM_BYTES`] is the 64-bit default
 //! used by the baselines' accounting.
 
+// Receive paths must name their failure: a bare `unwrap()` in the
+// transport layer turns a dead peer or a poisoned mailbox lock into an
+// anonymous panic. Denied module-wide as a clippy restriction lint
+// (tests exempt); `copml lint`'s recv-unwrap rule enforces the same
+// discipline at the source level across the whole protocol tree.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod local;
 mod mailbox;
 mod reactor;
+pub mod tags;
 pub mod tcp;
 pub mod wan;
 pub mod wire;
@@ -139,6 +147,16 @@ pub trait Transport: Send + Sync {
     fn bytes_sent(&self) -> u64;
     /// Total payload bytes this party has received.
     fn bytes_received(&self) -> u64;
+    /// Debug-build `(from, tag)` reuse count observed by this party's
+    /// mailbox: deliveries whose key had already been delivered *and
+    /// drained* earlier in the run. A clean SPMD run never reuses a key
+    /// (see [`tags`]); a nonzero count is the dynamic symptom of tag
+    /// divergence on deployments where the in-process
+    /// [`tags::SpmdTagTrace`] cannot be shared. Always 0 in release
+    /// builds and on transports without a mailbox.
+    fn tag_reuse(&self) -> usize {
+        0
+    }
 }
 
 /// Outcome of one non-blocking [`RoundState::poll`] pass.

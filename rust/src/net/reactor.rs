@@ -24,6 +24,11 @@
 //! registration and shutdown. The reactor thread exits when the last
 //! owning transport drops its [`Reactor`] handle.
 
+// The crate forbids unsafe code everywhere else (`lib.rs`); this module
+// is the one allow-listed exception — the two `poll(2)` FFI call sites
+// below — and `copml lint`'s unsafe audit pins exactly that.
+#![allow(unsafe_code)]
+
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
 use std::os::unix::io::{AsRawFd, RawFd};
@@ -69,6 +74,10 @@ extern "C" {
 pub(crate) fn wait_writable(fd: RawFd) -> io::Result<()> {
     loop {
         let mut pfd = PollFd { fd, events: POLLOUT, revents: 0 };
+        // SAFETY: `pfd` is a live, exclusively-borrowed PollFd matching
+        // the kernel's `struct pollfd` layout (#[repr(C)] above), nfds=1
+        // covers exactly that one element, and poll(2) writes only the
+        // `revents` field within it.
         let rc = unsafe { poll(&mut pfd, 1, -1) };
         if rc < 0 {
             let e = io::Error::last_os_error();
@@ -150,8 +159,9 @@ impl Conn {
             if avail < HEADER_BYTES {
                 break;
             }
-            let header: [u8; HEADER_BYTES] =
-                self.buf[consumed..consumed + HEADER_BYTES].try_into().unwrap();
+            let header: [u8; HEADER_BYTES] = self.buf[consumed..consumed + HEADER_BYTES]
+                .try_into()
+                .expect("HEADER_BYTES-long slice into a HEADER_BYTES array");
             let (payload_len, tag) = wire::decode_header(&header);
             if payload_len > MAX_FRAME_BYTES {
                 // Reject by the cap before reserving a single byte — same
@@ -248,7 +258,7 @@ impl Reactor {
         self.shared
             .pending
             .lock()
-            .unwrap()
+            .expect("reactor registration lock poisoned")
             .push(Conn { stream, from, wire, mailbox, received, buf: Vec::new() });
         self.wake();
         Ok(())
@@ -277,7 +287,7 @@ fn event_loop(shared: &Shared, wake_rx: &UnixStream) {
             return;
         }
         {
-            let mut pending = shared.pending.lock().unwrap();
+            let mut pending = shared.pending.lock().expect("reactor registration lock poisoned");
             conns.append(&mut pending);
         }
         // fds[0] is the wake pipe; fds[i + 1] tracks conns[i].
@@ -286,6 +296,9 @@ fn event_loop(shared: &Shared, wake_rx: &UnixStream) {
         for c in &conns {
             fds.push(PollFd { fd: c.stream.as_raw_fd(), events: POLLIN, revents: 0 });
         }
+        // SAFETY: `fds` is a live Vec of #[repr(C)] PollFd whose length
+        // is passed as nfds, so the kernel reads/writes only within the
+        // allocation; `fds` is not touched again until poll returns.
         let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, -1) };
         if rc < 0 {
             if io::Error::last_os_error().kind() == io::ErrorKind::Interrupted {

@@ -1,0 +1,422 @@
+//! The typed protocol tag-space: every message tag the protocol ever
+//! puts on the wire is allocated out of a named, disjoint-by-construction
+//! window declared here.
+//!
+//! ## Why a declared space
+//!
+//! COPML is SPMD: all parties execute the same sequence of collectives,
+//! each consuming one tag, so a `(from, tag)` pair uniquely identifies a
+//! message. The invariant that makes this sound — *every party allocates
+//! tags in exactly the same order* — used to live implicitly in two bare
+//! counters (`Party::fresh_tag` counting up from 0, the offline
+//! `Session` counting up from `1 << 62`). A divergence (one party takes
+//! a branch that allocates, another does not) produced either a silent
+//! garbage decode or a 120 s receive timeout with no hint of *which*
+//! allocation diverged. This module makes the space explicit:
+//!
+//! * named [`TagRange`] windows, disjoint by `const` assertion;
+//! * a cursor allocator ([`TagAlloc`]) that panics on window exhaustion
+//!   instead of silently bleeding into a neighbouring range;
+//! * a debug-only cross-party fingerprint ([`SpmdTagTrace`]) that
+//!   compares every party's allocation sequence and names the **first
+//!   divergent allocation** the moment it happens.
+//!
+//! ## Range map
+//!
+//! | window            | range                       | stride | used for |
+//! |-------------------|-----------------------------|--------|----------|
+//! | [`SETUP`]         | `[0, 2^16)`                 | —      | dataset share-out, initial-model degree reduction |
+//! | [`ENCODE`]        | `[2^16, 2^24)`              | [`ENCODE_STRIDE`] per batch | per-batch LCC encode exchange ([`encode_window`]) |
+//! | [`FINAL`]         | `[2^24, 2^24 + 16)`         | —      | final model opening |
+//! | [`ROUND`]         | `[2^32, 2^62)`              | [`ROUND_STRIDE`] per iteration | per-iteration gradient round ([`round_window`]) |
+//! | [`OFFLINE`]       | `[2^62, 2^64 − 1)`          | —      | DN07 distributed offline phase (runs first) |
+//! | [`DEPART`]        | `2^64 − 1` (single tag)     | —      | transport-level departure control frame |
+//! | [`FLAT`]          | `[0, 2^62)` (union view)    | —      | default window of a fresh [`Party`]: baselines and unit tests that never seek |
+//!
+//! The gap `[2^24 + 16, 2^32)` is deliberately unassigned headroom.
+//! [`FLAT`] overlaps the online windows by design — it is the legacy
+//! "count from zero" view used by code that never calls
+//! [`Party::seek_tags`]; the full protocol always seeks into the named
+//! windows, and the two styles are never mixed within one run.
+//!
+//! Tag *values* never enter payloads or byte ledgers (ledgers count
+//! payload bytes only), so re-homing an allocation site into a different
+//! window cannot change a trained `w_trace` — pinned by the
+//! `protocol_equivalence` suite.
+//!
+//! [`Party`]: crate::mpc::Party
+//! [`Party::seek_tags`]: crate::mpc::Party::seek_tags
+
+use std::sync::{Arc, Mutex};
+
+use super::PartyId;
+
+/// A protocol message tag. Alias of the wire representation; the typed
+/// structure lives in the [`TagRange`] windows, not in the scalar.
+pub type Tag = u64;
+
+/// A named, half-open window `[start, end)` of the tag space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TagRange {
+    /// Window name, used in exhaustion panics and divergence diagnostics.
+    pub name: &'static str,
+    /// First tag of the window (inclusive).
+    pub start: Tag,
+    /// One past the last tag of the window (exclusive).
+    pub end: Tag,
+}
+
+impl TagRange {
+    /// Number of tags in the window.
+    pub const fn capacity(&self) -> u64 {
+        self.end - self.start
+    }
+
+    /// Whether `t` falls inside the window.
+    pub const fn contains(&self, t: Tag) -> bool {
+        self.start <= t && t < self.end
+    }
+}
+
+/// One-time setup collectives: dataset share-out and the initial-model
+/// degree reduction. A handful of tags used; 2^16 reserved.
+pub const SETUP: TagRange = TagRange { name: "setup", start: 0, end: 1 << 16 };
+
+/// Per-batch LCC encode exchange. Each mini-batch `b` gets the
+/// [`ENCODE_STRIDE`]-wide sub-window [`encode_window`]`(b)`.
+pub const ENCODE: TagRange = TagRange { name: "encode", start: 1 << 16, end: 1 << 24 };
+
+/// Tags reserved per mini-batch inside [`ENCODE`] (the encode exchange
+/// uses 1 today; the stride leaves headroom for richer encode rounds).
+pub const ENCODE_STRIDE: u64 = 4;
+
+/// Final model opening, after the iteration loop.
+pub const FINAL: TagRange = TagRange { name: "final", start: 1 << 24, end: (1 << 24) + 16 };
+
+/// Per-iteration gradient rounds. Each iteration `i` gets the
+/// [`ROUND_STRIDE`]-wide sub-window [`round_window`]`(i)`.
+pub const ROUND: TagRange = TagRange { name: "round", start: 1 << 32, end: 1 << 62 };
+
+/// Tags reserved per iteration inside [`ROUND`]: today's protocol uses 7
+/// (encoded-model exchange, result gather, quorum roster, two king
+/// openings of two truncations); 16 leaves headroom.
+pub const ROUND_STRIDE: u64 = 16;
+
+/// The DN07 distributed offline phase, which runs *first* over the same
+/// transport. Kept at the historical `1 << 62` base so the offline phase
+/// can never collide with any online window below it.
+pub const OFFLINE: TagRange = TagRange { name: "offline", start: 1 << 62, end: u64::MAX };
+
+/// The transport-level departure control frame (`net::tcp::DEPART_TAG`):
+/// the one tag that is *not* a protocol step, reserved above every
+/// window (note [`OFFLINE`] is half-open and excludes it).
+pub const DEPART: Tag = u64::MAX;
+
+/// The whole pre-offline space as one flat window: the default window of
+/// a fresh `Party`, allocating from 0 exactly like the legacy counter.
+/// Baselines and unit tests run entirely inside it; the full protocol
+/// re-seeks into the named windows above and never mixes the two styles
+/// in one run.
+pub const FLAT: TagRange = TagRange { name: "flat", start: 0, end: OFFLINE.start };
+
+const fn disjoint(a: &TagRange, b: &TagRange) -> bool {
+    a.end <= b.start || b.end <= a.start
+}
+
+// The named windows are pairwise disjoint, DEPART sits outside all of
+// them, and FLAT (the legacy union view) covers exactly the pre-offline
+// space — checked at compile time, so a window edit that introduces an
+// overlap is a build error, not a runtime cross-wire.
+const _: () = {
+    assert!(disjoint(&SETUP, &ENCODE));
+    assert!(disjoint(&SETUP, &FINAL));
+    assert!(disjoint(&SETUP, &ROUND));
+    assert!(disjoint(&SETUP, &OFFLINE));
+    assert!(disjoint(&ENCODE, &FINAL));
+    assert!(disjoint(&ENCODE, &ROUND));
+    assert!(disjoint(&ENCODE, &OFFLINE));
+    assert!(disjoint(&FINAL, &ROUND));
+    assert!(disjoint(&FINAL, &OFFLINE));
+    assert!(disjoint(&ROUND, &OFFLINE));
+    assert!(!SETUP.contains(DEPART));
+    assert!(!ENCODE.contains(DEPART));
+    assert!(!FINAL.contains(DEPART));
+    assert!(!ROUND.contains(DEPART));
+    assert!(!OFFLINE.contains(DEPART));
+    assert!(FLAT.start == 0 && FLAT.end == OFFLINE.start);
+    assert!(SETUP.capacity() >= 16);
+    assert!(FINAL.capacity() >= 1);
+};
+
+/// Most mini-batches the [`ENCODE`] window can hold.
+pub const fn max_batches() -> u64 {
+    ENCODE.capacity() / ENCODE_STRIDE
+}
+
+/// Most SGD iterations the [`ROUND`] window can hold.
+pub const fn max_iters() -> u64 {
+    ROUND.capacity() / ROUND_STRIDE
+}
+
+/// The [`ENCODE_STRIDE`]-wide sub-window of mini-batch `batch`.
+/// Panics past [`max_batches`] (the coordinator's `validate` rejects such
+/// configs up front with a friendlier error).
+pub fn encode_window(batch: usize) -> TagRange {
+    let b = batch as u64;
+    assert!(b < max_batches(), "batch {batch} exceeds the ENCODE tag window ({} batches max)", max_batches());
+    let start = ENCODE.start + b * ENCODE_STRIDE;
+    TagRange { name: "encode", start, end: start + ENCODE_STRIDE }
+}
+
+/// The [`ROUND_STRIDE`]-wide sub-window of SGD iteration `iter`.
+/// Panics past [`max_iters`] (the coordinator's `validate` rejects such
+/// configs up front with a friendlier error).
+pub fn round_window(iter: usize) -> TagRange {
+    let i = iter as u64;
+    assert!(i < max_iters(), "iteration {iter} exceeds the ROUND tag window ({} iterations max)", max_iters());
+    let start = ROUND.start + i * ROUND_STRIDE;
+    TagRange { name: "round", start, end: start + ROUND_STRIDE }
+}
+
+/// Cursor allocator over one [`TagRange`] window at a time.
+///
+/// This is the *only* place protocol code obtains tags: `fresh` hands out
+/// the window's tags in order and panics with the window name on
+/// exhaustion — the static growth bound that keeps long-running sessions
+/// from bleeding into the `1 << 62` offline range. With a
+/// [`SpmdTagTrace`] attached (debug builds), every allocation is also
+/// cross-checked against the other parties' sequences.
+#[derive(Debug)]
+pub struct TagAlloc {
+    party: PartyId,
+    window: TagRange,
+    cursor: Tag,
+    trace: Option<Arc<SpmdTagTrace>>,
+}
+
+impl TagAlloc {
+    /// Allocator for `party`, positioned at the start of `window`.
+    pub fn new(party: PartyId, window: TagRange) -> TagAlloc {
+        TagAlloc { party, window, cursor: window.start, trace: None }
+    }
+
+    /// Jump to the start of `window` (e.g. the per-iteration
+    /// [`round_window`]). Seeks are themselves SPMD steps: every party
+    /// must seek at the same point of the protocol.
+    pub fn seek(&mut self, window: TagRange) {
+        self.window = window;
+        self.cursor = window.start;
+    }
+
+    /// Attach the cross-party fingerprint; every subsequent allocation
+    /// is recorded and compared (see [`SpmdTagTrace`]).
+    pub fn attach_trace(&mut self, trace: Arc<SpmdTagTrace>) {
+        self.trace = Some(trace);
+    }
+
+    /// The window currently allocated from.
+    pub fn window(&self) -> TagRange {
+        self.window
+    }
+
+    /// Allocate the next tag of the current window. `kind` is a static
+    /// label naming the protocol step (e.g. `"king.up"`), carried into
+    /// divergence diagnostics.
+    pub fn fresh(&mut self, kind: &'static str) -> Tag {
+        let t = self.cursor;
+        assert!(
+            self.window.contains(t),
+            "tag window '{}' [{}, {}) exhausted at step '{kind}' (party {}): \
+             the protocol allocated more tags than the window holds",
+            self.window.name,
+            self.window.start,
+            self.window.end,
+            self.party,
+        );
+        self.cursor = t + 1;
+        if let Some(tr) = &self.trace {
+            tr.record(self.party, kind, t);
+        }
+        t
+    }
+}
+
+/// Cross-party fingerprint of the SPMD tag-allocation sequence.
+///
+/// One instance is shared by every in-process party of a run (debug
+/// builds only — `coordinator::protocol::run_clients` wires it up under
+/// `cfg!(debug_assertions)`). The first party to reach allocation `i`
+/// defines the expected `(kind, tag)` pair; every other party's `i`-th
+/// allocation is compared against it, so a divergence panics *at the
+/// divergent allocation* — naming the step — instead of surfacing 120 s
+/// later as a receive timeout. [`assert_converged`](Self::assert_converged)
+/// closes the loop at run end: every completing party must have produced
+/// the full sequence (catching a party that silently allocated fewer).
+///
+/// Separate-process deployments (`copml party`) cannot share an
+/// instance; there the dynamic complement is the per-mailbox `(from,
+/// tag)` reuse counter (`Transport::tag_reuse`).
+#[derive(Debug)]
+pub struct SpmdTagTrace {
+    inner: Mutex<TraceInner>,
+}
+
+#[derive(Debug)]
+struct TraceInner {
+    /// The agreed allocation sequence, extended by whichever party gets
+    /// to each index first.
+    expected: Vec<(&'static str, Tag)>,
+    /// Per-party progress through `expected`.
+    cursors: Vec<usize>,
+}
+
+impl SpmdTagTrace {
+    /// Fresh trace for an `n`-party run.
+    pub fn new(n: usize) -> Arc<SpmdTagTrace> {
+        Arc::new(SpmdTagTrace {
+            inner: Mutex::new(TraceInner { expected: Vec::new(), cursors: vec![0; n] }),
+        })
+    }
+
+    /// Record (and cross-check) one allocation by `party`. Panics with
+    /// the first divergent allocation if `party` disagrees with the
+    /// sequence established by the parties ahead of it.
+    pub fn record(&self, party: PartyId, kind: &'static str, tag: Tag) {
+        let mut g = self.inner.lock().expect("tag trace lock poisoned");
+        let i = g.cursors[party];
+        g.cursors[party] += 1;
+        if i == g.expected.len() {
+            g.expected.push((kind, tag));
+        } else {
+            let (ek, et) = g.expected[i];
+            assert!(
+                ek == kind && et == tag,
+                "SPMD tag divergence at allocation #{i}: party {party} allocated \
+                 '{kind}' (tag {tag}) where the parties ahead of it allocated \
+                 '{ek}' (tag {et}) — the parties are no longer executing the \
+                 same protocol step sequence",
+            );
+        }
+    }
+
+    /// Number of allocations in the agreed sequence so far.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("tag trace lock poisoned").expected.len()
+    }
+
+    /// Whether nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// End-of-run check: every party in `completers` must have walked
+    /// the full agreed sequence. A shorter walk means that party skipped
+    /// allocations the others performed — a divergence `record` alone
+    /// cannot see.
+    pub fn assert_converged(&self, completers: &[PartyId]) {
+        let g = self.inner.lock().expect("tag trace lock poisoned");
+        for &p in completers {
+            assert!(
+                g.cursors[p] == g.expected.len(),
+                "SPMD tag divergence at run end: party {p} performed {} tag \
+                 allocations but the agreed sequence has {} — party {p} skipped \
+                 allocations the other parties performed",
+                g.cursors[p],
+                g.expected.len(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_disjoint_and_exclude_depart() {
+        let named = [SETUP, ENCODE, FINAL, ROUND, OFFLINE];
+        for (i, a) in named.iter().enumerate() {
+            for b in &named[i + 1..] {
+                assert!(disjoint(a, b), "{} overlaps {}", a.name, b.name);
+            }
+            assert!(!a.contains(DEPART), "{} contains DEPART", a.name);
+        }
+        assert_eq!(FLAT.end, OFFLINE.start);
+    }
+
+    #[test]
+    fn windows_stay_inside_their_parent_range() {
+        let last_enc = encode_window((max_batches() - 1) as usize);
+        assert!(ENCODE.contains(last_enc.start) && last_enc.end <= ENCODE.end);
+        let last_rnd = round_window((max_iters() - 1) as usize);
+        assert!(ROUND.contains(last_rnd.start) && last_rnd.end <= ROUND.end);
+        assert_eq!(encode_window(0).start, ENCODE.start);
+        assert_eq!(round_window(0).start, ROUND.start);
+        // Consecutive windows abut without overlap.
+        assert_eq!(encode_window(0).end, encode_window(1).start);
+        assert_eq!(round_window(0).end, round_window(1).start);
+    }
+
+    #[test]
+    fn alloc_counts_up_and_seeks_reset() {
+        let mut a = TagAlloc::new(0, SETUP);
+        assert_eq!(a.fresh("a"), SETUP.start);
+        assert_eq!(a.fresh("b"), SETUP.start + 1);
+        a.seek(round_window(3));
+        assert_eq!(a.fresh("c"), round_window(3).start);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn alloc_panics_on_window_exhaustion() {
+        let tiny = TagRange { name: "tiny", start: 10, end: 12 };
+        let mut a = TagAlloc::new(0, tiny);
+        a.fresh("x");
+        a.fresh("y");
+        a.fresh("z"); // third tag of a 2-tag window
+    }
+
+    #[test]
+    fn trace_accepts_identical_sequences() {
+        let tr = SpmdTagTrace::new(3);
+        for step in 0..4u64 {
+            for p in 0..3 {
+                tr.record(p, "step", step);
+            }
+        }
+        tr.assert_converged(&[0, 1, 2]);
+        assert_eq!(tr.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPMD tag divergence at allocation #1")]
+    fn trace_names_first_divergent_allocation() {
+        let tr = SpmdTagTrace::new(2);
+        tr.record(0, "share.x", 0);
+        tr.record(0, "king.up", 1);
+        tr.record(1, "share.x", 0);
+        tr.record(1, "open.bcast", 1); // diverges here, at index 1
+    }
+
+    #[test]
+    #[should_panic(expected = "divergence at run end")]
+    fn trace_catches_short_walks_at_run_end() {
+        let tr = SpmdTagTrace::new(2);
+        tr.record(0, "share.x", 0);
+        tr.record(0, "share.y", 1);
+        tr.record(1, "share.x", 0); // party 1 stops early
+        tr.assert_converged(&[0, 1]);
+    }
+
+    #[test]
+    fn alloc_reports_through_attached_trace() {
+        let tr = SpmdTagTrace::new(2);
+        let mut a0 = TagAlloc::new(0, SETUP);
+        let mut a1 = TagAlloc::new(1, SETUP);
+        a0.attach_trace(Arc::clone(&tr));
+        a1.attach_trace(Arc::clone(&tr));
+        a0.fresh("share.x");
+        a1.fresh("share.x");
+        tr.assert_converged(&[0, 1]);
+    }
+}

@@ -59,9 +59,10 @@ pub(crate) const MAX_FRAME_BYTES: u32 = 1 << 30;
 /// shutting its sockets ([`Transport::leave`]): the payload carries the
 /// halt reason (one byte per word — tiny, wire-format agnostic), so peers
 /// record the *actual* cause ("killed at iteration 3 …") instead of a
-/// generic EOF. Protocol tags count up from 0 (offline: from 1<<62) and
-/// can never collide.
-pub(crate) const DEPART_TAG: u64 = u64::MAX;
+/// generic EOF. Protocol tags come from the typed windows of
+/// [`super::tags`], every one of which excludes [`super::tags::DEPART`]
+/// by const assertion — so this control tag can never collide.
+pub(crate) const DEPART_TAG: u64 = super::tags::DEPART;
 
 /// Encode a departure reason for the [`DEPART_TAG`] payload.
 fn reason_to_words(reason: &str) -> Vec<u64> {
@@ -364,7 +365,9 @@ fn handshake_accept(
             "wire-format mismatch: this party uses {wire}, the dialer does not"
         )));
     }
-    let from = u64::from_le_bytes(hello[5..13].try_into().unwrap()) as usize;
+    let from =
+        u64::from_le_bytes(hello[5..13].try_into().expect("8-byte slice of a 13-byte hello"))
+            as usize;
     if from <= my_id || from >= n {
         return Err(bad_proto(format!(
             "unexpected dialer id {from} (party {my_id} accepts ids {}..{n})",
@@ -452,7 +455,7 @@ impl Transport for TcpTransport {
                 .as_ref()
                 .expect("no connection slot for peer")
                 .lock()
-                .unwrap();
+                .expect("writer lock poisoned");
             // Best-effort: a dead peer (fault-plan kill, crashed process)
             // surfaces on the receive side via its closed mailbox; a send
             // into its reset socket must not take this party down.
@@ -521,6 +524,10 @@ impl Transport for TcpTransport {
 
     fn bytes_received(&self) -> u64 {
         self.received.load(Ordering::Relaxed)
+    }
+
+    fn tag_reuse(&self) -> usize {
+        self.mailbox.tag_reuse()
     }
 }
 

@@ -103,8 +103,8 @@ pub fn encode_frame(wire: Wire, tag: u64, data: &[u64]) -> Vec<u8> {
 
 /// Split a frame header into `(payload bytes, tag)`.
 pub fn decode_header(buf: &[u8; HEADER_BYTES]) -> (u32, u64) {
-    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap());
-    let tag = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let len = u32::from_le_bytes(buf[0..4].try_into().expect("4-byte slice of the 12-byte header"));
+    let tag = u64::from_le_bytes(buf[4..12].try_into().expect("8-byte slice of the 12-byte header"));
     (len, tag)
 }
 
@@ -117,11 +117,11 @@ pub fn decode_payload(wire: Wire, bytes: &[u8]) -> Result<Vec<u64>, String> {
     Ok(match wire {
         Wire::U64 => bytes
             .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| u64::from_le_bytes(c.try_into().expect("chunks_exact(8) yields 8-byte chunks")))
             .collect(),
         Wire::U32 => bytes
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as u64)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("chunks_exact(4) yields 4-byte chunks")) as u64)
             .collect(),
     })
 }

@@ -1,0 +1,122 @@
+//! The `copml lint` gate, turned on itself.
+//!
+//! Two directions: (a) the crate's own source tree must be clean — this is
+//! the same zero-findings bar the CI job enforces via `copml lint`, kept
+//! here as well so a plain `cargo test` catches a regression before CI
+//! does; (b) the analyzer must actually *fire* — a seeded tree with raw
+//! tag arithmetic, a computed tag in a send, and HashMap iteration inside
+//! `coordinator/` must produce findings for exactly those rules. A linter
+//! that silently passes everything would satisfy (a) forever; (b) pins it
+//! to keep working.
+
+use std::fs;
+use std::path::PathBuf;
+
+use copml::analysis::run_lint;
+
+#[test]
+fn own_tree_has_zero_findings() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = run_lint(&root).expect("lint must be able to read its own tree");
+    assert!(
+        report.ok(),
+        "the tree must lint clean — fix or justify each site:\n{}",
+        report.render()
+    );
+    assert!(report.files_scanned > 10, "suspiciously few files scanned — wrong root?");
+}
+
+/// Temp tree that removes itself even when an assertion unwinds.
+struct SeededTree {
+    root: PathBuf,
+}
+
+impl SeededTree {
+    fn new() -> Self {
+        let root =
+            std::env::temp_dir().join(format!("copml-lint-gate-{}", std::process::id()));
+        // A stale tree from a crashed prior run with the same pid is
+        // indistinguishable from ours — replace it wholesale.
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(root.join("coordinator")).expect("create seeded tree");
+        Self { root }
+    }
+}
+
+impl Drop for SeededTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn seeded_violations_fail_the_lint() {
+    let tree = SeededTree::new();
+    // Deliberately unhygienic protocol code: a tag computed by arithmetic,
+    // an inline tag expression handed straight to `send`, and iteration
+    // over a HashMap in coordinator state. None of this needs to compile —
+    // the analyzer is source-level.
+    let evil = r#"
+use std::collections::HashMap;
+
+pub fn evil_round(net: &Net, tag_base: u64, i: u64) {
+    let round_tag = tag_base + 16 * i;
+    let counts: HashMap<u64, u64> = HashMap::new();
+    for (peer, n) in counts.iter() {
+        let _ = (peer, n);
+    }
+    net.send(0, tag_base + 7, &[1, 2, 3]);
+    let _ = round_tag;
+}
+"#;
+    fs::write(tree.root.join("coordinator").join("evil.rs"), evil).expect("write evil.rs");
+
+    let report = run_lint(&tree.root).expect("lint must read the seeded tree");
+    assert!(!report.ok(), "seeded violations must fail the gate:\n{}", report.render());
+    assert_eq!(report.files_scanned, 1);
+
+    let fired: Vec<&str> = report.findings.iter().map(|f| f.rule).collect();
+    for rule in ["tag-arith", "tag-computed", "map-iter"] {
+        assert!(
+            fired.contains(&rule),
+            "expected a {rule} finding, got:\n{}",
+            report.render()
+        );
+    }
+    for f in &report.findings {
+        assert_eq!(
+            f.file, "coordinator/evil.rs",
+            "finding attributed to the wrong file:\n{}",
+            report.render()
+        );
+    }
+}
+
+#[test]
+fn suppression_requires_a_justification() {
+    let tree = SeededTree::new();
+    // Same violation twice: once with a bare `allow` (must still fire) and
+    // once with a justified one (must be silent).
+    let src = r#"
+pub fn bare(tag_base: u64, i: u64) -> u64 {
+    // copml-lint: allow(tag-arith)
+    tag_base + i
+}
+
+pub fn justified(tag_base: u64, i: u64) -> u64 {
+    // copml-lint: allow(tag-arith) test fixture exercising the allocator math
+    tag_base + i
+}
+"#;
+    fs::write(tree.root.join("coordinator").join("suppress.rs"), src)
+        .expect("write suppress.rs");
+
+    let report = run_lint(&tree.root).expect("lint must read the seeded tree");
+    assert_eq!(
+        report.findings.len(),
+        1,
+        "bare allow() must not suppress; justified allow() must:\n{}",
+        report.render()
+    );
+    assert_eq!(report.findings[0].rule, "tag-arith");
+}

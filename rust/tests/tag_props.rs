@@ -1,0 +1,108 @@
+//! Tag-space properties of the full protocol (`net::tags`): across a grid
+//! of configurations — batch counts, offline modes, quorum slack, socket
+//! runtimes — every client must end a clean run with (a) an empty mailbox
+//! (`pending_at_exit == 0`: every allocated tag was consumed or forgotten)
+//! and (b) zero `(from, tag)` reuse (`tag_reuse == 0`: no two protocol
+//! steps ever shared a tag — the dynamic complement of the const-asserted
+//! window disjointness in `net::tags`). Debug builds (the `cargo test`
+//! default) arm both the mailbox reuse counter and the shared
+//! `SpmdTagTrace`, so a divergent allocation sequence fails these tests
+//! with a pointed diagnostic instead of a 120 s receive timeout.
+
+use copml::coordinator::{protocol, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::mpc::OfflineMode;
+use copml::net::{tags, Runtime};
+
+fn assert_tag_hygiene(out: &protocol::ProtocolOutput, label: &str) {
+    assert!(!out.train.w_trace.is_empty(), "{label}: no iterations recorded");
+    for (i, l) in out.ledgers.iter().enumerate() {
+        assert_eq!(l.pending_at_exit, 0, "{label}: client {i} mailbox not drained");
+        assert_eq!(
+            l.tag_reuse, 0,
+            "{label}: client {i} re-used a (from, tag) key after draining it — \
+             two protocol steps shared a tag"
+        );
+    }
+}
+
+#[test]
+fn no_tag_reuse_across_batch_offline_and_slack_grid() {
+    // Hub transport over the full grid: zero-slack (N == need, fixed-order
+    // gathers) and slack-3 (first-arrival quorums active) geometries ×
+    // full-batch and B=3 mini-batch schedules × both offline providers.
+    let ds = Dataset::synth(SynthSpec::tiny(), 401);
+    for (n, slack_label) in [(7usize, "zero-slack"), (10, "slack-3")] {
+        for batches in [1usize, 3] {
+            for offline in [OfflineMode::Dealer, OfflineMode::Distributed] {
+                let mut cfg =
+                    CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(2, 1), 401);
+                cfg.iters = 3;
+                cfg.batches = batches;
+                cfg.offline = offline;
+                let label = format!("{slack_label} B={batches} offline={offline}");
+                cfg.validate(&ds).unwrap_or_else(|e| panic!("{label}: {e}"));
+                let out = protocol::train(&cfg, &ds)
+                    .unwrap_or_else(|e| panic!("{label}: {e}"));
+                assert_tag_hygiene(&out, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn no_tag_reuse_on_tcp_under_both_runtimes() {
+    // The socket transport drains peers into the same tagged mailbox via
+    // reader threads or the poll reactor — tag hygiene must hold under
+    // both, and the trajectories must agree.
+    let ds = Dataset::synth(SynthSpec::tiny(), 402);
+    let mut traces = Vec::new();
+    for runtime in [Runtime::Threaded, Runtime::Event] {
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::explicit(2, 1), 402);
+        cfg.iters = 3;
+        cfg.runtime = runtime;
+        let out = protocol::train_tcp_loopback(&cfg, &ds)
+            .unwrap_or_else(|e| panic!("tcp {runtime}: {e}"));
+        assert_tag_hygiene(&out, &format!("tcp {runtime}"));
+        traces.push(out.train.w_trace);
+    }
+    assert_eq!(traces[0], traces[1], "runtimes must be value-transparent");
+}
+
+#[test]
+fn no_tag_reuse_under_straggler_delays() {
+    // A delayed party shifts real-time arrival order without changing the
+    // SPMD allocation order — first-arrival gathers then consume tags in
+    // nondeterministic wall-clock order, which is exactly the scenario the
+    // reuse counter must stay silent on.
+    let ds = Dataset::synth(SynthSpec::tiny(), 403);
+    let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::explicit(2, 1), 403);
+    cfg.iters = 4;
+    cfg.faults.delays = vec![(8, 15)];
+    let out = protocol::train(&cfg, &ds).expect("delayed run must complete");
+    assert_tag_hygiene(&out, "delay 8:15ms");
+}
+
+#[test]
+fn validate_rejects_configs_past_the_tag_windows() {
+    // Satellite of the typed tag-space refactor: a config that would
+    // exhaust a tag window mid-run is rejected up front with the budget
+    // named, instead of panicking inside the allocator hours in.
+    let ds = Dataset::synth(SynthSpec::tiny(), 404);
+    let base = CopmlConfig::for_dataset(&ds, 10, CaseParams::explicit(2, 1), 404);
+
+    let mut cfg = base.clone();
+    cfg.iters = usize::try_from(tags::max_iters()).expect("64-bit target") + 1;
+    let err = cfg.validate(&ds).unwrap_err();
+    assert!(err.contains("ROUND tag window"), "unexpected error: {err}");
+
+    let mut cfg = base.clone();
+    cfg.batches = usize::try_from(tags::max_batches()).expect("64-bit target") + 1;
+    let err = cfg.validate(&ds).unwrap_err();
+    assert!(err.contains("ENCODE tag window"), "unexpected error: {err}");
+
+    // The boundaries themselves are inside the windows: seeking the last
+    // legal sub-window must not panic.
+    let _ = tags::round_window((tags::max_iters() - 1) as usize);
+    let _ = tags::encode_window((tags::max_batches() - 1) as usize);
+}
