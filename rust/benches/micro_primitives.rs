@@ -10,7 +10,7 @@
 //! Run: `cargo bench --bench micro_primitives`
 
 use copml::bench::{harness::humanize, time_it, BenchStats};
-use copml::field::{par, vecops, Field, MatShape, Parallelism};
+use copml::field::{par, vecops, Field, KernelTier, MatShape, MontField, Parallelism};
 use copml::lcc::Encoder;
 use copml::prng::Rng;
 use copml::report::Json;
@@ -213,6 +213,116 @@ fn main() {
         }
     }
 
+    // --- kernel-tier ablation: Barrett vs batch-Montgomery ---------------
+    // Sequential apples-to-apples at paper shapes, with bit-equality
+    // asserted in the loop (the tiers must differ in cost, never in
+    // value). Ratios land in BENCH_kernels.json (see EXPERIMENTS.md
+    // §Kernel tiers).
+    {
+        let mut tier_rows: Vec<Json> = Vec::new();
+        let pp1 = Parallelism::sequential();
+
+        for (rows, cols) in [(2048usize, 3073usize), (1200, 5000)] {
+            let ff = if cols > 4096 { Field::paper_gisette() } else { f };
+            let pm = ff.modulus();
+            let mf = MontField::new(ff);
+            let x: Vec<u64> = (0..rows * cols).map(|_| rng.gen_range(pm)).collect();
+            let w: Vec<u64> = (0..cols).map(|_| rng.gen_range(pm)).collect();
+            let cq = vec![rng.gen_range(pm), rng.gen_range(pm)];
+            let shape = MatShape::new(rows, cols);
+
+            // matvec: Barrett oracle vs premont (conversion of w included
+            // in the timed region — that is the amortization claim).
+            assert_eq!(
+                mf.matvec(&x, shape, &w),
+                vecops::matvec(ff, &x, shape, &w),
+                "kernel-tier matvec value drift at {rows}x{cols}"
+            );
+            let sb = time_it(&format!("kernel-tier/matvec barrett {rows}x{cols}"), 1, 7, || {
+                std::hint::black_box(vecops::matvec(ff, &x, shape, &w));
+            });
+            println!("{}", sb.report());
+            let sm = time_it(&format!("kernel-tier/matvec mont {rows}x{cols}"), 1, 7, || {
+                std::hint::black_box(mf.matvec(&x, shape, &w));
+            });
+            println!("{}  [{:.2}x vs barrett]", sm.report(), sb.median_s / sm.median_s);
+            tier_rows.push(Json::obj(vec![
+                ("kernel", Json::str(&format!("matvec {rows}x{cols}"))),
+                ("p", Json::num(pm as f64)),
+                ("barrett_median_s", Json::num(sb.median_s)),
+                ("mont_median_s", Json::num(sm.median_s)),
+                ("speedup", Json::num(sb.median_s / sm.median_s)),
+            ]));
+
+            // Fused encoded-gradient kernel through NativeKernel's tier
+            // switch — the protocol's per-iteration hot path.
+            let kb = NativeKernel::with_tier(ff, pp1, KernelTier::Barrett);
+            let km = NativeKernel::with_tier(ff, pp1, KernelTier::Mont);
+            assert_eq!(
+                km.encoded_gradient(&x, shape, &w, &cq),
+                kb.encoded_gradient(&x, shape, &w, &cq),
+                "kernel-tier fused value drift at {rows}x{cols}"
+            );
+            let sb = time_it(&format!("kernel-tier/fused barrett {rows}x{cols}"), 1, 5, || {
+                std::hint::black_box(kb.encoded_gradient(&x, shape, &w, &cq));
+            });
+            println!("{}", sb.report());
+            let sm = time_it(&format!("kernel-tier/fused mont {rows}x{cols}"), 1, 5, || {
+                std::hint::black_box(km.encoded_gradient(&x, shape, &w, &cq));
+            });
+            println!("{}  [{:.2}x vs barrett]", sm.report(), sb.median_s / sm.median_s);
+            tier_rows.push(Json::obj(vec![
+                ("kernel", Json::str(&format!("fused {rows}x{cols}"))),
+                ("p", Json::num(pm as f64)),
+                ("barrett_median_s", Json::num(sb.median_s)),
+                ("mont_median_s", Json::num(sm.median_s)),
+                ("speedup", Json::num(sb.median_s / sm.median_s)),
+            ]));
+        }
+
+        // weighted_sum (the LCC encode/decode unit): K+T = 17 × 64k els.
+        {
+            let (terms, len) = (17usize, 1 << 16);
+            let mf = MontField::new(f);
+            let mats: Vec<Vec<u64>> = (0..terms)
+                .map(|_| (0..len).map(|_| rng.gen_range(p)).collect())
+                .collect();
+            let coeffs: Vec<u64> = (0..terms).map(|_| rng.gen_range(p)).collect();
+            let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+            let mut ob = vec![0u64; len];
+            vecops::weighted_sum(f, &coeffs, &views, &mut ob);
+            let mut om = vec![0u64; len];
+            mf.weighted_sum_premont(&mf.to_mont_vec(&coeffs), &views, &mut om);
+            assert_eq!(om, ob, "kernel-tier weighted_sum value drift");
+            let sb = time_it("kernel-tier/weighted_sum barrett 17x64k", 2, 9, || {
+                vecops::weighted_sum(f, &coeffs, &views, &mut ob);
+                std::hint::black_box(&ob);
+            });
+            println!("{}", sb.report());
+            let sm = time_it("kernel-tier/weighted_sum mont 17x64k", 2, 9, || {
+                let cm = mf.to_mont_vec(&coeffs);
+                mf.weighted_sum_premont(&cm, &views, &mut om);
+                std::hint::black_box(&om);
+            });
+            println!("{}  [{:.2}x vs barrett]", sm.report(), sb.median_s / sm.median_s);
+            tier_rows.push(Json::obj(vec![
+                ("kernel", Json::str("weighted_sum 17x64k")),
+                ("p", Json::num(p as f64)),
+                ("barrett_median_s", Json::num(sb.median_s)),
+                ("mont_median_s", Json::num(sm.median_s)),
+                ("speedup", Json::num(sb.median_s / sm.median_s)),
+            ]));
+        }
+
+        let doc = Json::obj(vec![
+            ("bench", Json::str("kernel_tiers")),
+            ("results", Json::Arr(tier_rows)),
+        ]);
+        std::fs::write("BENCH_kernels.json", doc.to_string())
+            .expect("writing BENCH_kernels.json");
+        println!("wrote BENCH_kernels.json");
+    }
+
     // PJRT side (needs `make artifacts` and `--features pjrt`).
     bench_pjrt(&shapes, p, &mut rng);
 
@@ -232,6 +342,7 @@ fn main() {
             fit_range: 4.0,
             flavor: MpcFlavor::Bh08,
             parallelism: Parallelism::sequential(),
+            kernel: KernelTier::Barrett,
         };
         let stats = time_it("mpc/baseline-bh08 tiny 3 iters (7 threads)", 1, 5, || {
             std::hint::black_box(train(&cfg, &ds).unwrap());

@@ -31,6 +31,7 @@ pub const VALUE_FLAGS: &[&str] = &[
     "id",
     "iters",
     "k",
+    "kernel",
     "kill-after",
     "listen",
     "max-lag",

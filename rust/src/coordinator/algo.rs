@@ -129,12 +129,13 @@ pub fn train_task(
     // public-constant mult). Mirrors the protocol's single concatenated
     // BH08 reduction over all batches.
     let pp = cfg.parallelism;
+    let tier = cfg.kernel;
     let plan_b = &task.batches;
     let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
     let mut xty: Vec<Vec<u64>> = Vec::with_capacity(plan_b.b);
     for &(lo, hi) in plan_b.ranges() {
         let sh = MatShape::new(hi - lo, d);
-        let mut v = par::matvec_t(f, pp, &task.x_q[lo * d..hi * d], sh, &task.y_q[lo..hi]);
+        let mut v = par::matvec_t_tier(f, tier, pp, &task.x_q[lo * d..hi * d], sh, &task.y_q[lo..hi]);
         vecops::scale_assign(f, &mut v, align);
         xty.push(v);
     }
@@ -149,12 +150,12 @@ pub fn train_task(
         let xb = &task.x_q[lo * d..hi * d];
         let sh = MatShape::new(hi - lo, d);
         // z = X_b·w  (scale l_x + l_w)
-        let mut z = par::matvec(f, pp, xb, sh, &w);
+        let mut z = par::matvec_tier(f, tier, pp, xb, sh, &w);
         // ĝ(z)  (scale l_c + l_x + l_w)
-        par::poly_eval_assign(f, pp, &task.coeffs_q, &mut z);
+        par::poly_eval_assign_tier(f, tier, pp, &task.coeffs_q, &mut z);
         // X_bᵀ ĝ  (scale 2l_x + l_w + l_c) — in the protocol this is the
         // Lagrange-decoded aggregate of the clients' Eq. (7) results.
-        let mut grad = par::matvec_t(f, pp, xb, sh, &z);
+        let mut grad = par::matvec_t_tier(f, tier, pp, xb, sh, &z);
         // − X_bᵀy_b (aligned)
         vecops::sub_assign(f, &mut grad, &xty[bi]);
         // Stage-1 truncation → scale l_x + l_w.
@@ -251,6 +252,25 @@ mod tests {
             cfg.parallelism = Parallelism::threads(threads);
             let par = train(&cfg, &ds).unwrap();
             assert_eq!(seq.w_trace, par.w_trace, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn kernel_tier_does_not_change_trajectory() {
+        // Montgomery is a different reduction algorithm over the same exact
+        // mod-p arithmetic: the central trainer's trajectory must be
+        // bit-identical to the Barrett default, sequential and threaded.
+        use crate::field::{KernelTier, Parallelism};
+        let spec = SynthSpec { m_train: 2000, m_test: 100, ..SynthSpec::smoke() };
+        let ds = Dataset::synth(spec, 16);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), 16);
+        cfg.iters = 10;
+        let barrett = train(&cfg, &ds).unwrap();
+        cfg.kernel = KernelTier::Mont;
+        for threads in [1usize, 4] {
+            cfg.parallelism = Parallelism::threads(threads);
+            let mont = train(&cfg, &ds).unwrap();
+            assert_eq!(barrett.w_trace, mont.w_trace, "threads={threads}");
         }
     }
 

@@ -24,7 +24,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::Dataset;
-use crate::field::{par, MatShape, Parallelism};
+use crate::field::{par, KernelTier, MatShape, Parallelism};
 use crate::mpc::dealer::{Dealer, Demand};
 use crate::mpc::Party;
 use crate::net::local::Hub;
@@ -84,6 +84,9 @@ pub struct BaselineConfig {
     /// Intra-client thread pool for the share-matvec hot path (same
     /// semantics as [`CopmlConfig::parallelism`]).
     pub parallelism: Parallelism,
+    /// Field-kernel tier for the share-matvec hot path (same semantics as
+    /// [`CopmlConfig::kernel`]; bit-identical either way).
+    pub kernel: KernelTier,
 }
 
 impl BaselineConfig {
@@ -101,6 +104,7 @@ impl BaselineConfig {
             fit_range: cfg.fit_range,
             flavor,
             parallelism: cfg.parallelism,
+            kernel: cfg.kernel,
         }
     }
 
@@ -127,6 +131,7 @@ impl BaselineConfig {
             // the conventional baselines.
             faults: FaultPlan::default(),
             max_lag: None,
+            kernel: self.kernel,
         }
     }
 }
@@ -269,7 +274,7 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
         let xb = &x_share[blo * d..bhi * d];
         let shb = MatShape::new(bhi - blo, d);
         // z = X_b·w — local share products, degree 2T.
-        let z2t = par::matvec(f, cfg.parallelism, xb, shb, &w_share);
+        let z2t = par::matvec_tier(f, cfg.kernel, cfg.parallelism, xb, shb, &w_share);
         tick!(1);
         // degree reduction of the rows_b-vector (the step COPML avoids).
         let mut z = if bgw {
@@ -283,7 +288,7 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
         party.add_const(&mut z, c0q);
         party.sub(&mut z, &y_aligned[blo..bhi]);
         // grad = X_bᵀ·res — local products, degree 2T.
-        let g2t = par::matvec_t(f, cfg.parallelism, xb, shb, &z);
+        let g2t = par::matvec_t_tier(f, cfg.kernel, cfg.parallelism, xb, shb, &z);
         tick!(1);
         let grad = if bgw {
             party.degree_reduce_bgw(&g2t)
@@ -358,6 +363,7 @@ mod tests {
             fit_range: 4.0,
             flavor: MpcFlavor::Bgw,
             parallelism: Parallelism::sequential(),
+            kernel: KernelTier::Barrett,
         };
         let bgw = train(&base, &ds).unwrap();
         let bh = train(&BaselineConfig { flavor: MpcFlavor::Bh08, ..base }, &ds).unwrap();
@@ -402,6 +408,7 @@ mod tests {
             fit_range: 4.0,
             flavor: MpcFlavor::Bh08,
             parallelism: Parallelism::sequential(),
+            kernel: KernelTier::Barrett,
         };
         assert!(train(&cfg, &ds).unwrap_err().contains("batches"));
         cfg.batches = ds.m + 1;

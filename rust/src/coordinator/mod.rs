@@ -25,7 +25,7 @@ pub mod protocol;
 pub mod rounds;
 
 use crate::data::{BatchPlan, Dataset};
-use crate::field::{Field, Parallelism};
+use crate::field::{Field, KernelTier, Parallelism};
 use crate::lcc;
 use crate::ml::fit_sigmoid;
 use crate::ml::sigmoid::SigmoidPoly;
@@ -175,6 +175,14 @@ pub struct CopmlConfig {
     /// round). `None` (the default) disables exclusion: late parties are
     /// skipped per-round but stay in the roster.
     pub max_lag: Option<usize>,
+    /// Field-kernel tier for the hot paths (`--kernel barrett|mont`):
+    /// scalar Barrett ([`crate::field::vecops`], the default and the
+    /// bit-identity oracle) or lane-blocked batch-Montgomery
+    /// ([`crate::field::mont`]). Value-transparent: both tiers compute
+    /// exact mod-`p` arithmetic on canonical representatives, so the
+    /// trajectory is bit-identical under either
+    /// (`tests/protocol_equivalence.rs`).
+    pub kernel: KernelTier,
 }
 
 impl CopmlConfig {
@@ -201,6 +209,7 @@ impl CopmlConfig {
             offline: OfflineMode::Dealer,
             faults: FaultPlan::default(),
             max_lag: None,
+            kernel: KernelTier::Barrett,
         }
     }
 
@@ -422,7 +431,7 @@ impl CopmlConfig {
             .map(|(i, &c)| {
                 let exp = base + (1 - i as i64) * zscale;
                 let scaled = c * 2f64.powi(exp as i32);
-                f.from_i64((scaled + 0.5).floor() as i64)
+                f.from_i64(quant::round_half_away(scaled))
             })
             .collect();
         (poly, coeffs_q)
@@ -661,10 +670,10 @@ mod tests {
         let f = cfg.plan.field;
         // c0 ≈ 0.5 at scale 2^{lc+lx+lw}
         let scale = 2f64.powi((cfg.plan.lc + cfg.plan.lx + cfg.plan.lw) as i32);
-        assert_eq!(cq[0], f.from_i64((poly.coeffs[0] * scale + 0.5).floor() as i64));
+        assert_eq!(cq[0], f.from_i64(quant::round_half_away(poly.coeffs[0] * scale)));
         assert!((f.to_i64(cq[0]) as f64 - 0.5 * scale).abs() <= 2.0, "c0_q = {}", f.to_i64(cq[0]));
         // c1 at scale lc = 3: Round(c1·8)
-        assert_eq!(f.to_i64(cq[1]), (poly.coeffs[1] * 8.0 + 0.5).floor() as i64);
+        assert_eq!(f.to_i64(cq[1]), quant::round_half_away(poly.coeffs[1] * 8.0));
         assert!(f.to_i64(cq[1]) >= 1);
     }
 

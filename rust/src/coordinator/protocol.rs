@@ -191,9 +191,10 @@ pub fn train(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOutput, String> 
     #[allow(unused_mut)]
     let mut _server: Option<KernelServer> = None;
     let kernel_par = cfg.parallelism;
+    let kernel_tier = cfg.kernel;
     let mk_kernel: Box<dyn Fn() -> Box<dyn GradKernel>> = match cfg.engine {
         Engine::Native => {
-            Box::new(move || Box::new(NativeKernel::with_parallelism(f, kernel_par)))
+            Box::new(move || Box::new(NativeKernel::with_tier(f, kernel_par, kernel_tier)))
         }
         #[cfg(feature = "pjrt")]
         Engine::Pjrt => {
@@ -247,8 +248,9 @@ pub fn train_tcp_loopback(cfg: &CopmlConfig, ds: &Dataset) -> Result<ProtocolOut
         .map_err(|e| format!("establishing the loopback TCP mesh: {e}"))?;
     let f = cfg.plan.field;
     let kernel_par = cfg.parallelism;
+    let kernel_tier = cfg.kernel;
     let mk_kernel: Box<dyn Fn() -> Box<dyn GradKernel>> =
-        Box::new(move || Box::new(NativeKernel::with_parallelism(f, kernel_par)));
+        Box::new(move || Box::new(NativeKernel::with_tier(f, kernel_par, kernel_tier)));
     run_clients(cfg, ds, transports, &mk_kernel)
 }
 
@@ -297,7 +299,7 @@ pub fn run_client(
     let offline_s = t0.elapsed().as_secs_f64();
     let offline_bytes = net.bytes_sent() - bytes_mark;
     let kernel: Box<dyn GradKernel> =
-        Box::new(NativeKernel::with_parallelism(f, cfg.parallelism));
+        Box::new(NativeKernel::with_tier(f, cfg.parallelism, cfg.kernel));
     let ctx = ClientCtx { cfg: cfg.clone(), task, kernel };
     let party = Party::new(net, cfg.t, f, pool, cfg.seed);
     let mut out = client_main(&party, ctx);
@@ -587,11 +589,13 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     // a single BH08 degree reduction — one protocol round regardless of B
     // (for B = 1 this is byte-identical to the classic full-batch phase).
     let pp = cfg.parallelism;
+    let tier = cfg.kernel;
     let nb = plan_b.b;
     let mut local = vec![0u64; nb * d];
     for (bi, &(blo, bhi)) in plan_b.ranges().iter().enumerate() {
         let sh = MatShape::new(bhi - blo, d);
-        let lb = par::matvec_t(f, pp, &x_share[blo * d..bhi * d], sh, &y_share[blo..bhi]); // deg 2T
+        let lb =
+            par::matvec_t_tier(f, tier, pp, &x_share[blo * d..bhi * d], sh, &y_share[blo..bhi]); // deg 2T
         local[bi * d..(bi + 1) * d].copy_from_slice(&lb);
     }
     let mut xty_all = party.degree_reduce_bh08(&local); // deg T, B·d doubles
@@ -631,7 +635,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         let mut own_enc_share: Option<Vec<u64>> = None;
         for &i in &targets {
             let mut buf = vec![0u64; rows_bk * d];
-            enc.encode_one_par(pp, i, &all_parts, &mut buf);
+            enc.encode_one_tier(tier, pp, i, &all_parts, &mut buf);
             if i == me {
                 own_enc_share = Some(buf);
             } else {
@@ -893,7 +897,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             // ---- decode + model update (Eq. 10–11; lines 18–23) ---------
             let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
             let mut grad = vec![0u64; d];
-            dec_cache.get(&members).decode_sum_par(pp, &views, &mut grad);
+            dec_cache.get(&members).decode_sum_tier(tier, pp, &views, &mut grad);
             party.sub(&mut grad, &xty[bi]);
             let mut g1 =
                 party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, true);

@@ -16,10 +16,12 @@
 //! Reduction is Barrett (`μ = ⌊2^64/p⌋`): a runtime-`p` `%` compiles to a
 //! hardware divide (~25 cycles); Barrett is two multiplies and a correction.
 
+pub mod mont;
 pub mod par;
 mod primes;
 pub mod vecops;
 
+pub use mont::{KernelTier, MontField};
 pub use par::Parallelism;
 pub use primes::{is_prime_u64, prev_prime, P25, P26, P31};
 pub use vecops::MatShape;

@@ -1,0 +1,421 @@
+//! Batch-Montgomery kernel tier (`--kernel mont`) — the SIMD-shaped
+//! alternative to the scalar Barrett kernels of [`super::vecops`].
+//!
+//! ## Why a second tier
+//!
+//! Barrett's [`super::Field::reduce`] ends in a `while r >= p` correction:
+//! a data-dependent branch in the middle of every reduction, which is what
+//! keeps the autovectorizer from turning the hot loops into SIMD code.
+//! Montgomery REDC with `R = 2^64` is branchless (one conditional subtract,
+//! expressible as straight-line arithmetic) and — more importantly for the
+//! shapes COPML runs — lets whole matvec/weighted_sum/fused-gradient passes
+//! run on *raw u64 accumulation* with exactly one REDC per accumulator
+//! flush, the same budget discipline as Appendix A.
+//!
+//! ## The mixed-domain trick
+//!
+//! The classical recipe converts both operands into Montgomery form. That
+//! would mean converting the large `X̃` matrix every pass — exactly the
+//! transform cost the tier must amortize away. Instead every kernel here
+//! keeps the matrix operand **plain** and converts only the small vector
+//! operand (`w̃`, decode coefficients, `v`) once per pass:
+//!
+//! ```text
+//! REDC(Σ_j x_j · w̄_j) = Σ_j x_j · w_j · R · R⁻¹ = Σ_j x_j · w_j  (mod p)
+//! ```
+//!
+//! with `w̄ = w·R mod p` the Montgomery image. One product of a plain and a
+//! Montgomery operand is `< (p−1)²` like any Barrett product, so the
+//! [`super::Field::accum_budget`] bound carries over unchanged; and the
+//! REDC of the raw sum lands directly back in the **plain canonical**
+//! domain — which is why every kernel below is bit-identical to its
+//! Barrett twin (both compute exact mod-`p` arithmetic on canonical
+//! representatives; `tests/vecops_props.rs` pins the grid).
+//!
+//! **Domain-mixing hazard:** a mid-budget flush must NOT REDC in place and
+//! keep accumulating — the flushed value is plain while incoming products
+//! still carry the `R` factor. Every kernel keeps a separate canonical
+//! *carry* accumulator: on flush, `carry += REDC(acc); acc = 0`.
+//!
+//! ## Lane blocking
+//!
+//! Inner loops are fixed [`LANES`]-wide indexed blocks (see
+//! [`super::vecops::axpy_raw_lanes`] / [`super::vecops::dot_raw_lanes`]) —
+//! no iterator chains, no per-element branch — the shape LLVM's
+//! autovectorizer reliably turns into SIMD multiply-adds without any
+//! `core::arch` unsafe.
+
+use super::{vecops, Field, MatShape};
+
+pub use super::vecops::LANES;
+
+/// Which field-kernel tier the hot paths run on (`--kernel barrett|mont`).
+///
+/// Barrett is the default and the bit-identity oracle; Montgomery is the
+/// lane-blocked fast tier. The choice is value-transparent: both tiers
+/// produce canonical `[0, p)` representatives of the same exact mod-`p`
+/// results, so every trainer's `w_trace` is bit-identical under either
+/// (locked in by `tests/protocol_equivalence.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Scalar Barrett kernels ([`super::vecops`]) — default, oracle.
+    #[default]
+    Barrett,
+    /// Batch-Montgomery lane-blocked kernels (this module).
+    Mont,
+}
+
+impl std::str::FromStr for KernelTier {
+    type Err = String;
+    fn from_str(s: &str) -> Result<KernelTier, String> {
+        match s {
+            "barrett" => Ok(KernelTier::Barrett),
+            "mont" => Ok(KernelTier::Mont),
+            other => Err(format!("unknown kernel tier '{other}' (expected barrett|mont)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelTier::Barrett => write!(fm, "barrett"),
+            KernelTier::Mont => write!(fm, "mont"),
+        }
+    }
+}
+
+/// Montgomery context for a [`Field`]: `R = 2^64`, precomputed
+/// `n' = −p⁻¹ mod 2^64` and `r2 = R² mod p`.
+///
+/// Cheap to copy; pass by value (it embeds the [`Field`]).
+#[derive(Clone, Copy, Debug)]
+pub struct MontField {
+    f: Field,
+    p: u64,
+    /// `−p⁻¹ mod 2^64` (Hensel-lifted).
+    np: u64,
+    /// `2^128 mod p` — the to-form multiplier.
+    r2: u64,
+}
+
+impl MontField {
+    pub fn new(f: Field) -> MontField {
+        let p = f.modulus();
+        // p⁻¹ mod 2^64 by Newton–Hensel lifting: odd p starts with 3
+        // correct low bits (p·p ≡ 1 mod 8); each step doubles them, so 5
+        // steps reach ≥ 96 ≥ 64 bits.
+        let mut inv = p;
+        for _ in 0..5 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(p.wrapping_mul(inv)));
+        }
+        debug_assert_eq!(p.wrapping_mul(inv), 1);
+        let r1 = f.reduce_u128(1u128 << 64); // 2^64 mod p
+        MontField { f, p, np: inv.wrapping_neg(), r2: f.mul(r1, r1) }
+    }
+
+    #[inline(always)]
+    pub fn field(&self) -> Field {
+        self.f
+    }
+
+    /// Montgomery reduction: `REDC(t) = t·R⁻¹ mod p`, canonical `[0, p)`.
+    /// Valid for any `t < R·p` — in particular any raw u64 accumulator
+    /// (`t < 2^64 < R·p`) and any product of two canonical elements.
+    #[inline(always)]
+    pub fn redc(&self, t: u128) -> u64 {
+        debug_assert!(t < (self.p as u128) << 64);
+        let m = (t as u64).wrapping_mul(self.np);
+        // t + m·p ≡ 0 mod R, and < R·p + R·p, so u < 2p: one subtract.
+        let u = ((t + m as u128 * self.p as u128) >> 64) as u64;
+        if u >= self.p {
+            u - self.p
+        } else {
+            u
+        }
+    }
+
+    /// Into Montgomery form: `x̄ = x·R mod p`.
+    #[inline(always)]
+    pub fn to_mont(&self, x: u64) -> u64 {
+        debug_assert!(x < self.p);
+        self.redc(x as u128 * self.r2 as u128)
+    }
+
+    /// Out of Montgomery form: `x̄·R⁻¹ = x mod p`.
+    #[inline(always)]
+    pub fn from_mont(&self, x: u64) -> u64 {
+        self.redc(x as u128)
+    }
+
+    /// Batched to-form conversion — the one transform a kernel pass pays,
+    /// amortized over the whole matvec/weighted-sum it feeds.
+    pub fn to_mont_vec(&self, xs: &[u64]) -> Vec<u64> {
+        xs.iter().map(|&x| self.to_mont(x)).collect()
+    }
+
+    /// Batched from-form conversion (the inverse of [`MontField::to_mont_vec`]).
+    pub fn from_mont_vec(&self, xs: &[u64]) -> Vec<u64> {
+        xs.iter().map(|&x| self.from_mont(x)).collect()
+    }
+
+    /// Inner product `Σ a[i]·b[i] mod p` with `b_mont` pre-converted
+    /// ([`MontField::to_mont_vec`]): raw lane-blocked accumulation per
+    /// budget tile, one REDC per tile, canonical plain result.
+    pub fn dot_premont(&self, a: &[u64], b_mont: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b_mont.len());
+        let f = self.f;
+        let budget = f.accum_budget();
+        let mut acc = 0u64; // canonical carry (plain domain)
+        let mut start = 0;
+        while start < a.len() {
+            let end = (start + budget).min(a.len());
+            let t = vecops::dot_raw_lanes(&a[start..end], &b_mont[start..end]);
+            acc = f.add(acc, self.redc(t as u128));
+            start = end;
+        }
+        acc
+    }
+
+    /// `y = A·x` with the `x` conversion paid once up front.
+    pub fn matvec(&self, a: &[u64], shape: MatShape, x: &[u64]) -> Vec<u64> {
+        self.matvec_premont(a, shape, &self.to_mont_vec(x))
+    }
+
+    /// [`MontField::matvec`] with `x_mont` pre-converted (row-block callers
+    /// share one conversion across all workers).
+    pub fn matvec_premont(&self, a: &[u64], shape: MatShape, x_mont: &[u64]) -> Vec<u64> {
+        assert_eq!(a.len(), shape.len());
+        assert_eq!(x_mont.len(), shape.cols);
+        let mut y = Vec::with_capacity(shape.rows);
+        for r in 0..shape.rows {
+            y.push(self.dot_premont(&a[r * shape.cols..(r + 1) * shape.cols], x_mont));
+        }
+        y
+    }
+
+    /// `y = Aᵀ·v` with the `v` conversion paid once up front.
+    pub fn matvec_t(&self, a: &[u64], shape: MatShape, v: &[u64]) -> Vec<u64> {
+        self.matvec_t_premont(a, shape, &self.to_mont_vec(v))
+    }
+
+    /// [`MontField::matvec_t`] with `v_mont` pre-converted. Raw lane-blocked
+    /// column accumulation; the budget flush goes through the separate
+    /// canonical carry (see module docs on domain mixing).
+    pub fn matvec_t_premont(&self, a: &[u64], shape: MatShape, v_mont: &[u64]) -> Vec<u64> {
+        assert_eq!(a.len(), shape.len());
+        assert_eq!(v_mont.len(), shape.rows);
+        let f = self.f;
+        let budget = f.accum_budget();
+        let cols = shape.cols;
+        let mut acc = vec![0u64; cols]; // raw (Montgomery-weighted) sums
+        let mut out = vec![0u64; cols]; // canonical carry
+        let mut pending = 0usize;
+        for r in 0..shape.rows {
+            if pending + 1 > budget {
+                for j in 0..cols {
+                    out[j] = f.add(out[j], self.redc(acc[j] as u128));
+                    acc[j] = 0;
+                }
+                pending = 0;
+            }
+            let c = v_mont[r];
+            if c != 0 {
+                vecops::axpy_raw_lanes(&mut acc, c, &a[r * cols..(r + 1) * cols]);
+            }
+            pending += 1;
+        }
+        for j in 0..cols {
+            out[j] = f.add(out[j], self.redc(acc[j] as u128));
+        }
+        out
+    }
+
+    /// `out ← Σ_k coeffs[k]·mats[k] mod p` with the coefficient conversion
+    /// paid once ([`MontField::weighted_sum_premont`] for pre-converted
+    /// coefficients).
+    pub fn weighted_sum(&self, coeffs: &[u64], mats: &[&[u64]], out: &mut [u64]) {
+        self.weighted_sum_premont(&self.to_mont_vec(coeffs), mats, out);
+    }
+
+    /// [`MontField::weighted_sum`] with `coeffs_mont` pre-converted.
+    /// Element-blocked like [`vecops::weighted_sum`]; `out` doubles as the
+    /// raw accumulator, a scratch carry holds the canonical flushes.
+    pub fn weighted_sum_premont(&self, coeffs_mont: &[u64], mats: &[&[u64]], out: &mut [u64]) {
+        assert_eq!(coeffs_mont.len(), mats.len());
+        let n = out.len();
+        for m in mats {
+            assert_eq!(m.len(), n, "matrix size mismatch in weighted_sum");
+        }
+        let f = self.f;
+        let budget = f.accum_budget();
+        const BLOCK: usize = 4096;
+        out.fill(0);
+        let mut carry = vec![0u64; BLOCK.min(n)];
+        let mut start = 0;
+        while start < n {
+            let end = (start + BLOCK).min(n);
+            let out_b = &mut out[start..end];
+            let carry_b = &mut carry[..end - start];
+            carry_b.fill(0);
+            let mut pending = 0usize;
+            for (k, m) in mats.iter().enumerate() {
+                let c = coeffs_mont[k]; // c̄ = 0 ⟺ c = 0: skip path intact
+                if c == 0 {
+                    continue;
+                }
+                if pending + 1 > budget {
+                    for (o, cb) in out_b.iter_mut().zip(carry_b.iter_mut()) {
+                        *cb = f.add(*cb, self.redc(*o as u128));
+                        *o = 0;
+                    }
+                    pending = 0;
+                }
+                vecops::axpy_raw_lanes(out_b, c, &m[start..end]);
+                pending += 1;
+            }
+            for (o, &cb) in out_b.iter_mut().zip(carry_b.iter()) {
+                *o = f.add(cb, self.redc(*o as u128));
+            }
+            start = end;
+        }
+    }
+
+    /// One Horner evaluation `ĝ(z)` in the mixed domain: `z` is converted
+    /// once, the accumulator and coefficients stay plain, so every step is
+    /// a single REDC (`REDC(acc·z̄) = acc·z`) against the Barrett path's
+    /// two reductions. `coeffs` must be non-empty (callers own the
+    /// named-culprit message).
+    #[inline]
+    pub fn poly_eval_one(&self, coeffs: &[u64], z: u64) -> u64 {
+        debug_assert!(!coeffs.is_empty());
+        let f = self.f;
+        let zm = self.to_mont(z);
+        let mut acc = coeffs[coeffs.len() - 1];
+        for idx in (0..coeffs.len() - 1).rev() {
+            acc = f.add(self.redc(acc as u128 * zm as u128), coeffs[idx]);
+        }
+        acc
+    }
+
+    /// Element-wise polynomial evaluation by mixed-domain Horner. The
+    /// empty-coefficient case is the zero polynomial (`z` is zero-filled),
+    /// matching [`vecops::poly_eval_assign`].
+    pub fn poly_eval_assign(&self, coeffs: &[u64], z: &mut [u64]) {
+        if coeffs.is_empty() {
+            z.fill(0);
+            return;
+        }
+        for v in z.iter_mut() {
+            *v = self.poly_eval_one(coeffs, *v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::{P25, P26, P31};
+    use crate::prng::Rng;
+
+    const PRIMES: [u64; 4] = [97, P25, P26, P31];
+
+    #[test]
+    fn redc_and_form_round_trips() {
+        for p in PRIMES {
+            let mf = MontField::new(Field::new(p));
+            let mut r = Rng::seed_from_u64(1);
+            for x in [0, 1, 2, p - 2, p - 1] {
+                assert_eq!(mf.from_mont(mf.to_mont(x)), x, "p={p} x={x}");
+            }
+            for _ in 0..2000 {
+                let x = r.gen_range(p);
+                assert_eq!(mf.from_mont(mf.to_mont(x)), x, "p={p} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn redc_matches_definition() {
+        // REDC(t) = t·R⁻¹ mod p for raw u64 sums and full products.
+        for p in PRIMES {
+            let f = Field::new(p);
+            let mf = MontField::new(f);
+            let rinv = f.inv(f.reduce_u128(1u128 << 64));
+            let mut r = Rng::seed_from_u64(2);
+            for _ in 0..2000 {
+                let t = r.next_u64() as u128 % ((p as u128) << 33);
+                let want = f.mul(f.reduce_u128(t), rinv);
+                assert_eq!(mf.redc(t), want, "p={p} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_domain_product_is_plain() {
+        // REDC(a · b̄) = a·b mod p — the invariant every kernel rests on.
+        for p in PRIMES {
+            let f = Field::new(p);
+            let mf = MontField::new(f);
+            let mut r = Rng::seed_from_u64(3);
+            for _ in 0..2000 {
+                let a = r.gen_range(p);
+                let b = r.gen_range(p);
+                assert_eq!(
+                    mf.redc(a as u128 * mf.to_mont(b) as u128),
+                    f.mul(a, b),
+                    "p={p} a={a} b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_barrett_saturated() {
+        // All-(p−1) vectors across the budget boundary: maximal raw-
+        // accumulator pressure for the tight-budget prime (budget 4).
+        for p in [P26, P31] {
+            let f = Field::new(p);
+            let mf = MontField::new(f);
+            let b = f.accum_budget().min(8192);
+            for n in [0usize, 1, LANES - 1, LANES, LANES + 1, b, b + 1, 3 * b + 2] {
+                let a = vec![p - 1; n];
+                assert_eq!(
+                    mf.dot_premont(&a, &mf.to_mont_vec(&a)),
+                    vecops::dot(f, &a, &a),
+                    "p={p} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn poly_eval_matches_barrett() {
+        let f = Field::new(P26);
+        let mf = MontField::new(f);
+        let mut r = Rng::seed_from_u64(4);
+        for deg in [0usize, 1, 3, 7] {
+            let coeffs: Vec<u64> = (0..=deg).map(|_| r.gen_range(P26)).collect();
+            let z0: Vec<u64> = (0..100).map(|_| r.gen_range(P26)).collect();
+            let mut a = z0.clone();
+            let mut b = z0.clone();
+            vecops::poly_eval_assign(f, &coeffs, &mut a);
+            mf.poly_eval_assign(&coeffs, &mut b);
+            assert_eq!(a, b, "deg={deg}");
+        }
+        // Zero polynomial: both tiers define it as the zero map.
+        let mut z = vec![5u64, 7, 9];
+        mf.poly_eval_assign(&[], &mut z);
+        assert_eq!(z, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn kernel_tier_parses_and_displays() {
+        assert_eq!("barrett".parse::<KernelTier>().unwrap(), KernelTier::Barrett);
+        assert_eq!("mont".parse::<KernelTier>().unwrap(), KernelTier::Mont);
+        assert!("montgomery".parse::<KernelTier>().is_err());
+        assert_eq!(KernelTier::default(), KernelTier::Barrett);
+        assert_eq!(KernelTier::Mont.to_string(), "mont");
+        assert_eq!(KernelTier::Barrett.to_string(), "barrett");
+    }
+}

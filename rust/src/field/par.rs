@@ -18,7 +18,7 @@
 //! thread count — asserted by the tests below and by
 //! `coordinator::algo::tests::parallelism_does_not_change_trajectory`.
 
-use super::{vecops, Field, MatShape};
+use super::{vecops, Field, KernelTier, MatShape, MontField};
 
 /// Minimum number of output elements (or matrix cells) a worker must have
 /// before spawning a thread is worth the ~10 µs overhead.
@@ -209,6 +209,154 @@ pub fn poly_eval_assign(f: Field, par: Parallelism, coeffs: &[u64], z: &mut [u64
     });
 }
 
+// ---------------------------------------------------------------------
+// Kernel-tier dispatch (`--kernel barrett|mont`).
+//
+// Each `_tier` entry point is the single place a trainer hot path decides
+// which kernel substrate runs. The Barrett arm is exactly the existing
+// function above; the Montgomery arm pays the batched to-form conversion
+// of the SMALL operand once, then reuses the same chunking/row-block
+// scaffolding with the lane-blocked `mont` kernels — so the per-worker
+// blocks see pre-converted operands and the transform cost is amortized
+// across the whole pass regardless of thread count. Both arms produce
+// canonical `[0, p)` results of the same exact mod-p computation, hence
+// bit-identical outputs (pinned by `tests/vecops_props.rs`).
+// ---------------------------------------------------------------------
+
+/// Tier-dispatched [`weighted_sum`].
+pub fn weighted_sum_tier(
+    f: Field,
+    tier: KernelTier,
+    par: Parallelism,
+    coeffs: &[u64],
+    mats: &[&[u64]],
+    out: &mut [u64],
+) {
+    match tier {
+        KernelTier::Barrett => weighted_sum(f, par, coeffs, mats, out),
+        KernelTier::Mont => {
+            let mf = MontField::new(f);
+            let cm = mf.to_mont_vec(coeffs); // one conversion, all workers
+            let workers = par.workers(out.len());
+            if workers <= 1 {
+                mf.weighted_sum_premont(&cm, mats, out);
+                return;
+            }
+            assert_eq!(coeffs.len(), mats.len());
+            for m in mats {
+                assert_eq!(m.len(), out.len(), "matrix size mismatch in weighted_sum");
+            }
+            let chunk = out.len().div_ceil(workers);
+            let cm = cm.as_slice();
+            std::thread::scope(|s| {
+                for (ci, out_b) in out.chunks_mut(chunk).enumerate() {
+                    let lo = ci * chunk;
+                    let hi = lo + out_b.len();
+                    s.spawn(move || {
+                        let sub: Vec<&[u64]> = mats.iter().map(|m| &m[lo..hi]).collect();
+                        mf.weighted_sum_premont(cm, &sub, out_b);
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Tier-dispatched [`matvec`].
+pub fn matvec_tier(
+    f: Field,
+    tier: KernelTier,
+    par: Parallelism,
+    a: &[u64],
+    shape: MatShape,
+    x: &[u64],
+) -> Vec<u64> {
+    match tier {
+        KernelTier::Barrett => matvec(f, par, a, shape, x),
+        KernelTier::Mont => {
+            assert_eq!(a.len(), shape.len());
+            assert_eq!(x.len(), shape.cols);
+            let mf = MontField::new(f);
+            let xm = mf.to_mont_vec(x);
+            let workers = par.workers(shape.len());
+            if workers <= 1 || shape.rows == 0 || shape.cols == 0 {
+                return mf.matvec_premont(a, shape, &xm);
+            }
+            let rows_chunk = shape.rows.div_ceil(workers);
+            let mut y = vec![0u64; shape.rows];
+            let xm = xm.as_slice();
+            std::thread::scope(|s| {
+                for (y_b, a_b) in
+                    y.chunks_mut(rows_chunk).zip(a.chunks(rows_chunk * shape.cols))
+                {
+                    s.spawn(move || {
+                        let block =
+                            mf.matvec_premont(a_b, MatShape::new(y_b.len(), shape.cols), xm);
+                        y_b.copy_from_slice(&block);
+                    });
+                }
+            });
+            y
+        }
+    }
+}
+
+/// Tier-dispatched [`matvec_t`].
+pub fn matvec_t_tier(
+    f: Field,
+    tier: KernelTier,
+    par: Parallelism,
+    a: &[u64],
+    shape: MatShape,
+    v: &[u64],
+) -> Vec<u64> {
+    match tier {
+        KernelTier::Barrett => matvec_t(f, par, a, shape, v),
+        KernelTier::Mont => {
+            assert_eq!(a.len(), shape.len());
+            assert_eq!(v.len(), shape.rows);
+            let mf = MontField::new(f);
+            let vm = mf.to_mont_vec(v);
+            let workers = par.workers(shape.len());
+            if workers <= 1 || shape.rows == 0 || shape.cols == 0 {
+                return mf.matvec_t_premont(a, shape, &vm);
+            }
+            let vm = vm.as_slice();
+            row_block_reduce(f, a, shape.rows, shape.cols, workers, |a_b, r0| {
+                let rows_b = a_b.len() / shape.cols;
+                mf.matvec_t_premont(a_b, MatShape::new(rows_b, shape.cols), &vm[r0..r0 + rows_b])
+            })
+        }
+    }
+}
+
+/// Tier-dispatched [`poly_eval_assign`].
+pub fn poly_eval_assign_tier(
+    f: Field,
+    tier: KernelTier,
+    par: Parallelism,
+    coeffs: &[u64],
+    z: &mut [u64],
+) {
+    match tier {
+        KernelTier::Barrett => poly_eval_assign(f, par, coeffs, z),
+        KernelTier::Mont => {
+            let mf = MontField::new(f);
+            let workers = par.workers(z.len());
+            if workers <= 1 {
+                mf.poly_eval_assign(coeffs, z);
+                return;
+            }
+            let chunk = z.len().div_ceil(workers);
+            std::thread::scope(|s| {
+                for z_b in z.chunks_mut(chunk) {
+                    s.spawn(move || mf.poly_eval_assign(coeffs, z_b));
+                }
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,6 +471,52 @@ mod tests {
             let mut z = z0.clone();
             poly_eval_assign(f, Parallelism::threads(threads), &coeffs, &mut z);
             assert_eq!(z, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn mont_tier_bit_identical_across_thread_counts() {
+        // The tier dispatch must be value-transparent: every `_tier` entry
+        // point under KernelTier::Mont matches its Barrett twin exactly,
+        // sequential and threaded, at both a roomy and a budget-4 prime.
+        for p in [P26, P31] {
+            let f = Field::new(p);
+            let mut r = Rng::seed_from_u64(11);
+            let (rows, cols) = (600usize, 77usize);
+            let a = rand_vec(&mut r, p, rows * cols);
+            let x = rand_vec(&mut r, p, cols);
+            let v = rand_vec(&mut r, p, rows);
+            let shape = MatShape::new(rows, cols);
+            let k = 9;
+            let n = 2 * MIN_PAR_WORK + 17;
+            let mats: Vec<Vec<u64>> = (0..k).map(|_| rand_vec(&mut r, p, n)).collect();
+            let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+            let coeffs = rand_vec(&mut r, p, k);
+            let poly = rand_vec(&mut r, p, 4);
+            let z0 = rand_vec(&mut r, p, n);
+            for threads in [1usize, 3, 4] {
+                let par = Parallelism::threads(threads);
+                assert_eq!(
+                    matvec_tier(f, KernelTier::Mont, par, &a, shape, &x),
+                    matvec_tier(f, KernelTier::Barrett, par, &a, shape, &x),
+                    "matvec p={p} threads={threads}"
+                );
+                assert_eq!(
+                    matvec_t_tier(f, KernelTier::Mont, par, &a, shape, &v),
+                    matvec_t_tier(f, KernelTier::Barrett, par, &a, shape, &v),
+                    "matvec_t p={p} threads={threads}"
+                );
+                let mut wb = vec![0u64; n];
+                let mut wm = vec![0u64; n];
+                weighted_sum_tier(f, KernelTier::Barrett, par, &coeffs, &views, &mut wb);
+                weighted_sum_tier(f, KernelTier::Mont, par, &coeffs, &views, &mut wm);
+                assert_eq!(wb, wm, "weighted_sum p={p} threads={threads}");
+                let mut zb = z0.clone();
+                let mut zm = z0.clone();
+                poly_eval_assign_tier(f, KernelTier::Barrett, par, &poly, &mut zb);
+                poly_eval_assign_tier(f, KernelTier::Mont, par, &poly, &mut zm);
+                assert_eq!(zb, zm, "poly_eval p={p} threads={threads}");
+            }
         }
     }
 

@@ -13,6 +13,68 @@
 
 use super::Field;
 
+/// Lane width of the blocked raw-accumulation helpers below. Eight u64
+/// lanes fill two AVX2 registers (or one AVX-512 register); the fixed
+/// width is what lets the autovectorizer emit SIMD multiply-adds.
+pub const LANES: usize = 8;
+
+/// Raw (reduction-free) lane-blocked `acc[i] += c·x[i]` — the inner loop of
+/// the Montgomery kernel tier ([`super::mont`]). No modular reduction, no
+/// iterator chain, no branch: a fixed [`LANES`]-wide block of indexed
+/// multiply-adds the autovectorizer turns into SIMD, plus a scalar tail.
+/// The caller owns the overflow discipline ([`Field::accum_budget`]).
+#[inline]
+pub fn axpy_raw_lanes(acc: &mut [u64], c: u64, x: &[u64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = acc.len();
+    let mut j = 0;
+    while j + LANES <= n {
+        acc[j] += c * x[j];
+        acc[j + 1] += c * x[j + 1];
+        acc[j + 2] += c * x[j + 2];
+        acc[j + 3] += c * x[j + 3];
+        acc[j + 4] += c * x[j + 4];
+        acc[j + 5] += c * x[j + 5];
+        acc[j + 6] += c * x[j + 6];
+        acc[j + 7] += c * x[j + 7];
+        j += LANES;
+    }
+    while j < n {
+        acc[j] += c * x[j];
+        j += 1;
+    }
+}
+
+/// Raw (reduction-free) lane-blocked `Σ a[i]·b[i]` over one accumulation-
+/// budget tile — the other half of the [`super::mont`] inner loops. The
+/// caller guarantees `a.len() ≤ accum_budget` so the u64 sum cannot wrap.
+#[inline]
+pub fn dot_raw_lanes(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut lanes = [0u64; LANES];
+    let mut j = 0;
+    while j + LANES <= n {
+        lanes[0] += a[j] * b[j];
+        lanes[1] += a[j + 1] * b[j + 1];
+        lanes[2] += a[j + 2] * b[j + 2];
+        lanes[3] += a[j + 3] * b[j + 3];
+        lanes[4] += a[j + 4] * b[j + 4];
+        lanes[5] += a[j + 5] * b[j + 5];
+        lanes[6] += a[j + 6] * b[j + 6];
+        lanes[7] += a[j + 7] * b[j + 7];
+        j += LANES;
+    }
+    let mut t = 0u64;
+    while j < n {
+        t += a[j] * b[j];
+        j += 1;
+    }
+    // Pairwise lane fold (outside the hot loop, so plain adds are fine).
+    t + ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+}
+
 /// Row-major dense matrix shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MatShape {
@@ -208,12 +270,20 @@ pub fn matmul(f: Field, a: &[u64], sa: MatShape, b: &[u64], sb: MatShape) -> Vec
 
 /// Element-wise polynomial evaluation `z[i] ← Σ_j coeffs[j]·z[i]^j (mod p)`
 /// by Horner's rule — the polynomial sigmoid `ĝ` of Eq. (5).
+///
+/// An empty `coeffs` is the zero polynomial: `z` is zero-filled. (It used
+/// to hit a bare `.unwrap()`; the fused kernel in `runtime::native` still
+/// rejects an empty sigmoid with a named-culprit panic, because there a
+/// zero ĝ silently trains nothing.)
 pub fn poly_eval_assign(f: Field, coeffs: &[u64], z: &mut [u64]) {
-    assert!(!coeffs.is_empty());
+    let Some((&last, head)) = coeffs.split_last() else {
+        z.fill(0);
+        return;
+    };
     for v in z.iter_mut() {
         let x = *v;
-        let mut acc = *coeffs.last().unwrap();
-        for &c in coeffs.iter().rev().skip(1) {
+        let mut acc = last;
+        for &c in head.iter().rev() {
             acc = f.reduce(f.mul(acc, x) + c);
         }
         *v = acc;
@@ -373,6 +443,48 @@ mod tests {
                 xp = xp * x as u128 % P26 as u128;
             }
             assert_eq!(z[i], acc as u64, "i={i}");
+        }
+    }
+
+    #[test]
+    fn poly_eval_length_boundaries() {
+        let f = Field::new(P26);
+        // Empty coefficient slice = zero polynomial (the old code hit a
+        // bare unwrap here).
+        let mut z = vec![3u64, 0, P26 - 1];
+        poly_eval_assign(f, &[], &mut z);
+        assert_eq!(z, vec![0, 0, 0]);
+        // Degree 0: constant map regardless of input.
+        let mut z = vec![3u64, 0, P26 - 1];
+        poly_eval_assign(f, &[7], &mut z);
+        assert_eq!(z, vec![7, 7, 7]);
+        // Degree 1 over an empty input slice: no-op, no panic.
+        let mut z: Vec<u64> = vec![];
+        poly_eval_assign(f, &[1, 2], &mut z);
+        assert!(z.is_empty());
+    }
+
+    #[test]
+    fn raw_lane_helpers_match_scalar() {
+        // axpy_raw_lanes / dot_raw_lanes vs the plain loops, across the
+        // lane boundary and with saturated (p−1) entries within budget.
+        let p = P26;
+        let f = Field::new(p);
+        let mut r = Rng::seed_from_u64(9);
+        for n in [0usize, 1, LANES - 1, LANES, LANES + 1, 3 * LANES + 5, 1000] {
+            let a = rand_vec(&mut r, p, n);
+            let b = rand_vec(&mut r, p, n);
+            let c = r.gen_range(p);
+            let mut acc = vec![0u64; n];
+            axpy_raw_lanes(&mut acc, c, &a);
+            let want: Vec<u64> = a.iter().map(|&x| c * x).collect();
+            assert_eq!(acc, want, "axpy n={n}");
+            assert!(n <= f.accum_budget());
+            let mut t = 0u64;
+            for (&x, &y) in a.iter().zip(&b) {
+                t += x * y;
+            }
+            assert_eq!(dot_raw_lanes(&a, &b), t, "dot n={n}");
         }
     }
 

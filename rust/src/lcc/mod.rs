@@ -17,7 +17,7 @@
 //! data (Phase 2) — see `tests/protocol_equivalence.rs` for the
 //! share/encode commutation test.
 
-use crate::field::{par, vecops, Field, Parallelism};
+use crate::field::{par, vecops, Field, KernelTier, Parallelism};
 use crate::poly;
 use crate::prng::Rng;
 
@@ -90,6 +90,20 @@ impl Encoder {
     pub fn encode_one_par(&self, pp: Parallelism, j: usize, parts: &[&[u64]], out: &mut [u64]) {
         assert_eq!(parts.len(), self.k + self.t);
         par::weighted_sum(self.field, pp, &self.coeffs[j], parts, out);
+    }
+
+    /// [`Encoder::encode_one_par`] on an explicit kernel tier
+    /// (`--kernel barrett|mont`; bit-identical output either way).
+    pub fn encode_one_tier(
+        &self,
+        tier: KernelTier,
+        pp: Parallelism,
+        j: usize,
+        parts: &[&[u64]],
+        out: &mut [u64],
+    ) {
+        assert_eq!(parts.len(), self.k + self.t);
+        par::weighted_sum_tier(self.field, tier, pp, &self.coeffs[j], parts, out);
     }
 
     /// Encode for every client. Returns `N` encoded matrices.
@@ -183,6 +197,19 @@ impl Decoder {
     pub fn decode_sum_par(&self, pp: Parallelism, results: &[&[u64]], out: &mut [u64]) {
         let agg = self.sum_coeffs(results.len());
         par::weighted_sum(self.field, pp, &agg, results, out);
+    }
+
+    /// [`Decoder::decode_sum_par`] on an explicit kernel tier
+    /// (`--kernel barrett|mont`; bit-identical output either way).
+    pub fn decode_sum_tier(
+        &self,
+        tier: KernelTier,
+        pp: Parallelism,
+        results: &[&[u64]],
+        out: &mut [u64],
+    ) {
+        let agg = self.sum_coeffs(results.len());
+        par::weighted_sum_tier(self.field, tier, pp, &agg, results, out);
     }
 }
 

@@ -9,6 +9,7 @@
 //!               [--offline dealer|distributed]  # full mode: offline randomness
 //!               [--transport hub|tcp]    # full mode: in-process or TCP loopback
 //!               [--runtime threaded|event]  # tcp: reader threads or poll reactor
+//!               [--kernel barrett|mont]  # field kernel tier (bit-identical results)
 //!               [--delay id:ms,...]      # full mode: per-iteration straggler sleep
 //!               [--kill-after id:iter,...]  # full mode: kill party at iteration
 //!               [--max-lag R]            # exclude after R consecutive missed quorums
@@ -97,6 +98,7 @@ fn config_from_args(args: &Args, ds: &Dataset, n: usize, seed: u64) -> Result<Co
     cfg.wire = args.get_or("wire", Wire::U64)?;
     cfg.runtime = args.get_or("runtime", Runtime::Threaded)?;
     cfg.offline = args.get_or("offline", OfflineMode::Dealer)?;
+    cfg.kernel = args.get_or("kernel", cfg.kernel)?;
     // Straggler experiments: injected faults + exclusion threshold
     // (validated against N/need in CopmlConfig::validate).
     if let Some(spec) = args.get("delay") {
@@ -138,9 +140,10 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         n => Parallelism::threads(n),
     };
     println!(
-        "COPML train: dataset={} (m={}, d={})  N={} K={} T={} r={}  iters={} η={}  p={}  threads={}  offline={}",
+        "COPML train: dataset={} (m={}, d={})  N={} K={} T={} r={}  iters={} η={}  p={}  threads={}  offline={}  kernel={}",
         ds.name, ds.m, ds.d, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters, cfg.eta,
-        cfg.plan.field.modulus(), cfg.parallelism.thread_count(), cfg.offline
+        cfg.plan.field.modulus(), cfg.parallelism.thread_count(), cfg.offline,
+        cfg.kernel
     );
     // Batch schedule summary (grep-asserted by CI for --batches runs).
     // Infeasible geometries skip the print and fall through to validate's

@@ -33,13 +33,36 @@
 
 use crate::field::{is_prime_u64, Field, P25, P26, P31};
 
+/// Round to the nearest integer, half-ties **away from zero** — the one
+/// rounding rule every quantization site shares (data, learning-rate
+/// factor, sigmoid coefficients).
+///
+/// The paper's `Round` (Appendix A, Eq. 13) is stated for non-negative
+/// inputs, where half-away coincides with its round-half-up. The old code
+/// extended it to negatives as `⌊v + 0.5⌋`, which rounds negative half-ties
+/// toward +∞ (−2.5 → −2): an asymmetric rule that biases quantized values
+/// of symmetric data upward. This helper pins the symmetric extension
+/// (−2.5 → −3) and guards the `as i64` cast: at f64 extremes (±∞, NaN, or
+/// magnitudes ≥ 2^63) the cast would silently saturate, so those inputs
+/// panic with a named culprit instead.
+#[inline]
+pub fn round_half_away(v: f64) -> i64 {
+    assert!(v.is_finite(), "quantizer rounding input is not finite: {v}");
+    let r = if v >= 0.0 { (v + 0.5).floor() } else { (v - 0.5).ceil() };
+    // r is integral; i64 covers exactly [−2^63, 2^63) of the integral f64s.
+    assert!(
+        (-9_223_372_036_854_775_808.0..9_223_372_036_854_775_808.0).contains(&r),
+        "quantizer rounding overflows i64: input {v}"
+    );
+    r as i64
+}
+
 /// Quantize one real number at `scale` bits: `φ(Round(2^scale · x))`
-/// (Appendix A, Eqs. 13–14). `Round` is round-half-up, matching the paper.
+/// (Appendix A, Eqs. 13–14), with `Round` = [`round_half_away`].
 #[inline]
 pub fn quantize(f: Field, x: f64, scale: u32) -> u64 {
     let v = x * (1u64 << scale) as f64;
-    let r = (v + 0.5).floor() as i64;
-    f.from_i64(r)
+    f.from_i64(round_half_away(v))
 }
 
 /// Inverse: field element → real at `scale` bits.
@@ -123,7 +146,7 @@ impl FpPlan {
     /// Quantized learning-rate factor `e_q = Round(2^{l_e}·η/m)`.
     pub fn eta_factor(&self, eta: f64, m: usize) -> u64 {
         let v = eta / m as f64 * (1u64 << self.le) as f64;
-        let r = (v + 0.5).floor() as i64;
+        let r = round_half_away(v);
         assert!(r >= 0, "negative learning rate");
         self.field.from_i64(r)
     }
@@ -200,13 +223,83 @@ mod tests {
 
     #[test]
     fn quantize_matches_paper_round_rule() {
-        // Round(x) = floor(x) if frac < 0.5 else floor(x)+1  (Eq. 13)
+        // Round(x) = floor(x) if frac < 0.5 else floor(x)+1  (Eq. 13,
+        // stated for x ≥ 0; negatives take the symmetric extension below).
         let f = Field::new(P26);
         assert_eq!(f.to_i64(quantize(f, 0.4999, 0)), 0);
         assert_eq!(f.to_i64(quantize(f, 0.5, 0)), 1);
         assert_eq!(f.to_i64(quantize(f, 1.4, 0)), 1);
         assert_eq!(f.to_i64(quantize(f, -0.4, 0)), 0);
         assert_eq!(f.to_i64(quantize(f, -0.6, 0)), -1);
+    }
+
+    #[test]
+    fn rounding_is_symmetric_half_away() {
+        // The old ⌊v + 0.5⌋ sent −2.5 → −2 (toward +∞); the pinned rule is
+        // half-away-from-zero, so Round(−x) = −Round(x) for every x.
+        for (v, want) in [
+            (0.5, 1i64),
+            (-0.5, -1),
+            (1.5, 2),
+            (-1.5, -2),
+            (2.5, 3),
+            (-2.5, -3),
+            (-2.4999, -2),
+            (-3.0, -3),
+            (0.0, 0),
+            (-0.0, 0),
+        ] {
+            assert_eq!(round_half_away(v), want, "v={v}");
+            assert_eq!(round_half_away(-v), -want, "v={}", -v);
+        }
+    }
+
+    #[test]
+    fn rounding_matches_rational_reference() {
+        // Boundary grid against an exact integer reference: every dyadic
+        // v = n/4 is exact in f64, and Round(n/4) = sign(n)·⌊(|n| + 2)/4⌋
+        // in integer arithmetic (half-away). Covers ties, near-ties, and
+        // both signs over a range wider than any quantization scale hits.
+        for n in -4000i64..=4000 {
+            let v = n as f64 / 4.0;
+            let want = n.signum() * ((n.abs() + 2) / 4);
+            assert_eq!(round_half_away(v), want, "n={n}");
+        }
+        // The same grid through quantize(): scale 2 turns x = n/16 into
+        // v = n/4, and the signed embedding must return the reference.
+        let f = Field::new(P26);
+        for n in -4000i64..=4000 {
+            let x = n as f64 / 16.0;
+            let want = n.signum() * ((n.abs() + 2) / 4);
+            assert_eq!(f.to_i64(quantize(f, x, 2)), want, "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not finite")]
+    fn rounding_rejects_nan() {
+        round_half_away(f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "not finite")]
+    fn rounding_rejects_infinity() {
+        round_half_away(f64::NEG_INFINITY);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows i64")]
+    fn rounding_rejects_f64_extremes() {
+        // Pre-fix this cast saturated silently at i64::MIN/MAX.
+        round_half_away(1e300);
+    }
+
+    #[test]
+    fn rounding_accepts_i64_edge() {
+        // Largest integral f64 strictly below 2^63 and −2^63 itself.
+        assert_eq!(round_half_away(-9_223_372_036_854_775_808.0), i64::MIN);
+        let below = 9_223_372_036_854_774_784.0f64; // 2^63 − 1024
+        assert_eq!(round_half_away(below), 9_223_372_036_854_774_784);
     }
 
     #[test]

@@ -2,14 +2,17 @@
 //! is validated against, and the default engine for heavily-threaded tests.
 
 use super::{GradKernel, GradKernelLocal};
-use crate::field::{par, vecops, Field, MatShape, Parallelism};
+use crate::field::{par, vecops, Field, KernelTier, MatShape, MontField, Parallelism};
 
 /// Computes `X̃ᵀ ĝ(X̃·w̃) mod p` with `field::vecops` (tiled accumulation,
-/// Barrett reduction), optionally row-blocked across a scoped thread pool.
+/// Barrett reduction) or, under [`KernelTier::Mont`], the lane-blocked
+/// batch-Montgomery kernels of `field::mont` — optionally row-blocked
+/// across a scoped thread pool. Both tiers are bit-identical.
 #[derive(Clone, Copy)]
 pub struct NativeKernel {
     f: Field,
     par: Parallelism,
+    tier: KernelTier,
 }
 
 /// Minimum matrix cells per worker before the kernel fans out.
@@ -57,9 +60,58 @@ fn fused_block(f: Field, x_block: &[u64], cols: usize, w_enc: &[u64], coeffs_q: 
     out
 }
 
+/// The fused pass on the Montgomery tier: per row, `z = x_i·w̄` via the
+/// mixed-domain lane-blocked dot (plain matrix × pre-converted `w̄`, one
+/// REDC per budget tile), `g = ĝ(z)` by mixed-domain Horner (one REDC per
+/// step), then one `to_mont(g)` per row — amortized over `cols` — feeds the
+/// raw lane-blocked output accumulation. The budget flush goes through a
+/// separate canonical carry (`field::mont` module docs: a flushed value is
+/// plain, incoming products still carry the `R` factor — they must not
+/// share an accumulator).
+fn fused_block_mont(
+    mf: &MontField,
+    x_block: &[u64],
+    cols: usize,
+    w_mont: &[u64],
+    coeffs_q: &[u64],
+) -> Vec<u64> {
+    let f = mf.field();
+    let rows = x_block.len() / cols.max(1);
+    let budget = f.accum_budget();
+    if rows > 0 {
+        assert!(
+            !coeffs_q.is_empty(),
+            "empty sigmoid coefficient vector: ĝ needs at least its constant term"
+        );
+    }
+    let mut acc = vec![0u64; cols]; // raw Montgomery-weighted sums
+    let mut out = vec![0u64; cols]; // canonical carry
+    let mut pending = 0usize;
+    for r in 0..rows {
+        let row = &x_block[r * cols..(r + 1) * cols];
+        let z = mf.dot_premont(row, w_mont);
+        let g = mf.poly_eval_one(coeffs_q, z);
+        if pending + 1 > budget {
+            for (o, a) in out.iter_mut().zip(acc.iter_mut()) {
+                *o = f.add(*o, mf.redc(*a as u128));
+                *a = 0;
+            }
+            pending = 0;
+        }
+        if g != 0 {
+            vecops::axpy_raw_lanes(&mut acc, mf.to_mont(g), row);
+        }
+        pending += 1;
+    }
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o = f.add(*o, mf.redc(a as u128));
+    }
+    out
+}
+
 impl NativeKernel {
     pub fn new(f: Field) -> NativeKernel {
-        NativeKernel { f, par: Parallelism::sequential() }
+        NativeKernel { f, par: Parallelism::sequential(), tier: KernelTier::Barrett }
     }
 
     /// Kernel that row-blocks Eq. (7) across `par` worker threads. Results
@@ -67,7 +119,12 @@ impl NativeKernel {
     /// budget-disciplined fused pass, and reduced partials combine with
     /// exact mod-`p` addition.
     pub fn with_parallelism(f: Field, par: Parallelism) -> NativeKernel {
-        NativeKernel { f, par }
+        NativeKernel { f, par, tier: KernelTier::Barrett }
+    }
+
+    /// Kernel with an explicit field-kernel tier (`--kernel barrett|mont`).
+    pub fn with_tier(f: Field, par: Parallelism, tier: KernelTier) -> NativeKernel {
+        NativeKernel { f, par, tier }
     }
 }
 
@@ -90,12 +147,27 @@ impl GradKernel for NativeKernel {
         } else {
             self.par.workers_for(rows * cols, MIN_PAR_CELLS).min(rows.max(1))
         };
-        if workers <= 1 {
-            return fused_block(f, x_enc, cols, w_enc, coeffs_q);
+        match self.tier {
+            KernelTier::Barrett => {
+                if workers <= 1 {
+                    return fused_block(f, x_enc, cols, w_enc, coeffs_q);
+                }
+                par::row_block_reduce(f, x_enc, rows, cols, workers, |x_b, _first_row| {
+                    fused_block(f, x_b, cols, w_enc, coeffs_q)
+                })
+            }
+            KernelTier::Mont => {
+                let mf = MontField::new(f);
+                let wm = mf.to_mont_vec(w_enc); // one conversion per pass
+                if workers <= 1 {
+                    return fused_block_mont(&mf, x_enc, cols, &wm, coeffs_q);
+                }
+                let wm = wm.as_slice();
+                par::row_block_reduce(f, x_enc, rows, cols, workers, |x_b, _first_row| {
+                    fused_block_mont(&mf, x_b, cols, wm, coeffs_q)
+                })
+            }
         }
-        par::row_block_reduce(f, x_enc, rows, cols, workers, |x_b, _first_row| {
-            fused_block(f, x_b, cols, w_enc, coeffs_q)
-        })
     }
 }
 
@@ -178,6 +250,38 @@ mod tests {
                 assert_eq!(par, seq, "{rows}x{cols} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn mont_tier_bit_identical_to_barrett() {
+        // Kernel-tier transparency at the fused-gradient level: same
+        // shapes as the parallel test, both primes (P31 forces the
+        // mid-budget carry flush every 4 rows), sequential and threaded.
+        for p in [P26, crate::field::P31] {
+            let f = Field::new(p);
+            let mut r = Rng::seed_from_u64(5);
+            for (rows, cols) in [(1usize, 1usize), (9, 6), (64, 33), (700, 97)] {
+                let x: Vec<u64> = (0..rows * cols).map(|_| r.gen_range(p)).collect();
+                let w: Vec<u64> = (0..cols).map(|_| r.gen_range(p)).collect();
+                let c: Vec<u64> = vec![r.gen_range(p), r.gen_range(p), r.gen_range(p)];
+                let shape = MatShape::new(rows, cols);
+                let barrett = NativeKernel::new(f).encoded_gradient(&x, shape, &w, &c);
+                for threads in [1usize, 3, 8] {
+                    let mont =
+                        NativeKernel::with_tier(f, Parallelism::threads(threads), KernelTier::Mont)
+                            .encoded_gradient(&x, shape, &w, &c);
+                    assert_eq!(mont, barrett, "p={p} {rows}x{cols} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sigmoid coefficient vector")]
+    fn empty_sigmoid_coefficients_panic_on_mont_tier_too() {
+        let f = Field::new(P26);
+        let k = NativeKernel::with_tier(f, Parallelism::sequential(), KernelTier::Mont);
+        k.encoded_gradient(&[1, 2, 3, 4], MatShape::new(2, 2), &[1, 1], &[]);
     }
 
     #[test]

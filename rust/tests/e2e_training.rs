@@ -33,6 +33,30 @@ fn secure_vs_plaintext_gap_small() {
 }
 
 #[test]
+fn symmetric_rounding_keeps_fig4_accuracy() {
+    // ISSUE-8 satellite: the quantizer's round-half-away fix (negative
+    // half-ties now round away from zero, matching the paper's symmetric
+    // Round) must keep the secure trajectory inside Fig. 4's tolerance of
+    // the plaintext reference. Synthetic features are zero-centered, so
+    // every quantize pass exercises negative inputs; a second seed guards
+    // against a single lucky draw.
+    for seed in [206u64, 207] {
+        let ds = Dataset::synth(SynthSpec::smoke(), seed);
+        let mut cfg = CopmlConfig::for_dataset(&ds, 10, CaseParams::case1(10), seed);
+        cfg.iters = 25;
+        let secure = algo::train(&cfg, &ds).unwrap();
+        let plain = ml::train_logreg(
+            &ds,
+            &ml::LogRegOptions { iters: cfg.iters, eta: cfg.eta, ..Default::default() },
+        );
+        let ps = *plain.test_accuracy.last().unwrap();
+        let ss = *secure.test_accuracy.last().unwrap();
+        assert!((ps - ss).abs() < 0.06, "seed {seed}: plaintext {ps} vs secure {ss}");
+        assert!(ss > 0.8, "seed {seed}: secure accuracy {ss} failed to converge");
+    }
+}
+
+#[test]
 fn insufficient_n_rejected() {
     let ds = Dataset::synth(SynthSpec::tiny(), 203);
     // K=3, T=2, r=1 → threshold 3·4+1 = 13 > 10

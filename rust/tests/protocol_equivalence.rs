@@ -9,6 +9,7 @@
 use copml::coordinator::baseline::{BaselineConfig, MpcFlavor};
 use copml::coordinator::{algo, baseline, protocol, CaseParams, CopmlConfig, FaultPlan};
 use copml::data::{Dataset, SynthSpec};
+use copml::field::KernelTier;
 use copml::mpc::OfflineMode;
 use copml::net::{Runtime, Wire};
 
@@ -338,6 +339,71 @@ fn event_runtime_fault_injection_matches_threaded() {
         for (i, q) in out.ledgers[0].quorums.iter().enumerate() {
             assert!(q.len() >= need, "{runtime} round {i}: quorum {} < need {need}", q.len());
         }
+    }
+}
+
+#[test]
+fn mont_kernel_bit_identical_across_runtime_transport_wire() {
+    // ISSUE-8 acceptance: `--kernel mont` is a *kernel-tier* swap only —
+    // Montgomery form changes how products are reduced, never which
+    // canonical residues come out. For the central recursion, the Hub
+    // protocol, and real TCP sockets, under both party runtimes and both
+    // wire formats, the Montgomery trajectory must match the Barrett
+    // reference bit for bit. (Barrett stays the default and the oracle.)
+    let ds = Dataset::synth(SynthSpec::tiny(), 117);
+    let cfg = tiny_cfg(7, 2, 1, 4, 117, &ds);
+    assert_eq!(cfg.kernel, KernelTier::Barrett, "barrett must remain the default");
+    let reference = algo::train(&cfg, &ds).unwrap();
+
+    let mut mont = cfg.clone();
+    mont.kernel = KernelTier::Mont;
+    let mont_algo = algo::train(&mont, &ds).unwrap();
+    assert_eq!(mont_algo.w_trace, reference.w_trace, "algo mode");
+
+    for runtime in [Runtime::Threaded, Runtime::Event] {
+        for wire in [Wire::U64, Wire::U32] {
+            let mut c = mont.clone();
+            c.runtime = runtime;
+            c.wire = wire;
+            let hub = protocol::train(&c, &ds).unwrap();
+            assert_eq!(hub.train.w_trace, reference.w_trace, "hub {runtime} {wire} wire");
+            let tcp = protocol::train_tcp_loopback(&c, &ds).unwrap();
+            assert_eq!(tcp.train.w_trace, reference.w_trace, "tcp {runtime} {wire} wire");
+            // A kernel tier moves compute cost only: the byte ledgers must
+            // match the Barrett wire accounting exactly.
+            if wire == Wire::U64 {
+                let mut b = c.clone();
+                b.kernel = KernelTier::Barrett;
+                let barrett_hub = protocol::train(&b, &ds).unwrap();
+                for (lm, lb) in hub.ledgers.iter().zip(&barrett_hub.ledgers) {
+                    assert_eq!(lm.bytes, lb.bytes, "mont ledger drifted ({runtime})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mont_kernel_bit_identical_for_baselines_and_batches() {
+    // The tier threads through the conventional-MPC baselines and the
+    // mini-batch pipeline too — same iterates everywhere.
+    let ds = Dataset::synth(SynthSpec::tiny(), 118);
+    let mut cfg = tiny_cfg(7, 2, 1, 6, 118, &ds);
+    cfg.batches = 3;
+    let reference = algo::train(&cfg, &ds).unwrap();
+    let mut mont = cfg.clone();
+    mont.kernel = KernelTier::Mont;
+    assert_eq!(algo::train(&mont, &ds).unwrap().w_trace, reference.w_trace, "B=3 algo");
+    assert_eq!(
+        protocol::train(&mont, &ds).unwrap().train.w_trace,
+        reference.w_trace,
+        "B=3 hub"
+    );
+    for flavor in [MpcFlavor::Bgw, MpcFlavor::Bh08] {
+        let bcfg = BaselineConfig::matching(&mont, flavor);
+        assert_eq!(bcfg.kernel, KernelTier::Mont, "matching() must carry the tier");
+        let out = baseline::train(&bcfg, &ds).unwrap();
+        assert_eq!(out.train.w_trace, reference.w_trace, "{flavor:?} mont B=3");
     }
 }
 

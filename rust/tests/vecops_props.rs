@@ -5,7 +5,7 @@
 //! `budget + 1`, zero coefficients (the skip path), and saturated
 //! `p − 1` inputs (maximal accumulator pressure).
 
-use copml::field::{par, vecops, Field, MatShape, Parallelism, P25, P26, P31};
+use copml::field::{par, vecops, Field, KernelTier, MatShape, MontField, Parallelism, P25, P26, P31};
 use copml::testkit::{forall, Gen};
 
 /// The primes under test: paper-parity (budget ≈ 4096/8192) and the
@@ -153,6 +153,130 @@ fn prop_matvec_and_transpose_budget_rows() {
             let col: Vec<u64> = (0..rows).map(|r| a[r * cols + j]).collect();
             assert_eq!(yt[j], dot_naive(p, &col, &v), "col {j}");
         }
+    });
+}
+
+/// Adversarial lengths for the Montgomery ≡ Barrett grid: the empty and
+/// singleton cases, the lane-block edges of the 8-wide kernels, and the
+/// accumulation-budget boundary (clamped as in [`boundary_lengths`]).
+fn mont_grid_lengths(f: Field) -> Vec<usize> {
+    let b = f.accum_budget().min(8192);
+    let l = vecops::LANES;
+    vec![0, 1, l - 1, l, l + 1, b, b + 1]
+}
+
+#[test]
+fn prop_mont_kernels_bit_identical_to_barrett() {
+    // The Montgomery tier is value-transparent: on canonical inputs every
+    // kernel must agree with the Barrett oracle bit for bit, at every
+    // lane-block and budget boundary, under saturated (p − 1) pressure.
+    forall("mont == barrett grid", 40, |g| {
+        let f = Field::new(*g.choose(&[P25, P26, P31]));
+        let p = f.modulus();
+        let mf = MontField::new(f);
+        let n = *g.choose(&mont_grid_lengths(f));
+
+        let a = stress_vec(g, p, n);
+        let b = stress_vec(g, p, n);
+        let bm = mf.to_mont_vec(&b);
+        assert_eq!(
+            mf.dot_premont(&a, &bm),
+            vecops::dot(f, &a, &b),
+            "dot p={p} n={n} budget={}",
+            f.accum_budget()
+        );
+
+        // matvec / matvec_t with `n` rows (the matvec_t flush boundary is
+        // per-row, so row count is the adversarial axis).
+        let cols = g.usize_in(1, 2 * vecops::LANES + 1);
+        let m = stress_vec(g, p, n * cols);
+        let x = stress_vec(g, p, cols);
+        let v = stress_vec(g, p, n);
+        let shape = MatShape::new(n, cols);
+        assert_eq!(
+            mf.matvec(&m, shape, &x),
+            vecops::matvec(f, &m, shape, &x),
+            "matvec {n}x{cols} p={p}"
+        );
+        assert_eq!(
+            mf.matvec_t(&m, shape, &v),
+            vecops::matvec_t(f, &m, shape, &v),
+            "matvec_t {n}x{cols} p={p}"
+        );
+
+        // weighted_sum with a budget-straddling term count and zero
+        // coefficients (the skip path must stay tier-invariant).
+        let kb = f.accum_budget().min(24);
+        let k = *g.choose(&[1usize, kb, kb + 1]);
+        let wn = g.usize_in(1, 200);
+        let mats: Vec<Vec<u64>> = (0..k).map(|_| stress_vec(g, p, wn)).collect();
+        let coeffs: Vec<u64> =
+            (0..k).map(|_| if g.bool() { 0 } else { g.u64_below(p) }).collect();
+        let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut barrett = vec![0u64; wn];
+        vecops::weighted_sum(f, &coeffs, &views, &mut barrett);
+        let mut mont = vec![0u64; wn];
+        mf.weighted_sum_premont(&mf.to_mont_vec(&coeffs), &views, &mut mont);
+        assert_eq!(mont, barrett, "weighted_sum p={p} k={k} n={wn}");
+
+        // Polynomial evaluation, including the empty map (≡ zero) and the
+        // degree-0 constant.
+        let deg = g.usize_in(0, 4);
+        let pc = stress_vec(g, p, deg + 1);
+        let mut zb = stress_vec(g, p, n);
+        let mut zm = zb.clone();
+        vecops::poly_eval_assign(f, &pc, &mut zb);
+        mf.poly_eval_assign(&pc, &mut zm);
+        assert_eq!(zm, zb, "poly_eval deg={deg} p={p} n={n}");
+        let mut ze = zb.clone();
+        mf.poly_eval_assign(&[], &mut ze);
+        assert!(ze.iter().all(|&v| v == 0), "empty poly must map to zero");
+    });
+}
+
+#[test]
+fn prop_mont_tier_dispatchers_bit_identical() {
+    // The `field::par` tier entry points with `KernelTier::Mont` must agree
+    // with the Barrett tier across thread counts and fan-out shapes.
+    forall("par tier mont == barrett", 10, |g| {
+        let f = Field::new(*g.choose(&[P26, P31]));
+        let p = f.modulus();
+        let pp = Parallelism::threads(g.usize_in(1, 6));
+
+        let rows = g.usize_in(1, 400);
+        let cols = g.usize_in(1, 60);
+        let a = stress_vec(g, p, rows * cols);
+        let x = stress_vec(g, p, cols);
+        let v = stress_vec(g, p, rows);
+        let shape = MatShape::new(rows, cols);
+        assert_eq!(
+            par::matvec_tier(f, KernelTier::Mont, pp, &a, shape, &x),
+            par::matvec_tier(f, KernelTier::Barrett, pp, &a, shape, &x),
+            "matvec_tier {rows}x{cols} p={p}"
+        );
+        assert_eq!(
+            par::matvec_t_tier(f, KernelTier::Mont, pp, &a, shape, &v),
+            par::matvec_t_tier(f, KernelTier::Barrett, pp, &a, shape, &v),
+            "matvec_t_tier {rows}x{cols} p={p}"
+        );
+
+        let n = *g.choose(&[257usize, 16_384]);
+        let k = g.usize_in(1, 7);
+        let mats: Vec<Vec<u64>> = (0..k).map(|_| stress_vec(g, p, n)).collect();
+        let coeffs: Vec<u64> = (0..k).map(|_| g.u64_below(p)).collect();
+        let views: Vec<&[u64]> = mats.iter().map(|m| m.as_slice()).collect();
+        let mut barrett = vec![0u64; n];
+        par::weighted_sum_tier(f, KernelTier::Barrett, pp, &coeffs, &views, &mut barrett);
+        let mut mont = vec![0u64; n];
+        par::weighted_sum_tier(f, KernelTier::Mont, pp, &coeffs, &views, &mut mont);
+        assert_eq!(mont, barrett, "weighted_sum_tier p={p} k={k} n={n}");
+
+        let pc = stress_vec(g, p, g.usize_in(1, 4));
+        let mut zb = stress_vec(g, p, n);
+        let mut zm = zb.clone();
+        par::poly_eval_assign_tier(f, KernelTier::Barrett, pp, &pc, &mut zb);
+        par::poly_eval_assign_tier(f, KernelTier::Mont, pp, &pc, &mut zm);
+        assert_eq!(zm, zb, "poly_eval_assign_tier p={p} n={n}");
     });
 }
 
