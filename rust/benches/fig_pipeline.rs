@@ -1,0 +1,174 @@
+//! `fig_pipeline`: wall-time effect of the pipelined offline factory
+//! (`--chunk`) and the multi-job `copml serve` daemon — the ISSUE-9
+//! acceptance bench.
+//!
+//! Two questions, answered with real full-protocol runs at N ∈ {4, 9}
+//! under `--offline distributed` (DN07 over the mesh — the mode with an
+//! offline phase worth hiding):
+//!
+//! 1. **Single job:** how much of the offline generation moves off the
+//!    critical path when the one-shot phase becomes a chunked background
+//!    producer? Reported as the overlap ratio `hidden / (hidden +
+//!    critical)` from the split phase-0 ledger, with `w_trace` asserted
+//!    bit-identical to the one-shot run (the chunk-stability contract).
+//! 2. **Job stream:** what does a 3-job pipelined serve run cost per job
+//!    versus a cold-start single job? In steady state job `j+1`'s factory
+//!    generates behind job `j`'s entire run, so the steady-state overlap
+//!    ratio approaches 1 and per-job cost drops below the cold-start
+//!    baseline — both asserted (overlap > 0.5 at N=9).
+//!
+//! Results are dumped to `BENCH_pipeline.json`.
+//!
+//! Run: `cargo bench --bench fig_pipeline`
+
+use std::time::Instant;
+
+use copml::coordinator::protocol::{self, ProtocolOutput};
+use copml::coordinator::{CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::mpc::OfflineMode;
+use copml::report::Json;
+
+/// Chunk size for every pipelined run: small enough that the first pools
+/// arrive quickly (fine-grained pipelining), large enough that producer
+/// rounds stay batched.
+const CHUNK: usize = 32;
+
+fn base_cfg(ds: &Dataset, n: usize, k: usize, iters: usize, seed: u64) -> CopmlConfig {
+    let mut cfg = CopmlConfig::for_dataset(ds, n, CaseParams::explicit(k, 1), seed);
+    cfg.iters = iters;
+    cfg.offline = OfflineMode::Distributed;
+    cfg
+}
+
+/// Mean critical-path and hidden offline seconds across one run's
+/// ledgers, plus the overlap ratio `hidden / (hidden + critical)`.
+fn offline_split(po: &ProtocolOutput) -> (f64, f64, f64) {
+    let nl = po.ledgers.len() as f64;
+    let crit = po.ledgers.iter().map(|l| l.seconds[0]).sum::<f64>() / nl;
+    let hidden = po.ledgers.iter().map(|l| l.offline_hidden_s).sum::<f64>() / nl;
+    (crit, hidden, hidden / (hidden + crit).max(1e-12))
+}
+
+fn timed_train(cfg: &CopmlConfig, ds: &Dataset) -> (ProtocolOutput, f64) {
+    let t0 = Instant::now();
+    let po = protocol::train(cfg, ds).unwrap_or_else(|e| panic!("N={} train: {e}", cfg.n));
+    (po, t0.elapsed().as_secs_f64())
+}
+
+/// One N-point of the bench: single-job one-shot vs pipelined, then
+/// cold-start serve baseline vs a 3-job pipelined stream.
+fn run_point(ds: &Dataset, n: usize, k: usize, iters: usize, seed: u64) -> Json {
+    println!("— N={n} K={k} T=1, {iters} iterations, distributed offline —");
+
+    // Single job, one-shot offline: the whole generation is critical-path.
+    let cfg_oneshot = base_cfg(ds, n, k, iters, seed);
+    let (po_oneshot, wall_oneshot) = timed_train(&cfg_oneshot, ds);
+    let (crit_oneshot, hidden_oneshot, _) = offline_split(&po_oneshot);
+    assert_eq!(hidden_oneshot, 0.0, "one-shot runs must report zero hidden offline seconds");
+
+    // Single job, pipelined factory: same elements, chunked production.
+    let mut cfg_pipe = cfg_oneshot.clone();
+    cfg_pipe.chunk = Some(CHUNK);
+    let (po_pipe, wall_pipe) = timed_train(&cfg_pipe, ds);
+    assert_eq!(
+        po_pipe.train.w_trace, po_oneshot.train.w_trace,
+        "chunk-stability violated: pipelined w_trace diverged from one-shot at N={n}"
+    );
+    let (crit_pipe, hidden_pipe, ratio_train) = offline_split(&po_pipe);
+    println!(
+        "single job: one-shot {wall_oneshot:.3}s wall (offline {crit_oneshot:.3}s critical) | \
+         pipelined {wall_pipe:.3}s wall (offline {crit_pipe:.3}s critical + {hidden_pipe:.3}s \
+         hidden, overlap ratio {ratio_train:.2})"
+    );
+
+    // Cold-start baseline: a 1-job serve stream with one-shot offline —
+    // mesh setup + full offline wait + training, nothing amortized.
+    let t0 = Instant::now();
+    let so_base = protocol::serve(&cfg_oneshot, ds, 1)
+        .unwrap_or_else(|e| panic!("N={n} baseline serve: {e}"));
+    let wall_base = t0.elapsed().as_secs_f64();
+    assert!(so_base.failed.is_none(), "baseline serve failed: {:?}", so_base.failed);
+
+    // 3-job pipelined stream: job j+1's factory prefetches behind job j.
+    let jobs = 3usize;
+    let t0 = Instant::now();
+    let so = protocol::serve(&cfg_pipe, ds, jobs)
+        .unwrap_or_else(|e| panic!("N={n} pipelined serve: {e}"));
+    let wall_stream = t0.elapsed().as_secs_f64();
+    assert!(so.failed.is_none(), "pipelined serve failed: {:?}", so.failed);
+    assert_eq!(so.jobs.len(), jobs, "stream must complete all {jobs} jobs");
+    // Job 0 shares seed and session 0 with the single-job runs above —
+    // the serve stream must train it bit-identically.
+    assert_eq!(
+        so.jobs[0].train.w_trace, po_oneshot.train.w_trace,
+        "serve job 0 diverged from the standalone run at N={n}"
+    );
+
+    let per_job = wall_stream / jobs as f64;
+    let splits: Vec<(f64, f64, f64)> = so.jobs.iter().map(offline_split).collect();
+    for (j, (crit, hidden, ratio)) in splits.iter().enumerate() {
+        println!(
+            "serve job {j}: offline {crit:.3}s critical + {hidden:.3}s hidden \
+             (overlap ratio {ratio:.2})"
+        );
+    }
+    // Steady state (the last job): its factory ran behind the whole
+    // previous job, so nearly all its generation is hidden.
+    let (_, _, steady_ratio) = splits[jobs - 1];
+    println!(
+        "serve stream: {jobs} jobs in {wall_stream:.3}s ({per_job:.3}s/job, {:.1} jobs/hour) \
+         vs cold-start baseline {wall_base:.3}s/job; steady-state overlap ratio {steady_ratio:.2}"
+    );
+    assert!(
+        per_job < wall_base,
+        "pipelined per-job cost {per_job:.3}s must beat the cold-start \
+         baseline {wall_base:.3}s at N={n}"
+    );
+    if n >= 9 {
+        assert!(
+            steady_ratio > 0.5,
+            "steady-state overlap ratio {steady_ratio:.2} must exceed 0.5 at N={n} \
+             (offline generation is not hiding behind the job stream)"
+        );
+    }
+
+    Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("t", Json::num(1.0)),
+        ("iters", Json::num(iters as f64)),
+        ("chunk", Json::num(CHUNK as f64)),
+        ("oneshot_wall_s", Json::num(wall_oneshot)),
+        ("oneshot_offline_s", Json::num(crit_oneshot)),
+        ("pipelined_wall_s", Json::num(wall_pipe)),
+        ("pipelined_offline_critical_s", Json::num(crit_pipe)),
+        ("pipelined_offline_hidden_s", Json::num(hidden_pipe)),
+        ("overlap_ratio_single", Json::num(ratio_train)),
+        ("serve_baseline_job_s", Json::num(wall_base)),
+        ("serve_jobs", Json::num(jobs as f64)),
+        ("serve_stream_wall_s", Json::num(wall_stream)),
+        ("serve_per_job_s", Json::num(per_job)),
+        ("serve_jobs_per_hour", Json::num(so.jobs_per_hour)),
+        ("overlap_ratio_steady", Json::num(steady_ratio)),
+    ])
+}
+
+fn main() {
+    let ds = Dataset::synth(SynthSpec::smoke(), 91);
+    let points = vec![
+        // N=4: K=1, T=1 → recovery threshold 3·1+1 = 4 (no slack).
+        run_point(&ds, 4, 1, 6, 91),
+        // N=9: K=2, T=1 → recovery threshold 3·2+1 = 7.
+        run_point(&ds, 9, 2, 8, 91),
+    ];
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fig_pipeline")),
+        ("dataset", Json::str("smoke")),
+        ("offline", Json::str("distributed")),
+        ("points", Json::Arr(points)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", doc.to_string()).expect("writing BENCH_pipeline.json");
+    println!("wrote BENCH_pipeline.json");
+    println!("fig_pipeline assertions passed");
+}

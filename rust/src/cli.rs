@@ -24,12 +24,14 @@ pub const BOOL_FLAGS: &[&str] = &["verbose"];
 pub const VALUE_FLAGS: &[&str] = &[
     "batches",
     "case",
+    "chunk",
     "dataset",
     "delay",
     "engine",
     "eta",
     "id",
     "iters",
+    "jobs",
     "k",
     "kernel",
     "kill-after",

@@ -280,7 +280,7 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
         let mut z = if bgw {
             party.degree_reduce_bgw(&z2t)
         } else {
-            party.degree_reduce_bh08(&z2t)
+            party.degree_reduce_bh08(&z2t).expect("baseline pools sized for demand")
         };
         tick!(2);
         // ĝ(z) − y_b·align, affine in the shares (r = 1).
@@ -293,14 +293,17 @@ fn client_main(party: &Party, cfg: &BaselineConfig, task: &QuantizedTask) -> Cli
         let grad = if bgw {
             party.degree_reduce_bgw(&g2t)
         } else {
-            party.degree_reduce_bh08(&g2t)
+            party.degree_reduce_bh08(&g2t).expect("baseline pools sized for demand")
         };
         tick!(3);
         // two-stage truncation + update (identical to COPML's Phase 4).
-        let mut g1 =
-            party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, !bgw);
+        let mut g1 = party
+            .trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, !bgw)
+            .expect("baseline pools sized for demand");
         party.scale(&mut g1, task.eta_qs[bi]);
-        let g2 = party.trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, !bgw);
+        let g2 = party
+            .trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, !bgw)
+            .expect("baseline pools sized for demand");
         party.sub(&mut w_share, &g2);
         snapshots.push(w_share.clone());
         tick!(4);

@@ -183,6 +183,25 @@ pub struct CopmlConfig {
     /// trajectory is bit-identical under either
     /// (`tests/protocol_equivalence.rs`).
     pub kernel: KernelTier,
+    /// Pipelined offline factory (`--chunk C`): generate the distributed
+    /// offline pools in `C`-sized chunks on a background producer thread
+    /// while the online rounds consume them, instead of one blocking
+    /// up-front pass. `None` (the default) is the legacy one-shot phase.
+    /// Value-transparent: the chunk schedule is deterministic and the
+    /// concatenated chunks are element-identical to the one-shot pools
+    /// ([`crate::mpc::offline`] chunk-stability contract), so `w_trace`
+    /// is bit-identical for every chunk size. Requires
+    /// [`OfflineMode::Distributed`] (the dealer has no wire phase to
+    /// hide) and an empty fault plan (a mid-production departure would
+    /// strand the SPMD producers).
+    pub chunk: Option<usize>,
+    /// Serve-session id: which [`crate::net::tags`] session stripe this
+    /// run's tags come from. `0` (the default) is the legacy tag layout,
+    /// bit-identical to every pre-existing trace; `copml serve` runs job
+    /// `j` in session `j` so consecutive jobs — and job `j+1`'s
+    /// prefetched offline factory — share one mesh without tag reuse.
+    /// Value-transparent: session ids renumber tags, never values.
+    pub session: u64,
 }
 
 impl CopmlConfig {
@@ -210,6 +229,8 @@ impl CopmlConfig {
             faults: FaultPlan::default(),
             max_lag: None,
             kernel: KernelTier::Barrett,
+            chunk: None,
+            session: 0,
         }
     }
 
@@ -246,6 +267,47 @@ impl CopmlConfig {
                 crate::net::tags::max_batches(),
                 crate::net::tags::ENCODE_STRIDE
             ));
+        }
+        // Serve-session geometry: the session must own a tag stripe, and
+        // a stripe's round region is smaller than the legacy ROUND window
+        // (sessions ≥ 1 — session 0 runs in the legacy windows and was
+        // bounded above).
+        if self.session >= crate::net::tags::max_sessions() {
+            return Err(format!(
+                "session={} exceeds the SESSIONS tag stripe capacity ({} sessions — \
+                 see net::tags)",
+                self.session,
+                crate::net::tags::max_sessions()
+            ));
+        }
+        if self.session >= 1 && (self.iters as u64) > crate::net::tags::max_session_iters() {
+            return Err(format!(
+                "iters={} exceeds session {}'s ROUND stripe capacity ({} iterations — \
+                 see net::tags)",
+                self.iters,
+                self.session,
+                crate::net::tags::max_session_iters()
+            ));
+        }
+        // Pipelined offline factory preconditions.
+        if let Some(chunk) = self.chunk {
+            if chunk == 0 {
+                return Err("--chunk must be ≥ 1".into());
+            }
+            if !matches!(self.offline, OfflineMode::Distributed) {
+                return Err(
+                    "--chunk requires --offline distributed: the dealer pool is replayed \
+                     locally with no wire phase to pipeline"
+                        .into(),
+                );
+            }
+            if !self.faults.is_empty() {
+                return Err(
+                    "--chunk is incompatible with an injected fault plan: a departing \
+                     party would strand the SPMD chunk producers mid-schedule"
+                        .into(),
+                );
+            }
         }
         // Mini-batch geometry — the shared checker, so the trainers, the
         // baselines, and the cost model agree on which geometries are
@@ -660,6 +722,33 @@ mod tests {
         let mut cfg = base;
         cfg.max_lag = Some(0);
         assert!(cfg.validate(&ds).unwrap_err().contains("max-lag"));
+    }
+
+    #[test]
+    fn validate_chunk_and_session_rules() {
+        let ds = Dataset::synth(SynthSpec::tiny(), 7);
+        let base = CopmlConfig::for_dataset(&ds, 4, CaseParams::explicit(1, 1), 7);
+        // chunk requires the distributed offline phase
+        let mut cfg = base.clone();
+        cfg.chunk = Some(64);
+        assert!(cfg.validate(&ds).unwrap_err().contains("distributed"));
+        cfg.offline = OfflineMode::Distributed;
+        assert!(cfg.validate(&ds).is_ok(), "{:?}", cfg.validate(&ds));
+        // chunk = 0 is nonsense
+        cfg.chunk = Some(0);
+        assert!(cfg.validate(&ds).unwrap_err().contains("chunk"));
+        // chunk is incompatible with injected faults
+        let mut cfg = base.clone();
+        cfg.offline = OfflineMode::Distributed;
+        cfg.chunk = Some(8);
+        cfg.faults.delays = vec![(3, 50)];
+        assert!(cfg.validate(&ds).unwrap_err().contains("fault"));
+        // any in-range session validates; out-of-range is named
+        let mut cfg = base.clone();
+        cfg.session = 2;
+        assert!(cfg.validate(&ds).is_ok(), "{:?}", cfg.validate(&ds));
+        cfg.session = crate::net::tags::max_sessions();
+        assert!(cfg.validate(&ds).unwrap_err().contains("session"));
     }
 
     #[test]

@@ -53,13 +53,35 @@
 //! `d`-sized. Batching composes with the quorum path above — the decoded
 //! batch gradient is still an exact interpolation, so `w_trace` remains
 //! bit-identical to the central recursion for every `B`.
+//!
+//! **Pipelined offline factory (`--chunk C`):** with
+//! [`crate::mpc::OfflineMode::Distributed`], the offline randomness can be
+//! generated in `C`-sized chunks on a background producer thread
+//! ([`crate::mpc::offline::start_factory`]) while the online rounds
+//! consume the pools — `take_*` blocks only when consumption outruns
+//! production. The ledger's phase-0 row then splits: `seconds[0]` keeps
+//! only the **critical-path** stall time, and the producer's remaining
+//! generation time lands in [`ClientLedger::offline_hidden_s`]. The chunk
+//! schedule is deterministic and element-identical to the one-shot pools
+//! (chunk-stability contract, [`crate::mpc::offline`] docs), so `w_trace`
+//! is bit-identical for every chunk size.
+//!
+//! **Multi-job serve ([`serve`] / [`serve_tcp_loopback`]):** the parties
+//! hold one mesh open and run a stream of training jobs, job `j` in tag
+//! session `j` ([`crate::net::tags`] SESSION stripes) with seed
+//! `base + j`. With pipelining on, job `j+1`'s offline factory is
+//! prefetched while job `j` trains — its pools fill behind the online
+//! rounds, so steady-state jobs skip the cold-start offline wait. Session
+//! ids renumber tags, never values, so every served job's `w_trace` is
+//! bit-identical to a standalone run with the same seed.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::Dataset;
-use crate::field::{par, MatShape};
+use crate::field::{par, Field, MatShape};
 use crate::lcc;
+use crate::mpc::offline::{self, Demand};
 use crate::mpc::{Dealer, Offline, OfflineMode, Party};
 use crate::net::local::Hub;
 use crate::net::tags::{self, SpmdTagTrace};
@@ -93,10 +115,20 @@ pub const PHASES: [&str; 8] = [
 /// One client's timing/byte ledger.
 #[derive(Clone, Debug, Default)]
 pub struct ClientLedger {
-    /// Seconds per phase, aligned with [`PHASES`].
+    /// Seconds per phase, aligned with [`PHASES`]. Phase 0 ("offline") is
+    /// the **on-critical-path** offline time: the full timed generation
+    /// for a one-shot run (the legacy single number, bit-equal when
+    /// pipelining is off), but only the consumer's feed-stall time when
+    /// the chunked factory is on — the rest of the generation ran hidden
+    /// behind the online rounds and is reported in `offline_hidden_s`.
     pub seconds: [f64; 8],
     /// Payload bytes sent per phase.
     pub bytes: [u64; 8],
+    /// Offline generation seconds hidden behind the online rounds by the
+    /// pipelined factory (`--chunk`): producer generation time minus the
+    /// consumer's stall time. Zero whenever pipelining is off, keeping
+    /// `seconds[0]` the complete legacy accounting on its own.
+    pub offline_hidden_s: f64,
     /// Per-iteration quorum of the encoded-gradient decode: the client
     /// ids whose results interpolated this round's gradient (sorted).
     /// With no slack (`live == need`) this is the whole live roster.
@@ -279,33 +311,111 @@ pub fn run_client(
     let task = Arc::new(QuantizedTask::new(cfg, ds));
     let f = task.f;
     let demand = copml_demand(cfg, task.d, task.rows_padded);
-    // The offline phase runs first, over the same transport: the dealer
-    // provider replays this party's pool from the shared seed (zero
-    // traffic, bit-identical to `Dealer::deal(..)[id]`); the distributed
-    // provider generates it collectively with the other parties (DN07,
-    // real bytes — ledger phase 0).
-    // copml-lint: allow(wall-clock) offline phase-ledger stamp: measures elapsed time, never steers protocol state
-    let t0 = Instant::now();
-    let bytes_mark = net.bytes_sent();
-    let pool = cfg.offline.provider().provide(
-        net,
-        f,
-        cfg.t,
-        &demand,
-        cfg.plan.k2,
-        cfg.plan.kappa,
-        cfg.seed,
-    );
-    let offline_s = t0.elapsed().as_secs_f64();
-    let offline_bytes = net.bytes_sent() - bytes_mark;
     let kernel: Box<dyn GradKernel> =
         Box::new(NativeKernel::with_tier(f, cfg.parallelism, cfg.kernel));
     let ctx = ClientCtx { cfg: cfg.clone(), task, kernel };
-    let party = Party::new(net, cfg.t, f, pool, cfg.seed);
-    let mut out = client_main(&party, ctx);
-    out.ledger.seconds[0] = offline_s;
-    out.ledger.bytes[0] = offline_bytes;
-    Ok(out)
+    Ok(client_session(net, ctx, &demand, None, None))
+}
+
+/// Provision one client's offline pool — pre-dealt (dealer, zero wire),
+/// one-shot from the mode's provider, or the chunked factory pipeline
+/// when `cfg.chunk` is set — then run the client body over it and fill
+/// the ledger's offline row.
+///
+/// The pipelined arm runs the producer on a scoped thread: `seconds[0]`
+/// gets only the consumer's feed-**stall** time (the offline seconds that
+/// stayed on the critical path) and [`ClientLedger::offline_hidden_s`]
+/// the producer's remaining generation time, hidden behind the online
+/// rounds. With pipelining off, `seconds[0]` is the whole timed
+/// generation and `offline_hidden_s` stays zero — the legacy single
+/// number, bit-equal.
+fn client_session(
+    net: &dyn Transport,
+    ctx: ClientCtx,
+    demand: &Demand,
+    predealt: Option<Offline>,
+    trace: Option<Arc<SpmdTagTrace>>,
+) -> ClientOutput {
+    let cfg = ctx.cfg.clone();
+    let f = ctx.task.f;
+    let out = if let Some(pool) = predealt {
+        // Crypto-service provider, pre-dealt by the caller: free on the
+        // wire — the offline ledger row stays zero.
+        let party = Party::new(net, cfg.t, f, pool, cfg.seed);
+        if let Some(tr) = trace {
+            party.set_tag_trace(tr);
+        }
+        client_main(&party, ctx)
+    } else if let Some(chunk) = cfg.chunk {
+        // Pipelined factory: the producer generates the chunk schedule on
+        // a scoped thread while `client_main` consumes the pools.
+        let bytes_mark = net.bytes_sent_offline();
+        let (mut out, stats) = std::thread::scope(|scope| {
+            let (pool, factory) = offline::start_factory(
+                scope,
+                net,
+                f,
+                cfg.t,
+                demand,
+                cfg.plan.k2,
+                cfg.plan.kappa,
+                cfg.seed,
+                chunk,
+                cfg.session,
+            );
+            let party = Party::new(net, cfg.t, f, pool, cfg.seed);
+            if let Some(tr) = trace {
+                party.set_tag_trace(tr);
+            }
+            let out = client_main(&party, ctx);
+            // Join BEFORE any departure below: the producer's SPMD
+            // schedule needs the live mesh (the peers' producers consume
+            // our deal/open rounds) and always runs to completion.
+            let stats = factory.stats();
+            factory.join();
+            (out, stats)
+        });
+        out.ledger.seconds[0] = stats.stall_seconds();
+        out.ledger.offline_hidden_s = (stats.gen_seconds() - stats.stall_seconds()).max(0.0);
+        out.ledger.bytes[0] = net.bytes_sent_offline() - bytes_mark;
+        out
+    } else {
+        // One-shot offline phase, first on the same transport: the dealer
+        // provider replays this party's pool from the shared seed (zero
+        // traffic, bit-identical to `Dealer::deal(..)[id]`); the
+        // distributed provider generates it collectively with the other
+        // parties (DN07, real bytes — ledger phase 0).
+        // copml-lint: allow(wall-clock) offline phase-ledger stamp: measures elapsed time, never steers protocol state
+        let t0 = Instant::now();
+        let bytes_mark = net.bytes_sent();
+        let pool = cfg.offline.provider().provide(
+            net,
+            f,
+            cfg.t,
+            demand,
+            cfg.plan.k2,
+            cfg.plan.kappa,
+            cfg.seed,
+            cfg.session,
+        );
+        let offline_s = t0.elapsed().as_secs_f64();
+        let offline_bytes = net.bytes_sent() - bytes_mark;
+        let party = Party::new(net, cfg.t, f, pool, cfg.seed);
+        if let Some(tr) = trace {
+            party.set_tag_trace(tr);
+        }
+        let mut out = client_main(&party, ctx);
+        out.ledger.seconds[0] = offline_s;
+        out.ledger.bytes[0] = offline_bytes;
+        out
+    };
+    if let Some(reason) = &out.halted {
+        // Departure AFTER any factory join above: peers' receives blocked
+        // on this party fail fast with the reason instead of stalling,
+        // and our mailbox stops growing.
+        net.leave(reason);
+    }
+    out
 }
 
 /// Spawn one client thread per transport endpoint, join, and aggregate:
@@ -348,46 +458,21 @@ fn run_clients<T: Transport + Send + 'static>(
     let mut handles = Vec::new();
     for (ep, dealt) in transports.into_iter().zip(predealt) {
         let ctx = ClientCtx { cfg: cfg.clone(), task: task.clone(), kernel: mk_kernel() };
-        let seed = cfg.seed;
         let demand = demand.clone();
         let trace = trace.clone();
-        handles.push(std::thread::spawn(move || {
-            let (pool, offline_s, offline_bytes) = match dealt {
-                // Crypto-service provider: pool already dealt, free on
-                // the wire — the offline ledger row stays zero.
-                Some(pool) => (pool, 0.0, 0),
-                None => {
-                    // copml-lint: allow(wall-clock) offline phase-ledger stamp: measures elapsed time, never steers protocol state
-                    let t0 = Instant::now();
-                    let bytes_mark = ep.bytes_sent();
-                    let pool = ctx.cfg.offline.provider().provide(
-                        &ep,
-                        ctx.task.f,
-                        ctx.cfg.t,
-                        &demand,
-                        ctx.cfg.plan.k2,
-                        ctx.cfg.plan.kappa,
-                        seed,
-                    );
-                    (pool, t0.elapsed().as_secs_f64(), ep.bytes_sent() - bytes_mark)
-                }
-            };
-            let party = Party::new(&ep, ctx.cfg.t, ctx.task.f, pool, seed);
-            if let Some(tr) = trace {
-                party.set_tag_trace(tr);
-            }
-            let mut out = client_main(&party, ctx);
-            out.ledger.seconds[0] = offline_s;
-            out.ledger.bytes[0] = offline_bytes;
-            out
-        }));
+        handles.push(std::thread::spawn(move || client_session(&ep, ctx, &demand, dealt, trace)));
     }
-    let mut results: Vec<ClientOutput> = handles
+    let results = join_client_threads(handles)?;
+    aggregate_outputs(cfg, ds, &task, trace.as_deref(), results)
+}
+
+/// Join the per-client threads, surfacing a client's own panic message
+/// (e.g. a clear infeasibility cause) instead of a generic note.
+fn join_client_threads<R>(handles: Vec<std::thread::JoinHandle<R>>) -> Result<Vec<R>, String> {
+    handles
         .into_iter()
         .map(|h| {
             h.join().map_err(|e| {
-                // Surface the client's own panic message (e.g. a clear
-                // infeasibility cause) instead of a generic note.
                 let msg = e
                     .downcast_ref::<String>()
                     .cloned()
@@ -396,7 +481,23 @@ fn run_clients<T: Transport + Send + 'static>(
                 format!("client thread panicked: {msg}")
             })
         })
-        .collect::<Result<_, _>>()?;
+        .collect()
+}
+
+/// Aggregate per-client outputs into a [`ProtocolOutput`]: final-model
+/// consensus, SPMD tag-trace convergence (debug builds), god-mode trace
+/// reconstruction from `T+1` share snapshots, accuracy/loss traces.
+/// Shared by the single-job paths ([`train`], [`train_tcp_loopback`]) and
+/// the per-job aggregation of the serve daemon.
+fn aggregate_outputs(
+    cfg: &CopmlConfig,
+    ds: &Dataset,
+    task: &QuantizedTask,
+    trace: Option<&SpmdTagTrace>,
+    mut results: Vec<ClientOutput>,
+) -> Result<ProtocolOutput, String> {
+    let f = task.f;
+    let (n, t) = (cfg.n, cfg.t);
     results.sort_by_key(|r| r.id);
 
     // Clients that ran to completion (under faults, the killed/excluded
@@ -454,6 +555,265 @@ fn run_clients<T: Transport + Send + 'static>(
     }
     train.eval_traces(&cfg.plan, ds);
     Ok(ProtocolOutput { train, ledgers: results.into_iter().map(|r| r.ledger).collect() })
+}
+
+/// Result of a multi-job serve run ([`serve`] / [`serve_tcp_loopback`]).
+pub struct ServeOutput {
+    /// Per-job protocol outputs, in job order (completed jobs only).
+    pub jobs: Vec<ProtocolOutput>,
+    /// First failed job, if any: `(job index, reason)`. The stream stops
+    /// at the first failure — later jobs never run.
+    pub failed: Option<(usize, String)>,
+    /// Wall seconds of the whole serve run (first spawn to last join).
+    pub wall_s: f64,
+    /// Completed jobs per hour of wall time.
+    pub jobs_per_hour: f64,
+}
+
+/// Job `j`'s configuration in a serve stream: seed `base + j` (a distinct
+/// model per job) in tag session `j` ([`crate::net::tags`] SESSION
+/// stripes, so the jobs' tag spaces are disjoint on the shared mesh).
+/// Session ids renumber tags, never values — job `j` trains bit-identically
+/// to a standalone run with seed `base + j`.
+fn job_config(cfg: &CopmlConfig, j: usize) -> CopmlConfig {
+    let mut c = cfg.clone();
+    c.seed = cfg.seed.wrapping_add(j as u64);
+    c.session = j as u64;
+    c
+}
+
+/// Serve a stream of `jobs` training jobs over ONE in-process mesh: the
+/// parties keep the [`Hub`] open and run job `j` in tag session `j` with
+/// seed `base + j`, so steady-state jobs skip mesh setup — and, with the
+/// pipelined factory on (`cfg.chunk`), job `j+1`'s offline pools fill
+/// behind job `j`'s online rounds, hiding the cold-start offline wait.
+/// Native engine only.
+pub fn serve(cfg: &CopmlConfig, ds: &Dataset, jobs: usize) -> Result<ServeOutput, String> {
+    if !matches!(cfg.engine, Engine::Native) {
+        return Err("serve supports the native engine only".into());
+    }
+    let f = cfg.plan.field;
+    let kernel_par = cfg.parallelism;
+    let kernel_tier = cfg.kernel;
+    let mk_kernel: Box<dyn Fn() -> Box<dyn GradKernel>> =
+        Box::new(move || Box::new(NativeKernel::with_tier(f, kernel_par, kernel_tier)));
+    let endpoints = Hub::with_wire(cfg.n, cfg.wire);
+    run_serve_clients(cfg, ds, endpoints, jobs, &mk_kernel)
+}
+
+/// [`serve`] over real loopback TCP sockets
+/// ([`crate::net::tcp::loopback_mesh`]): the mesh is established once and
+/// every job in the stream reuses it. Native engine only.
+pub fn serve_tcp_loopback(
+    cfg: &CopmlConfig,
+    ds: &Dataset,
+    jobs: usize,
+) -> Result<ServeOutput, String> {
+    if !matches!(cfg.engine, Engine::Native) {
+        return Err("serve supports the native engine only".into());
+    }
+    let transports = crate::net::tcp::loopback_mesh_runtime(cfg.n, cfg.wire, cfg.runtime)
+        .map_err(|e| format!("establishing the loopback TCP mesh: {e}"))?;
+    let f = cfg.plan.field;
+    let kernel_par = cfg.parallelism;
+    let kernel_tier = cfg.kernel;
+    let mk_kernel: Box<dyn Fn() -> Box<dyn GradKernel>> =
+        Box::new(move || Box::new(NativeKernel::with_tier(f, kernel_par, kernel_tier)));
+    run_serve_clients(cfg, ds, transports, jobs, &mk_kernel)
+}
+
+/// Spawn one serve thread per endpoint, each running the whole job
+/// stream, then regroup the party-major outputs job-major and aggregate
+/// every job like a standalone run.
+fn run_serve_clients<T: Transport + Send + 'static>(
+    cfg: &CopmlConfig,
+    ds: &Dataset,
+    transports: Vec<T>,
+    jobs: usize,
+    mk_kernel: &dyn Fn() -> Box<dyn GradKernel>,
+) -> Result<ServeOutput, String> {
+    if jobs == 0 {
+        return Err("serve needs at least one job".into());
+    }
+    let n = cfg.n;
+    assert_eq!(transports.len(), n, "one endpoint per client");
+    // Validate the whole stream up front: every job must fit its session
+    // stripe before the mesh commits to the first one.
+    let job_cfgs: Vec<CopmlConfig> = (0..jobs).map(|j| job_config(cfg, j)).collect();
+    for (j, c) in job_cfgs.iter().enumerate() {
+        c.validate(ds).map_err(|e| format!("job {j}: {e}"))?;
+    }
+    let tasks: Vec<Arc<QuantizedTask>> =
+        job_cfgs.iter().map(|c| Arc::new(QuantizedTask::new(c, ds))).collect();
+    let f = tasks[0].f;
+    // Demand geometry depends on dataset shape and plan only — identical
+    // across the stream's jobs (their seeds differ, not their shapes).
+    let demand = copml_demand(cfg, tasks[0].d, tasks[0].rows_padded);
+
+    // Dealer mode pre-deals every job's pools up front (same one-pass
+    // rationale as `run_clients`); distributed jobs generate over the
+    // mesh, one-shot or chunked per `cfg.chunk`.
+    let predealt: Vec<Vec<Option<Offline>>> = match cfg.offline {
+        OfflineMode::Dealer => {
+            let mut per_party: Vec<Vec<Option<Offline>>> = (0..n).map(|_| Vec::new()).collect();
+            for c in &job_cfgs {
+                let pools = Dealer::deal(f, n, c.t, &demand, c.plan.k2, c.plan.kappa, c.seed);
+                for (p, pool) in pools.into_iter().enumerate() {
+                    per_party[p].push(Some(pool));
+                }
+            }
+            per_party
+        }
+        OfflineMode::Distributed => (0..n).map(|_| (0..jobs).map(|_| None).collect()).collect(),
+    };
+
+    // copml-lint: allow(wall-clock) serve throughput stopwatch: feeds the jobs/hour report, never steers protocol state
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (ep, pools) in transports.into_iter().zip(predealt) {
+        let job_cfgs = job_cfgs.clone();
+        let tasks = tasks.clone();
+        let demand = demand.clone();
+        let kernels: Vec<Box<dyn GradKernel>> = (0..jobs).map(|_| mk_kernel()).collect();
+        handles.push(std::thread::spawn(move || {
+            serve_client(&ep, &job_cfgs, &tasks, &demand, pools, kernels)
+        }));
+    }
+    let per_party = join_client_threads(handles)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Regroup party-major → job-major. A party that halted on job `j`
+    // stops its stream there, so later jobs can come up short of `n`.
+    let mut streams: Vec<std::vec::IntoIter<ClientOutput>> =
+        per_party.into_iter().map(Vec::into_iter).collect();
+    let mut jobs_out: Vec<ProtocolOutput> = Vec::new();
+    let mut failed: Option<(usize, String)> = None;
+    for j in 0..jobs {
+        let outs: Vec<ClientOutput> = streams.iter_mut().filter_map(|s| s.next()).collect();
+        if outs.len() < n {
+            failed = Some((
+                j,
+                format!(
+                    "only {} of {n} parties reached job {j} (the stream stops at a \
+                     predecessor's halt)",
+                    outs.len()
+                ),
+            ));
+            break;
+        }
+        match aggregate_outputs(&job_cfgs[j], ds, &tasks[j], None, outs) {
+            Ok(out) => jobs_out.push(out),
+            Err(e) => {
+                failed = Some((j, e));
+                break;
+            }
+        }
+    }
+    let done = jobs_out.len();
+    let jobs_per_hour = if wall_s > 0.0 { done as f64 * 3600.0 / wall_s } else { 0.0 };
+    Ok(ServeOutput { jobs: jobs_out, failed, wall_s, jobs_per_hour })
+}
+
+/// One party's serve loop: the whole job stream over a single long-lived
+/// transport, one tag session per job. With pipelining on, job `j+1`'s
+/// factory starts before job `j` trains, so its pools fill behind job
+/// `j`'s online rounds and the steady-state jobs skip the cold-start
+/// offline wait. The loop stops at the first halted job — after joining
+/// any in-flight producer, so no factory ever outlives the live mesh.
+fn serve_client(
+    net: &dyn Transport,
+    job_cfgs: &[CopmlConfig],
+    tasks: &[Arc<QuantizedTask>],
+    demand: &Demand,
+    pools: Vec<Option<Offline>>,
+    kernels: Vec<Box<dyn GradKernel>>,
+) -> Vec<ClientOutput> {
+    let f = tasks[0].f;
+    let mut outs: Vec<ClientOutput> = Vec::new();
+    if let Some(chunk) = job_cfgs[0].chunk {
+        // Pipelined stream (distributed-only per `validate`): one scope
+        // owns every job's producer thread.
+        debug_assert!(pools.iter().all(Option::is_none), "chunked serve pre-deals nothing");
+        std::thread::scope(|scope| {
+            let mut kernels = kernels.into_iter();
+            let mut next = Some(start_job_factory(scope, net, f, &job_cfgs[0], demand, chunk));
+            for (j, cfgj) in job_cfgs.iter().enumerate() {
+                let (pool, factory) = next.take().expect("factory prefetched for this job");
+                let bytes_mark = net.bytes_sent_offline();
+                // Prefetch job j+1's pools behind job j's online rounds —
+                // disjoint tag sessions keep the streams unambiguous.
+                if j + 1 < job_cfgs.len() {
+                    next = Some(start_job_factory(scope, net, f, &job_cfgs[j + 1], demand, chunk));
+                }
+                let party = Party::new(net, cfgj.t, f, pool, cfgj.seed);
+                let ctx = ClientCtx {
+                    cfg: cfgj.clone(),
+                    task: tasks[j].clone(),
+                    kernel: kernels.next().expect("one kernel per job"),
+                };
+                let mut out = client_main(&party, ctx);
+                let stats = factory.stats();
+                factory.join();
+                out.ledger.seconds[0] = stats.stall_seconds();
+                out.ledger.offline_hidden_s =
+                    (stats.gen_seconds() - stats.stall_seconds()).max(0.0);
+                // Approximate per-job attribution: the delta also counts
+                // whatever the j+1 prefetch sent during job j.
+                out.ledger.bytes[0] = net.bytes_sent_offline() - bytes_mark;
+                let halted = out.halted.clone();
+                outs.push(out);
+                if let Some(reason) = halted {
+                    // Join the prefetched producer BEFORE leaving: its
+                    // SPMD schedule needs the live mesh and always runs
+                    // to completion.
+                    if let Some((_, prefetched)) = next.take() {
+                        prefetched.join();
+                    }
+                    net.leave(&reason);
+                    break;
+                }
+            }
+        });
+        outs
+    } else {
+        // Sequential stream: each job provisions its pool on entry
+        // (pre-dealt under dealer mode, one-shot DN07 under distributed);
+        // `client_session` departs the mesh itself on a halt.
+        for (j, ((cfgj, kernel), pool)) in job_cfgs.iter().zip(kernels).zip(pools).enumerate() {
+            let ctx = ClientCtx { cfg: cfgj.clone(), task: tasks[j].clone(), kernel };
+            let out = client_session(net, ctx, demand, pool, None);
+            let halted = out.halted.is_some();
+            outs.push(out);
+            if halted {
+                break;
+            }
+        }
+        outs
+    }
+}
+
+/// Start the chunked offline factory for one serve job on `scope`: the
+/// producer deals in the job's tag session from the job's seed.
+fn start_job_factory<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    net: &'env dyn Transport,
+    f: Field,
+    cfg: &CopmlConfig,
+    demand: &Demand,
+    chunk: usize,
+) -> (Offline, offline::FactoryHandle<'scope>) {
+    offline::start_factory(
+        scope,
+        net,
+        f,
+        cfg.t,
+        demand,
+        cfg.plan.k2,
+        cfg.plan.kappa,
+        cfg.seed,
+        chunk,
+        cfg.session,
+    )
 }
 
 /// Padded per-client row ranges (padding rows belong to the last client,
@@ -530,6 +890,42 @@ pub(crate) fn decode_roster_msg(msg: &[u64], n: usize) -> Result<(Vec<usize>, Ve
 }
 
 fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
+    let me = party.id;
+    let mut ledger = ClientLedger::default();
+    let mut snapshots: Vec<Vec<u64>> = Vec::with_capacity(ctx.cfg.iters);
+    let online = client_run(party, &ctx, &mut ledger, &mut snapshots);
+    let (w_final, halted) = match online {
+        Ok(w) => (Some(w), None),
+        Err(reason) => (None, Some(reason)),
+    };
+    ledger.pending_at_exit = party.net.pending_messages();
+    ledger.tag_reuse = party.net.tag_reuse();
+    ClientOutput { id: me, w_final, w_share_snapshots: snapshots, ledger, halted }
+}
+
+/// Bytes this party has sent on ONLINE tags: the transport total minus
+/// the OFFLINE-tagged traffic. The ledger's phase rows 1..8 charge online
+/// bytes only, so a concurrently producing offline factory never blends
+/// into them — and with pipelining off the offline counter is constant
+/// while the online phases run, leaving every row bit-equal to the legacy
+/// total-bytes accounting.
+fn online_bytes(party: &Party) -> u64 {
+    party.net.bytes_sent() - party.net.bytes_sent_offline()
+}
+
+/// The fallible SPMD body of one client: every phase of Algorithm 1 from
+/// dataset sharing to the final opening, ticking `ledger` and pushing the
+/// per-iteration `[w]` snapshots. Returns the opened final model, or the
+/// halt reason — a fault-plan kill, an infeasible quorum, or an exhausted
+/// offline pool ([`crate::mpc::OfflineError`] surfaces here as a typed
+/// halt instead of a panic, so a serve daemon degrades rather than
+/// crashes).
+fn client_run(
+    party: &Party,
+    ctx: &ClientCtx,
+    ledger: &mut ClientLedger,
+    snapshots: &mut Vec<Vec<u64>>,
+) -> Result<Vec<u64>, String> {
     let cfg = &ctx.cfg;
     let task = &ctx.task;
     let f = task.f;
@@ -537,7 +933,6 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     let (n, t, k) = (cfg.n, cfg.t, cfg.k);
     let (rows, d) = (task.rows_padded, task.d);
     let plan_b = &task.batches;
-    let mut ledger = ClientLedger::default();
     struct PhaseTimer {
         start: Instant,
         bytes_mark: u64,
@@ -546,20 +941,21 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         fn reset(&mut self, party: &Party) {
             // copml-lint: allow(wall-clock) phase-ledger stamp: measures elapsed time, never steers protocol state
             self.start = Instant::now();
-            self.bytes_mark = party.net.bytes_sent();
+            self.bytes_mark = online_bytes(party);
         }
         fn tick(&mut self, ledger: &mut ClientLedger, phase: usize, party: &Party) {
             ledger.seconds[phase] += self.start.elapsed().as_secs_f64();
-            ledger.bytes[phase] += party.net.bytes_sent() - self.bytes_mark;
+            ledger.bytes[phase] += online_bytes(party) - self.bytes_mark;
             self.reset(party);
         }
     }
     // copml-lint: allow(wall-clock) phase-ledger start stamp: measures elapsed time, never steers protocol state
-    let mut timer = PhaseTimer { start: Instant::now(), bytes_mark: party.net.bytes_sent() };
+    let mut timer = PhaseTimer { start: Instant::now(), bytes_mark: online_bytes(party) };
 
-    // All protocol tags come from the typed windows of `net::tags`; the
-    // seeks below are SPMD steps every party performs at the same point.
-    party.seek_tags(tags::SETUP);
+    // All protocol tags come from the typed session windows of
+    // `net::tags` (session 0 ≡ the legacy layout); the seeks below are
+    // SPMD steps every party performs at the same point.
+    party.seek_tags(tags::session_setup(cfg.session));
 
     // ---- Phase: share the dataset (Algorithm 1, lines 1–3) -------------
     let ranges = padded_ranges(rows, n);
@@ -582,7 +978,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         x_share[jl * d..jh * d].copy_from_slice(&xs);
         y_share[jl..jh].copy_from_slice(&ys);
     }
-    timer.tick(&mut ledger, 1, party);
+    timer.tick(ledger, 1, party);
 
     // ---- Phase: per-batch [Xᵀ_b y_b], aligned (Algorithm 1, line 10) ----
     // All B local products are concatenated into one (B·d)-vector and pay
@@ -598,20 +994,21 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             par::matvec_t_tier(f, tier, pp, &x_share[blo * d..bhi * d], sh, &y_share[blo..bhi]); // deg 2T
         local[bi * d..(bi + 1) * d].copy_from_slice(&lb);
     }
-    let mut xty_all = party.degree_reduce_bh08(&local); // deg T, B·d doubles
+    // deg T, B·d doubles
+    let mut xty_all = party.degree_reduce_bh08(&local).map_err(|e| e.to_string())?;
     let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
     party.scale(&mut xty_all, align);
     let xty: Vec<Vec<u64>> = (0..nb).map(|bi| xty_all[bi * d..(bi + 1) * d].to_vec()).collect();
     drop(xty_all);
-    timer.tick(&mut ledger, 2, party);
+    timer.tick(ledger, 2, party);
 
     // ---- Phase: Lagrange-encode the dataset, once per batch (Eq. 3;
     // lines 5–9) ----------------------------------------------------------
     // Every batch is encoded ONE time here and reused by every epoch that
     // revisits it — the one-shot amortization that makes mini-batch
     // training pay the encode exchange exactly as often as full-batch
-    // does. Each batch seeks its own `tags::encode_window(b)`; all
-    // parties iterate batches in the same order, so the SPMD tag
+    // does. Each batch seeks its own `tags::session_encode_window(s, b)`;
+    // all parties iterate batches in the same order, so the SPMD tag
     // sequence stays aligned.
     let enc = lcc::Encoder::standard(f, k, t, n);
     let (targets, sources) = encode_roles(n, t, me, cfg.subgroups);
@@ -620,14 +1017,17 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     let mut x_tildes: Vec<Vec<u64>> = Vec::with_capacity(nb);
     let mut shapes_k: Vec<MatShape> = Vec::with_capacity(nb);
     for (bidx, &(blo, bhi)) in plan_b.ranges().iter().enumerate() {
-        party.seek_tags(tags::encode_window(bidx));
+        party.seek_tags(tags::session_encode_window(cfg.session, bidx));
         let rows_bk = (bhi - blo) / k;
         // Partition [X_b] into K parts + T mask shares from the offline
         // pool (per-batch masks — the Demand charges Σ_b rows_b/K once).
         let parts: Vec<&[u64]> = (0..k)
             .map(|kk| &x_share[(blo + kk * rows_bk) * d..(blo + (kk + 1) * rows_bk) * d])
             .collect();
-        let masks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(rows_bk * d)).collect();
+        let masks: Vec<Vec<u64>> = (0..t)
+            .map(|_| party.random_share(rows_bk * d))
+            .collect::<Result<_, _>>()
+            .map_err(|e| e.to_string())?;
         let all_parts: Vec<&[u64]> =
             parts.into_iter().chain(masks.iter().map(|m| m.as_slice())).collect();
         let tag_xenc = party.tag("encode.x");
@@ -660,7 +1060,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         shapes_k.push(MatShape::new(rows_bk, d));
     }
     drop(x_share);
-    timer.tick(&mut ledger, 3, party);
+    timer.tick(ledger, 3, party);
 
     // Precompute: model-encoding coefficient rows (Eq. 4 — the K data
     // slots all carry [w], so their coefficients collapse to a row sum).
@@ -697,10 +1097,9 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
     let mut rec_sources: Vec<usize> = sources.clone();
 
     let mut w_share = vec![0u64; d]; // shares of w^(0) = 0
-    let mut snapshots: Vec<Vec<u64>> = Vec::with_capacity(cfg.iters);
 
     timer.reset(party);
-    let online = (|| -> Result<Vec<u64>, String> {
+    (|| -> Result<Vec<u64>, String> {
         for iter in 0..cfg.iters {
             if kill_at == Some(iter) {
                 return Err(format!("killed at iteration {iter} by the fault plan"));
@@ -708,7 +1107,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             // Every tag of this round comes from the iteration's own
             // ROUND_STRIDE-wide window — disjoint from every other round
             // by construction (`net::tags`).
-            party.seek_tags(tags::round_window(iter));
+            party.seek_tags(tags::session_round_window(cfg.session, iter));
             // One-line runtime marker (grep-asserted by CI): the iteration
             // loop below runs through the explicit per-round states of
             // `coordinator::rounds` under either runtime.
@@ -736,7 +1135,10 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
                 ));
             }
             // ---- encode the model (Eq. 4; lines 12–15) ------------------
-            let vmasks: Vec<Vec<u64>> = (0..t).map(|_| party.random_share(d)).collect();
+            let vmasks: Vec<Vec<u64>> = (0..t)
+                .map(|_| party.random_share(d))
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
             let tag_wenc = party.tag("encode.w");
             let mut own_wenc: Option<Vec<u64>> = None;
             for &i in &live_targets {
@@ -792,7 +1194,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             let views: Vec<&[u64]> = wenc_shares.iter().map(|v| v.as_slice()).collect();
             let mut w_tilde = vec![0u64; d];
             rec.reconstruct(f, &views, &mut w_tilde);
-            timer.tick(&mut ledger, 4, party);
+            timer.tick(ledger, 4, party);
 
             // ---- local encoded gradient (Eq. 7; line 16) ----------------
             // The round's batch: compute scales with rows_b/K instead of
@@ -803,7 +1205,7 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
             if let Some(dl) = delay {
                 std::thread::sleep(dl); // injected straggler (fault plan)
             }
-            timer.tick(&mut ledger, 5, party);
+            timer.tick(ledger, 5, party);
 
             // ---- share the result + first-arrival quorum (line 16b) -----
             let tag_res = party.tag("round.res");
@@ -892,20 +1294,23 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
                     party.live_count()
                 ));
             }
-            timer.tick(&mut ledger, 6, party);
+            timer.tick(ledger, 6, party);
 
             // ---- decode + model update (Eq. 10–11; lines 18–23) ---------
             let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
             let mut grad = vec![0u64; d];
             dec_cache.get(&members).decode_sum_tier(tier, pp, &views, &mut grad);
             party.sub(&mut grad, &xty[bi]);
-            let mut g1 =
-                party.trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, true);
+            let mut g1 = party
+                .trunc_pr(&grad, cfg.plan.k2, cfg.plan.k1_stage1(), cfg.plan.kappa, true)
+                .map_err(|e| e.to_string())?;
             party.scale(&mut g1, task.eta_qs[bi]);
-            let g2 = party.trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, true);
+            let g2 = party
+                .trunc_pr(&g1, cfg.plan.k2, cfg.plan.k1_stage2(), cfg.plan.kappa, true)
+                .map_err(|e| e.to_string())?;
             party.sub(&mut w_share, &g2);
             snapshots.push(w_share.clone());
-            timer.tick(&mut ledger, 7, party);
+            timer.tick(ledger, 7, party);
         }
 
         // Leader: resolve the final round's late set (skip-on-arrival
@@ -918,22 +1323,9 @@ fn client_main(party: &Party, ctx: ClientCtx) -> ClientOutput {
         }
 
         // ---- final: open the model (lines 25–27) ------------------------
-        party.seek_tags(tags::FINAL);
+        party.seek_tags(tags::session_final(cfg.session));
         Ok(party.open_broadcast(&w_share, t))
-    })();
-
-    let (w_final, halted) = match online {
-        Ok(w) => (Some(w), None),
-        Err(reason) => (None, Some(reason)),
-    };
-    ledger.pending_at_exit = party.net.pending_messages();
-    ledger.tag_reuse = party.net.tag_reuse();
-    if let Some(reason) = &halted {
-        // Departure: peers' receives blocked on this party fail fast with
-        // the reason instead of stalling, and our mailbox stops growing.
-        party.net.leave(reason);
-    }
-    ClientOutput { id: me, w_final, w_share_snapshots: snapshots, ledger, halted }
+    })()
 }
 
 #[cfg(test)]

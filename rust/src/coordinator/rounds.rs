@@ -14,6 +14,13 @@
 //! `net::reactor` poll loop) — which is what makes the two runtimes
 //! bit-identical by construction.
 //!
+//! The states are tag-parameterized: the caller hands each one tags from
+//! its own [`crate::net::tags`] window, so the same machinery serves
+//! every tag session unchanged — a `copml serve` job in session `j`
+//! passes tags from its `session_round_window(j, i)` stripe and never
+//! collides with the offline factory concurrently prefetching job
+//! `j+1`'s pools in the next stripe.
+//!
 //! Per-iteration state flow (every live party, iteration `i`):
 //!
 //! ```text

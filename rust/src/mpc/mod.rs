@@ -40,7 +40,10 @@ use crate::prng::Rng;
 use crate::shamir;
 
 pub use dealer::Dealer;
-pub use offline::{Offline, OfflineMode, OfflineProvider};
+pub use offline::{
+    start_factory, FactoryHandle, FactoryStats, Offline, OfflineError, OfflineMode,
+    OfflineProvider,
+};
 
 /// Stream label for party-local online randomness ("PRTY" in the high
 /// bits, party id in the low bits). Distinct from every `mpc::dealer`
@@ -494,25 +497,27 @@ impl<'a> Party<'a> {
 
     /// BH08/DN07 degree reduction using an offline double sharing
     /// `([ρ]_T, [ρ]_2T)`: publish `d = z − ρ` (degree 2T) via the king,
-    /// then output `d + [ρ]_T`. `O(N)` total communication.
-    pub fn degree_reduce_bh08(&self, z: &[u64]) -> Vec<u64> {
+    /// then output `d + [ρ]_T`. `O(N)` total communication. Errs if the
+    /// double-sharing pool cannot supply `z.len()` pairs.
+    pub fn degree_reduce_bh08(&self, z: &[u64]) -> Result<Vec<u64>, OfflineError> {
         let len = z.len();
-        let (rho_t, rho_2t) = self.offline.borrow_mut().take_double(len);
+        let (rho_t, rho_2t) = self.offline.borrow_mut().take_double(len)?;
         let mut d = z.to_vec();
         vecops::sub_assign(self.f, &mut d, &rho_2t);
         let d_pub = self.open_king(&d, 2 * self.t);
         let mut out = rho_t;
         vecops::add_assign(self.f, &mut out, &d_pub);
-        out
+        Ok(out)
     }
 
     /// Secure multiplication of two degree-T shared vectors (element-wise),
-    /// choosing the reduction flavour.
-    pub fn mul(&self, a: &[u64], b: &[u64], bgw: bool) -> Vec<u64> {
+    /// choosing the reduction flavour. Only the BH08 path consumes offline
+    /// material (and can therefore err).
+    pub fn mul(&self, a: &[u64], b: &[u64], bgw: bool) -> Result<Vec<u64>, OfflineError> {
         assert_eq!(a.len(), b.len());
         let prod: Vec<u64> = a.iter().zip(b).map(|(&x, &y)| self.f.mul(x, y)).collect();
         if bgw {
-            self.degree_reduce_bgw(&prod)
+            Ok(self.degree_reduce_bgw(&prod))
         } else {
             self.degree_reduce_bh08(&prod)
         }
@@ -527,8 +532,16 @@ impl<'a> Party<'a> {
     /// `⌊a/2^m⌋ + s` with `P(s=1) = (a mod 2^m)/2^m` — the paper's Phase-4
     /// rounding. Consumes one offline pair per element.
     ///
-    /// Requires `2^k + 2^{k+κ} < p` (checked), `0 < m < k`.
-    pub fn trunc_pr(&self, a: &[u64], k: u32, m: u32, kappa: u32, king: bool) -> Vec<u64> {
+    /// Requires `2^k + 2^{k+κ} < p` (checked), `0 < m < k`. Errs if the
+    /// width-`m` truncation pool cannot supply `a.len()` pairs.
+    pub fn trunc_pr(
+        &self,
+        a: &[u64],
+        k: u32,
+        m: u32,
+        kappa: u32,
+        king: bool,
+    ) -> Result<Vec<u64>, OfflineError> {
         assert!(m < k, "truncation amount must be < value bits");
         let p = self.f.modulus();
         assert!(
@@ -537,7 +550,7 @@ impl<'a> Party<'a> {
             k + kappa
         );
         let len = a.len();
-        let (rp, rpp) = self.offline.borrow_mut().take_trunc_pair(len, m);
+        let (rp, rpp) = self.offline.borrow_mut().take_trunc_pair(len, m)?;
         // v = a + 2^{k−1} + 2^m·r'' + r'
         let pow_km1 = self.f.reduce(1u64 << (k - 1));
         let pow_m = 1u64 << m;
@@ -562,12 +575,13 @@ impl<'a> Party<'a> {
             let num = self.f.add(self.f.sub(self.f.add(a[i], pow_km1), c_lo), rp[i]);
             out[i] = self.f.sub(self.f.mul(num, inv2m), offset);
         }
-        out
+        Ok(out)
     }
 
     /// Fetch degree-T shares of a fresh uniformly random vector from the
-    /// offline pool (model masks `v_k` of Eq. 4, initial model, …).
-    pub fn random_share(&self, len: usize) -> Vec<u64> {
+    /// offline pool (model masks `v_k` of Eq. 4, initial model, …). Errs
+    /// if the random pool cannot supply `len` elements.
+    pub fn random_share(&self, len: usize) -> Result<Vec<u64>, OfflineError> {
         self.offline.borrow_mut().take_random(len)
     }
 }

@@ -41,15 +41,73 @@
 //!   per pair from `m` bits (`r' = Σ 2^i b_i`) and `k₂+κ−m` bits
 //!   (`r''`), entirely linear on the bit shares.
 //!
-//! The phase uses its own tag range ([`TAG_BASE`]) so it can run on the
-//! same transport *before* the online tags start at 0, and a per-party
-//! RNG fork domain-separated from both the dealer streams and the online
-//! resharing streams. In a real deployment each party would seed from its
-//! own entropy; here the forks derive from the shared run seed so
-//! distributed runs stay reproducible (see `prng` module docs — the same
-//! caveat the dealer carries).
+//! ## The pipelined factory
+//!
+//! [`generate`] is the one-shot shape: block until every pool `demand`
+//! asks for exists. [`start_factory`] is the pipelined shape: a background
+//! producer thread walks a deterministic [`chunk_schedule`] (all doubles,
+//! then all randoms, then truncation widths ascending in round-robin) and
+//! feeds fixed-size [`PoolChunk`]s through a channel into a replenishable
+//! [`Offline`] pool. `take_*` on the consumer side blocks (pumping the
+//! channel) only when the online rounds outrun the producer, so offline
+//! generation overlaps online computation instead of sitting on the
+//! critical path. [`FactoryStats`] splits the wall time into *generated*
+//! seconds (producer side) and *stalled* seconds (consumer side); the
+//! difference is the hidden-offline time the ledger reports.
+//!
+//! ### Chunk-stability contract
+//!
+//! Chunked production is **element-identical** to one-shot production for
+//! the same `(seed, demand)` — the protocol-equivalence acceptance oracle
+//! (every `w_trace` stays bit-identical with pipelining on). Three
+//! mechanisms guarantee it:
+//!
+//! 1. **Per-purpose RNG sub-streams.** [`Session`] forks one stream per
+//!    (component, role) pair — double values, double degree-`T` coeffs,
+//!    double degree-`2T` coeffs, random values, random coeffs, and a
+//!    value/coeff pair per truncation width — in a fixed documented
+//!    order. A draw's stream position depends only on how many elements
+//!    of *that component* came before it, never on chunk boundaries.
+//! 2. **Per-value coefficient dealing.** [`deal_round`] draws each
+//!    value's `deg` sharing coefficients individually (Horner at batch
+//!    width 1), unlike `shamir::share_at`, whose coefficient layout
+//!    depends on the batch width and would shift under re-chunking.
+//! 3. **Whole-slot extraction buffers.** Extraction yields `N−T` outputs
+//!    per dealt slot; the session buffers leftovers between chunks (the
+//!    buffer always holds `< N−T` elements), so the cumulative slot
+//!    count after any chunking equals the one-shot `⌈count/(N−T)⌉`, and
+//!    the slot-major consumption order is unchanged. Bit candidates are
+//!    likewise buffered per width: the ready-bit stream is a prefix map
+//!    of the deterministic candidate stream, so pair values are
+//!    independent of how many candidates any refill happened to extract.
+//!
+//! Wire *content* is chunk-stable; wire *byte counts* for the bit pools
+//! can differ slightly under chunking (candidates are opened in whole
+//! extraction slots per refill). [`distributed_bytes_for_party`] models
+//! the one-shot schedule and is validated against one-shot runs.
+//!
+//! ## Serve sessions
+//!
+//! The phase uses its own tag stripe ([`TAG_BASE`] for session 0) so it
+//! can run on the same transport alongside the online windows. Under
+//! `copml serve`, job `j` runs in session `j`: its offline traffic moves
+//! to `tags::session_offline(j)`, letting job `j+1`'s factory pre-fill
+//! pools while job `j` is still training on the same mesh. Session ids
+//! change tag numbering only — never any RNG-derived value — so a job's
+//! pools (and its `w_trace`) match a standalone single-job run with the
+//! same seed.
+//!
+//! Each party's RNG forks derive from the shared run seed, domain-
+//! separated from the dealer streams and the online resharing streams. In
+//! a real deployment each party would seed from its own entropy; here the
+//! forks derive from the shared run seed so distributed runs stay
+//! reproducible (see `prng` module docs — the same caveat the dealer
+//! carries).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::field::{vecops, Field};
 use crate::net::tags::{self, TagAlloc};
@@ -63,16 +121,32 @@ use super::dealer::Dealer;
 /// First tag of the offline phase's private tag range
 /// ([`tags::OFFLINE`]). The online protocol allocates from the windows
 /// below it; disjointness is const-asserted in [`tags`], so the two can
-/// never collide.
+/// never collide. Serve sessions stripe this range via
+/// [`tags::session_offline`].
 ///
 /// [`tags`]: crate::net::tags
 /// [`tags::OFFLINE`]: crate::net::tags::OFFLINE
+/// [`tags::session_offline`]: crate::net::tags::session_offline
 pub const TAG_BASE: u64 = crate::net::tags::OFFLINE.start;
 
 /// Stream label for the per-party offline-phase RNG ("OFFL" in the high
 /// bits, party id in the low bits). Distinct from every `mpc::dealer`
 /// stream label and from `mpc::STREAM_PARTY`.
 const STREAM_OFFLINE: u64 = 0x4F46_464C_0000_0000;
+
+/// Sub-stream fork labels, forked from the per-party offline base RNG in
+/// **exactly this order** (the fork operation advances the parent, so the
+/// order is part of the determinism contract): double values, double
+/// degree-`T` coefficients, double degree-`2T` coefficients, random
+/// values, random coefficients, then per truncation width ascending
+/// (`SUB_BIT_VALS | m`, `SUB_BIT_COEFF | m`).
+const SUB_DOUBLE_VALS: u64 = 1;
+const SUB_DOUBLE_COEFF_T: u64 = 2;
+const SUB_DOUBLE_COEFF_2T: u64 = 3;
+const SUB_RANDOM_VALS: u64 = 4;
+const SUB_RANDOM_COEFF: u64 = 5;
+const SUB_BIT_VALS: u64 = 0x1000;
+const SUB_BIT_COEFF: u64 = 0x2000;
 
 // ---------------------------------------------------------------------
 // Pools (shared by both providers).
@@ -90,6 +164,27 @@ pub struct Demand {
     pub randoms: usize,
 }
 
+/// `demand`'s truncation widths with zero-count entries dropped and
+/// duplicate widths merged, ascending — the canonical width list shared
+/// by the session, the chunk schedule, and the byte model.
+fn merged_widths(demand: &Demand) -> Vec<(u32, usize)> {
+    let mut widths: Vec<(u32, usize)> =
+        demand.truncs.iter().copied().filter(|&(_, c)| c > 0).collect();
+    widths.sort_unstable();
+    let mut merged: Vec<(u32, usize)> = Vec::new();
+    for (m, c) in widths {
+        match merged.last_mut() {
+            Some(last) if last.0 == m => last.1 += c,
+            _ => merged.push((m, c)),
+        }
+    }
+    merged
+}
+
+/// A linearly-consumed pool that can also be **replenished** while it is
+/// being drained (the factory feed appends chunks as the online phase
+/// takes elements).
+#[derive(Default)]
 pub(crate) struct Stream {
     data: Vec<u64>,
     pos: usize,
@@ -99,27 +194,150 @@ impl Stream {
     pub(crate) fn new(data: Vec<u64>) -> Stream {
         Stream { data, pos: 0 }
     }
-    fn take(&mut self, len: usize, what: &str) -> Vec<u64> {
+
+    fn available(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    fn extend(&mut self, vals: &[u64]) {
+        self.data.extend_from_slice(vals);
+    }
+
+    fn push(&mut self, val: u64) {
+        self.data.push(val);
+    }
+
+    /// Take the next `len` elements. Callers check [`Stream::available`]
+    /// first (the typed-error paths live on [`Offline`]).
+    fn take(&mut self, len: usize) -> Vec<u64> {
         assert!(
             self.pos + len <= self.data.len(),
-            "offline {what} pool exhausted (need {len} more of {})",
-            self.data.len()
+            "stream over-read (guarded by Offline::take_*)"
         );
         let lo = self.pos;
         self.pos += len;
-        self.data[lo..lo + len].to_vec()
+        let out = self.data[lo..lo + len].to_vec();
+        // Reclaim the consumed prefix once it dominates — a long-lived
+        // serve pool would otherwise retain every element ever fed.
+        if self.pos > 4096 && self.pos * 2 > self.data.len() {
+            self.data.drain(..self.pos);
+            self.pos = 0;
+        }
+        out
     }
 }
 
+/// Typed failure of an offline pool: the serve daemon degrades (the job
+/// halts with this as its reason) instead of crashing the mesh.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OfflineError {
+    /// A pool ran dry and no producer can refill it — the coordinator's
+    /// demand precomputation and the consumption disagree.
+    Exhausted {
+        /// Which pool ("double-sharing", "truncation", "random-share").
+        pool: &'static str,
+        /// Elements the caller asked for.
+        need: usize,
+        /// Elements the pool could still supply.
+        have: usize,
+    },
+    /// No truncation pool exists for width `m` (an rp/rpp width mismatch
+    /// or a width the demand never declared).
+    MissingWidth {
+        /// The requested truncation width.
+        m: u32,
+    },
+    /// The factory producer thread terminated before finishing its chunk
+    /// schedule (it panicked or was torn down early).
+    ProducerDied,
+}
+
+impl std::fmt::Display for OfflineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OfflineError::Exhausted { pool, need, have } => {
+                write!(f, "offline {pool} pool exhausted (need {need}, have {have})")
+            }
+            OfflineError::MissingWidth { m } => {
+                write!(f, "no truncation pool for width m={m}")
+            }
+            OfflineError::ProducerDied => {
+                f.write_str("offline factory producer died before completing its schedule")
+            }
+        }
+    }
+}
+
+impl std::error::Error for OfflineError {}
+
+/// One batch of offline material crossing from the factory producer to
+/// the consuming pool, in deterministic schedule order.
+enum PoolChunk {
+    /// `count` double sharings: the degree-`T` and degree-`2T` halves.
+    Double { t: Vec<u64>, t2: Vec<u64> },
+    /// `count` truncation pairs for width `m`.
+    Trunc { m: u32, rp: Vec<u64>, rpp: Vec<u64> },
+    /// `count` random degree-`T` sharings.
+    Random { vals: Vec<u64> },
+}
+
+/// Shared producer/consumer accounting for one factory: how long the
+/// producer spent generating chunks, and how long the consumer spent
+/// blocked waiting for one. `generated − stalled` is the offline time the
+/// pipeline *hid* behind online rounds.
+#[derive(Default)]
+pub struct FactoryStats {
+    gen_nanos: AtomicU64,
+    stall_nanos: AtomicU64,
+    done: AtomicBool,
+}
+
+impl FactoryStats {
+    fn add_gen(&self, d: Duration) {
+        self.gen_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn add_stall(&self, d: Duration) {
+        self.stall_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn mark_completed(&self) {
+        self.done.store(true, Ordering::Release);
+    }
+
+    fn completed(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+
+    /// Seconds the producer spent generating chunks (total offline work).
+    pub fn gen_seconds(&self) -> f64 {
+        self.gen_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Seconds the consumer spent blocked on the feed (the offline time
+    /// that stayed on the critical path).
+    pub fn stall_seconds(&self) -> f64 {
+        self.stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+/// The consumer half of a factory channel, owned by the [`Offline`] pool.
+struct Feed {
+    rx: mpsc::Receiver<PoolChunk>,
+    stats: Arc<FactoryStats>,
+}
+
 /// Per-party pools of offline randomness. Streams are consumed linearly;
-/// exhaustion panics with a sizing hint (the coordinator precomputes exact
-/// demand).
+/// a factory-fed pool refills itself from its [`Feed`] on demand, and
+/// exhaustion surfaces as a typed [`OfflineError`] (the coordinator
+/// converts it into a halt reason).
 pub struct Offline {
     pub(crate) double_t: Stream,
     pub(crate) double_2t: Stream,
     pub(crate) trunc_rp: HashMap<u32, Stream>,
     pub(crate) trunc_rpp: HashMap<u32, Stream>,
     pub(crate) random_t: Stream,
+    feed: Option<Feed>,
 }
 
 impl Default for Offline {
@@ -130,35 +348,120 @@ impl Default for Offline {
             trunc_rp: HashMap::new(),
             trunc_rpp: HashMap::new(),
             random_t: Stream::new(Vec::new()),
+            feed: None,
         }
     }
 }
 
 impl Offline {
-    pub fn take_double(&mut self, len: usize) -> (Vec<u64>, Vec<u64>) {
-        (
-            self.double_t.take(len, "double-sharing"),
-            self.double_2t.take(len, "double-sharing"),
-        )
+    /// An empty pool pre-provisioned with `demand`'s truncation widths,
+    /// so a factory-fed pool can distinguish "chunk not here yet" (pump
+    /// the feed) from a genuinely undeclared width
+    /// ([`OfflineError::MissingWidth`]).
+    fn with_widths(demand: &Demand) -> Offline {
+        let mut pool = Offline::default();
+        for (m, _) in merged_widths(demand) {
+            pool.trunc_rp.insert(m, Stream::default());
+            pool.trunc_rpp.insert(m, Stream::default());
+        }
+        pool
     }
 
-    /// Take `len` truncation pairs for width `m`.
-    pub fn take_trunc_pair(&mut self, len: usize, m: u32) -> (Vec<u64>, Vec<u64>) {
-        let rp = self
-            .trunc_rp
-            .get_mut(&m)
-            .unwrap_or_else(|| panic!("no truncation pool for width m={m}"))
-            .take(len, "truncation");
-        let rpp = self
-            .trunc_rpp
-            .get_mut(&m)
-            .unwrap_or_else(|| panic!("no truncation pool for width m={m}"))
-            .take(len, "truncation");
-        (rp, rpp)
+    /// Block on the feed for one more chunk and route it into the pools.
+    /// `Ok(false)` means no more chunks can ever arrive (no feed, or the
+    /// producer finished its schedule and the channel drained).
+    fn pump(&mut self) -> Result<bool, OfflineError> {
+        let Some(feed) = self.feed.as_ref() else {
+            return Ok(false);
+        };
+        // copml-lint: allow(wall-clock) consumer-stall stopwatch for the ledger's critical-path vs hidden offline split
+        let t0 = Instant::now();
+        let msg = feed.rx.recv();
+        feed.stats.add_stall(t0.elapsed());
+        match msg {
+            Ok(PoolChunk::Double { t, t2 }) => {
+                self.double_t.extend(&t);
+                self.double_2t.extend(&t2);
+                Ok(true)
+            }
+            Ok(PoolChunk::Trunc { m, rp, rpp }) => {
+                self.trunc_rp.entry(m).or_default().extend(&rp);
+                self.trunc_rpp.entry(m).or_default().extend(&rpp);
+                Ok(true)
+            }
+            Ok(PoolChunk::Random { vals }) => {
+                self.random_t.extend(&vals);
+                Ok(true)
+            }
+            Err(mpsc::RecvError) => {
+                let done = feed.stats.completed();
+                self.feed = None;
+                if done {
+                    Ok(false)
+                } else {
+                    Err(OfflineError::ProducerDied)
+                }
+            }
+        }
     }
 
-    pub fn take_random(&mut self, len: usize) -> Vec<u64> {
-        self.random_t.take(len, "random-share")
+    /// Take `len` double sharings (the degree-`T` and degree-`2T`
+    /// halves), pumping the factory feed if the pool is short.
+    pub fn take_double(&mut self, len: usize) -> Result<(Vec<u64>, Vec<u64>), OfflineError> {
+        while self.double_t.available() < len || self.double_2t.available() < len {
+            if !self.pump()? {
+                return Err(OfflineError::Exhausted {
+                    pool: "double-sharing",
+                    need: len,
+                    have: self.double_t.available().min(self.double_2t.available()),
+                });
+            }
+        }
+        Ok((self.double_t.take(len), self.double_2t.take(len)))
+    }
+
+    /// Take `len` truncation pairs for width `m`, pumping the factory
+    /// feed if the pool is short.
+    pub fn take_trunc_pair(
+        &mut self,
+        len: usize,
+        m: u32,
+    ) -> Result<(Vec<u64>, Vec<u64>), OfflineError> {
+        loop {
+            let rp_have = self.trunc_rp.get(&m).map(Stream::available);
+            let rpp_have = self.trunc_rpp.get(&m).map(Stream::available);
+            if rp_have.is_some_and(|h| h >= len) && rpp_have.is_some_and(|h| h >= len) {
+                break;
+            }
+            if !self.pump()? {
+                let (Some(rp), Some(rpp)) = (rp_have, rpp_have) else {
+                    return Err(OfflineError::MissingWidth { m });
+                };
+                return Err(OfflineError::Exhausted {
+                    pool: "truncation",
+                    need: len,
+                    have: rp.min(rpp),
+                });
+            }
+        }
+        let rp = self.trunc_rp.get_mut(&m).expect("availability checked above").take(len);
+        let rpp = self.trunc_rpp.get_mut(&m).expect("availability checked above").take(len);
+        Ok((rp, rpp))
+    }
+
+    /// Take `len` random degree-`T` sharings, pumping the factory feed if
+    /// the pool is short.
+    pub fn take_random(&mut self, len: usize) -> Result<Vec<u64>, OfflineError> {
+        while self.random_t.available() < len {
+            if !self.pump()? {
+                return Err(OfflineError::Exhausted {
+                    pool: "random-share",
+                    need: len,
+                    have: self.random_t.available(),
+                });
+            }
+        }
+        Ok(self.random_t.take(len))
     }
 }
 
@@ -215,11 +518,13 @@ impl std::str::FromStr for OfflineMode {
 
 /// A source of per-party offline pools. `provide` runs on party
 /// `net.id()`'s thread/process; the distributed provider communicates
-/// over `net` (its own tag range), the dealer provider replays pools from
-/// the shared seed without touching the wire.
+/// over `net` (session `session`'s offline tag stripe), the dealer
+/// provider replays pools from the shared seed without touching the wire.
 pub trait OfflineProvider {
+    /// The mode this provider implements.
     fn mode(&self) -> OfflineMode;
 
+    /// Produce the pools `demand` asks for, one-shot.
     #[allow(clippy::too_many_arguments)]
     fn provide(
         &self,
@@ -230,6 +535,7 @@ pub trait OfflineProvider {
         k2: u32,
         kappa: u32,
         seed: u64,
+        session: u64,
     ) -> Offline;
 }
 
@@ -252,6 +558,7 @@ impl OfflineProvider for DealerProvider {
         k2: u32,
         kappa: u32,
         seed: u64,
+        _session: u64,
     ) -> Offline {
         Dealer::deal_one(f, net.n(), t, demand, k2, kappa, seed, net.id())
     }
@@ -274,8 +581,9 @@ impl OfflineProvider for DistributedProvider {
         k2: u32,
         kappa: u32,
         seed: u64,
+        session: u64,
     ) -> Offline {
-        generate(net, f, t, demand, k2, kappa, seed)
+        generate_in_session(net, f, t, demand, k2, kappa, seed, session)
     }
 }
 
@@ -313,25 +621,6 @@ pub fn extract(f: Field, matrix: &[Vec<u64>], inputs: &[&[u64]]) -> Vec<Vec<u64>
             out
         })
         .collect()
-}
-
-/// Interleave the `N−T` extracted output vectors into consumption order
-/// (slot-major: all outputs of batch slot 0, then slot 1, …) and truncate
-/// to `count`. Deterministic, so every party consumes the same sharing at
-/// the same pool index.
-fn flatten_extracted(outs: Vec<Vec<u64>>, count: usize) -> Vec<u64> {
-    let mut flat = Vec::with_capacity(count);
-    let slots = outs.first().map_or(0, |o| o.len());
-    'outer: for slot in 0..slots {
-        for o in &outs {
-            flat.push(o[slot]);
-            if flat.len() == count {
-                break 'outer;
-            }
-        }
-    }
-    assert_eq!(flat.len(), count, "extraction under-produced");
-    flat
 }
 
 /// Modular square root by Tonelli–Shanks, with the `p ≡ 3 (mod 4)`
@@ -384,136 +673,314 @@ pub fn sqrt_mod(f: Field, a: u64) -> u64 {
 }
 
 // ---------------------------------------------------------------------
+// Collective rounds (free functions so the session can lend its tag
+// allocator and one RNG sub-stream without aliasing `&mut self`).
+// ---------------------------------------------------------------------
+
+/// Deal a degree-`deg` sharing of `vals` to everyone and collect every
+/// dealer's batch: returns `shares[j]` = this party's share of dealer
+/// `j`'s batch.
+///
+/// Coefficients are drawn **per value** from `coeff_rng` (`deg` draws per
+/// value, Horner at batch width 1): the stream position after dealing `k`
+/// values is `k·deg` no matter how the values were chunked into rounds —
+/// the chunk-stability contract (module docs).
+fn deal_round(
+    net: &dyn Transport,
+    f: Field,
+    lambdas: &[u64],
+    tags: &mut TagAlloc,
+    coeff_rng: &mut Rng,
+    vals: &[u64],
+    deg: usize,
+) -> Vec<Vec<u64>> {
+    let n = net.n();
+    let me = net.id();
+    let tag = tags.fresh("offline.step");
+    let p = f.modulus();
+    let mut shares = vec![vec![0u64; vals.len()]; n];
+    let mut coeffs = vec![0u64; deg];
+    for (e, &v) in vals.iter().enumerate() {
+        coeff_rng.fill_field(p, &mut coeffs);
+        for (j, &lambda) in lambdas.iter().enumerate() {
+            let mut acc = 0u64;
+            for k in (0..deg).rev() {
+                acc = f.reduce(f.mul(acc, lambda) + coeffs[k]);
+            }
+            shares[j][e] = f.reduce(f.mul(acc, lambda) + v);
+        }
+    }
+    let mut own = Vec::new();
+    for (j, s) in shares.into_iter().enumerate() {
+        if j == me {
+            own = s;
+        } else {
+            net.send(j, tag, s);
+        }
+    }
+    (0..n)
+        .map(|j| {
+            if j == me {
+                std::mem::take(&mut own)
+            } else {
+                net.recv(j, tag)
+            }
+        })
+        .collect()
+}
+
+/// Open degree-`deg` shares via the king (party 0) — the shared
+/// [`super::open_via_king`] primitive, on the session's offline stripe.
+fn open_round(
+    net: &dyn Transport,
+    f: Field,
+    lambdas: &[u64],
+    tags: &mut TagAlloc,
+    share: &[u64],
+    deg: usize,
+) -> Vec<u64> {
+    let tag_up = tags.fresh("offline.step");
+    let tag_down = tags.fresh("offline.step");
+    let coeffs = poly::coeffs_at(f, &lambdas[..deg + 1], 0);
+    super::open_via_king(net, f, &coeffs, tag_up, tag_down, share, deg)
+}
+
+/// Extract `dealt` (every dealer's batch, `l` slots each) and append the
+/// `N−T` outputs per slot to `buf` in slot-major consumption order (all
+/// outputs of slot 0, then slot 1, …) — the same element order for every
+/// party and every chunking.
+fn append_extracted(f: Field, matrix: &[Vec<u64>], dealt: &[Vec<u64>], buf: &mut Vec<u64>) {
+    let views: Vec<&[u64]> = dealt.iter().map(|v| v.as_slice()).collect();
+    let outs = extract(f, matrix, &views);
+    let slots = outs.first().map_or(0, |o| o.len());
+    for slot in 0..slots {
+        for o in &outs {
+            buf.push(o[slot]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // The distributed protocol session.
 // ---------------------------------------------------------------------
 
+/// Shared-bit generator state for one truncation width: its two RNG
+/// sub-streams and the ready-bit buffer (a prefix map of the width's
+/// deterministic candidate stream — see the chunk-stability contract).
+struct BitGen {
+    rng_vals: Rng,
+    rng_coeff: Rng,
+    ready: Stream,
+}
+
+/// One party's incremental distributed-offline producer. Both the
+/// one-shot [`generate`] and the factory producer drive the same session
+/// type, so their outputs are element-identical by construction.
 struct Session<'a> {
     net: &'a dyn Transport,
     f: Field,
     n: usize,
     t: usize,
+    k2: u32,
+    kappa: u32,
     lambdas: Vec<u64>,
     matrix: Vec<Vec<u64>>,
-    rng: Rng,
-    /// Allocator over [`tags::OFFLINE`] — the phase's private window.
+    /// Allocator over the session's [`tags::session_offline`] stripe.
     /// Separate-process parties cannot share an in-process
     /// [`tags::SpmdTagTrace`], so divergence here is caught by the
     /// mailbox's `(from, tag)` reuse counter instead.
     tags: TagAlloc,
+    /// Canonical `(width, count)` list ([`merged_widths`]).
+    widths: Vec<(u32, usize)>,
+    rng_dbl_vals: Rng,
+    rng_dbl_coeff_t: Rng,
+    rng_dbl_coeff_2t: Rng,
+    rng_rnd_vals: Rng,
+    rng_rnd_coeff: Rng,
+    bits: HashMap<u32, BitGen>,
+    /// Whole-slot extraction leftovers (always `< N−T` elements), carried
+    /// between chunks so cumulative slot counts match the one-shot run.
+    buf_dbl_t: Vec<u64>,
+    buf_dbl_2t: Vec<u64>,
+    buf_rnd: Vec<u64>,
 }
 
 impl Session<'_> {
-    fn fresh_tag(&mut self) -> u64 {
-        self.tags.fresh("offline.step")
-    }
-
-    /// Deal a degree-`deg` sharing of `vals` to everyone and collect every
-    /// dealer's batch: returns `shares[j]` = this party's share of dealer
-    /// `j`'s batch.
-    fn deal_round(&mut self, vals: &[u64], deg: usize) -> Vec<Vec<u64>> {
-        let tag = self.fresh_tag();
-        let me = self.net.id();
-        let shares = shamir::share_at(self.f, vals, &self.lambdas, deg, &mut self.rng);
-        let mut own = Vec::new();
-        for (j, s) in shares.into_iter().enumerate() {
-            if j == me {
-                own = s;
-            } else {
-                self.net.send(j, tag, s);
-            }
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        net: &dyn Transport,
+        f: Field,
+        t: usize,
+        demand: &Demand,
+        k2: u32,
+        kappa: u32,
+        seed: u64,
+        session: u64,
+    ) -> Session<'_> {
+        let n = net.n();
+        assert!(n > 2 * t, "need n > 2t to open squares during bit generation (n={n}, t={t})");
+        let mut base = Rng::seed_from_u64(seed).fork(STREAM_OFFLINE | net.id() as u64);
+        // Fork order is part of the determinism contract (label docs).
+        let rng_dbl_vals = base.fork(SUB_DOUBLE_VALS);
+        let rng_dbl_coeff_t = base.fork(SUB_DOUBLE_COEFF_T);
+        let rng_dbl_coeff_2t = base.fork(SUB_DOUBLE_COEFF_2T);
+        let rng_rnd_vals = base.fork(SUB_RANDOM_VALS);
+        let rng_rnd_coeff = base.fork(SUB_RANDOM_COEFF);
+        let widths = merged_widths(demand);
+        let mut bits = HashMap::new();
+        for &(m, _) in &widths {
+            let rng_vals = base.fork(SUB_BIT_VALS | m as u64);
+            let rng_coeff = base.fork(SUB_BIT_COEFF | m as u64);
+            bits.insert(m, BitGen { rng_vals, rng_coeff, ready: Stream::default() });
         }
-        (0..self.n)
-            .map(|j| {
-                if j == me {
-                    std::mem::take(&mut own)
-                } else {
-                    self.net.recv(j, tag)
-                }
-            })
-            .collect()
-    }
-
-    /// One extraction pass: everyone deals `l` fresh random values at
-    /// degree `deg`; returns the `N−T` extracted output share vectors.
-    fn extract_round(&mut self, l: usize, deg: usize) -> Vec<Vec<u64>> {
-        let p = self.f.modulus();
-        let vals: Vec<u64> = (0..l).map(|_| self.rng.gen_range(p)).collect();
-        let dealt = self.deal_round(&vals, deg);
-        let views: Vec<&[u64]> = dealt.iter().map(|v| v.as_slice()).collect();
-        extract(self.f, &self.matrix, &views)
-    }
-
-    /// `count` extracted random degree-`deg` sharings, in consumption
-    /// order.
-    fn extract_random(&mut self, count: usize, deg: usize) -> Vec<u64> {
-        if count == 0 {
-            return Vec::new();
+        Session {
+            net,
+            f,
+            n,
+            t,
+            k2,
+            kappa,
+            lambdas: shamir::lambda_points(n),
+            matrix: extraction_matrix(f, n, t),
+            tags: TagAlloc::new(net.id(), tags::session_offline(session)),
+            widths,
+            rng_dbl_vals,
+            rng_dbl_coeff_t,
+            rng_dbl_coeff_2t,
+            rng_rnd_vals,
+            rng_rnd_coeff,
+            bits,
+            buf_dbl_t: Vec::new(),
+            buf_dbl_2t: Vec::new(),
+            buf_rnd: Vec::new(),
         }
-        let l = count.div_ceil(self.n - self.t);
-        flatten_extracted(self.extract_round(l, deg), count)
     }
 
-    /// `count` extracted double sharings `([ρ]_T, [ρ]_2T)`: the same
+    /// The next `count` double sharings `([ρ]_T, [ρ]_2T)`: the same
     /// dealer batches shared at both degrees, extracted with the same
     /// matrix (linearity keeps the halves consistent).
-    fn extract_doubles(&mut self, count: usize) -> (Vec<u64>, Vec<u64>) {
+    fn produce_doubles(&mut self, count: usize) -> (Vec<u64>, Vec<u64>) {
         if count == 0 {
             return (Vec::new(), Vec::new());
         }
-        let p = self.f.modulus();
-        let l = count.div_ceil(self.n - self.t);
-        let vals: Vec<u64> = (0..l).map(|_| self.rng.gen_range(p)).collect();
-        let dealt_t = self.deal_round(&vals, self.t);
-        let dealt_2t = self.deal_round(&vals, 2 * self.t);
-        let views_t: Vec<&[u64]> = dealt_t.iter().map(|v| v.as_slice()).collect();
-        let views_2t: Vec<&[u64]> = dealt_2t.iter().map(|v| v.as_slice()).collect();
-        let out_t = flatten_extracted(extract(self.f, &self.matrix, &views_t), count);
-        let out_2t = flatten_extracted(extract(self.f, &self.matrix, &views_2t), count);
+        let ex = self.n - self.t;
+        if self.buf_dbl_t.len() < count {
+            let l = (count - self.buf_dbl_t.len()).div_ceil(ex);
+            let p = self.f.modulus();
+            let mut vals = vec![0u64; l];
+            for v in vals.iter_mut() {
+                *v = self.rng_dbl_vals.gen_range(p);
+            }
+            let dealt_t = deal_round(
+                self.net,
+                self.f,
+                &self.lambdas,
+                &mut self.tags,
+                &mut self.rng_dbl_coeff_t,
+                &vals,
+                self.t,
+            );
+            let dealt_2t = deal_round(
+                self.net,
+                self.f,
+                &self.lambdas,
+                &mut self.tags,
+                &mut self.rng_dbl_coeff_2t,
+                &vals,
+                2 * self.t,
+            );
+            append_extracted(self.f, &self.matrix, &dealt_t, &mut self.buf_dbl_t);
+            append_extracted(self.f, &self.matrix, &dealt_2t, &mut self.buf_dbl_2t);
+        }
+        let out_t: Vec<u64> = self.buf_dbl_t.drain(..count).collect();
+        let out_2t: Vec<u64> = self.buf_dbl_2t.drain(..count).collect();
         (out_t, out_2t)
     }
 
-    /// Open degree-`deg` shares via the king (party 0) — the shared
-    /// [`super::open_via_king`] primitive, on the offline tag range.
-    fn open_king(&mut self, share: &[u64], deg: usize) -> Vec<u64> {
-        let tag_up = self.fresh_tag();
-        let tag_down = self.fresh_tag();
-        let coeffs = poly::coeffs_at(self.f, &self.lambdas[..deg + 1], 0);
-        super::open_via_king(self.net, self.f, &coeffs, tag_up, tag_down, share, deg)
+    /// The next `count` random degree-`T` sharings, in consumption order.
+    fn produce_randoms(&mut self, count: usize) -> Vec<u64> {
+        if count == 0 {
+            return Vec::new();
+        }
+        let ex = self.n - self.t;
+        if self.buf_rnd.len() < count {
+            let l = (count - self.buf_rnd.len()).div_ceil(ex);
+            let p = self.f.modulus();
+            let mut vals = vec![0u64; l];
+            for v in vals.iter_mut() {
+                *v = self.rng_rnd_vals.gen_range(p);
+            }
+            let dealt = deal_round(
+                self.net,
+                self.f,
+                &self.lambdas,
+                &mut self.tags,
+                &mut self.rng_rnd_coeff,
+                &vals,
+                self.t,
+            );
+            append_extracted(self.f, &self.matrix, &dealt, &mut self.buf_rnd);
+        }
+        self.buf_rnd.drain(..count).collect()
     }
 
-    /// `count` shares of uniformly random bits (module docs): extracted
-    /// random `[a]`, open `a²` via the king, `[b] = (c⁻¹[a]+1)/2` for the
-    /// canonical root `c`. Slots with `a² = 0` are discarded consistently
-    /// (the opened value is public) and regenerated in a further round.
-    fn gen_bits(&mut self, count: usize) -> Vec<u64> {
+    /// Ensure width `m`'s ready-bit buffer holds at least `need` bit
+    /// shares (module docs): extract candidates `[a]`, open `a²` via the
+    /// king, `[b] = (c⁻¹[a]+1)/2` for the canonical root `c`. Slots with
+    /// `a² = 0` are discarded consistently (the opened value is public)
+    /// and regenerated in a further pass. Every extracted candidate is
+    /// opened, so leftovers carry over to later chunks.
+    fn refill_bits(&mut self, m: u32, need: usize) {
         let f = self.f;
+        let t = self.t;
+        let ex = self.n - self.t;
+        let p = f.modulus();
         let inv2 = f.inv(2);
-        let mut bits = Vec::with_capacity(count);
-        while bits.len() < count {
-            let need = count - bits.len();
-            let a = self.extract_random(need, self.t);
+        loop {
+            let bg = self.bits.get_mut(&m).expect("width registered in Session::new");
+            let have = bg.ready.available();
+            if have >= need {
+                return;
+            }
+            let l = (need - have).div_ceil(ex);
+            let mut vals = vec![0u64; l];
+            for v in vals.iter_mut() {
+                *v = bg.rng_vals.gen_range(p);
+            }
+            let dealt = deal_round(
+                self.net,
+                f,
+                &self.lambdas,
+                &mut self.tags,
+                &mut bg.rng_coeff,
+                &vals,
+                t,
+            );
+            let mut a = Vec::with_capacity(l * ex);
+            append_extracted(f, &self.matrix, &dealt, &mut a);
             let sq: Vec<u64> = a.iter().map(|&x| f.mul(x, x)).collect();
-            let opened = self.open_king(&sq, 2 * self.t);
+            let opened = open_round(self.net, f, &self.lambdas, &mut self.tags, &sq, 2 * t);
+            let bg = self.bits.get_mut(&m).expect("width registered in Session::new");
             for (&ai, &sqv) in a.iter().zip(&opened) {
                 if sqv == 0 {
                     continue; // a = 0 carries no sign bit — retry the slot
                 }
                 let c = sqrt_mod(f, sqv);
                 let signed = f.mul(f.inv(c), ai); // shares of ±1
-                bits.push(f.mul(inv2, f.add(signed, 1)));
+                bg.ready.push(f.mul(inv2, f.add(signed, 1)));
             }
         }
-        bits
     }
 
-    /// `count` truncation pairs for width `m`: `r' = Σ_{i<m} 2^i b_i`,
-    /// `r'' = Σ_{i<k₂+κ−m} 2^i b_{m+i}` — the Catrina–Saxena composition,
-    /// linear on the bit shares.
-    fn trunc_pool(&mut self, m: u32, count: usize, k2: u32, kappa: u32) -> (Vec<u64>, Vec<u64>) {
-        assert!(m < k2 + kappa);
+    /// The next `count` truncation pairs for width `m`: `r' = Σ_{i<m}
+    /// 2^i b_i`, `r'' = Σ_{i<k₂+κ−m} 2^i b_{m+i}` — the Catrina–Saxena
+    /// composition, linear on the bit shares.
+    fn produce_truncs(&mut self, m: u32, count: usize) -> (Vec<u64>, Vec<u64>) {
+        assert!(m < self.k2 + self.kappa);
         let f = self.f;
-        let (wp, wpp) = (m as usize, (k2 + kappa - m) as usize);
-        let bits = self.gen_bits(count * (wp + wpp));
+        let (wp, wpp) = (m as usize, (self.k2 + self.kappa - m) as usize);
+        self.refill_bits(m, count * (wp + wpp));
+        let bg = self.bits.get_mut(&m).expect("width registered in Session::new");
         let compose = |chunk: &[u64]| -> u64 {
             let mut acc = 0u64;
             let mut pow = 1u64;
@@ -525,20 +992,19 @@ impl Session<'_> {
         };
         let mut rp = Vec::with_capacity(count);
         let mut rpp = Vec::with_capacity(count);
-        for j in 0..count {
-            let base = j * (wp + wpp);
-            rp.push(compose(&bits[base..base + wp]));
-            rpp.push(compose(&bits[base + wp..base + wp + wpp]));
+        for _ in 0..count {
+            rp.push(compose(&bg.ready.take(wp)));
+            rpp.push(compose(&bg.ready.take(wpp)));
         }
         (rp, rpp)
     }
 }
 
-/// Run the distributed offline phase for party `net.id()`: generate every
-/// pool `demand` asks for, collectively, with zero dealer involvement.
-/// All parties must call this concurrently (SPMD) with the same
-/// arguments. Pool order mirrors the dealer's (doubles, truncation widths
-/// ascending, randoms).
+/// Run the distributed offline phase for party `net.id()` in session 0:
+/// generate every pool `demand` asks for, collectively, with zero dealer
+/// involvement. All parties must call this concurrently (SPMD) with the
+/// same arguments. Pool order mirrors the dealer's (doubles, truncation
+/// widths ascending, randoms).
 pub fn generate(
     net: &dyn Transport,
     f: Field,
@@ -548,43 +1014,182 @@ pub fn generate(
     kappa: u32,
     seed: u64,
 ) -> Offline {
-    let n = net.n();
-    assert!(n > 2 * t, "need n > 2t to open squares during bit generation (n={n}, t={t})");
-    let mut s = Session {
-        net,
-        f,
-        n,
-        t,
-        lambdas: shamir::lambda_points(n),
-        matrix: extraction_matrix(f, n, t),
-        rng: Rng::seed_from_u64(seed).fork(STREAM_OFFLINE | net.id() as u64),
-        tags: TagAlloc::new(net.id(), tags::OFFLINE),
-    };
-    let mut pool = Offline::default();
+    generate_in_session(net, f, t, demand, k2, kappa, seed, 0)
+}
 
-    let (dt, d2t) = s.extract_doubles(demand.doubles);
+/// [`generate`] on serve session `session`'s offline tag stripe. Session
+/// ids change tag numbering only, never RNG-derived values, so the pools
+/// are independent of `session`.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_in_session(
+    net: &dyn Transport,
+    f: Field,
+    t: usize,
+    demand: &Demand,
+    k2: u32,
+    kappa: u32,
+    seed: u64,
+    session: u64,
+) -> Offline {
+    let mut s = Session::new(net, f, t, demand, k2, kappa, seed, session);
+    let mut pool = Offline::with_widths(demand);
+
+    let (dt, d2t) = s.produce_doubles(demand.doubles);
     pool.double_t = Stream::new(dt);
     pool.double_2t = Stream::new(d2t);
 
-    let mut widths: Vec<(u32, usize)> = demand.truncs.clone();
-    widths.sort_unstable();
+    let widths = s.widths.clone();
     for (m, count) in widths {
-        if count == 0 {
-            continue;
-        }
-        let (rp, rpp) = s.trunc_pool(m, count, k2, kappa);
+        let (rp, rpp) = s.produce_truncs(m, count);
         pool.trunc_rp.insert(m, Stream::new(rp));
         pool.trunc_rpp.insert(m, Stream::new(rpp));
     }
 
-    pool.random_t = Stream::new(s.extract_random(demand.randoms, t));
+    pool.random_t = Stream::new(s.produce_randoms(demand.randoms));
     pool
 }
 
-/// Exact payload bytes party `id` sends during [`generate`] (assuming no
-/// `a² = 0` retry rounds — probability ≈ `bits/p` per run). Mirrors the
-/// implementation term by term; validated against the live ledger in
-/// `tests/cost_model_validation.rs`.
+// ---------------------------------------------------------------------
+// The pipelined factory.
+// ---------------------------------------------------------------------
+
+/// One piece of the deterministic production plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ChunkSpec {
+    Double { count: usize },
+    Random { count: usize },
+    Trunc { m: u32, count: usize },
+}
+
+/// Split `demand` into `chunk`-sized pieces in production order: all
+/// doubles, then all randoms (both consumed early — BH08 of `XᵀY` and the
+/// encode masks run before iteration 0), then truncation widths ascending
+/// in round-robin (consumed gradually, one batch per SGD iteration — the
+/// material the pipeline actually hides). The plan is a pure function of
+/// `(demand, chunk)`, identical on every party.
+fn chunk_schedule(demand: &Demand, chunk: usize) -> Vec<ChunkSpec> {
+    assert!(chunk > 0, "chunk size must be at least 1");
+    let mut plan = Vec::new();
+    let mut rem = demand.doubles;
+    while rem > 0 {
+        let c = rem.min(chunk);
+        plan.push(ChunkSpec::Double { count: c });
+        rem -= c;
+    }
+    let mut rem = demand.randoms;
+    while rem > 0 {
+        let c = rem.min(chunk);
+        plan.push(ChunkSpec::Random { count: c });
+        rem -= c;
+    }
+    let mut rems = merged_widths(demand);
+    while rems.iter().any(|&(_, r)| r > 0) {
+        for w in rems.iter_mut() {
+            if w.1 == 0 {
+                continue;
+            }
+            let c = w.1.min(chunk);
+            plan.push(ChunkSpec::Trunc { m: w.0, count: c });
+            w.1 -= c;
+        }
+    }
+    plan
+}
+
+/// The factory producer loop: generate each scheduled chunk and hand it
+/// to the consumer. Runs SPMD with every peer's producer.
+fn producer_main(
+    session: &mut Session<'_>,
+    plan: &[ChunkSpec],
+    tx: &mpsc::Sender<PoolChunk>,
+    stats: &FactoryStats,
+) {
+    for spec in plan {
+        // copml-lint: allow(wall-clock) producer stopwatch feeding FactoryStats, the source of the ledger's hidden-offline row
+        let t0 = Instant::now();
+        let msg = match *spec {
+            ChunkSpec::Double { count } => {
+                let (t, t2) = session.produce_doubles(count);
+                PoolChunk::Double { t, t2 }
+            }
+            ChunkSpec::Random { count } => {
+                PoolChunk::Random { vals: session.produce_randoms(count) }
+            }
+            ChunkSpec::Trunc { m, count } => {
+                let (rp, rpp) = session.produce_truncs(m, count);
+                PoolChunk::Trunc { m, rp, rpp }
+            }
+        };
+        stats.add_gen(t0.elapsed());
+        // The consumer may have halted and dropped its receiver; keep
+        // producing anyway — the schedule is SPMD and the peers' still-
+        // running producers need this party's deal and open rounds.
+        let _ = tx.send(msg);
+    }
+    stats.mark_completed();
+}
+
+/// A running factory producer: join it after the consumer is done with
+/// the pool (its final chunks may still be in flight), and read its
+/// [`FactoryStats`] for the ledger split.
+pub struct FactoryHandle<'scope> {
+    join: std::thread::ScopedJoinHandle<'scope, ()>,
+    stats: Arc<FactoryStats>,
+}
+
+impl FactoryHandle<'_> {
+    /// The stats shared with the pool's feed.
+    pub fn stats(&self) -> Arc<FactoryStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Wait for the producer to finish its schedule.
+    pub fn join(self) {
+        self.join.join().expect("offline factory producer panicked");
+    }
+}
+
+/// Start the pipelined offline factory for party `net.id()` on `scope`:
+/// a background producer generates `demand` in `chunk`-sized pieces
+/// (deterministic [`chunk_schedule`]) while the returned [`Offline`] pool
+/// is consumed; `take_*` blocks only when consumption outruns production.
+/// All parties must start their factories concurrently (SPMD) with the
+/// same arguments. The concatenated chunks are element-identical to
+/// [`generate`] with the same `(seed, demand)` — the chunk-stability
+/// contract (module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn start_factory<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    net: &'env dyn Transport,
+    f: Field,
+    t: usize,
+    demand: &Demand,
+    k2: u32,
+    kappa: u32,
+    seed: u64,
+    chunk: usize,
+    session: u64,
+) -> (Offline, FactoryHandle<'scope>) {
+    let plan = chunk_schedule(demand, chunk);
+    let mut producer = Session::new(net, f, t, demand, k2, kappa, seed, session);
+    let (tx, rx) = mpsc::channel();
+    let stats = Arc::new(FactoryStats::default());
+    let producer_stats = Arc::clone(&stats);
+    let join = scope.spawn(move || {
+        producer_main(&mut producer, &plan, &tx, &producer_stats);
+    });
+    let mut pool = Offline::with_widths(demand);
+    pool.feed = Some(Feed { rx, stats: Arc::clone(&stats) });
+    (pool, FactoryHandle { join, stats })
+}
+
+/// Exact payload bytes party `id` sends during one-shot [`generate`]
+/// (assuming no `a² = 0` retry rounds — probability ≈ `bits/p` per run).
+/// Mirrors the implementation term by term; validated against the live
+/// ledger in `tests/cost_model_validation.rs`. Chunked factory runs can
+/// send slightly more on the bit pools (candidates are opened in whole
+/// extraction slots per refill), so this models the pipelining-off
+/// schedule only.
 pub fn distributed_bytes_for_party(
     n: usize,
     t: usize,
@@ -605,17 +1210,16 @@ pub fn distributed_bytes_for_party(
     // Doubles: two deal rounds (degree T and 2T) over the same batch size.
     let mut elems = 2 * deal(demand.doubles);
     // Trunc pools: per width, one bit per composed binary digit; each bit
-    // costs one extracted `a` (a deal round) plus one king opening.
-    for &(_, count) in &demand.truncs {
-        if count == 0 {
-            continue;
-        }
+    // costs one extracted candidate `a` (a deal round), and every
+    // candidate in the extracted slots is opened via the king.
+    for (_, count) in merged_widths(demand) {
         let bits = count * (k2 + kappa) as usize;
+        let cands = bits.div_ceil(ex) * ex;
         elems += deal(bits);
         if id == 0 {
-            elems += (bits * (n - 1)) as u64; // king broadcasts the squares
+            elems += (cands * (n - 1)) as u64; // king broadcasts the squares
         } else if id <= 2 * t {
-            elems += bits as u64; // share of the squares, up to the king
+            elems += cands as u64; // share of the squares, up to the king
         }
     }
     // Random degree-T pool: one deal round.
@@ -660,6 +1264,55 @@ mod tests {
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     }
 
+    /// Drain every pool `demand` declares, in the canonical order, into
+    /// one flat vector (pool-equality fingerprint).
+    fn drain_pool(pool: &mut Offline, demand: &Demand) -> Vec<u64> {
+        let mut v = Vec::new();
+        let (dt, d2t) = pool.take_double(demand.doubles).expect("doubles sized by demand");
+        v.extend(dt);
+        v.extend(d2t);
+        for &(m, count) in &demand.truncs {
+            let (rp, rpp) = pool.take_trunc_pair(count, m).expect("truncs sized by demand");
+            v.extend(rp);
+            v.extend(rpp);
+        }
+        v.extend(pool.take_random(demand.randoms).expect("randoms sized by demand"));
+        v
+    }
+
+    /// Run the pipelined factory with `n` threads over the Hub, drain
+    /// every pool, and return each party's fingerprint.
+    #[allow(clippy::too_many_arguments)]
+    fn run_factory(
+        f: Field,
+        n: usize,
+        t: usize,
+        demand: &Demand,
+        k2: u32,
+        kappa: u32,
+        seed: u64,
+        chunk: usize,
+    ) -> Vec<Vec<u64>> {
+        let endpoints = Hub::new(n);
+        let demand = demand.clone();
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let demand = demand.clone();
+                std::thread::spawn(move || {
+                    std::thread::scope(|s| {
+                        let (mut pool, handle) =
+                            start_factory(s, &ep, f, t, &demand, k2, kappa, seed, chunk, 0);
+                        let v = drain_pool(&mut pool, &demand);
+                        handle.join();
+                        v
+                    })
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
     #[test]
     fn distributed_doubles_reconstruct_consistently() {
         let f = Field::new(P26);
@@ -669,7 +1322,7 @@ mod tests {
             .map(|(p, _)| p)
             .collect();
         let taken: Vec<(Vec<u64>, Vec<u64>)> =
-            pools.iter_mut().map(|p| p.take_double(10)).collect();
+            pools.iter_mut().map(|p| p.take_double(10).unwrap()).collect();
         let t_shares: Vec<Vec<u64>> = taken.iter().map(|(a, _)| a.clone()).collect();
         let t2_shares: Vec<Vec<u64>> = taken.iter().map(|(_, b)| b.clone()).collect();
         assert_eq!(reconstruct(f, &t_shares, t), reconstruct(f, &t2_shares, 2 * t));
@@ -685,7 +1338,7 @@ mod tests {
             .collect();
         for m in [5u32, 10] {
             let taken: Vec<(Vec<u64>, Vec<u64>)> =
-                pools.iter_mut().map(|p| p.take_trunc_pair(6, m)).collect();
+                pools.iter_mut().map(|p| p.take_trunc_pair(6, m).unwrap()).collect();
             let rp =
                 reconstruct(f, &taken.iter().map(|x| x.0.clone()).collect::<Vec<_>>(), t);
             let rpp =
@@ -707,7 +1360,8 @@ mod tests {
             .into_iter()
             .map(|(p, _)| p)
             .collect();
-        let shares: Vec<Vec<u64>> = pools.iter_mut().map(|p| p.take_random(16)).collect();
+        let shares: Vec<Vec<u64>> =
+            pools.iter_mut().map(|p| p.take_random(16).unwrap()).collect();
         // Any two (t+1)-subsets agree — the sharing is degree ≤ t.
         let a = reconstruct(f, &shares, t);
         let pts = shamir::lambda_points(n);
@@ -724,27 +1378,118 @@ mod tests {
         let f = Field::new(P26);
         let (n, t) = (5usize, 1usize);
         let d = demand_basic();
-        fn drain(pools: Vec<(Offline, u64)>) -> Vec<Vec<u64>> {
-            pools
-                .into_iter()
-                .map(|(mut p, _)| {
-                    let (mut v, d2) = p.take_double(10);
-                    v.extend(d2);
-                    for m in [5u32, 10] {
-                        let (rp, rpp) = p.take_trunc_pair(6, m);
-                        v.extend(rp);
-                        v.extend(rpp);
-                    }
-                    v.extend(p.take_random(16));
-                    v
-                })
-                .collect()
-        }
+        let drain = |pools: Vec<(Offline, u64)>| -> Vec<Vec<u64>> {
+            pools.into_iter().map(|(mut p, _)| drain_pool(&mut p, &d)).collect()
+        };
         let a = drain(run_generate(f, n, t, &d, 20, 1, 7));
         let b = drain(run_generate(f, n, t, &d, 20, 1, 7));
         let c = drain(run_generate(f, n, t, &d, 20, 1, 8));
         assert_eq!(a, b, "same seed must reproduce every pool bit-for-bit");
         assert_ne!(a, c, "different seeds must produce different pools");
+    }
+
+    #[test]
+    fn chunked_factory_matches_one_shot_pools() {
+        // The acceptance oracle in miniature: any chunking of the factory
+        // yields exactly the one-shot pools (the integration suite in
+        // tests/factory_equivalence.rs widens the grid).
+        let f = Field::new(P26);
+        let (n, t, k2, kappa) = (5usize, 1usize, 20u32, 1u32);
+        let d = demand_basic();
+        let reference: Vec<Vec<u64>> = run_generate(f, n, t, &d, k2, kappa, 501)
+            .into_iter()
+            .map(|(mut p, _)| drain_pool(&mut p, &d))
+            .collect();
+        for chunk in [1usize, 3, 64] {
+            let got = run_factory(f, n, t, &d, k2, kappa, 501, chunk);
+            assert_eq!(got, reference, "chunk={chunk} must reproduce the one-shot pools");
+        }
+    }
+
+    #[test]
+    fn factory_exhaustion_after_completion_is_typed() {
+        let f = Field::new(P26);
+        let (n, t) = (4usize, 1usize);
+        let d = Demand { doubles: 5, truncs: vec![], randoms: 0 };
+        let endpoints = Hub::new(n);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let d = d.clone();
+                std::thread::spawn(move || {
+                    std::thread::scope(|s| {
+                        let (mut pool, handle) =
+                            start_factory(s, &ep, f, t, &d, 20, 1, 77, 2, 0);
+                        pool.take_double(5).expect("pool sized for demand");
+                        let err = pool.take_double(1).unwrap_err();
+                        handle.join();
+                        assert!(
+                            matches!(
+                                err,
+                                OfflineError::Exhausted { pool: "double-sharing", .. }
+                            ),
+                            "got {err:?}"
+                        );
+                    })
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn chunk_schedule_covers_demand_round_robin() {
+        let d = demand_basic();
+        let plan = chunk_schedule(&d, 4);
+        let (mut doubles, mut randoms) = (0usize, 0usize);
+        let mut truncs: HashMap<u32, usize> = HashMap::new();
+        for spec in &plan {
+            match *spec {
+                ChunkSpec::Double { count } => doubles += count,
+                ChunkSpec::Random { count } => randoms += count,
+                ChunkSpec::Trunc { m, count } => *truncs.entry(m).or_insert(0) += count,
+            }
+        }
+        assert_eq!(doubles, d.doubles);
+        assert_eq!(randoms, d.randoms);
+        assert_eq!(truncs.get(&5), Some(&6));
+        assert_eq!(truncs.get(&10), Some(&6));
+        // every piece respects the cap, and widths alternate fairly
+        for spec in &plan {
+            let c = match *spec {
+                ChunkSpec::Double { count }
+                | ChunkSpec::Random { count }
+                | ChunkSpec::Trunc { count, .. } => count,
+            };
+            assert!(c >= 1 && c <= 4, "chunk cap violated: {spec:?}");
+        }
+        assert_eq!(
+            &plan[plan.len() - 4..],
+            &[
+                ChunkSpec::Trunc { m: 5, count: 4 },
+                ChunkSpec::Trunc { m: 10, count: 4 },
+                ChunkSpec::Trunc { m: 5, count: 2 },
+                ChunkSpec::Trunc { m: 10, count: 2 },
+            ],
+            "trunc widths must round-robin"
+        );
+    }
+
+    #[test]
+    fn pool_exhaustion_is_typed() {
+        let mut pool = Offline {
+            double_t: Stream::new(vec![1, 2, 3]),
+            double_2t: Stream::new(vec![1, 2, 3]),
+            ..Offline::default()
+        };
+        let err = pool.take_double(4).unwrap_err();
+        assert_eq!(
+            err,
+            OfflineError::Exhausted { pool: "double-sharing", need: 4, have: 3 }
+        );
+        assert!(err.to_string().contains("exhausted"), "got: {err}");
     }
 
     #[test]
@@ -761,14 +1506,15 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "no truncation pool for width m=6")]
     fn trunc_rpp_mismatch_diagnosable() {
         // Regression: the r'' lookup used a bare `.unwrap()`, so an rp/rpp
-        // width mismatch died with an anonymous Option panic instead of
-        // the sizing hint the r' path gives.
+        // width mismatch died with an anonymous Option panic. Now it is a
+        // typed MissingWidth the serve daemon can degrade on.
         let mut pool = Offline::default();
         pool.trunc_rp.insert(6, Stream::new(vec![1, 2, 3]));
-        let _ = pool.take_trunc_pair(1, 6);
+        let err = pool.take_trunc_pair(1, 6).unwrap_err();
+        assert_eq!(err, OfflineError::MissingWidth { m: 6 });
+        assert_eq!(err.to_string(), "no truncation pool for width m=6");
     }
 
     #[test]
@@ -812,7 +1558,9 @@ mod tests {
                 std::thread::spawn(move || {
                     let pool = generate(&ep, f, t, &demand, k, kappa, 33);
                     let party = Party::new(&ep, t, f, pool, 33);
-                    let z = party.trunc_pr(&input, k, m, kappa, true);
+                    let z = party
+                        .trunc_pr(&input, k, m, kappa, true)
+                        .expect("truncation pool sized for demand");
                     party.open_broadcast(&z, t)
                 })
             })

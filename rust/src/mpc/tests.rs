@@ -235,7 +235,7 @@ fn bgw_multiplication_correct() {
         (20, 1),
         inputs,
         |party, input| {
-            let prod = party.mul(&input[0], &input[1], true);
+            let prod = party.mul(&input[0], &input[1], true).unwrap();
             party.open_broadcast(&prod, party.t)
         },
     );
@@ -263,7 +263,7 @@ fn bh08_multiplication_correct() {
         (20, 1),
         inputs,
         |party, input| {
-            let prod = party.mul(&input[0], &input[1], false);
+            let prod = party.mul(&input[0], &input[1], false).unwrap();
             party.open_broadcast(&prod, party.t)
         },
     );
@@ -293,7 +293,7 @@ fn bh08_cheaper_than_bgw_in_bytes() {
             let _ = party.degree_reduce_bgw(&input[0]);
             let bgw = party.net.bytes_sent() - before;
             let before = party.net.bytes_sent();
-            let _ = party.degree_reduce_bh08(&input[0]);
+            party.degree_reduce_bh08(&input[0]).unwrap();
             let bh08 = party.net.bytes_sent() - before;
             (bgw, bh08)
         },
@@ -324,7 +324,7 @@ fn trunc_pr_floor_plus_bernoulli() {
         (k, kappa),
         inputs,
         move |party, input| {
-            let z = party.trunc_pr(&input[0], k, m, kappa, true);
+            let z = party.trunc_pr(&input[0], k, m, kappa, true).unwrap();
             party.open_broadcast(&z, party.t)
         },
     );
@@ -362,7 +362,7 @@ fn trunc_pr_statistical_mean() {
         (k, kappa),
         inputs,
         move |party, input| {
-            let z = party.trunc_pr(&input[0], k, m, kappa, true);
+            let z = party.trunc_pr(&input[0], k, m, kappa, true).unwrap();
             party.open_broadcast(&z, party.t)
         },
     );
@@ -388,7 +388,7 @@ fn random_share_reconstructs_consistently() {
         (20, 1),
         inputs,
         |party, _input| {
-            let r = party.random_share(8);
+            let r = party.random_share(8).unwrap();
             party.open_broadcast(&r, party.t)
         },
     );
@@ -427,7 +427,7 @@ fn secure_inner_product_via_local_sums() {
         inputs,
         |party, input| {
             let local = crate::field::vecops::dot(party.f, &input[0], &input[1]);
-            let reduced = party.degree_reduce_bh08(&[local]);
+            let reduced = party.degree_reduce_bh08(&[local]).unwrap();
             party.open_broadcast(&reduced, party.t)[0]
         },
     );

@@ -18,6 +18,7 @@ use super::{AnyRecv, PartyId, Transport, TryRecv, Wire};
 pub struct Hub {
     boxes: Vec<TagMailbox>,
     sent: Vec<AtomicU64>,
+    sent_offline: Vec<AtomicU64>,
     received: Vec<AtomicU64>,
     elem_bytes: u64,
 }
@@ -35,6 +36,7 @@ impl Hub {
         let hub = Arc::new(Hub {
             boxes: (0..n).map(|_| TagMailbox::default()).collect(),
             sent: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            sent_offline: (0..n).map(|_| AtomicU64::new(0)).collect(),
             received: (0..n).map(|_| AtomicU64::new(0)).collect(),
             elem_bytes: wire.elem_bytes(),
         });
@@ -73,6 +75,9 @@ impl Transport for Endpoint {
         // exact and transport-invariant either way.)
         if self.hub.boxes[to].push(self.id, tag, data) {
             self.hub.sent[self.id].fetch_add(bytes, Ordering::Relaxed);
+            if super::tags::OFFLINE.contains(tag) {
+                self.hub.sent_offline[self.id].fetch_add(bytes, Ordering::Relaxed);
+            }
             self.hub.received[to].fetch_add(bytes, Ordering::Relaxed);
         }
     }
@@ -125,6 +130,10 @@ impl Transport for Endpoint {
 
     fn bytes_received(&self) -> u64 {
         self.hub.received[self.id].load(Ordering::Relaxed)
+    }
+
+    fn bytes_sent_offline(&self) -> u64 {
+        self.hub.sent_offline[self.id].load(Ordering::Relaxed)
     }
 
     fn tag_reuse(&self) -> usize {

@@ -7,6 +7,12 @@
 //! collective, so keeping drained `(from, tag)` entries around would grow
 //! the map without bound over a long training run.
 //!
+//! Tags are opaque `u64`s here: concurrent flows — a serve job's online
+//! rounds in one [`crate::net::tags`] SESSION stripe while the next job's
+//! offline factory prefetches in another — interleave through the same
+//! mailbox and stay separable purely by tag, with no session awareness in
+//! the delivery layer.
+//!
 //! A transport that learns a peer is gone (socket EOF, corrupt frame) can
 //! [`close`](TagMailbox::close) that peer: already-delivered payloads stay
 //! receivable, but a receive that would otherwise block on the dead peer
@@ -380,6 +386,28 @@ mod tests {
         assert!(!mb.forget(1, 8));
         mb.push(1, 8, vec![0]);
         assert_eq!(mb.tag_reuse(), 1);
+    }
+
+    #[test]
+    fn cross_session_tags_route_independently() {
+        // The serve daemon's steady state: job j's online round traffic
+        // and job j+1's prefetching offline factory share one mailbox in
+        // disjoint SESSION stripes. Delivery must be separable by tag
+        // alone — popping one stripe never consumes or reorders the other.
+        use crate::net::tags;
+        let mb = TagMailbox::default();
+        let online = tags::session_round_window(1, 0).start;
+        let offline = tags::session_offline(2).start;
+        assert_ne!(online, offline);
+        mb.push(0, offline, vec![10]);
+        mb.push(0, online, vec![1]);
+        mb.push(0, offline, vec![20]);
+        // The online stripe drains without touching the offline FIFO…
+        assert_eq!(mb.pop_blocking(9, 0, online), vec![1]);
+        // …which still delivers in arrival order afterwards.
+        assert_eq!(mb.pop_blocking(9, 0, offline), vec![10]);
+        assert_eq!(mb.pop_blocking(9, 0, offline), vec![20]);
+        assert_eq!(mb.pending_entries(), 0);
     }
 
     #[test]

@@ -147,6 +147,15 @@ pub trait Transport: Send + Sync {
     fn bytes_sent(&self) -> u64;
     /// Total payload bytes this party has received.
     fn bytes_received(&self) -> u64;
+    /// The subset of [`Transport::bytes_sent`] carried under the offline
+    /// tag stripe ([`tags::OFFLINE`]) — the traffic a pipelined factory
+    /// can move off the critical path. The ledger subtracts it from the
+    /// online phases' byte deltas so their rows stay exact whether the
+    /// offline phase ran inline or overlapped. Transports that do not
+    /// track the split report 0.
+    fn bytes_sent_offline(&self) -> u64 {
+        0
+    }
     /// Debug-build `(from, tag)` reuse count observed by this party's
     /// mailbox: deliveries whose key had already been delivered *and
     /// drained* earlier in the run. A clean SPMD run never reuses a key

@@ -28,8 +28,9 @@
 //! | [`SETUP`]         | `[0, 2^16)`                 | —      | dataset share-out, initial-model degree reduction |
 //! | [`ENCODE`]        | `[2^16, 2^24)`              | [`ENCODE_STRIDE`] per batch | per-batch LCC encode exchange ([`encode_window`]) |
 //! | [`FINAL`]         | `[2^24, 2^24 + 16)`         | —      | final model opening |
-//! | [`ROUND`]         | `[2^32, 2^62)`              | [`ROUND_STRIDE`] per iteration | per-iteration gradient round ([`round_window`]) |
-//! | [`OFFLINE`]       | `[2^62, 2^64 − 1)`          | —      | DN07 distributed offline phase (runs first) |
+//! | [`ROUND`]         | `[2^32, 2^56)`              | [`ROUND_STRIDE`] per iteration | per-iteration gradient round ([`round_window`]) |
+//! | [`SESSIONS`]      | `[2^56, 2^62)`              | [`SESSION_STRIDE`] per session | online stripes of serve sessions ≥ 1 ([`session_setup`] …) |
+//! | [`OFFLINE`]       | `[2^62, 2^64 − 1)`          | [`SESSION_STRIDE`] per session | DN07 distributed offline phase ([`session_offline`]; runs first) |
 //! | [`DEPART`]        | `2^64 − 1` (single tag)     | —      | transport-level departure control frame |
 //! | [`FLAT`]          | `[0, 2^62)` (union view)    | —      | default window of a fresh [`Party`]: baselines and unit tests that never seek |
 //!
@@ -38,6 +39,18 @@
 //! "count from zero" view used by code that never calls
 //! [`Party::seek_tags`]; the full protocol always seeks into the named
 //! windows, and the two styles are never mixed within one run.
+//!
+//! ## The SESSION dimension
+//!
+//! `copml serve` multiplexes a *stream of training jobs* over one held-open
+//! mesh, each job under its own session id `s`. Session 0 is, tag for tag,
+//! the legacy single-job layout above — a session-0 run is bit-identical
+//! on the wire to a pre-session run. Sessions `s ≥ 1` get a
+//! [`SESSION_STRIDE`]-wide online stripe carved from [`SESSIONS`]
+//! (mirroring the legacy sub-window offsets within the stripe) and a
+//! [`SESSION_STRIDE`]-wide offline stripe inside [`OFFLINE`], so job
+//! `j+1`'s background pool generation can overlap job `j`'s online rounds
+//! on the same transport without a single tag collision.
 //!
 //! Tag *values* never enter payloads or byte ledgers (ledgers count
 //! payload bytes only), so re-homing an allocation site into a different
@@ -95,16 +108,31 @@ pub const FINAL: TagRange = TagRange { name: "final", start: 1 << 24, end: (1 <<
 
 /// Per-iteration gradient rounds. Each iteration `i` gets the
 /// [`ROUND_STRIDE`]-wide sub-window [`round_window`]`(i)`.
-pub const ROUND: TagRange = TagRange { name: "round", start: 1 << 32, end: 1 << 62 };
+pub const ROUND: TagRange = TagRange { name: "round", start: 1 << 32, end: 1 << 56 };
 
 /// Tags reserved per iteration inside [`ROUND`]: today's protocol uses 7
 /// (encoded-model exchange, result gather, quorum roster, two king
 /// openings of two truncations); 16 leaves headroom.
 pub const ROUND_STRIDE: u64 = 16;
 
+/// Online stripes of serve sessions `s ≥ 1`: session `s` owns the
+/// [`SESSION_STRIDE`]-wide stripe starting at
+/// `SESSIONS.start + (s−1)·SESSION_STRIDE`, with the legacy sub-window
+/// offsets (setup/encode/final/round) mirrored inside the stripe.
+/// Session 0 uses the legacy windows above directly.
+pub const SESSIONS: TagRange = TagRange { name: "sessions", start: 1 << 56, end: 1 << 62 };
+
+/// Tag-space width of one serve session: its online stripe inside
+/// [`SESSIONS`] (sessions ≥ 1) and its offline stripe inside [`OFFLINE`]
+/// (every session) are each this wide.
+pub const SESSION_STRIDE: u64 = 1 << 40;
+
 /// The DN07 distributed offline phase, which runs *first* over the same
 /// transport. Kept at the historical `1 << 62` base so the offline phase
-/// can never collide with any online window below it.
+/// can never collide with any online window below it. Session `s` of a
+/// serve run allocates from the [`session_offline`]`(s)` stripe; session
+/// 0's stripe starts exactly at the historical base, so single-job runs
+/// are unchanged.
 pub const OFFLINE: TagRange = TagRange { name: "offline", start: 1 << 62, end: u64::MAX };
 
 /// The transport-level departure control frame (`net::tcp::DEPART_TAG`):
@@ -138,14 +166,26 @@ const _: () = {
     assert!(disjoint(&FINAL, &ROUND));
     assert!(disjoint(&FINAL, &OFFLINE));
     assert!(disjoint(&ROUND, &OFFLINE));
+    assert!(disjoint(&SESSIONS, &SETUP));
+    assert!(disjoint(&SESSIONS, &ENCODE));
+    assert!(disjoint(&SESSIONS, &FINAL));
+    assert!(disjoint(&SESSIONS, &ROUND));
+    assert!(disjoint(&SESSIONS, &OFFLINE));
     assert!(!SETUP.contains(DEPART));
     assert!(!ENCODE.contains(DEPART));
     assert!(!FINAL.contains(DEPART));
     assert!(!ROUND.contains(DEPART));
+    assert!(!SESSIONS.contains(DEPART));
     assert!(!OFFLINE.contains(DEPART));
     assert!(FLAT.start == 0 && FLAT.end == OFFLINE.start);
     assert!(SETUP.capacity() >= 16);
     assert!(FINAL.capacity() >= 1);
+    // Session geometry: the legacy sub-window offsets must fit inside one
+    // stripe, and the OFFLINE region must hold an offline stripe for every
+    // session the online SESSIONS region can hold.
+    assert!(SESSIONS.capacity() % SESSION_STRIDE == 0);
+    assert!((1 << 32) < SESSION_STRIDE); // the round sub-offset fits in a stripe
+    assert!(OFFLINE.capacity() / SESSION_STRIDE >= 1 + SESSIONS.capacity() / SESSION_STRIDE);
 };
 
 /// Most mini-batches the [`ENCODE`] window can hold.
@@ -176,6 +216,91 @@ pub fn round_window(iter: usize) -> TagRange {
     assert!(i < max_iters(), "iteration {iter} exceeds the ROUND tag window ({} iterations max)", max_iters());
     let start = ROUND.start + i * ROUND_STRIDE;
     TagRange { name: "round", start, end: start + ROUND_STRIDE }
+}
+
+/// Most serve sessions the tag space can hold: session 0 (the legacy
+/// windows) plus one [`SESSIONS`] stripe per session ≥ 1.
+pub const fn max_sessions() -> u64 {
+    1 + SESSIONS.capacity() / SESSION_STRIDE
+}
+
+/// Base tag of session `s`'s online stripe (`s ≥ 1` only — session 0
+/// lives in the legacy windows, which have no common base).
+fn session_base(session: u64) -> Tag {
+    assert!(
+        1 <= session && session < max_sessions(),
+        "session {session} outside the SESSIONS stripe region ({} sessions max)",
+        max_sessions()
+    );
+    SESSIONS.start + (session - 1) * SESSION_STRIDE
+}
+
+/// Session `s`'s setup window: the legacy [`SETUP`] at `s = 0`, the
+/// stripe-local mirror otherwise.
+pub fn session_setup(session: u64) -> TagRange {
+    if session == 0 {
+        return SETUP;
+    }
+    let base = session_base(session);
+    TagRange { name: "setup", start: base + SETUP.start, end: base + SETUP.end }
+}
+
+/// Session `s`'s encode window for mini-batch `batch` (legacy
+/// [`encode_window`] at `s = 0`). Every session holds [`max_batches`]
+/// batches — the stripe mirrors the full legacy ENCODE region.
+pub fn session_encode_window(session: u64, batch: usize) -> TagRange {
+    let w = encode_window(batch);
+    if session == 0 {
+        return w;
+    }
+    let base = session_base(session);
+    TagRange { name: "encode", start: base + w.start, end: base + w.end }
+}
+
+/// Session `s`'s final-opening window (legacy [`FINAL`] at `s = 0`).
+pub fn session_final(session: u64) -> TagRange {
+    if session == 0 {
+        return FINAL;
+    }
+    let base = session_base(session);
+    TagRange { name: "final", start: base + FINAL.start, end: base + FINAL.end }
+}
+
+/// Most SGD iterations one session-stripe round region holds (sessions
+/// ≥ 1; session 0 has the larger legacy [`max_iters`] budget).
+pub const fn max_session_iters() -> u64 {
+    (SESSION_STRIDE - ROUND.start) / ROUND_STRIDE
+}
+
+/// Session `s`'s round window for iteration `iter` (legacy
+/// [`round_window`] at `s = 0`). The stripe's round region spans
+/// `[base + 2^32, base + SESSION_STRIDE)`.
+pub fn session_round_window(session: u64, iter: usize) -> TagRange {
+    if session == 0 {
+        return round_window(iter);
+    }
+    let base = session_base(session);
+    let i = iter as u64;
+    assert!(
+        i < max_session_iters(),
+        "iteration {iter} exceeds session {session}'s ROUND stripe ({} iterations max)",
+        max_session_iters()
+    );
+    let start = base + ROUND.start + i * ROUND_STRIDE;
+    TagRange { name: "round", start, end: start + ROUND_STRIDE }
+}
+
+/// Session `s`'s offline stripe inside [`OFFLINE`]. Session 0's stripe
+/// starts at the historical `1 << 62` base, so pre-session offline tag
+/// sequences are reproduced exactly.
+pub fn session_offline(session: u64) -> TagRange {
+    assert!(
+        session < max_sessions(),
+        "session {session} outside the OFFLINE stripe region ({} sessions max)",
+        max_sessions()
+    );
+    let start = OFFLINE.start + session * SESSION_STRIDE;
+    TagRange { name: "offline", start, end: start + SESSION_STRIDE }
 }
 
 /// Cursor allocator over one [`TagRange`] window at a time.
@@ -334,7 +459,7 @@ mod tests {
 
     #[test]
     fn ranges_are_disjoint_and_exclude_depart() {
-        let named = [SETUP, ENCODE, FINAL, ROUND, OFFLINE];
+        let named = [SETUP, ENCODE, FINAL, ROUND, SESSIONS, OFFLINE];
         for (i, a) in named.iter().enumerate() {
             for b in &named[i + 1..] {
                 assert!(disjoint(a, b), "{} overlaps {}", a.name, b.name);
@@ -355,6 +480,73 @@ mod tests {
         // Consecutive windows abut without overlap.
         assert_eq!(encode_window(0).end, encode_window(1).start);
         assert_eq!(round_window(0).end, round_window(1).start);
+    }
+
+    #[test]
+    fn session_zero_is_the_legacy_layout() {
+        // Bit-compatibility anchor: a session-0 run must allocate exactly
+        // the tags a pre-session run allocated.
+        assert_eq!(session_setup(0), SETUP);
+        assert_eq!(session_encode_window(0, 3), encode_window(3));
+        assert_eq!(session_final(0), FINAL);
+        assert_eq!(session_round_window(0, 7), round_window(7));
+        assert_eq!(session_offline(0).start, OFFLINE.start);
+        assert_eq!(session_offline(0).capacity(), SESSION_STRIDE);
+    }
+
+    #[test]
+    fn session_windows_stay_inside_their_regions_and_never_collide() {
+        // A handful of sessions, including the last representable one:
+        // every online window inside SESSIONS (or the legacy region for
+        // s = 0), every offline window inside OFFLINE, and the windows of
+        // distinct sessions pairwise disjoint.
+        let sessions = [0, 1, 2, 5, max_sessions() - 1];
+        let windows = |s: u64| {
+            [
+                session_setup(s),
+                session_encode_window(s, 0),
+                session_encode_window(s, (max_batches() - 1) as usize),
+                session_final(s),
+                session_round_window(s, 0),
+                session_round_window(s, (max_session_iters() - 1) as usize),
+                session_offline(s),
+            ]
+        };
+        for &s in &sessions {
+            for w in windows(s) {
+                assert!(w.capacity() >= 1, "s={s} {}", w.name);
+                assert!(!w.contains(DEPART), "s={s} {}", w.name);
+                if w.name == "offline" {
+                    assert!(OFFLINE.contains(w.start) && w.end <= OFFLINE.end, "s={s}");
+                } else if s == 0 {
+                    assert!(w.end <= SESSIONS.start, "s=0 {} must stay legacy", w.name);
+                } else {
+                    assert!(SESSIONS.contains(w.start) && w.end <= SESSIONS.end, "s={s} {}", w.name);
+                }
+            }
+        }
+        for (i, &a) in sessions.iter().enumerate() {
+            for &b in &sessions[i + 1..] {
+                for wa in windows(a) {
+                    for wb in windows(b) {
+                        assert!(disjoint(&wa, &wb), "s{a}/{} overlaps s{b}/{}", wa.name, wb.name);
+                    }
+                }
+            }
+        }
+        // Within one session, the mirrored sub-windows stay disjoint too.
+        let w1 = windows(1);
+        for (i, a) in w1.iter().enumerate() {
+            for b in &w1[i + 1..] {
+                assert!(disjoint(a, b), "session 1: {} overlaps {}", a.name, b.name);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the SESSIONS stripe region")]
+    fn session_past_capacity_panics() {
+        session_setup(max_sessions());
     }
 
     #[test]

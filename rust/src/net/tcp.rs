@@ -90,6 +90,7 @@ pub struct TcpTransport {
     writers: Vec<Option<Mutex<TcpStream>>>,
     mailbox: Arc<TagMailbox>,
     sent: AtomicU64,
+    sent_offline: AtomicU64,
     received: Arc<AtomicU64>,
     /// Per-peer reader threads ([`Runtime::Threaded`]; empty under the
     /// event runtime).
@@ -223,6 +224,7 @@ impl TcpTransport {
             writers,
             mailbox,
             sent: AtomicU64::new(0),
+            sent_offline: AtomicU64::new(0),
             received,
             readers,
             reactor,
@@ -463,8 +465,11 @@ impl Transport for TcpTransport {
         };
         if wrote {
             // Ledger counts payload bytes (header excluded), matching `local`.
-            self.sent
-                .fetch_add(data.len() as u64 * self.wire.elem_bytes(), Ordering::Relaxed);
+            let bytes = data.len() as u64 * self.wire.elem_bytes();
+            self.sent.fetch_add(bytes, Ordering::Relaxed);
+            if super::tags::OFFLINE.contains(tag) {
+                self.sent_offline.fetch_add(bytes, Ordering::Relaxed);
+            }
         }
     }
 
@@ -524,6 +529,10 @@ impl Transport for TcpTransport {
 
     fn bytes_received(&self) -> u64 {
         self.received.load(Ordering::Relaxed)
+    }
+
+    fn bytes_sent_offline(&self) -> u64 {
+        self.sent_offline.load(Ordering::Relaxed)
     }
 
     fn tag_reuse(&self) -> usize {

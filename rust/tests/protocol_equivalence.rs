@@ -408,6 +408,35 @@ fn mont_kernel_bit_identical_for_baselines_and_batches() {
 }
 
 #[test]
+fn pipelined_factory_bit_identical_across_runtime_transport_wire() {
+    // ISSUE-9 acceptance: `--chunk` moves WHEN the offline pools are
+    // generated (a background producer, chunk by chunk), never WHAT lands
+    // in them. For every runtime × transport × wire combination the
+    // pipelined distributed-offline run must match the one-shot reference
+    // bit for bit — and the one-shot ledger must keep the legacy
+    // accounting (zero hidden seconds).
+    let ds = Dataset::synth(SynthSpec::tiny(), 119);
+    let mut cfg = tiny_cfg(4, 1, 1, 3, 119, &ds);
+    cfg.offline = OfflineMode::Distributed;
+    let reference = protocol::train(&cfg, &ds).unwrap();
+    for l in &reference.ledgers {
+        assert_eq!(l.offline_hidden_s, 0.0, "one-shot runs must hide nothing");
+    }
+    for runtime in [Runtime::Threaded, Runtime::Event] {
+        for wire in [Wire::U64, Wire::U32] {
+            let mut c = cfg.clone();
+            c.chunk = Some(16);
+            c.runtime = runtime;
+            c.wire = wire;
+            let hub = protocol::train(&c, &ds).unwrap();
+            assert_eq!(hub.train.w_trace, reference.train.w_trace, "hub {runtime} {wire} wire");
+            let tcp = protocol::train_tcp_loopback(&c, &ds).unwrap();
+            assert_eq!(tcp.train.w_trace, reference.train.w_trace, "tcp {runtime} {wire} wire");
+        }
+    }
+}
+
+#[test]
 fn different_seeds_diverge() {
     // Sanity: the equality above is not vacuous (trajectories depend on
     // the truncation randomness).

@@ -1,0 +1,93 @@
+//! Multi-job `copml serve` semantics (ISSUE-9 satellite): a stream of
+//! jobs multiplexed over one held-open mesh must train every job
+//! bit-identically to a standalone single-job run with the same seed.
+//! Session ids renumber tags, never values — the SESSION stripe in
+//! `net::tags` is invisible to the arithmetic.
+
+use copml::coordinator::{protocol, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::mpc::OfflineMode;
+
+fn serve_cfg(ds: &Dataset, seed: u64) -> CopmlConfig {
+    let mut cfg = CopmlConfig::for_dataset(ds, 4, CaseParams::explicit(1, 1), seed);
+    cfg.iters = 3;
+    cfg
+}
+
+/// The standalone reference for serve job `j`: same seed schedule
+/// (`base.wrapping_add(j)`), session 0, fresh mesh.
+fn solo_cfg(cfg: &CopmlConfig, j: usize) -> CopmlConfig {
+    let mut c = cfg.clone();
+    c.seed = cfg.seed.wrapping_add(j as u64);
+    c.session = 0;
+    c.chunk = None;
+    c
+}
+
+#[test]
+fn serve_stream_matches_standalone_runs_dealer() {
+    let ds = Dataset::synth(SynthSpec::tiny(), 300);
+    let cfg = serve_cfg(&ds, 300);
+    let so = protocol::serve(&cfg, &ds, 3).unwrap();
+    assert!(so.failed.is_none(), "serve stream failed: {:?}", so.failed);
+    assert_eq!(so.jobs.len(), 3);
+    assert!(so.jobs_per_hour > 0.0);
+    for (j, job) in so.jobs.iter().enumerate() {
+        let solo = protocol::train(&solo_cfg(&cfg, j), &ds).unwrap();
+        assert_eq!(
+            job.train.w_trace, solo.train.w_trace,
+            "serve job {j} diverged from the standalone run with the same seed"
+        );
+        // Dealer mode has no factory: every job's offline time is fully
+        // on the critical path, exactly as in a standalone run.
+        for (i, l) in job.ledgers.iter().enumerate() {
+            assert_eq!(l.offline_hidden_s, 0.0, "job {j} client {i}: unexpected hidden seconds");
+        }
+    }
+    // Jobs use distinct seeds, so consecutive jobs must not be clones.
+    assert_ne!(so.jobs[0].train.w_trace, so.jobs[1].train.w_trace);
+}
+
+#[test]
+fn serve_stream_matches_standalone_runs_distributed_chunked() {
+    // The full pipeline: distributed DN07 offline, chunked factory, job
+    // j+1's pools prefetched behind job j. Every job must still match a
+    // standalone ONE-SHOT run — this cross-checks session transparency
+    // and chunk stability in one pass.
+    let ds = Dataset::synth(SynthSpec::tiny(), 301);
+    let mut cfg = serve_cfg(&ds, 301);
+    cfg.offline = OfflineMode::Distributed;
+    cfg.chunk = Some(16);
+    let so = protocol::serve(&cfg, &ds, 3).unwrap();
+    assert!(so.failed.is_none(), "serve stream failed: {:?}", so.failed);
+    assert_eq!(so.jobs.len(), 3);
+    for (j, job) in so.jobs.iter().enumerate() {
+        let solo = protocol::train(&solo_cfg(&cfg, j), &ds).unwrap();
+        assert_eq!(
+            job.train.w_trace, solo.train.w_trace,
+            "pipelined serve job {j} diverged from the standalone one-shot run"
+        );
+    }
+}
+
+#[test]
+fn serve_rejects_empty_job_stream() {
+    let ds = Dataset::synth(SynthSpec::tiny(), 302);
+    let cfg = serve_cfg(&ds, 302);
+    assert!(protocol::serve(&cfg, &ds, 0).is_err());
+}
+
+#[test]
+fn serve_stream_over_tcp_loopback() {
+    // Same contract over real sockets: 2 jobs through the TCP loopback
+    // mesh, each matching its standalone reference.
+    let ds = Dataset::synth(SynthSpec::tiny(), 303);
+    let cfg = serve_cfg(&ds, 303);
+    let so = protocol::serve_tcp_loopback(&cfg, &ds, 2).unwrap();
+    assert!(so.failed.is_none(), "tcp serve stream failed: {:?}", so.failed);
+    assert_eq!(so.jobs.len(), 2);
+    for (j, job) in so.jobs.iter().enumerate() {
+        let solo = protocol::train(&solo_cfg(&cfg, j), &ds).unwrap();
+        assert_eq!(job.train.w_trace, solo.train.w_trace, "tcp serve job {j} diverged");
+    }
+}
