@@ -38,6 +38,7 @@ pub const VALUE_FLAGS: &[&str] = &[
     "listen",
     "max-lag",
     "mode",
+    "model",
     "n",
     "offline",
     "peers",

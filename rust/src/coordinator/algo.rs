@@ -22,26 +22,39 @@ use super::{CopmlConfig, QuantizedTask, TrainOutput};
 use crate::data::Dataset;
 use crate::field::{par, vecops, MatShape};
 use crate::mpc::dealer::{Dealer, DealerValues, Demand};
+use crate::quant;
 
 /// Offline-randomness demand of one COPML run (shared with the threaded
-/// protocol so the streams line up).
-pub fn copml_demand(cfg: &CopmlConfig, d: usize, rows_padded: usize) -> Demand {
+/// protocol so the streams line up). `channels` is the workload's
+/// gradient-channel count (`QuantizedTask::channels`; 1 for the seed
+/// workload, which makes every expression below collapse to the
+/// pre-model-zoo demand).
+pub fn copml_demand(cfg: &CopmlConfig, d: usize, rows_padded: usize, channels: usize) -> Demand {
+    if !cfg.model.model().iterative() {
+        // Closed-form normal equations: one BH08 degree reduction of the
+        // concatenated degree-2T moment shares XᵀX (d²) and Xᵀy (d). No
+        // truncation stages and no Lagrange masks — the dataset is
+        // Shamir-shared with client-local randomness, not LCC-encoded.
+        return Demand { doubles: d * (d + 1), truncs: vec![], randoms: 0 };
+    }
     let iters = cfg.iters;
+    let width = d * channels;
     Demand {
         // One BH08 degree reduction of the concatenated per-batch
-        // d-vectors Xᵀ_b y_b (one-time; B·d elements, d for full batch).
-        doubles: d * cfg.batches,
-        // Two truncation stages per iteration, d elements each —
+        // G-vectors Xᵀ_b y_b (one-time; B·G elements, d for the seed
+        // full-batch workload).
+        doubles: width * cfg.batches,
+        // Two truncation stages per iteration, G elements each —
         // iteration count, not batch count, sizes these pools.
         truncs: vec![
-            (cfg.plan.k1_stage1(), d * iters),
-            (cfg.plan.k1_stage2(), d * iters),
+            (cfg.plan.k1_stage1(), width * iters),
+            (cfg.plan.k1_stage2(), width * iters),
         ],
         // Lagrange masks: T data masks per batch of (rows_b/K)·d — summed
         // over batches that is T·(Σ_b rows_b/K)·d = T·(rows_padded/K)·d,
         // charged ONCE (the per-batch encodings are amortized across all
-        // epochs) — plus T model masks of d per iteration (Eq. 4).
-        randoms: cfg.t * (rows_padded / cfg.k) * d + cfg.t * d * iters,
+        // epochs) — plus T model masks of G per iteration (Eq. 4).
+        randoms: cfg.t * (rows_padded / cfg.k) * d + cfg.t * width * iters,
     }
 }
 
@@ -119,15 +132,20 @@ pub fn train_task(
     ds: &Dataset,
     task: &QuantizedTask,
 ) -> Result<TrainOutput, String> {
+    if !cfg.model.model().iterative() {
+        return train_task_moments(cfg, ds, task);
+    }
     let f = task.f;
-    let (rows, d) = (task.rows_padded, task.d);
-    let demand = copml_demand(cfg, d, rows);
+    let (rows, d, channels) = (task.rows_padded, task.d, task.channels);
+    let width = task.width();
+    let demand = copml_demand(cfg, d, rows, channels);
     let mut vals = Dealer::values(f, cfg.seed, &demand, cfg.plan.k2, cfg.plan.kappa);
 
-    // One-time, per batch: Xᵀ_b y_b, aligned to the gradient scale
-    // 2^{l_c+l_x+l_w} above its own l_x (paper Phase 2 end; scaling is a
-    // public-constant mult). Mirrors the protocol's single concatenated
-    // BH08 reduction over all batches.
+    // One-time, per batch: Xᵀ_b y_b per channel (class-major concatenated
+    // into one G-vector), aligned to the gradient scale 2^{l_c+l_x+l_w}
+    // above its own l_x (paper Phase 2 end; scaling is a public-constant
+    // mult). Mirrors the protocol's single concatenated BH08 reduction
+    // over all batches.
     let pp = cfg.parallelism;
     let tier = cfg.kernel;
     let plan_b = &task.batches;
@@ -135,12 +153,18 @@ pub fn train_task(
     let mut xty: Vec<Vec<u64>> = Vec::with_capacity(plan_b.b);
     for &(lo, hi) in plan_b.ranges() {
         let sh = MatShape::new(hi - lo, d);
-        let mut v = par::matvec_t_tier(f, tier, pp, &task.x_q[lo * d..hi * d], sh, &task.y_q[lo..hi]);
-        vecops::scale_assign(f, &mut v, align);
+        let mut v = Vec::with_capacity(width);
+        for c in 0..channels {
+            let yc = task.y_channel(c);
+            let mut vc =
+                par::matvec_t_tier(f, tier, pp, &task.x_q[lo * d..hi * d], sh, &yc[lo..hi]);
+            vecops::scale_assign(f, &mut vc, align);
+            v.append(&mut vc);
+        }
         xty.push(v);
     }
 
-    let mut w = vec![0u64; d]; // w^(0) = 0 (see DESIGN.md: deterministic init)
+    let mut w = vec![0u64; width]; // w^(0) = 0 (see DESIGN.md: deterministic init)
     let mut out = TrainOutput::default();
 
     for iter in 0..cfg.iters {
@@ -149,16 +173,24 @@ pub fn train_task(
         let (lo, hi) = plan_b.ranges()[bi];
         let xb = &task.x_q[lo * d..hi * d];
         let sh = MatShape::new(hi - lo, d);
-        // z = X_b·w  (scale l_x + l_w)
-        let mut z = par::matvec_tier(f, tier, pp, xb, sh, &w);
-        // ĝ(z)  (scale l_c + l_x + l_w)
-        par::poly_eval_assign_tier(f, tier, pp, &task.coeffs_q, &mut z);
-        // X_bᵀ ĝ  (scale 2l_x + l_w + l_c) — in the protocol this is the
-        // Lagrange-decoded aggregate of the clients' Eq. (7) results.
-        let mut grad = par::matvec_t_tier(f, tier, pp, xb, sh, &z);
+        // Per channel c (one pass for the seed workload):
+        //   z = X_b·w_c        (scale l_x + l_w)
+        //   ĝ(z)               (scale l_c + l_x + l_w)
+        //   X_bᵀ ĝ             (scale 2l_x + l_w + l_c) — in the protocol
+        // this is the Lagrange-decoded aggregate of the clients' Eq. (7)
+        // results, class-major concatenated into one G-vector.
+        let mut grad = Vec::with_capacity(width);
+        for c in 0..channels {
+            let mut z = par::matvec_tier(f, tier, pp, xb, sh, &w[c * d..(c + 1) * d]);
+            par::poly_eval_assign_tier(f, tier, pp, &task.coeffs_q, &mut z);
+            let mut gc = par::matvec_t_tier(f, tier, pp, xb, sh, &z);
+            grad.append(&mut gc);
+        }
         // − X_bᵀy_b (aligned)
         vecops::sub_assign(f, &mut grad, &xty[bi]);
-        // Stage-1 truncation → scale l_x + l_w.
+        // Stage-1 truncation → scale l_x + l_w — ONE call on the whole
+        // G-vector, so the dealer trunc stream is consumed in the same
+        // order the protocol consumes it.
         trunc_central(task, &mut vals, &mut grad, cfg.plan.k2, cfg.plan.k1_stage1())?;
         // × e_q[b] = Round(2^{l_e}·η/m_b) (scale + l_e), stage-2
         // truncation → scale l_w.
@@ -169,7 +201,42 @@ pub fn train_task(
         out.w_trace.push(w.clone());
     }
 
-    out.eval_traces(&cfg.plan, ds);
+    out.eval_traces(cfg, ds);
+    Ok(out)
+}
+
+/// Central replay of the closed-form normal-equations workload: the exact
+/// field values the protocol's one BH08 round opens — XᵀX and Xᵀy at
+/// scale `2^{2l_x}` (padding rows are zero, hence inert) — followed by
+/// the same public dequantize → ridge solve → requantize every party
+/// runs. No dealer randomness reaches the result (BH08 resharing cancels
+/// exactly), so this is bit-identical to the protocol by construction.
+fn train_task_moments(
+    cfg: &CopmlConfig,
+    ds: &Dataset,
+    task: &QuantizedTask,
+) -> Result<TrainOutput, String> {
+    let f = task.f;
+    let (rows, d) = (task.rows_padded, task.d);
+    let y = task.y_channel(0);
+    let mut moments = vec![0u64; d * (d + 1)];
+    for i in 0..rows {
+        let row = &task.x_q[i * d..(i + 1) * d];
+        for j in 0..d {
+            let xj = row[j];
+            for k in 0..d {
+                moments[j * d + k] = f.add(moments[j * d + k], f.mul(xj, row[k]));
+            }
+            moments[d * d + j] = f.add(moments[d * d + j], f.mul(xj, y[i]));
+        }
+    }
+    let scale = 2 * cfg.plan.lx;
+    let mut xtx = quant::dequantize_slice(f, &moments[..d * d], scale);
+    let mut xty = quant::dequantize_slice(f, &moments[d * d..], scale);
+    let beta = crate::ml::model::solve_normal_equations(&mut xtx, &mut xty, d);
+    let mut out = TrainOutput::default();
+    out.w_trace.push(quant::quantize_slice(f, &beta, cfg.plan.lw));
+    out.eval_traces(cfg, ds);
     Ok(out)
 }
 

@@ -132,6 +132,13 @@ impl BaselineConfig {
             faults: FaultPlan::default(),
             max_lag: None,
             kernel: self.kernel,
+            runtime: crate::net::Runtime::Threaded,
+            chunk: None,
+            session: 0,
+            // The Appendix C/D baselines are degree-1 secure *logistic
+            // regression* by construction (the affine ĝ(z) step below);
+            // other workloads go through the COPML trainers.
+            model: crate::ml::ModelKind::Logreg,
         }
     }
 }
@@ -214,7 +221,7 @@ pub fn train(cfg: &BaselineConfig, ds: &Dataset) -> Result<BaselineOutput, Strin
         rec.reconstruct(f, &views, &mut w);
         train.w_trace.push(w);
     }
-    train.eval_traces(&cfg.plan, ds);
+    train.eval_traces(&ccfg, ds);
     Ok(BaselineOutput { train, ledgers: results.into_iter().map(|r| r.ledger).collect() })
 }
 

@@ -27,8 +27,8 @@ pub mod rounds;
 use crate::data::{BatchPlan, Dataset};
 use crate::field::{Field, KernelTier, Parallelism};
 use crate::lcc;
-use crate::ml::fit_sigmoid;
 use crate::ml::sigmoid::SigmoidPoly;
+use crate::ml::{fit_sigmoid, ModelKind, ModelMetrics};
 use crate::mpc::OfflineMode;
 use crate::net::{Runtime, Wire};
 use crate::quant::{self, FpPlan};
@@ -202,6 +202,13 @@ pub struct CopmlConfig {
     /// prefetched offline factory — share one mesh without tag reuse.
     /// Value-transparent: session ids renumber tags, never values.
     pub session: u64,
+    /// Which workload to train (`--model logreg|multinomial|linreg`).
+    /// [`ModelKind::Logreg`] (the default) is the seed workload, with a
+    /// secure state vector of width `G = d·channels = d` — bit-identical
+    /// to every pre-existing trace. Multinomial widens the state to
+    /// `d·C` one-vs-rest channels over the same encoding; linreg replaces
+    /// the iteration loop with one closed-form normal-equations round.
+    pub model: ModelKind,
 }
 
 impl CopmlConfig {
@@ -231,7 +238,14 @@ impl CopmlConfig {
             kernel: KernelTier::Barrett,
             chunk: None,
             session: 0,
+            model: ModelKind::Logreg,
         }
+    }
+
+    /// Gradient channels of the configured workload on `ds`
+    /// (`G = d·channels` is the secure state width).
+    pub fn channels(&self, ds: &Dataset) -> usize {
+        self.model.channels(ds)
     }
 
     /// The recovery threshold `(2r+1)(K+T−1)+1` this config needs.
@@ -243,6 +257,39 @@ impl CopmlConfig {
     pub fn validate(&self, ds: &Dataset) -> Result<(), String> {
         if self.k == 0 || self.t == 0 {
             return Err("K and T must be ≥ 1".into());
+        }
+        // Workload preconditions: label shape first (the clearest error
+        // when model and dataset disagree), then the closed-form
+        // restrictions — linreg runs one normal-equations round, so a
+        // mini-batch schedule or a mid-iteration fault plan is
+        // meaningless for it.
+        let model = self.model.model();
+        model.check_dataset(ds)?;
+        if !model.iterative() {
+            if self.batches != 1 {
+                return Err(format!(
+                    "--batches {} is meaningless for model {}: the closed-form solve \
+                     aggregates the full dataset in one round",
+                    self.batches, self.model
+                ));
+            }
+            if !self.faults.is_empty() || self.max_lag.is_some() {
+                return Err(format!(
+                    "fault/straggler plans target the iteration loop, which model {} \
+                     does not run (one closed-form round)",
+                    self.model
+                ));
+            }
+        }
+        // The PJRT artifacts are AOT-compiled for a single d-wide model
+        // vector; multi-channel workloads need the native kernel's
+        // class-stacked pass.
+        if self.engine == Engine::Pjrt && self.model != ModelKind::Logreg {
+            return Err(format!(
+                "engine=pjrt supports only the logreg workload (AOT artifacts are \
+                 single-class); model {} needs engine=native",
+                self.model
+            ));
         }
         // Tag-space capacity (`net::tags`): every iteration claims one
         // ROUND-window stride and every batch one ENCODE-window stride.
@@ -443,30 +490,17 @@ impl CopmlConfig {
                 ));
             }
         }
-        // Gradient-magnitude bound, *measured* on the data: the largest
-        // initial-gradient coordinate |Xᵀ(ĝ(0)−y)|_∞ (one pass), with a 4×
-        // margin for growth during training. The trainers additionally
+        // Fixed-point budget, *measured* on the data: each workload probes
+        // its own gradient (or opened-moment) magnitudes and runs the
+        // Appendix-A checks — see `ml::model`. The trainers additionally
         // range-check every truncation input at runtime.
-        let mut g0 = vec![0.0f64; ds.d];
-        for i in 0..ds.m {
-            let r = 0.5 - ds.y[i];
-            for (gj, &xij) in g0.iter_mut().zip(&ds.x[i * ds.d..(i + 1) * ds.d]) {
-                *gj += r * xij;
-            }
-        }
-        // 1.3× margin: the initial gradient is empirically the largest
-        // (residuals shrink as training converges); the runtime checks in
-        // `algo::trunc_central` are the hard guard.
-        let grad_bound = 1.3 * g0.iter().fold(8.0f64, |a, &b| a.max(b.abs()));
-        let rep = self.plan.validate(ds.d, 1.0, 8.0 / ds.d as f64, grad_bound, self.r);
-        if !rep.ok {
-            return Err(format!("fixed-point plan invalid: {:?}", rep.errors));
-        }
+        model.validate_plan(&self.plan, ds, self.r)?;
         // The largest batch has the smallest learning-rate factor; if it
         // quantizes to zero the updates for that batch are no-ops. With
-        // B = 1 this is exactly the legacy full-batch check.
+        // B = 1 this is exactly the legacy full-batch check. (The
+        // closed-form workload takes no gradient steps, so η is unused.)
         let mb_max = ds.m.div_ceil(self.batches);
-        if self.plan.eta_factor(self.eta, mb_max) == 0 {
+        if model.iterative() && self.plan.eta_factor(self.eta, mb_max) == 0 {
             return Err(format!(
                 "learning rate quantizes to zero: Round(2^{}·{}/{mb_max}) = 0 \
                  (largest of {} batches) — raise η or l_e",
@@ -510,11 +544,18 @@ pub struct QuantizedTask {
     /// Quantized features, `(rows_padded × d)`, scale `2^{l_x}` — rows in
     /// batch-plan order, padding rows zero at every batch tail.
     pub x_q: Vec<u64>,
-    /// Quantized labels at scale `2^0`, length `rows_padded` (padding rows
-    /// carry label 0 — inert, as their feature rows are zero).
+    /// Quantized labels in the class-major channel layout, length
+    /// `channels · rows_padded`: channel `c` of row `slot` sits at
+    /// `c·rows_padded + slot` ([`crate::ml::Model::quantize_label`] picks
+    /// the per-workload value and scale). Padding rows carry label 0 —
+    /// inert, as their feature rows are zero. With one channel (the seed
+    /// workload) this is exactly the legacy `rows_padded` vector.
     pub y_q: Vec<u64>,
     pub rows_padded: usize,
     pub d: usize,
+    /// Gradient channels of the configured workload (`G = d·channels` is
+    /// the secure state width; 1 for the seed workload).
+    pub channels: usize,
     /// True (unpadded) sample count `m`.
     pub m: usize,
     /// Per-batch `e_q[b] = Round(2^{l_e}·η/m_b)` with `m_b` the batch's
@@ -532,15 +573,19 @@ pub struct QuantizedTask {
 impl QuantizedTask {
     pub fn new(cfg: &CopmlConfig, ds: &Dataset) -> QuantizedTask {
         let f = cfg.plan.field;
+        let model = cfg.model.model();
+        let channels = cfg.channels(ds);
         let plan = BatchPlan::new(ds.m, cfg.k, cfg.batches, cfg.seed);
         let rows_padded = plan.rows_padded();
         let mut x_q = vec![0u64; rows_padded * ds.d];
-        let mut y_q = vec![0u64; rows_padded];
+        let mut y_q = vec![0u64; channels * rows_padded];
         for (slot, src) in plan.slots() {
             for j in 0..ds.d {
                 x_q[slot * ds.d + j] = quant::quantize(f, ds.x[src * ds.d + j], cfg.plan.lx);
             }
-            y_q[slot] = quant::quantize(f, ds.y[src], 0);
+            for c in 0..channels {
+                y_q[c * rows_padded + slot] = model.quantize_label(&cfg.plan, ds.y[src], c);
+            }
         }
         let eta_qs: Vec<u64> =
             (0..plan.b).map(|b| cfg.plan.eta_factor(cfg.eta, plan.real_rows(b))).collect();
@@ -551,12 +596,23 @@ impl QuantizedTask {
             y_q,
             rows_padded,
             d: ds.d,
+            channels,
             m: ds.m,
             eta_qs,
             coeffs_q,
             poly,
             batches: plan,
         }
+    }
+
+    /// The secure state width `G = d·channels`.
+    pub fn width(&self) -> usize {
+        self.d * self.channels
+    }
+
+    /// Channel `c` of the quantized labels (`rows_padded` elements).
+    pub fn y_channel(&self, c: usize) -> &[u64] {
+        &self.y_q[c * self.rows_padded..(c + 1) * self.rows_padded]
     }
 }
 
@@ -567,29 +623,42 @@ pub struct TrainOutput {
     pub w: Vec<f64>,
     /// Final model in the field (scale `2^{l_w}`).
     pub w_field: Vec<u64>,
-    /// Model snapshot per iteration (field domain) — for equivalence tests
-    /// and accuracy traces.
+    /// Model snapshot per iteration (field domain, width `G = d·channels`)
+    /// — for equivalence tests and accuracy traces. One entry total for
+    /// the closed-form workload.
     pub w_trace: Vec<Vec<u64>>,
+    /// Per-snapshot workload score on the train/test split (classification
+    /// accuracy, or R² for regression — `Model::score`).
     pub train_accuracy: Vec<f64>,
     pub test_accuracy: Vec<f64>,
     pub loss: Vec<f64>,
+    /// Full metric set of the final model on the train split
+    /// (accuracy/AUC for classifiers, R² for regression).
+    pub train_metrics: ModelMetrics,
+    /// Full metric set of the final model on the test split.
+    pub test_metrics: ModelMetrics,
 }
 
 impl TrainOutput {
-    /// Fill accuracy/loss traces from the field-domain snapshots.
-    pub fn eval_traces(&mut self, plan: &FpPlan, ds: &Dataset) {
+    /// Fill score/loss traces and final metrics from the field-domain
+    /// snapshots, dispatched through the configured workload.
+    pub fn eval_traces(&mut self, cfg: &CopmlConfig, ds: &Dataset) {
+        let model = cfg.model.model();
+        let classes = ds.classes;
         self.train_accuracy.clear();
         self.test_accuracy.clear();
         self.loss.clear();
         for wq in &self.w_trace {
-            let w = quant::dequantize_slice(plan.field, wq, plan.lw);
-            self.train_accuracy.push(crate::ml::accuracy(&ds.x, &ds.y, ds.d, &w));
-            self.test_accuracy.push(crate::ml::accuracy(&ds.x_test, &ds.y_test, ds.d, &w));
-            self.loss.push(crate::ml::cross_entropy(&ds.x, &ds.y, ds.d, &w));
+            let w = model.decode(&cfg.plan, wq);
+            self.train_accuracy.push(model.score(&ds.x, &ds.y, ds.d, classes, &w));
+            self.test_accuracy.push(model.score(&ds.x_test, &ds.y_test, ds.d, classes, &w));
+            self.loss.push(model.loss(&ds.x, &ds.y, ds.d, classes, &w));
         }
         if let Some(wq) = self.w_trace.last() {
             self.w_field = wq.clone();
-            self.w = quant::dequantize_slice(plan.field, wq, plan.lw);
+            self.w = model.decode(&cfg.plan, wq);
+            self.train_metrics = model.metrics(&ds.x, &ds.y, ds.d, classes, &self.w);
+            self.test_metrics = model.metrics(&ds.x_test, &ds.y_test, ds.d, classes, &self.w);
         }
     }
 }

@@ -211,6 +211,22 @@ pub struct ClientOutput {
     pub halted: Option<String>,
 }
 
+impl ClientOutput {
+    /// Quality metrics of this client's opened model on the test split,
+    /// dispatched through the configured workload (accuracy/AUC for the
+    /// classifiers, R² for regression) — `None` if the client halted
+    /// before the final opening.
+    pub fn test_metrics(
+        &self,
+        cfg: &CopmlConfig,
+        ds: &Dataset,
+    ) -> Option<crate::ml::ModelMetrics> {
+        let model = cfg.model.model();
+        let w = model.decode(&cfg.plan, self.w_final.as_ref()?);
+        Some(model.metrics(&ds.x_test, &ds.y_test, ds.d, ds.classes, &w))
+    }
+}
+
 /// Run the full protocol. Spawns `cfg.n` client threads over the
 /// in-process [`Hub`]; the PJRT engine (if selected) is hosted on a
 /// [`KernelServer`] thread.
@@ -310,7 +326,7 @@ pub fn run_client(
     }
     let task = Arc::new(QuantizedTask::new(cfg, ds));
     let f = task.f;
-    let demand = copml_demand(cfg, task.d, task.rows_padded);
+    let demand = copml_demand(cfg, task.d, task.rows_padded, task.channels);
     let kernel: Box<dyn GradKernel> =
         Box::new(NativeKernel::with_tier(f, cfg.parallelism, cfg.kernel));
     let ctx = ClientCtx { cfg: cfg.clone(), task, kernel };
@@ -432,7 +448,7 @@ fn run_clients<T: Transport + Send + 'static>(
     let f = task.f;
     let (n, t) = (cfg.n, cfg.t);
     assert_eq!(transports.len(), n, "one endpoint per client");
-    let demand = copml_demand(cfg, task.d, task.rows_padded);
+    let demand = copml_demand(cfg, task.d, task.rows_padded, task.channels);
 
     // Dealer mode pre-deals all pools in ONE pass here (the provider's
     // `deal_one` is for one-process-per-party runs — calling it from
@@ -540,12 +556,12 @@ fn aggregate_outputs(
     let pts: Vec<u64> = completers[..t + 1].iter().map(|r| lambdas[r.id]).collect();
     let rec = shamir::Reconstructor::new(f, &pts);
     let mut train = TrainOutput::default();
-    for it in 0..cfg.iters {
+    for it in 0..cfg.model.model().trace_len(cfg.iters) {
         let views: Vec<&[u64]> = completers[..t + 1]
             .iter()
             .map(|r| r.w_share_snapshots[it].as_slice())
             .collect();
-        let mut w = vec![0u64; task.d];
+        let mut w = vec![0u64; task.width()];
         rec.reconstruct(f, &views, &mut w);
         train.w_trace.push(w);
     }
@@ -553,7 +569,7 @@ fn aggregate_outputs(
     if train.w_trace.last() != completers[0].w_final.as_ref() {
         return Err("opened model disagrees with reconstructed trace".into());
     }
-    train.eval_traces(&cfg.plan, ds);
+    train.eval_traces(cfg, ds);
     Ok(ProtocolOutput { train, ledgers: results.into_iter().map(|r| r.ledger).collect() })
 }
 
@@ -648,7 +664,7 @@ fn run_serve_clients<T: Transport + Send + 'static>(
     let f = tasks[0].f;
     // Demand geometry depends on dataset shape and plan only — identical
     // across the stream's jobs (their seeds differ, not their shapes).
-    let demand = copml_demand(cfg, tasks[0].d, tasks[0].rows_padded);
+    let demand = copml_demand(cfg, tasks[0].d, tasks[0].rows_padded, tasks[0].channels);
 
     // Dealer mode pre-deals every job's pools up front (same one-pass
     // rationale as `run_clients`); distributed jobs generate over the
@@ -932,6 +948,7 @@ fn client_run(
     let me = party.id;
     let (n, t, k) = (cfg.n, cfg.t, cfg.k);
     let (rows, d) = (task.rows_padded, task.d);
+    let (channels, width) = (task.channels, task.width());
     let plan_b = &task.batches;
     struct PhaseTimer {
         start: Instant,
@@ -958,17 +975,24 @@ fn client_run(
     party.seek_tags(tags::session_setup(cfg.session));
 
     // ---- Phase: share the dataset (Algorithm 1, lines 1–3) -------------
+    // Labels travel channel-major: one `share.y` message per peer holding
+    // this party's row range for every gradient channel back to back —
+    // byte-identical to the legacy single-channel payload for the seed
+    // workload.
     let ranges = padded_ranges(rows, n);
     let (lo, hi) = ranges[me];
     let my_x = &task.x_q[lo * d..hi * d];
-    let my_y = &task.y_q[lo..hi];
+    let my_y: Vec<u64> = (0..channels)
+        .flat_map(|c| task.y_channel(c)[lo..hi].iter().copied())
+        .collect();
     let tag_x = party.tag("share.x");
     let tag_y = party.tag("share.y");
     let own_x = party.share_out(my_x, tag_x);
-    let own_y = party.share_out(my_y, tag_y);
-    // Assemble [X]_me, [y]_me in global row order.
+    let own_y = party.share_out(&my_y, tag_y);
+    // Assemble [X]_me, [y]_me in global row order ([y] keeps the task's
+    // class-major layout: channel c of row i at c·rows + i).
     let mut x_share = vec![0u64; rows * d];
-    let mut y_share = vec![0u64; rows];
+    let mut y_share = vec![0u64; channels * rows];
     for (j, &(jl, jh)) in ranges.iter().enumerate() {
         let (xs, ys) = if j == me {
             (own_x.clone(), own_y.clone())
@@ -976,9 +1000,47 @@ fn client_run(
             (party.net.recv(j, tag_x), party.net.recv(j, tag_y))
         };
         x_share[jl * d..jh * d].copy_from_slice(&xs);
-        y_share[jl..jh].copy_from_slice(&ys);
+        let seg = jh - jl;
+        for c in 0..channels {
+            y_share[c * rows + jl..c * rows + jh].copy_from_slice(&ys[c * seg..(c + 1) * seg]);
+        }
     }
     timer.tick(ledger, 1, party);
+
+    // ---- Closed-form workload: one secure normal-equations round --------
+    // Instead of phases 3–6, the moments XᵀX and Xᵀy are computed as
+    // degree-2T products of the dataset shares, pay ONE concatenated BH08
+    // reduction (d² + d elements), and are opened; every party then runs
+    // the identical public dequantize → ridge solve → requantize, so the
+    // result "share" is the public β itself (a constant polynomial — any
+    // T+1 interpolate it exactly, which keeps the aggregation and
+    // god-mode trace machinery unchanged).
+    if !cfg.model.model().iterative() {
+        let mut moments = vec![0u64; d * (d + 1)];
+        for i in 0..rows {
+            let row = &x_share[i * d..(i + 1) * d];
+            for j in 0..d {
+                let xj = row[j];
+                for jj in 0..d {
+                    moments[j * d + jj] = f.add(moments[j * d + jj], f.mul(xj, row[jj]));
+                }
+                moments[d * d + j] = f.add(moments[d * d + j], f.mul(xj, y_share[i]));
+            }
+        }
+        // deg 2T → deg T: d(d+1) doubles, the demand's whole pool.
+        let reduced = party.degree_reduce_bh08(&moments).map_err(|e| e.to_string())?;
+        timer.tick(ledger, 2, party);
+        party.seek_tags(tags::session_final(cfg.session));
+        let opened = party.open_broadcast(&reduced, t);
+        let scale = 2 * cfg.plan.lx;
+        let mut xtx = crate::quant::dequantize_slice(f, &opened[..d * d], scale);
+        let mut xty = crate::quant::dequantize_slice(f, &opened[d * d..], scale);
+        let beta = crate::ml::model::solve_normal_equations(&mut xtx, &mut xty, d);
+        let w_q = crate::quant::quantize_slice(f, &beta, cfg.plan.lw);
+        snapshots.push(w_q.clone());
+        timer.tick(ledger, 7, party);
+        return Ok(w_q);
+    }
 
     // ---- Phase: per-batch [Xᵀ_b y_b], aligned (Algorithm 1, line 10) ----
     // All B local products are concatenated into one (B·d)-vector and pay
@@ -987,18 +1049,27 @@ fn client_run(
     let pp = cfg.parallelism;
     let tier = cfg.kernel;
     let nb = plan_b.b;
-    let mut local = vec![0u64; nb * d];
+    let mut local = vec![0u64; nb * width];
     for (bi, &(blo, bhi)) in plan_b.ranges().iter().enumerate() {
         let sh = MatShape::new(bhi - blo, d);
-        let lb =
-            par::matvec_t_tier(f, tier, pp, &x_share[blo * d..bhi * d], sh, &y_share[blo..bhi]); // deg 2T
-        local[bi * d..(bi + 1) * d].copy_from_slice(&lb);
+        for c in 0..channels {
+            let lb = par::matvec_t_tier(
+                f,
+                tier,
+                pp,
+                &x_share[blo * d..bhi * d],
+                sh,
+                &y_share[c * rows + blo..c * rows + bhi],
+            ); // deg 2T
+            local[bi * width + c * d..bi * width + (c + 1) * d].copy_from_slice(&lb);
+        }
     }
-    // deg T, B·d doubles
+    // deg T, B·G doubles (batch-major, class-major within each batch)
     let mut xty_all = party.degree_reduce_bh08(&local).map_err(|e| e.to_string())?;
     let align = f.reduce(1u64 << (cfg.plan.lc + cfg.plan.lx + cfg.plan.lw));
     party.scale(&mut xty_all, align);
-    let xty: Vec<Vec<u64>> = (0..nb).map(|bi| xty_all[bi * d..(bi + 1) * d].to_vec()).collect();
+    let xty: Vec<Vec<u64>> =
+        (0..nb).map(|bi| xty_all[bi * width..(bi + 1) * width].to_vec()).collect();
     drop(xty_all);
     timer.tick(ledger, 2, party);
 
@@ -1096,7 +1167,7 @@ fn client_run(
     // reconstructor is rebuilt only when exclusions change it.
     let mut rec_sources: Vec<usize> = sources.clone();
 
-    let mut w_share = vec![0u64; d]; // shares of w^(0) = 0
+    let mut w_share = vec![0u64; width]; // shares of w^(0) = 0
 
     timer.reset(party);
     (|| -> Result<Vec<u64>, String> {
@@ -1135,8 +1206,11 @@ fn client_run(
                 ));
             }
             // ---- encode the model (Eq. 4; lines 12–15) ------------------
+            // The whole G-vector [w] (class-major) encodes in one pass:
+            // masks, payloads, and message counts all scale by `channels`
+            // with the tag sequence unchanged.
             let vmasks: Vec<Vec<u64>> = (0..t)
-                .map(|_| party.random_share(d))
+                .map(|_| party.random_share(width))
                 .collect::<Result<_, _>>()
                 .map_err(|e| e.to_string())?;
             let tag_wenc = party.tag("encode.w");
@@ -1192,7 +1266,7 @@ fn client_run(
                 rec_sources = got_sources;
             }
             let views: Vec<&[u64]> = wenc_shares.iter().map(|v| v.as_slice()).collect();
-            let mut w_tilde = vec![0u64; d];
+            let mut w_tilde = vec![0u64; width];
             rec.reconstruct(f, &views, &mut w_tilde);
             timer.tick(ledger, 4, party);
 
@@ -1298,7 +1372,7 @@ fn client_run(
 
             // ---- decode + model update (Eq. 10–11; lines 18–23) ---------
             let views: Vec<&[u64]> = result_shares.iter().map(|v| v.as_slice()).collect();
-            let mut grad = vec![0u64; d];
+            let mut grad = vec![0u64; width];
             dec_cache.get(&members).decode_sum_tier(tier, pp, &views, &mut grad);
             party.sub(&mut grad, &xty[bi]);
             let mut g1 = party

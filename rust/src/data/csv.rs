@@ -1,0 +1,496 @@
+//! CSV dataset loader for the model zoo (`--dataset csv:PATH`).
+//!
+//! Accepts the layout of the tfe-logistic benchmark corpora (default_credit
+//! 30000×24, breast 569×31, sonar 208×61): one numeric record per line,
+//! comma-separated, **no header required** (a single leading header line is
+//! tolerated and skipped), label in the last column unless
+//! [`CsvOptions::label_col`] says otherwise.
+//!
+//! The loader produces a [`Dataset`] in the invariant form every quant plan
+//! assumes (`CopmlConfig::validate` hardcodes `max_abs_x = 1`):
+//!
+//! 1. deterministic train/test split — a seeded permutation
+//!    (domain-separated from every protocol stream), first rows train;
+//! 2. per-feature standardization with **train-split statistics**
+//!    (`(x − μ)/σ`), then one global rescale so every feature of every
+//!    split lies in `[−1, 1]`;
+//! 3. a bias column fixed to `1.0` appended as the last feature.
+//!
+//! Labels: integer values with ≥ 2 distinct levels in `{0, …, 64}` are
+//! classification classes (`Dataset::classes = max + 1`); anything else is
+//! a regression target (`classes = 1`), rescaled into `[−1, 1]` when it
+//! exceeds that range (R² is invariant under the shared scale).
+//!
+//! Every malformed input is a typed [`CsvError`] naming the offending
+//! line — never a panic (ISSUE-10 hardening satellite).
+
+use super::Dataset;
+use crate::prng::Rng;
+
+/// Stream label for the train/test-split permutation ("CSVS" in the high
+/// bits) — domain-separated from the dealer, party, offline, and batch
+/// streams so loading a CSV perturbs no protocol randomness.
+const STREAM_SPLIT: u64 = 0x4353_5653_0000_0000;
+
+/// Largest integer label value still treated as a class index; anything
+/// above is a regression target (guards against id-like columns exploding
+/// the one-vs-rest width).
+const MAX_CLASS_LABEL: f64 = 64.0;
+
+/// Typed loader failures, one per malformed-input family. Each `Display`
+/// names the offending line/column so the CLI error is actionable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CsvError {
+    /// The file could not be read at all.
+    Io { path: String, cause: String },
+    /// No data rows (empty file, or header/blank lines only).
+    Empty,
+    /// A field failed to parse as a number (1-based line/column).
+    MalformedField { line: usize, column: usize, text: String },
+    /// A row's field count differs from the first data row's (1-based line).
+    WidthDrift { line: usize, expected: usize, got: usize },
+    /// The requested label column does not exist at this width.
+    LabelColumnOutOfRange { label_col: usize, width: usize },
+    /// Fewer than [`MIN_ROWS`] records — no meaningful train/test split.
+    TooFewRows { rows: usize },
+    /// Rows narrower than 2 columns have no feature + label split.
+    TooNarrow { width: usize },
+    /// Classification labels must be the contiguous range `0..classes`.
+    NegativeClassLabel { line: usize, value: f64 },
+    /// Every label identical — nothing to fit.
+    ConstantLabels,
+}
+
+/// Minimum record count the loader accepts (below this a held-out split is
+/// meaningless).
+pub const MIN_ROWS: usize = 8;
+
+impl std::fmt::Display for CsvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsvError::Io { path, cause } => write!(f, "cannot read csv '{path}': {cause}"),
+            CsvError::Empty => write!(f, "csv holds no data rows"),
+            CsvError::MalformedField { line, column, text } => write!(
+                f,
+                "csv line {line}, column {column}: '{text}' is not a number \
+                 (only line 1 may be a header)"
+            ),
+            CsvError::WidthDrift { line, expected, got } => write!(
+                f,
+                "csv line {line}: {got} fields, but the first data row has {expected} \
+                 — ragged rows are not supported"
+            ),
+            CsvError::LabelColumnOutOfRange { label_col, width } => write!(
+                f,
+                "label column {label_col} out of range: rows have {width} columns (0..{})",
+                width.saturating_sub(1)
+            ),
+            CsvError::TooFewRows { rows } => write!(
+                f,
+                "csv has only {rows} data rows; at least {MIN_ROWS} are needed for a \
+                 train/test split"
+            ),
+            CsvError::TooNarrow { width } => write!(
+                f,
+                "csv rows have {width} column(s); at least one feature plus a label \
+                 column are required"
+            ),
+            CsvError::NegativeClassLabel { line, value } => write!(
+                f,
+                "csv line {line}: class label {value} is negative — classification \
+                 labels must be 0..C"
+            ),
+            CsvError::ConstantLabels => {
+                write!(f, "every csv label is identical — nothing to fit")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CsvError {}
+
+/// Loader knobs. `Default` matches the tfe-logistic conventions: label in
+/// the last column, 20% held out for test.
+#[derive(Clone, Debug)]
+pub struct CsvOptions {
+    /// 0-based label column; `None` → last column.
+    pub label_col: Option<usize>,
+    /// Fraction of rows held out as the test split (at least one row).
+    pub test_fraction: f64,
+    /// Seed of the split permutation (forked, domain-separated).
+    pub seed: u64,
+    /// Dataset name reported in summaries; `None` → derived from the path.
+    pub name: Option<String>,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        CsvOptions { label_col: None, test_fraction: 0.2, seed: 0, name: None }
+    }
+}
+
+/// Parse CSV text into numeric rows. Pure function of the text — all the
+/// hardening property tests drive this directly, no files needed.
+fn parse_table(text: &str) -> Result<Vec<Vec<f64>>, CsvError> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width: Option<usize> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim_end_matches('\r').trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        let mut row = Vec::with_capacity(fields.len());
+        let mut bad: Option<CsvError> = None;
+        for (col, field) in fields.iter().enumerate() {
+            match field.trim().parse::<f64>() {
+                Ok(v) if v.is_finite() => row.push(v),
+                _ => {
+                    bad = Some(CsvError::MalformedField {
+                        line: line_no,
+                        column: col + 1,
+                        text: field.trim().to_string(),
+                    });
+                    break;
+                }
+            }
+        }
+        if let Some(err) = bad {
+            // A single unparseable *first* line is a header: skip it.
+            if rows.is_empty() && width.is_none() && line_no == 1 {
+                continue;
+            }
+            return Err(err);
+        }
+        match width {
+            None => width = Some(row.len()),
+            Some(w) if w != row.len() => {
+                return Err(CsvError::WidthDrift { line: line_no, expected: w, got: row.len() })
+            }
+            Some(_) => {}
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        return Err(CsvError::Empty);
+    }
+    Ok(rows)
+}
+
+/// Build a [`Dataset`] from parsed rows (split → standardize → bias column;
+/// see the module docs for the exact pipeline).
+fn dataset_from_rows(rows: Vec<Vec<f64>>, opts: &CsvOptions) -> Result<Dataset, CsvError> {
+    let width = rows[0].len();
+    if width < 2 {
+        return Err(CsvError::TooNarrow { width });
+    }
+    let label_col = opts.label_col.unwrap_or(width - 1);
+    if label_col >= width {
+        return Err(CsvError::LabelColumnOutOfRange { label_col, width });
+    }
+    let rows_n = rows.len();
+    if rows_n < MIN_ROWS {
+        return Err(CsvError::TooFewRows { rows: rows_n });
+    }
+
+    // Label typing: contiguous small integers → classification.
+    let labels: Vec<f64> = rows.iter().map(|r| r[label_col]).collect();
+    let integral = labels.iter().all(|&v| v.fract() == 0.0 && v.abs() <= MAX_CLASS_LABEL);
+    let (lmin, lmax) = labels
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    if lmin == lmax {
+        return Err(CsvError::ConstantLabels);
+    }
+    let classes = if integral {
+        if lmin < 0.0 {
+            let line = rows.iter().position(|r| r[label_col] < 0.0).unwrap_or(0) + 1;
+            return Err(CsvError::NegativeClassLabel { line, value: lmin });
+        }
+        lmax as usize + 1
+    } else {
+        1
+    };
+    // Regression targets must fit the quant bound |y| ≤ 1 (scale is shared
+    // by train and test, so R² is unchanged).
+    let y_scale = if classes == 1 && lmax.abs().max(lmin.abs()) > 1.0 {
+        1.0 / lmax.abs().max(lmin.abs())
+    } else {
+        1.0
+    };
+
+    // Deterministic split: seeded permutation, first rows train.
+    let perm = Rng::seed_from_u64(opts.seed).fork(STREAM_SPLIT).permutation(rows_n);
+    let m_test = ((rows_n as f64 * opts.test_fraction).round() as usize).clamp(1, rows_n - 2);
+    let m_train = rows_n - m_test;
+
+    let d_feat = width - 1;
+    let d = d_feat + 1; // + bias column
+    let feature_cols: Vec<usize> = (0..width).filter(|&c| c != label_col).collect();
+
+    // Per-feature train statistics.
+    let mut mean = vec![0.0f64; d_feat];
+    let mut var = vec![0.0f64; d_feat];
+    for &src in perm.iter().take(m_train) {
+        for (j, &c) in feature_cols.iter().enumerate() {
+            mean[j] += rows[src][c];
+        }
+    }
+    for mj in mean.iter_mut() {
+        *mj /= m_train as f64;
+    }
+    for &src in perm.iter().take(m_train) {
+        for (j, &c) in feature_cols.iter().enumerate() {
+            let dv = rows[src][c] - mean[j];
+            var[j] += dv * dv;
+        }
+    }
+    let std: Vec<f64> = var.iter().map(|&v| (v / m_train as f64).sqrt().max(1e-12)).collect();
+
+    // Standardize everything with the train statistics, then find the
+    // global max |x| so one shared rescale bounds BOTH splits in [−1, 1]
+    // (the plan validator hardcodes max_abs_x = 1).
+    let standardized: Vec<Vec<f64>> = perm
+        .iter()
+        .map(|&src| {
+            feature_cols
+                .iter()
+                .enumerate()
+                .map(|(j, &c)| (rows[src][c] - mean[j]) / std[j])
+                .collect()
+        })
+        .collect();
+    let max_abs = standardized
+        .iter()
+        .flat_map(|r| r.iter())
+        .fold(1.0f64, |acc, &v| acc.max(v.abs()));
+
+    let mut x = vec![0.0f64; m_train * d];
+    let mut y = vec![0.0f64; m_train];
+    let mut x_test = vec![0.0f64; m_test * d];
+    let mut y_test = vec![0.0f64; m_test];
+    for (i, row) in standardized.iter().enumerate() {
+        let (dst, yv) = if i < m_train {
+            (&mut x[i * d..(i + 1) * d], &mut y[i])
+        } else {
+            let t = i - m_train;
+            (&mut x_test[t * d..(t + 1) * d], &mut y_test[t])
+        };
+        for (j, &v) in row.iter().enumerate() {
+            dst[j] = v / max_abs;
+        }
+        dst[d_feat] = 1.0;
+        *yv = labels[perm[i]] * y_scale;
+    }
+
+    let name = opts.name.clone().unwrap_or_else(|| "csv".to_string());
+    Ok(Dataset { name, x, y, x_test, y_test, m: m_train, d, classes })
+}
+
+/// Parse CSV text into a [`Dataset`] (the file-less core `load` wraps).
+pub fn parse(text: &str, opts: &CsvOptions) -> Result<Dataset, CsvError> {
+    dataset_from_rows(parse_table(text)?, opts)
+}
+
+/// Load a CSV file from `path`.
+pub fn load(path: &str, mut opts: CsvOptions) -> Result<Dataset, CsvError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| CsvError::Io { path: path.to_string(), cause: e.to_string() })?;
+    if opts.name.is_none() {
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("csv")
+            .to_string();
+        opts.name = Some(stem);
+    }
+    parse(&text, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A well-formed K-class csv: 3 features + integer label, `rows` rows.
+    fn good_csv(rows: usize, classes: usize) -> String {
+        let mut s = String::new();
+        for i in 0..rows {
+            let a = (i % 7) as f64 * 0.3 - 1.0;
+            let b = (i % 5) as f64 * 0.7;
+            let c = (i % 3) as f64 - 1.0;
+            let y = i % classes;
+            s.push_str(&format!("{a},{b},{c},{y}\n"));
+        }
+        s
+    }
+
+    #[test]
+    fn loads_and_standardizes() {
+        let ds = parse(&good_csv(40, 2), &CsvOptions::default()).unwrap();
+        assert_eq!(ds.d, 4); // 3 features + bias
+        assert_eq!(ds.m + ds.y_test.len(), 40);
+        assert_eq!(ds.classes, 2);
+        // |x| ≤ 1 on both splits, bias column last
+        for (i, &v) in ds.x.iter().chain(ds.x_test.iter()).enumerate() {
+            assert!((-1.0..=1.0).contains(&v), "x[{i}] = {v}");
+        }
+        for i in 0..ds.m {
+            assert_eq!(ds.x[i * ds.d + ds.d - 1], 1.0, "bias column");
+        }
+        // train features (near) zero-mean before the shared rescale
+        for j in 0..ds.d - 1 {
+            let mean: f64 = (0..ds.m).map(|i| ds.x[i * ds.d + j]).sum::<f64>() / ds.m as f64;
+            assert!(mean.abs() < 0.25, "column {j} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn split_is_deterministic_and_seed_sensitive() {
+        let text = good_csv(50, 2);
+        let a = parse(&text, &CsvOptions::default()).unwrap();
+        let b = parse(&text, &CsvOptions::default()).unwrap();
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = parse(&text, &CsvOptions { seed: 1, ..Default::default() }).unwrap();
+        assert_ne!(a.y, c.y, "different seed must reshuffle the split");
+        assert_eq!(a.m, c.m);
+    }
+
+    #[test]
+    fn header_line_tolerated() {
+        let text = format!("f1,f2,f3,label\n{}", good_csv(20, 2));
+        let ds = parse(&text, &CsvOptions::default()).unwrap();
+        assert_eq!(ds.m + ds.y_test.len(), 20);
+    }
+
+    #[test]
+    fn multiclass_counts_classes() {
+        let ds = parse(&good_csv(30, 3), &CsvOptions::default()).unwrap();
+        assert_eq!(ds.classes, 3);
+        // labels preserved verbatim
+        for &v in ds.y.iter().chain(ds.y_test.iter()) {
+            assert!(v == 0.0 || v == 1.0 || v == 2.0);
+        }
+    }
+
+    #[test]
+    fn regression_labels_scaled_into_unit_range() {
+        let mut s = String::new();
+        for i in 0..20 {
+            let (a, b) = (i as f64 * 0.1, 1.0 - i as f64 * 0.05);
+            s.push_str(&format!("{a},{b},{}\n", i as f64 * 2.5 + 0.25));
+        }
+        let ds = parse(&s, &CsvOptions::default()).unwrap();
+        assert_eq!(ds.classes, 1, "non-integer labels are a regression target");
+        let max_abs =
+            ds.y.iter().chain(ds.y_test.iter()).fold(0.0f64, |a, &v| a.max(v.abs()));
+        assert!(max_abs <= 1.0 + 1e-12 && max_abs > 0.9, "y rescaled to [−1,1]: {max_abs}");
+    }
+
+    // ---- hardening property tests (ISSUE-10 satellite) -----------------
+
+    #[test]
+    fn malformed_row_names_line_and_column() {
+        let mut text = good_csv(12, 2);
+        text.push_str("0.1,oops,0.3,1\n");
+        match parse(&text, &CsvOptions::default()) {
+            Err(CsvError::MalformedField { line: 13, column: 2, text }) => {
+                assert_eq!(text, "oops")
+            }
+            other => panic!("expected MalformedField, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_after_first_line_is_an_error() {
+        let mut text = good_csv(5, 2);
+        text.push_str("f1,f2,f3,label\n");
+        text.push_str(&good_csv(5, 2));
+        assert!(matches!(
+            parse(&text, &CsvOptions::default()),
+            Err(CsvError::MalformedField { line: 6, .. })
+        ));
+    }
+
+    #[test]
+    fn width_drift_names_line() {
+        let mut text = good_csv(10, 2);
+        text.push_str("0.1,0.2,1\n"); // 3 fields instead of 4
+        assert!(matches!(
+            parse(&text, &CsvOptions::default()),
+            Err(CsvError::WidthDrift { line: 11, expected: 4, got: 3 })
+        ));
+    }
+
+    #[test]
+    fn empty_inputs_rejected() {
+        assert_eq!(parse("", &CsvOptions::default()), Err(CsvError::Empty));
+        assert_eq!(parse("\n\n  \n", &CsvOptions::default()), Err(CsvError::Empty));
+        // header-only file is still empty of data
+        assert_eq!(parse("a,b,c\n", &CsvOptions::default()), Err(CsvError::Empty));
+    }
+
+    #[test]
+    fn out_of_range_label_column_rejected() {
+        let opts = CsvOptions { label_col: Some(4), ..Default::default() };
+        assert_eq!(
+            parse(&good_csv(12, 2), &opts),
+            Err(CsvError::LabelColumnOutOfRange { label_col: 4, width: 4 })
+        );
+    }
+
+    #[test]
+    fn too_few_rows_rejected() {
+        assert_eq!(
+            parse(&good_csv(MIN_ROWS - 1, 2), &CsvOptions::default()),
+            Err(CsvError::TooFewRows { rows: MIN_ROWS - 1 })
+        );
+        assert!(parse(&good_csv(MIN_ROWS, 2), &CsvOptions::default()).is_ok());
+    }
+
+    #[test]
+    fn single_column_rejected() {
+        let text = "1\n0\n1\n0\n1\n0\n1\n0\n";
+        assert_eq!(parse(text, &CsvOptions::default()), Err(CsvError::TooNarrow { width: 1 }));
+    }
+
+    #[test]
+    fn negative_class_labels_rejected() {
+        let mut s = String::new();
+        for i in 0..12 {
+            s.push_str(&format!("0.5,0.1,{}\n", if i % 2 == 0 { -1.0 } else { 1.0 }));
+        }
+        assert!(matches!(
+            parse(&s, &CsvOptions::default()),
+            Err(CsvError::NegativeClassLabel { .. })
+        ));
+    }
+
+    #[test]
+    fn constant_labels_rejected() {
+        let mut s = String::new();
+        for _ in 0..12 {
+            s.push_str("0.5,0.1,1\n");
+        }
+        assert_eq!(parse(&s, &CsvOptions::default()), Err(CsvError::ConstantLabels));
+    }
+
+    #[test]
+    fn nonfinite_fields_rejected() {
+        let mut text = good_csv(10, 2);
+        text.push_str("0.1,inf,0.3,1\n");
+        assert!(matches!(
+            parse(&text, &CsvOptions::default()),
+            Err(CsvError::MalformedField { line: 11, column: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn errors_render_actionable_messages() {
+        let e = CsvError::WidthDrift { line: 9, expected: 31, got: 30 };
+        assert!(e.to_string().contains("line 9"));
+        let e = CsvError::MalformedField { line: 2, column: 5, text: "x".into() };
+        assert!(e.to_string().contains("line 2") && e.to_string().contains("column 5"));
+    }
+}

@@ -13,6 +13,8 @@
 
 use crate::prng::Rng;
 
+pub mod csv;
+
 /// Stream label for the batch-permutation RNG ("BTCH" in the high bits) —
 /// domain-separated from the dealer stream labels (`mpc::dealer`), the
 /// per-party online streams (`mpc::STREAM_PARTY`), and the offline-phase
@@ -156,8 +158,10 @@ impl BatchPlan {
     }
 }
 
-/// A dense binary-classification dataset, features in `[0, 1]`, last
-/// feature column fixed to 1 (bias), labels in `{0, 1}`.
+/// A dense supervised dataset, features in `[−1, 1]`, last feature column
+/// fixed to 1 (bias). For classification workloads labels are the integers
+/// `{0, …, classes−1}` stored as `f64`; for regression targets `classes`
+/// is 1 and `y` is any real value in `[−1, 1]`.
 #[derive(Clone)]
 pub struct Dataset {
     pub name: String,
@@ -171,6 +175,9 @@ pub struct Dataset {
     pub y_test: Vec<f64>,
     pub m: usize,
     pub d: usize,
+    /// Number of label classes: 2 for binary classification (the synthetic
+    /// generators), `C` for multi-class CSVs, 1 for regression targets.
+    pub classes: usize,
 }
 
 /// Parameters of the synthetic generator.
@@ -364,6 +371,7 @@ impl Dataset {
             y_test,
             m: spec.m_train,
             d: spec.d,
+            classes: 2,
         }
     }
 

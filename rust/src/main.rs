@@ -1,7 +1,8 @@
 //! `copml` — CLI launcher for the COPML framework.
 //!
 //! ```text
-//! copml train   --dataset smoke|cifar|gisette --n 10 --case 1|2 [--k K --t T]
+//! copml train   --dataset smoke|cifar|gisette|csv:PATH --n 10 --case 1|2 [--k K --t T]
+//!               [--model logreg|multinomial|linreg]  # workload (ml::Model zoo)
 //!               [--iters 50] [--eta 2.0] [--mode algo|full] [--engine native|pjrt]
 //!               [--batches B]            # mini-batch SGD: iteration i → batch i mod B
 //!               [--threads 1]            # 0 = all cores (field::par)
@@ -76,12 +77,23 @@ fn main() {
 }
 
 fn dataset_for(name: &str, seed: u64) -> Result<Dataset, String> {
+    // `csv:PATH` loads a real dataset (tfe-logistic conventions: label in
+    // the last column, 20% seeded held-out test split, train-stats
+    // standardization — `data::csv`). Everything else is a synthetic spec.
+    if let Some(path) = name.strip_prefix("csv:") {
+        let opts = copml::data::csv::CsvOptions { seed, ..Default::default() };
+        return copml::data::csv::load(path, opts).map_err(|e| format!("--dataset {name}: {e}"));
+    }
     let spec = match name {
         "smoke" => SynthSpec::smoke(),
         "tiny" => SynthSpec::tiny(),
         "cifar" => SynthSpec::cifar_like(),
         "gisette" => SynthSpec::gisette_like(),
-        other => return Err(format!("unknown dataset '{other}'")),
+        other => {
+            return Err(format!(
+                "unknown dataset '{other}' (expected smoke|tiny|cifar|gisette|csv:PATH)"
+            ))
+        }
     };
     Ok(Dataset::synth(spec, seed))
 }
@@ -94,6 +106,9 @@ fn config_from_args(args: &Args, ds: &Dataset, n: usize, seed: u64) -> Result<Co
         c => return Err(format!("--case must be 1 or 2 (got {c})")),
     };
     let mut cfg = CopmlConfig::for_dataset(ds, n, case, seed);
+    // Workload selection (`--model logreg|multinomial|linreg`); logreg is
+    // the default and bit-identical to every pre-existing trace.
+    cfg.model = args.get_or("model", cfg.model)?;
     cfg.k = args.get_or("k", cfg.k)?;
     cfg.t = args.get_or("t", cfg.t)?;
     cfg.iters = args.get_or("iters", cfg.iters)?;
@@ -150,9 +165,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         n => Parallelism::threads(n),
     };
     println!(
-        "COPML train: dataset={} (m={}, d={})  N={} K={} T={} r={}  iters={} η={}  p={}  threads={}  offline={}  kernel={}",
-        ds.name, ds.m, ds.d, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters, cfg.eta,
-        cfg.plan.field.modulus(), cfg.parallelism.thread_count(), cfg.offline,
+        "COPML train: dataset={} (m={}, d={}, classes={})  model={}  N={} K={} T={} r={}  iters={} η={}  p={}  threads={}  offline={}  kernel={}",
+        ds.name, ds.m, ds.d, ds.classes, cfg.model, cfg.n, cfg.k, cfg.t, cfg.r, cfg.iters,
+        cfg.eta, cfg.plan.field.modulus(), cfg.parallelism.thread_count(), cfg.offline,
         cfg.kernel
     );
     // Batch schedule summary (grep-asserted by CI for --batches runs).
@@ -234,9 +249,22 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         .enumerate()
     {
         if (i + 1) % every == 0 || i + 1 == out.loss.len() {
-            println!("iter {:>3}  loss {:.4}  train-acc {:.4}  test-acc {:.4}", i + 1, loss, tr, te);
+            println!(
+                "iter {:>3}  loss {:.4}  train-score {:.4}  test-score {:.4}",
+                i + 1,
+                loss,
+                tr,
+                te
+            );
         }
     }
+    // Final-model quality through the workload's own metric set
+    // (accuracy/AUC for the classifiers, R² for regression) — the line the
+    // fig_models bench and EXPERIMENTS.md reference.
+    println!(
+        "train summary: model={}  train[{}]  test[{}]",
+        cfg.model, out.train_metrics, out.test_metrics
+    );
     Ok(())
 }
 
@@ -299,13 +327,11 @@ fn cmd_party(args: &Args) -> Result<(), String> {
             hidden / (hidden + crit).max(1e-12)
         );
     }
-    match &out.w_final {
-        Some(w_final) => {
-            let w = copml::quant::dequantize_slice(cfg.plan.field, w_final, cfg.plan.lw);
+    match out.test_metrics(&cfg, &ds) {
+        Some(metrics) => {
             println!(
-                "party {id} done in {:.2}s: test-acc {:.4}, {} B sent / {} B received ({} wire)",
+                "party {id} done in {:.2}s: test [{metrics}], {} B sent / {} B received ({} wire)",
                 t0.elapsed().as_secs_f64(),
-                copml::ml::accuracy(&ds.x_test, &ds.y_test, ds.d, &w),
                 net.bytes_sent(),
                 net.bytes_received(),
                 cfg.wire
@@ -387,6 +413,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
 fn cmd_bench(args: &Args) -> Result<(), String> {
     let seed = args.get_or("seed", 42u64)?;
+    // The Table-I cost model (and the Appendix C/D baselines it compares
+    // against) prices the degree-1 logreg pipeline; reject other workloads
+    // instead of silently modeling the wrong one.
+    if let Some(m) = args.get("model") {
+        if m != "logreg" {
+            return Err(format!("bench models the logreg workload only (got --model {m})"));
+        }
+    }
     let name = args.get("dataset").unwrap_or("cifar");
     let ds = dataset_for(name, seed)?;
     let n = args.get_or("n", 50usize)?;

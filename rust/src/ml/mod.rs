@@ -1,11 +1,17 @@
-//! Plaintext machine learning: the f64 logistic-regression reference
-//! ("conventional logistic regression" of Fig. 4), the least-squares
-//! polynomial fit of the sigmoid (Eq. 5), and accuracy/loss metrics.
+//! Plaintext machine learning: the f64 reference trainers ("conventional
+//! logistic regression" of Fig. 4 and its multinomial/linear-regression
+//! siblings), the least-squares polynomial fit of the sigmoid (Eq. 5),
+//! quality metrics (accuracy, AUC, R²), and the [`model::Model`] workload
+//! contract the secure layers dispatch through.
 
 pub mod logreg;
+pub mod model;
 pub mod sigmoid;
 
 pub use logreg::{train_logreg, LogRegOptions, TrainTrace};
+pub use model::{
+    auc, multiclass_accuracy, r2, train_multinomial, Model, ModelKind, ModelMetrics,
+};
 pub use sigmoid::{fit_sigmoid, sigmoid, SigmoidPoly};
 
 /// Classification accuracy of model `w` on `(x, y)` using a polynomial or

@@ -1,0 +1,806 @@
+//! The workload abstraction of the model zoo (ISSUE-10 tentpole): a
+//! [`Model`] contract every training layer dispatches through instead of
+//! assuming one d-vector sigmoid gradient.
+//!
+//! Three workloads implement it:
+//!
+//! | kind                    | secure path                             | paper anchor            |
+//! |-------------------------|-----------------------------------------|-------------------------|
+//! | [`ModelKind::Logreg`]   | encoded-gradient GD, 1 channel          | Fig. 4 GISETTE (§V.A)   |
+//! | [`ModelKind::Multinomial`] | encoded-gradient GD, C one-vs-rest channels | Fig. 4 CIFAR-10 (§V.A) |
+//! | [`ModelKind::Linreg`]   | closed-form normal equations, one BH08 reduction | PrivColl-style aggregation |
+//!
+//! The contract covers exactly what the coordinator layers need:
+//!
+//! * **channels** — how many d-wide gradient channels the secure state
+//!   vector holds (`G = d·channels`); 1 reduces every width to the
+//!   pre-refactor layout, which is what keeps binary logreg bit-identical;
+//! * **cleartext reference step** — the f64 trajectory Fig.-4-style
+//!   comparisons assert against;
+//! * **quantization-plan derivation** — the measured gradient bound fed to
+//!   [`FpPlan::validate`]/[`FpPlan::validate_classes`];
+//! * **per-iteration truncation demand** — how many TruncPr pairs per
+//!   width the offline phase must provision;
+//! * **output decode + metrics** — field state → f64 weights →
+//!   accuracy/AUC/R².
+//!
+//! Multinomial is trained as C one-vs-rest sigmoid-link problems sharing
+//! one encoded dataset (the paper's CIFAR-10 setup quantizes exactly this
+//! shape); linear regression solves `(XᵀX + λI)β = Xᵀy` where both moment
+//! matrices are aggregated securely and opened — only the public solve
+//! happens in f64.
+
+use super::logreg::{train_logreg, LogRegOptions, TrainTrace};
+use super::sigmoid::{sigmoid, solve_dense, SigmoidPoly};
+use crate::data::Dataset;
+use crate::quant::FpPlan;
+
+/// Ridge multiplier of the secure normal-equations solve: `λ = RIDGE_REL ·
+/// trace(XᵀX)/d`. Deterministic f64 — every party computes the identical
+/// public solve, so shares of the result stay consistent.
+pub const RIDGE_REL: f64 = 1e-6;
+
+/// Which workload a run trains (`--model logreg|multinomial|linreg`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ModelKind {
+    /// Binary logistic regression — the seed workload and bit-identity
+    /// oracle of the refactor.
+    #[default]
+    Logreg,
+    /// Multinomial logistic regression: a d×C weight matrix trained as C
+    /// one-vs-rest polynomial-sigmoid channels over one shared encoding.
+    Multinomial,
+    /// Closed-form linear regression via securely aggregated normal
+    /// equations (no iteration loop, no truncation).
+    Linreg,
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "logreg" => Ok(ModelKind::Logreg),
+            "multinomial" => Ok(ModelKind::Multinomial),
+            "linreg" => Ok(ModelKind::Linreg),
+            other => Err(format!("unknown model '{other}' (logreg|multinomial|linreg)")),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.model().name())
+    }
+}
+
+impl ModelKind {
+    /// The workload behind this kind.
+    pub fn model(self) -> &'static dyn Model {
+        match self {
+            ModelKind::Logreg => &Logreg,
+            ModelKind::Multinomial => &Multinomial,
+            ModelKind::Linreg => &Linreg,
+        }
+    }
+
+    /// Gradient channels on `ds` (`G = d·channels`).
+    pub fn channels(self, ds: &Dataset) -> usize {
+        self.model().channels(ds.classes)
+    }
+}
+
+/// Quality metrics of a decoded model on one dataset split. Which fields
+/// are populated depends on the workload (classifiers report
+/// accuracy/AUC, regression reports R²); `loss` is always the workload's
+/// training objective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ModelMetrics {
+    pub accuracy: Option<f64>,
+    pub auc: Option<f64>,
+    pub r2: Option<f64>,
+    pub loss: f64,
+}
+
+impl std::fmt::Display for ModelMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        let mut put = |f: &mut std::fmt::Formatter<'_>, k: &str, v: f64| {
+            let sep = if first { "" } else { "  " };
+            first = false;
+            write!(f, "{sep}{k}={v:.4}")
+        };
+        if let Some(a) = self.accuracy {
+            put(f, "accuracy", a)?;
+        }
+        if let Some(a) = self.auc {
+            put(f, "auc", a)?;
+        }
+        if let Some(r) = self.r2 {
+            put(f, "r2", r)?;
+        }
+        put(f, "loss", self.loss)
+    }
+}
+
+/// The workload contract (module docs list the exact responsibilities).
+/// All methods are deterministic pure functions — the protocol's
+/// bit-identity guarantees extend through them.
+pub trait Model: Sync {
+    /// CLI/summary name (also the `--model` spelling).
+    fn name(&self) -> &'static str;
+
+    /// Gradient channels for a `classes`-class dataset: the secure state
+    /// vector is `G = d·channels` wide, class-major.
+    fn channels(&self, classes: usize) -> usize;
+
+    /// Whether the workload runs the per-iteration encoded-gradient loop
+    /// (false → one-shot closed form, phases 3–6 skipped).
+    fn iterative(&self) -> bool;
+
+    /// Entries in `w_trace` after `iters` configured iterations.
+    fn trace_len(&self, iters: usize) -> usize {
+        if self.iterative() {
+            iters
+        } else {
+            1
+        }
+    }
+
+    /// TruncPr pairs consumed per width over a whole run (stage 1 and
+    /// stage 2 each consume this many) — the offline-demand contract.
+    fn trunc_pairs(&self, d: usize, classes: usize, iters: usize) -> usize {
+        if self.iterative() {
+            d * self.channels(classes) * iters
+        } else {
+            0
+        }
+    }
+
+    /// Dataset/label-shape preconditions (checked before any quantization).
+    fn check_dataset(&self, ds: &Dataset) -> Result<(), String>;
+
+    /// Quantization-plan derivation: measure the workload's gradient bound
+    /// on `ds` and run the fixed-point budget checks (Appendix A).
+    fn validate_plan(&self, plan: &FpPlan, ds: &Dataset, r: usize) -> Result<(), String>;
+
+    /// Cleartext f64 reference trajectory (the Fig.-4 comparison target).
+    fn reference(&self, ds: &Dataset, iters: usize, eta: f64, link: Option<&SigmoidPoly>)
+        -> TrainTrace;
+
+    /// Quantized label of raw value `y` for gradient channel `channel`
+    /// (the class-major `y_q` layout of `QuantizedTask`): binary labels
+    /// at scale `2^0` (the seed layout), one-vs-rest indicators at `2^0`
+    /// for multinomial, regression targets at `2^{l_x}` so the secure
+    /// `Xᵀy` products land on the common `2^{2l_x}` scale.
+    fn quantize_label(&self, plan: &FpPlan, y: f64, channel: usize) -> u64;
+
+    /// Decode a field-element state vector into f64 weights (all three
+    /// workloads carry weights at scale `2^lw`).
+    fn decode(&self, plan: &FpPlan, w_q: &[u64]) -> Vec<f64> {
+        crate::quant::dequantize_slice(plan.field, w_q, plan.lw)
+    }
+
+    /// The workload's scalar quality score on a split (classification
+    /// accuracy, or R² for regression) — the per-iteration trace metric.
+    fn score(&self, x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64]) -> f64;
+
+    /// The workload's training objective on a split.
+    fn loss(&self, x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64]) -> f64;
+
+    /// Full metric set on a split (what summaries and ClientOutput report).
+    fn metrics(&self, x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64])
+        -> ModelMetrics;
+}
+
+/// Binary logistic regression (the seed workload).
+pub struct Logreg;
+
+impl Model for Logreg {
+    fn name(&self) -> &'static str {
+        "logreg"
+    }
+
+    fn channels(&self, _classes: usize) -> usize {
+        1
+    }
+
+    fn iterative(&self) -> bool {
+        true
+    }
+
+    fn check_dataset(&self, ds: &Dataset) -> Result<(), String> {
+        if ds.classes != 2 {
+            return Err(format!(
+                "model logreg needs binary {{0,1}} labels, but dataset '{}' has {} \
+                 classes — use --model multinomial (or linreg for regression targets)",
+                ds.name, ds.classes
+            ));
+        }
+        Ok(())
+    }
+
+    fn validate_plan(&self, plan: &FpPlan, ds: &Dataset, r: usize) -> Result<(), String> {
+        // Measured bound of the quantity actually truncated: the raw batch
+        // gradient Xᵀ(ĝ(Xw) − y) at w = 0 (ĝ(0) = ½), with 30% slack for
+        // drift over the run and an 8.0 floor for tiny datasets.
+        let mut g0 = vec![0.0f64; ds.d];
+        for i in 0..ds.m {
+            let res = 0.5 - ds.y[i];
+            for (gj, &xij) in g0.iter_mut().zip(&ds.x[i * ds.d..(i + 1) * ds.d]) {
+                *gj += res * xij;
+            }
+        }
+        let grad_bound = 1.3 * g0.iter().fold(8.0f64, |a, &b| a.max(b.abs()));
+        let rep = plan.validate(ds.d, 1.0, 8.0 / ds.d as f64, grad_bound, r);
+        if !rep.ok {
+            return Err(format!("fixed-point plan invalid: {}", rep.errors.join("; ")));
+        }
+        Ok(())
+    }
+
+    fn reference(
+        &self,
+        ds: &Dataset,
+        iters: usize,
+        eta: f64,
+        link: Option<&SigmoidPoly>,
+    ) -> TrainTrace {
+        train_logreg(
+            ds,
+            &LogRegOptions { iters, eta, link: link.cloned(), trace_accuracy: true },
+        )
+    }
+
+    fn quantize_label(&self, plan: &FpPlan, y: f64, _channel: usize) -> u64 {
+        crate::quant::quantize(plan.field, y, 0)
+    }
+
+    fn score(&self, x: &[f64], y: &[f64], d: usize, _classes: usize, w: &[f64]) -> f64 {
+        crate::ml::accuracy(x, y, d, w)
+    }
+
+    fn loss(&self, x: &[f64], y: &[f64], d: usize, _classes: usize, w: &[f64]) -> f64 {
+        crate::ml::cross_entropy(x, y, d, w)
+    }
+
+    fn metrics(&self, x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64]) -> ModelMetrics {
+        ModelMetrics {
+            accuracy: Some(crate::ml::accuracy(x, y, d, w)),
+            auc: Some(auc(x, y, d, w)),
+            r2: None,
+            loss: self.loss(x, y, d, classes, w),
+        }
+    }
+}
+
+/// Multinomial logistic regression as C one-vs-rest sigmoid channels.
+pub struct Multinomial;
+
+impl Model for Multinomial {
+    fn name(&self) -> &'static str {
+        "multinomial"
+    }
+
+    fn channels(&self, classes: usize) -> usize {
+        classes
+    }
+
+    fn iterative(&self) -> bool {
+        true
+    }
+
+    fn check_dataset(&self, ds: &Dataset) -> Result<(), String> {
+        if ds.classes < 2 {
+            return Err(format!(
+                "model multinomial needs integer class labels (≥ 2 classes), but \
+                 dataset '{}' has a regression target — use --model linreg",
+                ds.name
+            ));
+        }
+        for (i, &v) in ds.y.iter().chain(ds.y_test.iter()).enumerate() {
+            if v.fract() != 0.0 || v < 0.0 || v >= ds.classes as f64 {
+                return Err(format!(
+                    "model multinomial: label {v} at row {i} outside 0..{}",
+                    ds.classes
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_plan(&self, plan: &FpPlan, ds: &Dataset, r: usize) -> Result<(), String> {
+        // Per-class measured gradient bounds: the one-vs-rest labels are
+        // imbalanced (class c is a 1/C minority), so each channel's raw
+        // gradient Xᵀ(½ − y_c) has its own magnitude — the widest channel
+        // sets the stage-1 budget and validate_classes names the rest.
+        let mut bounds = Vec::with_capacity(ds.classes);
+        for c in 0..ds.classes {
+            let mut g0 = vec![0.0f64; ds.d];
+            for i in 0..ds.m {
+                let yc = if ds.y[i] == c as f64 { 1.0 } else { 0.0 };
+                let res = 0.5 - yc;
+                for (gj, &xij) in g0.iter_mut().zip(&ds.x[i * ds.d..(i + 1) * ds.d]) {
+                    *gj += res * xij;
+                }
+            }
+            bounds.push(1.3 * g0.iter().fold(8.0f64, |a, &b| a.max(b.abs())));
+        }
+        let rep = plan.validate_classes(ds.d, 1.0, 8.0 / ds.d as f64, &bounds, r);
+        if !rep.ok {
+            return Err(format!("fixed-point plan invalid: {}", rep.errors.join("; ")));
+        }
+        Ok(())
+    }
+
+    fn reference(
+        &self,
+        ds: &Dataset,
+        iters: usize,
+        eta: f64,
+        link: Option<&SigmoidPoly>,
+    ) -> TrainTrace {
+        train_multinomial(
+            ds,
+            &LogRegOptions { iters, eta, link: link.cloned(), trace_accuracy: true },
+        )
+    }
+
+    fn quantize_label(&self, plan: &FpPlan, y: f64, channel: usize) -> u64 {
+        let indicator = if y == channel as f64 { 1.0 } else { 0.0 };
+        crate::quant::quantize(plan.field, indicator, 0)
+    }
+
+    fn score(&self, x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64]) -> f64 {
+        multiclass_accuracy(x, y, d, classes, w)
+    }
+
+    fn loss(&self, x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64]) -> f64 {
+        one_vs_rest_cross_entropy(x, y, d, classes, w)
+    }
+
+    fn metrics(&self, x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64]) -> ModelMetrics {
+        ModelMetrics {
+            accuracy: Some(multiclass_accuracy(x, y, d, classes, w)),
+            auc: None,
+            r2: None,
+            loss: self.loss(x, y, d, classes, w),
+        }
+    }
+}
+
+/// Closed-form linear regression via secure normal equations.
+pub struct Linreg;
+
+impl Model for Linreg {
+    fn name(&self) -> &'static str {
+        "linreg"
+    }
+
+    fn channels(&self, _classes: usize) -> usize {
+        1
+    }
+
+    fn iterative(&self) -> bool {
+        false
+    }
+
+    fn check_dataset(&self, ds: &Dataset) -> Result<(), String> {
+        let max_abs =
+            ds.y.iter().chain(ds.y_test.iter()).fold(0.0f64, |a, &v| a.max(v.abs()));
+        if max_abs > 1.0 + 1e-9 {
+            return Err(format!(
+                "model linreg needs targets in [−1, 1] (max |y| = {max_abs:.3}) — the \
+                 csv loader rescales regression targets automatically"
+            ));
+        }
+        Ok(())
+    }
+
+    fn validate_plan(&self, plan: &FpPlan, ds: &Dataset, _r: usize) -> Result<(), String> {
+        // The opened values are entries of XᵀX/Xᵀy at scale 2^{2lx}:
+        // |Σ_i x_ij·x_ik| ≤ m with |x| ≤ 1, so the field must hold
+        // m·2^{2lx} with a sign bit to spare.
+        let bits = 2 * plan.lx + (usize::BITS - ds.m.leading_zeros()) as usize + 1;
+        let field_bits = 63 - plan.field.modulus().leading_zeros() as usize;
+        if bits > field_bits {
+            return Err(format!(
+                "model linreg: normal-equation entries need {bits} bits \
+                 (2·lx = {} + log2(m = {}) + sign) but p has only {field_bits} — \
+                 lower lx or shrink the dataset",
+                2 * plan.lx,
+                ds.m
+            ));
+        }
+        Ok(())
+    }
+
+    fn reference(
+        &self,
+        ds: &Dataset,
+        _iters: usize,
+        _eta: f64,
+        _link: Option<&SigmoidPoly>,
+    ) -> TrainTrace {
+        let beta = ridge_regression(&ds.x, &ds.y, ds.d);
+        let mut trace = TrainTrace::default();
+        trace.loss.push(mse(&ds.x, &ds.y, ds.d, &beta));
+        trace.train_accuracy.push(r2(&ds.x, &ds.y, ds.d, &beta));
+        trace.test_accuracy.push(r2(&ds.x_test, &ds.y_test, ds.d, &beta));
+        trace.w = beta;
+        trace
+    }
+
+    fn quantize_label(&self, plan: &FpPlan, y: f64, _channel: usize) -> u64 {
+        crate::quant::quantize(plan.field, y, plan.lx)
+    }
+
+    fn score(&self, x: &[f64], y: &[f64], d: usize, _classes: usize, w: &[f64]) -> f64 {
+        r2(x, y, d, w)
+    }
+
+    fn loss(&self, x: &[f64], y: &[f64], d: usize, _classes: usize, w: &[f64]) -> f64 {
+        mse(x, y, d, w)
+    }
+
+    fn metrics(&self, x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64]) -> ModelMetrics {
+        ModelMetrics {
+            accuracy: None,
+            auc: None,
+            r2: Some(r2(x, y, d, w)),
+            loss: self.loss(x, y, d, classes, w),
+        }
+    }
+}
+
+/// Plaintext one-vs-rest multinomial trainer: C independent sigmoid-link
+/// gradient-descent channels sharing `X` (the cleartext twin of the secure
+/// class-major update). `w` is class-major, length `d·C`.
+pub fn train_multinomial(ds: &Dataset, opt: &LogRegOptions) -> TrainTrace {
+    let (m, d, classes) = (ds.m, ds.d, ds.classes);
+    let mut w = vec![0.0f64; d * classes];
+    let mut trace = TrainTrace::default();
+    let mut z = vec![0.0f64; m];
+    let mut grad = vec![0.0f64; d];
+
+    for _ in 0..opt.iters {
+        for c in 0..classes {
+            let wc = &mut w[c * d..(c + 1) * d];
+            for i in 0..m {
+                z[i] = ds.x[i * d..(i + 1) * d].iter().zip(wc.iter()).map(|(&a, &b)| a * b).sum();
+            }
+            for i in 0..m {
+                let g = match &opt.link {
+                    None => sigmoid(z[i]),
+                    Some(p) => p.eval(z[i]),
+                };
+                let yc = if ds.y[i] == c as f64 { 1.0 } else { 0.0 };
+                z[i] = g - yc;
+            }
+            grad.fill(0.0);
+            for i in 0..m {
+                let res = z[i];
+                if res != 0.0 {
+                    for (gj, &xij) in grad.iter_mut().zip(&ds.x[i * d..(i + 1) * d]) {
+                        *gj += res * xij;
+                    }
+                }
+            }
+            for (wj, gj) in wc.iter_mut().zip(&grad) {
+                *wj -= opt.eta / m as f64 * gj;
+            }
+        }
+        trace.loss.push(one_vs_rest_cross_entropy(&ds.x, &ds.y, d, classes, &w));
+        if opt.trace_accuracy {
+            trace.train_accuracy.push(multiclass_accuracy(&ds.x, &ds.y, d, classes, &w));
+            trace
+                .test_accuracy
+                .push(multiclass_accuracy(&ds.x_test, &ds.y_test, d, classes, &w));
+        }
+    }
+    trace.w = w;
+    trace
+}
+
+/// Cleartext ridge solve `(XᵀX + λI)β = Xᵀy` with `λ = RIDGE_REL ·
+/// trace(XᵀX)/d` — the reference for the secure normal-equations path,
+/// which runs [`solve_normal_equations`] on the opened (quantized) moments.
+pub fn ridge_regression(x: &[f64], y: &[f64], d: usize) -> Vec<f64> {
+    let m = y.len();
+    let mut xtx = vec![0.0f64; d * d];
+    let mut xty = vec![0.0f64; d];
+    for i in 0..m {
+        let row = &x[i * d..(i + 1) * d];
+        for j in 0..d {
+            xty[j] += row[j] * y[i];
+            for k in 0..d {
+                xtx[j * d + k] += row[j] * row[k];
+            }
+        }
+    }
+    solve_normal_equations(&mut xtx, &mut xty, d)
+}
+
+/// Shared public solve of the (already aggregated) normal equations —
+/// called identically by every party on the opened moments and by the
+/// cleartext reference, so secure runs agree bit-for-bit with each other.
+/// Consumes its inputs (adds the ridge in place).
+pub fn solve_normal_equations(xtx: &mut [f64], xty: &mut [f64], d: usize) -> Vec<f64> {
+    let trace: f64 = (0..d).map(|j| xtx[j * d + j]).sum();
+    let ridge = RIDGE_REL * (trace / d as f64).max(1e-12);
+    for j in 0..d {
+        xtx[j * d + j] += ridge;
+    }
+    solve_dense(xtx, xty, d)
+}
+
+/// Argmax classification accuracy of a class-major `d·C` weight matrix.
+pub fn multiclass_accuracy(x: &[f64], y: &[f64], d: usize, classes: usize, w: &[f64]) -> f64 {
+    let m = y.len();
+    assert_eq!(w.len(), d * classes);
+    let mut correct = 0usize;
+    for i in 0..m {
+        let row = &x[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        let mut best_z = f64::NEG_INFINITY;
+        for c in 0..classes {
+            let z: f64 =
+                row.iter().zip(&w[c * d..(c + 1) * d]).map(|(&a, &b)| a * b).sum();
+            if z > best_z {
+                best_z = z;
+                best = c;
+            }
+        }
+        if best as f64 == y[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / m as f64
+}
+
+/// Mean one-vs-rest cross-entropy of a class-major `d·C` weight matrix
+/// (the multinomial training objective: each channel is a binary CE).
+pub fn one_vs_rest_cross_entropy(
+    x: &[f64],
+    y: &[f64],
+    d: usize,
+    classes: usize,
+    w: &[f64],
+) -> f64 {
+    let m = y.len();
+    let mut loss = 0.0;
+    for c in 0..classes {
+        let wc = &w[c * d..(c + 1) * d];
+        for i in 0..m {
+            let z: f64 = x[i * d..(i + 1) * d].iter().zip(wc).map(|(&a, &b)| a * b).sum();
+            let p = sigmoid(z).clamp(1e-12, 1.0 - 1e-12);
+            let yc = if y[i] == c as f64 { 1.0 } else { 0.0 };
+            loss -= yc * p.ln() + (1.0 - yc) * (1.0 - p).ln();
+        }
+    }
+    loss / (m * classes) as f64
+}
+
+/// Area under the ROC curve of scores `x·w` against binary labels, by the
+/// Mann–Whitney rank statistic with average ranks on ties (deterministic:
+/// `total_cmp` ordering). Returns 0.5 when a class is absent.
+pub fn auc(x: &[f64], y: &[f64], d: usize, w: &[f64]) -> f64 {
+    let m = y.len();
+    let mut scores: Vec<(f64, bool)> = (0..m)
+        .map(|i| {
+            let z: f64 = x[i * d..(i + 1) * d].iter().zip(w).map(|(&a, &b)| a * b).sum();
+            (z, y[i] > 0.5)
+        })
+        .collect();
+    let n_pos = scores.iter().filter(|&&(_, p)| p).count();
+    let n_neg = m - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    scores.sort_by(|a, b| a.0.total_cmp(&b.0));
+    // Sum of positive ranks, averaging within tie groups.
+    let mut rank_pos = 0.0f64;
+    let mut i = 0usize;
+    while i < m {
+        let mut j = i;
+        while j < m && scores[j].0 == scores[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + 1 + j) as f64 / 2.0; // mean of ranks i+1..=j
+        for s in &scores[i..j] {
+            if s.1 {
+                rank_pos += avg_rank;
+            }
+        }
+        i = j;
+    }
+    (rank_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos * n_neg) as f64
+}
+
+/// Coefficient of determination `R² = 1 − SS_res/SS_tot` of predictions
+/// `x·w` against targets `y` (0 when the targets are constant).
+pub fn r2(x: &[f64], y: &[f64], d: usize, w: &[f64]) -> f64 {
+    let m = y.len();
+    let mean = y.iter().sum::<f64>() / m as f64;
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    for i in 0..m {
+        let z: f64 = x[i * d..(i + 1) * d].iter().zip(w).map(|(&a, &b)| a * b).sum();
+        ss_res += (y[i] - z) * (y[i] - z);
+        ss_tot += (y[i] - mean) * (y[i] - mean);
+    }
+    if ss_tot < 1e-300 {
+        return 0.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Mean squared error of predictions `x·w` against targets `y`.
+pub fn mse(x: &[f64], y: &[f64], d: usize, w: &[f64]) -> f64 {
+    let m = y.len();
+    let mut acc = 0.0;
+    for i in 0..m {
+        let z: f64 = x[i * d..(i + 1) * d].iter().zip(w).map(|(&a, &b)| a * b).sum();
+        acc += (y[i] - z) * (y[i] - z);
+    }
+    acc / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+
+    fn three_class_dataset(seed: u64) -> Dataset {
+        // Deterministic 3-class blobs: class c shifts feature c by ±.
+        let mut rng = crate::prng::Rng::seed_from_u64(seed);
+        let (m, m_test, d, classes) = (240usize, 60usize, 5usize, 3usize);
+        let gen = |rng: &mut crate::prng::Rng, n: usize| {
+            let mut x = vec![0.0f64; n * d];
+            let mut y = vec![0.0f64; n];
+            for i in 0..n {
+                let c = i % classes;
+                y[i] = c as f64;
+                for j in 0..d - 1 {
+                    let mut v = 0.25 * rng.gen_normal();
+                    if j == c {
+                        v += 0.6;
+                    }
+                    x[i * d + j] = v.clamp(-1.0, 1.0);
+                }
+                x[i * d + d - 1] = 1.0;
+            }
+            (x, y)
+        };
+        let (x, y) = gen(&mut rng, m);
+        let (x_test, y_test) = gen(&mut rng, m_test);
+        Dataset { name: "three-class".into(), x, y, x_test, y_test, m, d, classes }
+    }
+
+    #[test]
+    fn model_kind_round_trips() {
+        for (s, k) in [
+            ("logreg", ModelKind::Logreg),
+            ("multinomial", ModelKind::Multinomial),
+            ("linreg", ModelKind::Linreg),
+        ] {
+            assert_eq!(s.parse::<ModelKind>().unwrap(), k);
+            assert_eq!(k.to_string(), s);
+        }
+        assert!("svm".parse::<ModelKind>().is_err());
+        assert_eq!(ModelKind::default(), ModelKind::Logreg);
+    }
+
+    #[test]
+    fn channel_widths_per_workload() {
+        let ds = three_class_dataset(1);
+        assert_eq!(ModelKind::Logreg.model().channels(2), 1);
+        assert_eq!(ModelKind::Multinomial.channels(&ds), 3);
+        assert_eq!(ModelKind::Linreg.channels(&ds), 1);
+        assert_eq!(ModelKind::Logreg.model().trace_len(40), 40);
+        assert_eq!(ModelKind::Linreg.model().trace_len(40), 1);
+        assert_eq!(ModelKind::Multinomial.model().trunc_pairs(5, 3, 10), 150);
+        assert_eq!(ModelKind::Linreg.model().trunc_pairs(5, 1, 10), 0);
+    }
+
+    #[test]
+    fn logreg_rejects_multiclass_dataset() {
+        let ds = three_class_dataset(2);
+        assert!(Logreg.check_dataset(&ds).is_err());
+        assert!(Multinomial.check_dataset(&ds).is_ok());
+        let binary = Dataset::synth(SynthSpec::smoke(), 3);
+        assert!(Logreg.check_dataset(&binary).is_ok());
+    }
+
+    #[test]
+    fn multinomial_reference_learns_three_classes() {
+        let ds = three_class_dataset(4);
+        let trace = train_multinomial(
+            &ds,
+            &LogRegOptions { iters: 60, eta: 2.0, ..Default::default() },
+        );
+        let acc = *trace.test_accuracy.last().unwrap();
+        assert!(acc > 0.8, "3-class accuracy {acc}");
+        for w in trace.loss.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "one-vs-rest loss must not increase: {w:?}");
+        }
+    }
+
+    #[test]
+    fn multinomial_two_class_matches_argmax_of_logreg_shape() {
+        // With C = 2 the one-vs-rest channels are symmetric: argmax
+        // accuracy must track the binary trainer closely.
+        let ds = Dataset::synth(SynthSpec::smoke(), 5);
+        let multi = train_multinomial(
+            &ds,
+            &LogRegOptions { iters: 40, eta: 1.0, ..Default::default() },
+        );
+        let binary = train_logreg(
+            &ds,
+            &LogRegOptions { iters: 40, eta: 1.0, ..Default::default() },
+        );
+        let gap = (multi.test_accuracy.last().unwrap()
+            - binary.test_accuracy.last().unwrap())
+        .abs();
+        assert!(gap < 0.05, "C=2 multinomial vs binary accuracy gap {gap}");
+    }
+
+    #[test]
+    fn linreg_reference_recovers_planted_model() {
+        // y = x·β* exactly → ridge solve recovers β* and R² ≈ 1.
+        let mut rng = crate::prng::Rng::seed_from_u64(6);
+        let (m, d) = (120usize, 4usize);
+        let beta_star = [0.4, -0.3, 0.2, 0.1];
+        let mut x = vec![0.0f64; m * d];
+        let mut y = vec![0.0f64; m];
+        for i in 0..m {
+            for j in 0..d - 1 {
+                x[i * d + j] = (0.4 * rng.gen_normal()).clamp(-1.0, 1.0);
+            }
+            x[i * d + d - 1] = 1.0;
+            y[i] = x[i * d..(i + 1) * d].iter().zip(&beta_star).map(|(&a, &b)| a * b).sum();
+        }
+        let beta = ridge_regression(&x, &y, d);
+        for (b, bs) in beta.iter().zip(&beta_star) {
+            assert!((b - bs).abs() < 1e-4, "recovered {b} vs planted {bs}");
+        }
+        assert!(r2(&x, &y, d, &beta) > 0.9999);
+        assert!(mse(&x, &y, d, &beta) < 1e-8);
+    }
+
+    #[test]
+    fn auc_separates_and_handles_ties() {
+        // Perfect separator → AUC 1; anti-separator → 0; constant → 0.5.
+        let x = vec![1.0, -1.0, 2.0, -2.0, 0.5, -0.5];
+        let y = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        assert_eq!(auc(&x, &y, 1, &[1.0]), 1.0);
+        assert_eq!(auc(&x, &y, 1, &[-1.0]), 0.0);
+        assert_eq!(auc(&x, &y, 1, &[0.0]), 0.5, "all-tied scores average to 0.5");
+        // one-class degenerate input
+        assert_eq!(auc(&[1.0, 2.0], &[1.0, 1.0], 1, &[1.0]), 0.5);
+    }
+
+    #[test]
+    fn r2_baselines() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((r2(&x, &y, 1, &[2.0]) - 1.0).abs() < 1e-12, "exact fit");
+        // predicting the mean → R² = 0 needs an intercept; w = 0 predicts 0
+        let r = r2(&x, &y, 1, &[0.0]);
+        assert!(r < 0.0, "all-zero predictor must underperform the mean: {r}");
+    }
+
+    #[test]
+    fn metrics_display_per_workload() {
+        let ds = Dataset::synth(SynthSpec::smoke(), 7);
+        let t = train_logreg(&ds, &LogRegOptions { iters: 20, eta: 1.0, ..Default::default() });
+        let m = Logreg.metrics(&ds.x_test, &ds.y_test, ds.d, 2, &t.w);
+        let s = m.to_string();
+        assert!(s.contains("accuracy=") && s.contains("auc=") && s.contains("loss="), "{s}");
+        assert!(m.auc.unwrap() > 0.85, "smoke AUC {:?}", m.auc);
+
+        let lr = Linreg.reference(&ds, 0, 0.0, None);
+        let m = Linreg.metrics(&ds.x_test, &ds.y_test, ds.d, 2, &lr.w);
+        assert!(m.r2.is_some() && m.accuracy.is_none());
+        assert!(m.to_string().contains("r2="));
+    }
+}

@@ -80,8 +80,10 @@ pub fn fit_sigmoid(degree: usize, half_range: f64, samples: usize) -> SigmoidPol
 }
 
 /// Gaussian elimination with partial pivoting for a dense n×n system
-/// (n ≤ 8 here). Consumes its inputs.
-fn solve_dense(a: &mut [f64], b: &mut [f64], n: usize) -> Vec<f64> {
+/// (the sigmoid fit's n ≤ 8 normal equations, and the model zoo's d×d
+/// linear-regression normal equations — see `ml::model`). Consumes its
+/// inputs.
+pub(crate) fn solve_dense(a: &mut [f64], b: &mut [f64], n: usize) -> Vec<f64> {
     for col in 0..n {
         // pivot
         let mut piv = col;

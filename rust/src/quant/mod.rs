@@ -205,6 +205,56 @@ impl FpPlan {
         }
         rep
     }
+
+    /// Multi-class extension of [`validate`] (ISSUE-10 satellite): a
+    /// class-major gradient vector holds `C = grad_bounds.len()` channels
+    /// truncated together, and the one-vs-rest labels are imbalanced, so
+    /// every channel carries its **own** measured bound and must respect
+    /// the Appendix-A stage-1 budget `2^{k_2−1}` individually.
+    ///
+    /// Runs the base checks with the worst channel's bound, then re-checks
+    /// per class so the error **names the violating class**; the C-wide
+    /// headroom (the worst channel's spare bits under the budget) lands in
+    /// the warnings when it drops below one bit.
+    pub fn validate_classes(
+        &self,
+        d: usize,
+        max_abs_x: f64,
+        w_bound: f64,
+        grad_bounds: &[f64],
+        r: usize,
+    ) -> PlanReport {
+        assert!(!grad_bounds.is_empty(), "at least one class gradient bound required");
+        let (worst_class, worst) = grad_bounds
+            .iter()
+            .enumerate()
+            .fold((0usize, 0.0f64), |(wc, wb), (c, &b)| if b > wb { (c, b) } else { (wc, wb) });
+        let mut rep = self.validate(d, max_abs_x, w_bound, worst, r);
+        let budget = 2f64.powi(self.k2 as i32 - 1);
+        let scale = 2f64.powi(self.grad_scale() as i32);
+        for (c, &bound) in grad_bounds.iter().enumerate() {
+            let g1 = bound * scale;
+            if g1 >= budget {
+                rep.ok = false;
+                rep.errors.push(format!(
+                    "class {c}: stage-1 truncation input {g1:.2e} ≥ 2^(k2-1)=2^{} \
+                     (measured per-class gradient bound {bound:.1})",
+                    self.k2 - 1
+                ));
+            }
+        }
+        // C-wide headroom: spare bits of the widest channel under the edge.
+        let headroom_bits = (budget / (worst * scale)).log2();
+        if rep.ok && headroom_bits < 1.0 {
+            rep.warnings.push(format!(
+                "multi-class headroom: only {headroom_bits:.2} bits left under \
+                 2^(k2-1) across {} channels (worst: class {worst_class}, bound \
+                 {worst:.1}) — one doubling of the gradient overflows stage 1",
+                grad_bounds.len()
+            ));
+        }
+        rep
+    }
 }
 
 #[cfg(test)]
@@ -354,6 +404,49 @@ mod tests {
         p.lw = 12;
         let rep = p.validate(3073, 1.0, 1.0, 9019.0, 1);
         assert!(!rep.ok);
+    }
+
+    #[test]
+    fn validate_classes_at_budget_edge() {
+        // Appendix-A boundary for paper_cifar: grad_scale = 2·2+7+3 = 14,
+        // k2−1 = 23, so the per-class budget edge sits at bound = 2^9 = 512.
+        let p = FpPlan::paper_cifar();
+
+        // Exactly at the edge → error naming the class.
+        let rep = p.validate_classes(3073, 1.0, 4.0 / 3073.0, &[100.0, 512.0, 100.0], 1);
+        assert!(!rep.ok);
+        assert!(
+            rep.errors.iter().any(|e| e.contains("class 1")),
+            "edge violation must name the class: {:?}",
+            rep.errors
+        );
+        // Classes under the edge must not be named.
+        assert!(!rep.errors.iter().any(|e| e.contains("class 0") || e.contains("class 2")));
+
+        // One step under the edge → ok, but the C-wide headroom warning
+        // fires (less than one spare bit).
+        let rep = p.validate_classes(3073, 1.0, 4.0 / 3073.0, &[100.0, 511.0, 100.0], 1);
+        assert!(rep.ok, "errors: {:?}", rep.errors);
+        assert!(
+            rep.warnings.iter().any(|w| w.contains("headroom") && w.contains("class 1")),
+            "sub-bit margin must warn with the worst class: {:?}",
+            rep.warnings
+        );
+
+        // A full bit of margin → clean report.
+        let rep = p.validate_classes(3073, 1.0, 4.0 / 3073.0, &[100.0, 256.0, 100.0], 1);
+        assert!(rep.ok);
+        assert!(!rep.warnings.iter().any(|w| w.contains("headroom")), "{:?}", rep.warnings);
+    }
+
+    #[test]
+    fn validate_classes_single_class_matches_validate() {
+        // C = 1 must reduce to the scalar path (the logreg oracle).
+        let p = FpPlan::paper_cifar();
+        let a = p.validate(3073, 1.0, 4.0 / 3073.0, 350.0, 1);
+        let b = p.validate_classes(3073, 1.0, 4.0 / 3073.0, &[350.0], 1);
+        assert_eq!(a.ok, b.ok);
+        assert_eq!(a.errors, b.errors);
     }
 
     #[test]

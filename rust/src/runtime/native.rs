@@ -139,35 +139,62 @@ impl GradKernel for NativeKernel {
         let f = self.f;
         let (rows, cols) = (shape.rows, shape.cols);
         assert_eq!(x_enc.len(), rows * cols);
-        assert_eq!(w_enc.len(), cols);
+        if cols == 0 {
+            assert!(w_enc.is_empty());
+            return Vec::new();
+        }
+        // Multi-class models stack one `cols`-wide model vector per class
+        // (class-major); each class runs the identical fused pass over the
+        // shared encoded dataset, and the outputs concatenate class-major.
+        // `classes == 1` is byte-for-byte the historical single-model path.
+        assert!(
+            !w_enc.is_empty() && w_enc.len() % cols == 0,
+            "model vector length {} is not a positive multiple of cols {}",
+            w_enc.len(),
+            cols
+        );
+        let classes = w_enc.len() / cols;
         // One fan-out policy (Parallelism::workers_for): each worker gets
         // at least MIN_PAR_CELLS cells, and never more workers than rows.
-        let workers = if cols == 0 {
-            1
-        } else {
-            self.par.workers_for(rows * cols, MIN_PAR_CELLS).min(rows.max(1))
-        };
+        let workers = self.par.workers_for(rows * cols, MIN_PAR_CELLS).min(rows.max(1));
+        let mut out = Vec::with_capacity(classes * cols);
         match self.tier {
             KernelTier::Barrett => {
-                if workers <= 1 {
-                    return fused_block(f, x_enc, cols, w_enc, coeffs_q);
+                for wc in w_enc.chunks_exact(cols) {
+                    if workers <= 1 {
+                        out.extend_from_slice(&fused_block(f, x_enc, cols, wc, coeffs_q));
+                    } else {
+                        out.extend_from_slice(&par::row_block_reduce(
+                            f,
+                            x_enc,
+                            rows,
+                            cols,
+                            workers,
+                            |x_b, _first_row| fused_block(f, x_b, cols, wc, coeffs_q),
+                        ));
+                    }
                 }
-                par::row_block_reduce(f, x_enc, rows, cols, workers, |x_b, _first_row| {
-                    fused_block(f, x_b, cols, w_enc, coeffs_q)
-                })
             }
             KernelTier::Mont => {
                 let mf = MontField::new(f);
                 let wm = mf.to_mont_vec(w_enc); // one conversion per pass
-                if workers <= 1 {
-                    return fused_block_mont(&mf, x_enc, cols, &wm, coeffs_q);
+                for wmc in wm.chunks_exact(cols) {
+                    if workers <= 1 {
+                        out.extend_from_slice(&fused_block_mont(&mf, x_enc, cols, wmc, coeffs_q));
+                    } else {
+                        out.extend_from_slice(&par::row_block_reduce(
+                            f,
+                            x_enc,
+                            rows,
+                            cols,
+                            workers,
+                            |x_b, _first_row| fused_block_mont(&mf, x_b, cols, wmc, coeffs_q),
+                        ));
+                    }
                 }
-                let wm = wm.as_slice();
-                par::row_block_reduce(f, x_enc, rows, cols, workers, |x_b, _first_row| {
-                    fused_block_mont(&mf, x_b, cols, wm, coeffs_q)
-                })
             }
         }
+        out
     }
 }
 
@@ -291,6 +318,31 @@ mod tests {
         let f = Field::new(P26);
         let k = NativeKernel::new(f);
         k.encoded_gradient(&[1, 2, 3, 4], MatShape::new(2, 2), &[1, 1], &[]);
+    }
+
+    #[test]
+    fn multiclass_pass_matches_per_class_calls() {
+        // A stacked class-major model vector must produce exactly the
+        // concatenation of C independent single-class passes — on both
+        // kernel tiers, sequential and threaded.
+        let f = Field::new(P26);
+        let mut r = Rng::seed_from_u64(11);
+        let (rows, cols, classes) = (40usize, 9usize, 3usize);
+        let x: Vec<u64> = (0..rows * cols).map(|_| r.gen_range(P26)).collect();
+        let w: Vec<u64> = (0..classes * cols).map(|_| r.gen_range(P26)).collect();
+        let c: Vec<u64> = vec![r.gen_range(P26), r.gen_range(P26)];
+        let shape = MatShape::new(rows, cols);
+        for tier in [KernelTier::Barrett, KernelTier::Mont] {
+            for threads in [1usize, 4] {
+                let k = NativeKernel::with_tier(f, Parallelism::threads(threads), tier);
+                let stacked = k.encoded_gradient(&x, shape, &w, &c);
+                assert_eq!(stacked.len(), classes * cols);
+                for cl in 0..classes {
+                    let solo = k.encoded_gradient(&x, shape, &w[cl * cols..(cl + 1) * cols], &c);
+                    assert_eq!(stacked[cl * cols..(cl + 1) * cols], solo[..], "class {cl}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -129,7 +129,7 @@ fn distributed_offline_ledger_matches_exact_model() {
     let mut cfg = CopmlConfig::for_dataset(&ds, n, CaseParams::explicit(k, t), 74);
     cfg.iters = 2;
     cfg.offline = OfflineMode::Distributed;
-    let demand = copml_demand(&cfg, ds.d, ds.padded_rows(cfg.k));
+    let demand = copml_demand(&cfg, ds.d, ds.padded_rows(cfg.k), cfg.channels(&ds));
     let mut u64_offline = Vec::new();
     for wire in [Wire::U64, Wire::U32] {
         cfg.wire = wire;

@@ -33,7 +33,7 @@ fn chunked_equals_one_shot_across_chunk_grid_geometries_and_wires() {
         // The biggest single pool (randoms, for every geometry here) —
         // computed exactly as the protocol sizes its demand.
         let task = QuantizedTask::new(&cfg, &ds);
-        let demand = copml_demand(&cfg, task.d, task.rows_padded);
+        let demand = copml_demand(&cfg, task.d, task.rows_padded, task.channels);
         let pool = demand
             .randoms
             .max(demand.doubles)

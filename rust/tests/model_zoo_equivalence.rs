@@ -1,0 +1,191 @@
+//! Model-zoo integrity (the workload-trait companion to
+//! protocol_equivalence.rs): for every non-default workload the full
+//! threaded protocol and the algorithmic-fidelity central trainer compute
+//! **bit-identical** field-domain model traces — across party geometries,
+//! kernel tiers, mini-batch schedules, and wire formats — and the secure
+//! result lands within the fig4 tolerance of its own cleartext reference.
+//! Binary logreg itself is covered exhaustively by protocol_equivalence.rs;
+//! these tests pin the multi-channel (multinomial) and closed-form (linreg)
+//! generalizations to the same standard.
+
+use copml::coordinator::{algo, protocol, CaseParams, CopmlConfig};
+use copml::data::{Dataset, SynthSpec};
+use copml::field::KernelTier;
+use copml::ml::model::ridge_regression;
+use copml::ml::{self, ModelKind};
+use copml::net::Wire;
+use copml::prng::Rng;
+use copml::quant::{self, FpPlan};
+
+/// Deterministic 3-class blobs: class `c` shifts feature `c` by +0.6,
+/// features clamped to the plan's `[-1, 1]` range, bias column last.
+fn three_class_dataset(seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    let (m, m_test, d, classes) = (240usize, 60usize, 5usize, 3usize);
+    let gen = |rng: &mut Rng, n: usize| {
+        let mut x = vec![0.0f64; n * d];
+        let mut y = vec![0.0f64; n];
+        for i in 0..n {
+            let c = i % classes;
+            y[i] = c as f64;
+            for j in 0..d - 1 {
+                let mut v = 0.25 * rng.gen_normal();
+                if j == c {
+                    v += 0.6;
+                }
+                x[i * d + j] = v.clamp(-1.0, 1.0);
+            }
+            x[i * d + d - 1] = 1.0;
+        }
+        (x, y)
+    };
+    let (x, y) = gen(&mut rng, m);
+    let (x_test, y_test) = gen(&mut rng, m_test);
+    Dataset { name: "three-class".into(), x, y, x_test, y_test, m, d, classes }
+}
+
+fn zoo_cfg(
+    model: ModelKind,
+    ds: &Dataset,
+    n: usize,
+    k: usize,
+    t: usize,
+    iters: usize,
+    seed: u64,
+) -> CopmlConfig {
+    let mut cfg = CopmlConfig::for_dataset(ds, n, CaseParams::explicit(k, t), seed);
+    cfg.iters = iters;
+    cfg.model = model;
+    cfg
+}
+
+#[test]
+fn multinomial_protocol_equals_algo_across_geometries() {
+    let ds = three_class_dataset(201);
+    for (n, k, t) in [(4usize, 1usize, 1usize), (7, 2, 1), (10, 2, 2)] {
+        let cfg = zoo_cfg(ModelKind::Multinomial, &ds, n, k, t, 4, 201);
+        let a = algo::train(&cfg, &ds).unwrap();
+        let p = protocol::train(&cfg, &ds).unwrap();
+        assert_eq!(a.w_trace, p.train.w_trace, "n={n} k={k} t={t}");
+        // Every snapshot carries the full class-major d·C weight matrix.
+        assert!(a.w_trace.iter().all(|w| w.len() == ds.d * ds.classes));
+    }
+}
+
+#[test]
+fn multinomial_bit_identical_across_kernel_batches_wire() {
+    let ds = three_class_dataset(202);
+    let cfg = zoo_cfg(ModelKind::Multinomial, &ds, 7, 2, 1, 3, 202);
+    let reference = algo::train(&cfg, &ds).unwrap();
+
+    let mut mont = cfg.clone();
+    mont.kernel = KernelTier::Mont;
+    assert_eq!(
+        protocol::train(&mont, &ds).unwrap().train.w_trace,
+        reference.w_trace,
+        "kernel=mont moved the multinomial trace"
+    );
+
+    let mut batched = cfg.clone();
+    batched.batches = 2;
+    assert_eq!(
+        algo::train(&batched, &ds).unwrap().w_trace,
+        protocol::train(&batched, &ds).unwrap().train.w_trace,
+        "batched multinomial protocol diverged from algo"
+    );
+
+    let mut packed = cfg.clone();
+    packed.wire = Wire::U32;
+    assert_eq!(
+        protocol::train_tcp_loopback(&packed, &ds).unwrap().train.w_trace,
+        reference.w_trace,
+        "wire=u32 TCP multinomial trace moved"
+    );
+}
+
+#[test]
+fn multinomial_matches_cleartext_reference_within_fig4_tolerance() {
+    let ds = three_class_dataset(203);
+    let cfg = zoo_cfg(ModelKind::Multinomial, &ds, 7, 2, 1, 30, 203);
+    let secure = algo::train(&cfg, &ds).unwrap();
+    let plain = ml::train_multinomial(
+        &ds,
+        &ml::LogRegOptions { iters: cfg.iters, eta: cfg.eta, ..Default::default() },
+    );
+    let s = *secure.test_accuracy.last().unwrap();
+    let r = *plain.test_accuracy.last().unwrap();
+    assert!(s > 0.7, "secure multinomial accuracy {s:.4} did not learn");
+    assert!((s - r).abs() < 0.04, "secure {s:.4} vs cleartext {r:.4} outside fig4 tolerance");
+    // Classifier metric set: accuracy present, AUC undefined for C > 2,
+    // R² not a classification metric.
+    assert!(secure.test_metrics.accuracy.is_some());
+    assert!(secure.test_metrics.auc.is_none());
+    assert!(secure.test_metrics.r2.is_none());
+}
+
+#[test]
+fn linreg_protocol_equals_algo_and_matches_ridge() {
+    let ds = Dataset::synth(SynthSpec::tiny(), 204);
+    for (n, k, t) in [(4usize, 1usize, 1usize), (7, 2, 1)] {
+        let mut cfg = zoo_cfg(ModelKind::Linreg, &ds, n, k, t, 1, 204);
+        // Headroom plan, as in fig_models: the one-shot closed form exposes
+        // the raw data-quantization error with no iterations to average it.
+        cfg.plan = FpPlan::headroom();
+        let a = algo::train(&cfg, &ds).unwrap();
+        let p = protocol::train(&cfg, &ds).unwrap();
+        assert_eq!(a.w_trace, p.train.w_trace, "n={n} k={k} t={t}");
+        assert_eq!(a.w_trace.len(), 1, "closed form = exactly one snapshot");
+
+        // The secure β matches the cleartext ridge solve on the *quantized*
+        // data coefficient-wise: field moments are exact sums of products of
+        // multiples of 2^-lx (exactly representable in f64), both sides run
+        // the same public `solve_normal_equations`, so the only divergence
+        // is the final l_w = 9 weight rounding (≤ 2^-10 per coefficient).
+        let q = |v: f64| {
+            quant::round_half_away(v * (1 << cfg.plan.lx) as f64) as f64
+                / (1u64 << cfg.plan.lx) as f64
+        };
+        let xq: Vec<f64> = ds.x.iter().map(|&v| q(v)).collect();
+        let yq: Vec<f64> = ds.y.iter().map(|&v| q(v)).collect();
+        let beta = ridge_regression(&xq, &yq, ds.d);
+        assert_eq!(a.w.len(), beta.len());
+        for (j, (&s, &c)) in a.w.iter().zip(&beta).enumerate() {
+            assert!((s - c).abs() < 2e-3, "β[{j}]: secure {s:.5} vs cleartext {c:.5}");
+        }
+        // Regression metric set: R² present, classification metrics absent.
+        assert!(p.train.test_metrics.r2.is_some());
+        assert!(p.train.test_metrics.accuracy.is_none());
+        assert!(p.train.test_metrics.auc.is_none());
+    }
+}
+
+#[test]
+fn linreg_r2_tracks_cleartext_reference() {
+    // The fig4-tolerance assertion on a real CSV set lives in the
+    // `fig_models` bench (breast.csv, m = 569, where data-quantization
+    // noise averages out); here the 48-row synthetic set only supports a
+    // ballpark bound against the exact-data reference.
+    let ds = Dataset::synth(SynthSpec::tiny(), 205);
+    let mut cfg = zoo_cfg(ModelKind::Linreg, &ds, 7, 2, 1, 1, 205);
+    cfg.plan = FpPlan::headroom();
+    let secure = algo::train(&cfg, &ds).unwrap();
+    let reference = ModelKind::Linreg.model().reference(&ds, 1, cfg.eta, None);
+    let s = *secure.test_accuracy.last().unwrap();
+    let r = *reference.test_accuracy.last().unwrap();
+    assert!((s - r).abs() < 0.2, "secure R² {s:.4} vs cleartext {r:.4} diverged");
+}
+
+#[test]
+fn default_model_stays_logreg_and_logreg_trace_is_stable() {
+    // The zoo must not move the default workload: an explicit
+    // `ModelKind::Logreg` run matches the implicit-default run bit for bit.
+    let ds = Dataset::synth(SynthSpec::tiny(), 206);
+    let implicit = zoo_cfg(ModelKind::default(), &ds, 7, 2, 1, 3, 206);
+    assert_eq!(implicit.model, ModelKind::Logreg);
+    let mut explicit = implicit.clone();
+    explicit.model = ModelKind::Logreg;
+    assert_eq!(
+        algo::train(&implicit, &ds).unwrap().w_trace,
+        protocol::train(&explicit, &ds).unwrap().train.w_trace,
+    );
+}
